@@ -1,0 +1,72 @@
+//! End-to-end driver (DESIGN.md §4, EXPERIMENTS.md §E2E): exercises every
+//! layer of the stack on a real workload —
+//!
+//!   L1/L2: the AOT-compiled Pallas dataplane + load-balance artifacts,
+//!          executed via PJRT on the switch/controller paths,
+//!   L3:    the full DES cluster — switch hierarchy, chain replication,
+//!          LSM storage nodes, controller with migration enabled,
+//!
+//! under a skewed read/write/scan workload, for all three coordination
+//! modes, and reports the paper's headline comparison (throughput + mean
+//! read latency per mode). Read replies are verified against the loaded
+//! corpus. Falls back to the rust dataplane when artifacts/ is missing.
+//!
+//!     make artifacts && cargo run --release --offline --example end_to_end
+
+use turbokv::cluster::Cluster;
+use turbokv::config::{Config, Coordination, DataplaneMode};
+use turbokv::types::OpCode;
+
+fn main() -> anyhow::Result<()> {
+    let have_artifacts = std::path::Path::new("artifacts/manifest.json").exists();
+    println!(
+        "dataplane: {}",
+        if have_artifacts { "xla (AOT Pallas artifacts via PJRT)" } else { "rust (artifacts/ missing)" }
+    );
+
+    let mut rows = Vec::new();
+    for mode in Coordination::ALL {
+        let mut cfg = Config::default();
+        cfg.coordination = mode;
+        cfg.workload.num_keys = 20_000;
+        cfg.workload.ops_per_client = 1_500;
+        cfg.workload.write_ratio = 0.2;
+        cfg.workload.scan_ratio = 0.1;
+        cfg.workload.zipf_theta = Some(0.99);
+        cfg.controller.migration = true;
+        cfg.controller.epoch_ns = 1_000_000_000;
+        if have_artifacts && mode == Coordination::InSwitch {
+            cfg.dataplane.mode = DataplaneMode::Xla;
+        }
+        let t0 = std::time::Instant::now();
+        let mut cl = Cluster::build_auto(cfg)?;
+        cl.verify_reads = true;
+        let stats = cl.run();
+        let (read_mean, _, read_p99) =
+            cl.metrics.latency_stats_ms(OpCode::Get).unwrap_or((0.0, 0.0, 0.0));
+        println!(
+            "[{}] completed {} ops in {:.1}s wall ({} sim events, {} migrations)",
+            mode.name(),
+            cl.metrics.completed(),
+            t0.elapsed().as_secs_f64(),
+            stats.events,
+            stats.migrations,
+        );
+        assert_eq!(cl.verify_failures, 0, "read verification");
+        rows.push((mode.name(), cl.metrics.throughput(), read_mean, read_p99));
+    }
+
+    println!("\nmode            throughput(ops/s)  read-mean(ms)  read-p99(ms)");
+    for (name, thr, mean, p99) in &rows {
+        println!("{name:<15} {thr:>17.1} {mean:>14.1} {p99:>13.1}");
+    }
+    let turbokv = rows[0].1;
+    let server = rows[2].1;
+    println!(
+        "\nTurboKV vs server-driven: {:+.1}% throughput (paper: +26..+47%)",
+        (turbokv / server - 1.0) * 100.0
+    );
+    assert!(turbokv > server, "in-switch must beat server-driven");
+    println!("end_to_end OK");
+    Ok(())
+}

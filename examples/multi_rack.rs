@@ -1,0 +1,36 @@
+//! Hierarchical indexing demo (paper §6): scale the cluster from one rack
+//! to eight. AGG/Core/Edge switches route by key toward the right ToR
+//! (no chain headers); only the target's ToR performs full coordinator
+//! processing. Reports throughput and hop-count effects.
+//!
+//!     cargo run --release --offline --example multi_rack
+
+use turbokv::cluster::Cluster;
+use turbokv::config::Config;
+use turbokv::net::topology::Addr;
+use turbokv::types::OpCode;
+
+fn main() {
+    println!("racks  nodes  switches  throughput(ops/s)  read-mean(ms)  max-hops");
+    for racks in [1usize, 2, 4, 8] {
+        let mut cfg = Config::default();
+        cfg.cluster.racks = racks;
+        cfg.cluster.nodes_per_rack = 4;
+        cfg.workload.zipf_theta = Some(0.99);
+        cfg.workload.ops_per_client = 1_200;
+        let switches = racks + (racks / 2).max(1) + 2;
+        let mut cl = Cluster::build(cfg);
+        let max_hops = (0..cl.topo.num_nodes)
+            .map(|n| cl.topo.hops(Addr::Client(0), Addr::Node(n)))
+            .max()
+            .unwrap();
+        cl.run();
+        let (mean, _, _) = cl.metrics.latency_stats_ms(OpCode::Get).unwrap();
+        println!(
+            "{racks:<6} {:<6} {switches:<9} {:>17.1} {mean:>14.1} {max_hops:>9}",
+            cl.topo.num_nodes,
+            cl.metrics.throughput(),
+        );
+    }
+    println!("\nmulti_rack OK");
+}

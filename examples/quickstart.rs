@@ -1,0 +1,42 @@
+//! Quickstart: build the paper's testbed (16 storage nodes, 4 clients,
+//! 8 switches), run a small mixed YCSB-style workload with TurboKV's
+//! in-switch coordination, and print the latency/throughput summary.
+//!
+//!     cargo run --release --offline --example quickstart
+
+use turbokv::cluster::Cluster;
+use turbokv::config::Config;
+
+fn main() {
+    let mut cfg = Config::default();
+    // A 50/30/20 read/write/scan mix over 20k keys, zipf-0.99 popularity.
+    cfg.workload.write_ratio = 0.3;
+    cfg.workload.scan_ratio = 0.2;
+    cfg.workload.zipf_theta = Some(0.99);
+    cfg.workload.ops_per_client = 1_000;
+
+    println!(
+        "cluster: {} storage nodes in {} racks, {} switches, {} clients",
+        cfg.cluster.nodes(),
+        cfg.cluster.racks,
+        cfg.cluster.racks + (cfg.cluster.racks / 2).max(1) + 2,
+        cfg.cluster.clients
+    );
+    println!(
+        "directory: {} sub-ranges, chain length {}\n",
+        cfg.cluster.num_ranges, cfg.cluster.replication
+    );
+
+    let mut cl = Cluster::build(cfg);
+    cl.verify_reads = true;
+    let stats = cl.run();
+
+    println!("{}", cl.metrics.summary());
+    println!(
+        "switch passes keyrouted {} packets; {} simulation events",
+        cl.switches.iter().map(|s| s.stats.keyrouted).sum::<u64>(),
+        stats.events
+    );
+    assert_eq!(cl.metrics.errors, 0);
+    println!("\nquickstart OK");
+}

@@ -1,0 +1,106 @@
+"""AOT: lower the L2 graphs to HLO *text* artifacts for the rust runtime.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly.  See /opt/xla-example/gen_hlo.py.
+
+Usage:  python -m compile.aot --outdir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_artifacts(outdir: str) -> dict:
+    os.makedirs(outdir, exist_ok=True)
+    manifest = {"batch": model.BATCH, "num_ranges": model.NUM_RANGES,
+                "num_nodes": model.NUM_NODES, "artifacts": {}}
+
+    # 1. Switch dataplane: batched lookup + counter deltas.
+    lowered = jax.jit(model.dataplane_step).lower(
+        _spec((model.BATCH,), jnp.uint32),
+        _spec((model.BATCH,), jnp.uint32),
+        _spec((model.NUM_RANGES,), jnp.uint32),
+    )
+    path = os.path.join(outdir, "dataplane.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest["artifacts"]["dataplane"] = {
+        "file": "dataplane.hlo.txt",
+        "inputs": [
+            {"name": "keys", "shape": [model.BATCH], "dtype": "u32"},
+            {"name": "ops", "shape": [model.BATCH], "dtype": "u32"},
+            {"name": "starts", "shape": [model.NUM_RANGES], "dtype": "u32"},
+        ],
+        "outputs": [
+            {"name": "idx", "shape": [model.BATCH], "dtype": "s32"},
+            {"name": "read_hits", "shape": [model.NUM_RANGES], "dtype": "s32"},
+            {"name": "write_hits", "shape": [model.NUM_RANGES], "dtype": "s32"},
+        ],
+    }
+
+    # 2. Controller load estimate.
+    lowered = jax.jit(model.load_estimate).lower(
+        _spec((model.NUM_RANGES,), jnp.float32),
+        _spec((model.NUM_RANGES,), jnp.float32),
+        _spec((model.NUM_RANGES, model.NUM_NODES), jnp.float32),
+        _spec((model.NUM_RANGES, model.NUM_NODES), jnp.float32),
+        _spec((), jnp.float32),
+    )
+    path = os.path.join(outdir, "loadbalance.hlo.txt")
+    with open(path, "w") as f:
+        f.write(to_hlo_text(lowered))
+    manifest["artifacts"]["loadbalance"] = {
+        "file": "loadbalance.hlo.txt",
+        "inputs": [
+            {"name": "read", "shape": [model.NUM_RANGES], "dtype": "f32"},
+            {"name": "write", "shape": [model.NUM_RANGES], "dtype": "f32"},
+            {"name": "tail_onehot", "shape": [model.NUM_RANGES, model.NUM_NODES], "dtype": "f32"},
+            {"name": "member_onehot", "shape": [model.NUM_RANGES, model.NUM_NODES], "dtype": "f32"},
+            {"name": "write_cost", "shape": [], "dtype": "f32"},
+        ],
+        "outputs": [
+            {"name": "node_load", "shape": [model.NUM_NODES], "dtype": "f32"},
+            {"name": "node_share", "shape": [model.NUM_NODES], "dtype": "f32"},
+        ],
+    }
+
+    with open(os.path.join(outdir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    args = ap.parse_args()
+    manifest = build_artifacts(args.outdir)
+    for name, art in manifest["artifacts"].items():
+        full = os.path.join(args.outdir, art["file"])
+        print(f"wrote {name}: {full} ({os.path.getsize(full)} bytes)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""L1 Pallas kernel: controller node-load estimation.
+
+TurboKV's controller (paper section 5.1) turns the per-range read/write
+counters reported by the switches into a per-storage-node load estimate.
+Under chain replication a read for range ``n`` lands only on the chain's
+*tail* node, while a write is processed by *every* chain member (section
+4.1.2), so with one-hot chain-membership matrices:
+
+    node_load[s] = sum_n read[n]  * tail_onehot[n, s]
+                 + sum_n write[n] * member_onehot[n, s] * write_cost
+
+i.e. two small (1, N) x (N, S) matmuls — the MXU-shaped piece of the
+controller.  ``write_cost`` models the relative cost of an update against a
+read (each replica applies the write).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _load_kernel(read_ref, write_ref, tail_ref, member_ref, cost_ref, out_ref):
+    read = read_ref[...]  # (1, n) f32
+    write = write_ref[...]  # (1, n) f32
+    tail = tail_ref[...]  # (n, s) f32
+    member = member_ref[...]  # (n, s) f32
+    cost = cost_ref[0, 0]  # scalar write cost
+    out_ref[...] = jnp.dot(read, tail) + cost * jnp.dot(write, member)
+
+
+@jax.jit
+def load_estimate(read, write, tail_onehot, member_onehot, write_cost):
+    """Per-node load estimate from per-range counters.
+
+    Args:
+      read: f32[N] read hits per range.
+      write: f32[N] write hits per range.
+      tail_onehot: f32[N, S]; [n, s] == 1 iff node s is the tail of range n's chain.
+      member_onehot: f32[N, S]; [n, s] == 1 iff node s is in range n's chain.
+      write_cost: f32[] relative cost of one write application vs one read.
+
+    Returns:
+      f32[S] estimated load per storage node.
+    """
+    n, s = tail_onehot.shape
+    out = pl.pallas_call(
+        _load_kernel,
+        out_shape=jax.ShapeDtypeStruct((1, s), jnp.float32),
+        interpret=True,
+    )(
+        read.reshape(1, n),
+        write.reshape(1, n),
+        tail_onehot,
+        member_onehot,
+        write_cost.reshape(1, 1),
+    )
+    return out.reshape(s)

@@ -1,0 +1,114 @@
+"""L1 Pallas kernel: the switch data plane's batched range match-action stage.
+
+This is the TPU re-think of TurboKV's Tofino range match (DESIGN.md
+section "Hardware-Adaptation"): instead of one TCAM lookup per packet per
+pipeline pass, a *batch* of B key prefixes is matched against all N sub-range
+start boundaries as a dense (B, N) broadcast compare + reduce.  The same
+one-hot matrix, masked by opcode, yields the per-range read/write hit
+counters that the paper keeps in the switch's register arrays (section 5.1).
+
+Matching semantics (identical to the rust fallback and to ref.py):
+
+    idx[b]        = (number of n with starts[n] <= keys[b]) - 1
+    read_hits[n]  = |{b : idx[b] == n and ops[b] == OP_READ}|
+    write_hits[n] = |{b : idx[b] == n and ops[b] == OP_WRITE}|
+
+``starts`` must be sorted ascending with ``starts[0] == 0`` so every key
+matches exactly one sub-range (the paper's index table partitions the whole
+key span).  Keys are the top 32 bits of the 128-bit TurboKV key; the
+controller only splits ranges on 2^96-aligned boundaries so this prefix is
+lossless.
+
+Padding: ``ops[b] == OP_PAD`` marks an unused batch slot.  Padded slots still
+produce an ``idx`` (harmless) but are excluded from both histograms.
+
+The kernel is tiled over the batch dimension: each grid step loads a
+``(block_b,)`` slice of keys/ops into VMEM together with the full ``starts``
+vector, and accumulates the histogram outputs across grid steps (the
+standard Pallas reduction idiom: initialize at program_id 0, add thereafter).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+OP_READ = 0
+OP_WRITE = 1
+OP_PAD = 2
+
+DEFAULT_BLOCK_B = 128
+
+
+def _lookup_kernel(keys_ref, ops_ref, starts_ref, idx_ref, rhits_ref, whits_ref):
+    """One grid step: match a block of keys against all N boundaries."""
+    keys = keys_ref[...]  # (block_b,) uint32
+    ops = ops_ref[...]  # (block_b,) uint32
+    starts = starts_ref[...]  # (n,) uint32
+
+    # Dense compare: ge[b, n] = keys[b] >= starts[n].  This is the VPU
+    # analogue of the TCAM range match — one row per packet in the batch.
+    ge = keys[:, None] >= starts[None, :]  # (block_b, n) bool
+    idx = jnp.sum(ge.astype(jnp.int32), axis=1) - 1  # (block_b,)
+    idx_ref[...] = idx
+
+    # One-hot of the matched range, masked by opcode, column-summed to give
+    # this block's contribution to the per-range counters.
+    n = starts.shape[0]
+    onehot = idx[:, None] == jnp.arange(n, dtype=jnp.int32)[None, :]
+    is_read = (ops == OP_READ)[:, None]
+    is_write = (ops == OP_WRITE)[:, None]
+    r_delta = jnp.sum((onehot & is_read).astype(jnp.int32), axis=0)
+    w_delta = jnp.sum((onehot & is_write).astype(jnp.int32), axis=0)
+
+    # Accumulate across grid steps: zero the counters on the first block.
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        rhits_ref[...] = jnp.zeros_like(rhits_ref)
+        whits_ref[...] = jnp.zeros_like(whits_ref)
+
+    rhits_ref[...] += r_delta
+    whits_ref[...] += w_delta
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def range_lookup(keys, ops, starts, *, block_b: int = DEFAULT_BLOCK_B):
+    """Batched switch-dataplane lookup.
+
+    Args:
+      keys: uint32[B] key prefixes (top 32 bits of the 128-bit key).
+      ops: uint32[B] opcodes (OP_READ / OP_WRITE / OP_PAD).
+      starts: uint32[N] sorted sub-range start boundaries, starts[0] == 0.
+      block_b: batch tile size (must divide B).
+
+    Returns:
+      (idx int32[B], read_hits int32[N], write_hits int32[N]).
+    """
+    b = keys.shape[0]
+    n = starts.shape[0]
+    if b % block_b != 0:
+        raise ValueError(f"batch {b} not a multiple of block_b {block_b}")
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _lookup_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.int32),
+        ],
+        interpret=True,  # CPU-PJRT target; real-TPU lowering is compile-only
+    )(keys, ops, starts)

@@ -1,0 +1,41 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+These are the specification: the Pallas kernels in range_lookup.py /
+load_matmul.py and the rust fallback in rust/src/switch/lookup.rs must all
+agree with these functions bit-for-bit (integers) / to float tolerance.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .range_lookup import OP_PAD, OP_READ, OP_WRITE  # noqa: F401 (re-export)
+
+
+def range_lookup_ref(keys, ops, starts):
+    """searchsorted-based oracle for the switch range match.
+
+    idx[b] = index of the sub-range whose [start, next_start) interval
+    contains keys[b]; read/write hit histograms exclude OP_PAD slots.
+    """
+    keys = jnp.asarray(keys, dtype=jnp.uint32)
+    ops = jnp.asarray(ops, dtype=jnp.uint32)
+    starts = jnp.asarray(starts, dtype=jnp.uint32)
+    n = starts.shape[0]
+    idx = jnp.searchsorted(starts, keys, side="right").astype(jnp.int32) - 1
+    read_hits = jnp.bincount(
+        jnp.where(ops == OP_READ, idx, n), length=n + 1
+    )[:n].astype(jnp.int32)
+    write_hits = jnp.bincount(
+        jnp.where(ops == OP_WRITE, idx, n), length=n + 1
+    )[:n].astype(jnp.int32)
+    return idx, read_hits, write_hits
+
+
+def load_estimate_ref(read, write, tail_onehot, member_onehot, write_cost):
+    """Oracle for the controller's node-load estimate."""
+    read = jnp.asarray(read, dtype=jnp.float32)
+    write = jnp.asarray(write, dtype=jnp.float32)
+    return read @ jnp.asarray(tail_onehot, jnp.float32) + jnp.asarray(
+        write_cost, jnp.float32
+    ) * (write @ jnp.asarray(member_onehot, jnp.float32))

@@ -1,0 +1,49 @@
+"""L2: the jax compute graphs the rust coordinator executes via PJRT.
+
+Two entry points, both calling the L1 Pallas kernels:
+
+* ``dataplane_step`` — the switch's batched match-action stage: one call
+  routes a 256-key batch and returns the per-range read/write counter
+  deltas (paper sections 4.1.3, 5.1).
+* ``load_estimate`` — the controller's per-node load estimate from the
+  counters collected in an epoch (paper section 5.1).
+
+``python/compile/aot.py`` lowers both once to HLO text in ``artifacts/``;
+python is never on the request path.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import load_matmul, range_lookup
+
+# Shapes fixed at AOT time; rust reads these from artifacts/manifest.json.
+BATCH = 256  # keys per dataplane invocation (rust pads with OP_PAD)
+NUM_RANGES = 128  # index-table records (paper section 8: "128 records index table")
+NUM_NODES = 16  # storage nodes (paper Fig. 12)
+
+
+def dataplane_step(keys, ops, starts):
+    """Batched key-based routing + query-statistics deltas.
+
+    Args:
+      keys: uint32[BATCH] top-32-bit key prefixes.
+      ops: uint32[BATCH] opcodes (0 read, 1 write, 2 pad).
+      starts: uint32[NUM_RANGES] sorted sub-range start boundaries.
+
+    Returns:
+      (idx int32[BATCH], read_hits int32[NUM_RANGES], write_hits int32[NUM_RANGES])
+    """
+    return range_lookup.range_lookup(keys, ops, starts)
+
+
+def load_estimate(read, write, tail_onehot, member_onehot, write_cost):
+    """Controller node-load estimate; see kernels/load_matmul.py."""
+    loads = load_matmul.load_estimate(
+        read, write, tail_onehot, member_onehot, write_cost
+    )
+    # Normalised share of total load per node — the controller's greedy
+    # migration compares these shares against 1/NUM_NODES.
+    total = jnp.maximum(jnp.sum(loads), 1.0)
+    return loads, loads / total

@@ -1,0 +1,33 @@
+"""AOT path: HLO text artifacts are produced, parse as HLO, match manifest."""
+
+import json
+import os
+
+from compile import aot, model
+
+
+def test_build_artifacts(tmp_path):
+    outdir = str(tmp_path)
+    manifest = aot.build_artifacts(outdir)
+    assert set(manifest["artifacts"]) == {"dataplane", "loadbalance"}
+    for art in manifest["artifacts"].values():
+        path = os.path.join(outdir, art["file"])
+        assert os.path.exists(path)
+        text = open(path).read()
+        # HLO text sanity: module header + entry computation present.
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+    with open(os.path.join(outdir, "manifest.json")) as f:
+        on_disk = json.load(f)
+    assert on_disk["batch"] == model.BATCH
+    assert on_disk["num_ranges"] == model.NUM_RANGES
+    assert on_disk["num_nodes"] == model.NUM_NODES
+
+
+def test_dataplane_hlo_has_expected_signature(tmp_path):
+    aot.build_artifacts(str(tmp_path))
+    text = open(os.path.join(str(tmp_path), "dataplane.hlo.txt")).read()
+    # Entry layout should mention the three u32 inputs and tuple output.
+    assert f"u32[{model.BATCH}]" in text
+    assert f"u32[{model.NUM_RANGES}]" in text
+    assert f"s32[{model.BATCH}]" in text

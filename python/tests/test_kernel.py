@@ -1,0 +1,172 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles in ref.py.
+
+Hypothesis sweeps shapes and values; fixed cases pin the paper's exact
+configuration (B=256, N=128).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+from numpy.testing import assert_allclose, assert_array_equal
+
+from compile.kernels import load_matmul, range_lookup, ref
+
+OPS = [ref.OP_READ, ref.OP_WRITE, ref.OP_PAD]
+
+
+def make_starts(rng: np.random.Generator, n: int) -> np.ndarray:
+    """Sorted unique uint32 boundaries with starts[0] == 0."""
+    rest = np.unique(rng.integers(1, 2**32, size=4 * n + 8, dtype=np.uint64))[: n - 1]
+    assert rest.size == n - 1
+    return np.concatenate([[0], np.sort(rest)]).astype(np.uint32)
+
+
+def run_both(keys, ops, starts, block_b):
+    got = range_lookup.range_lookup(
+        jnp.asarray(keys), jnp.asarray(ops), jnp.asarray(starts), block_b=block_b
+    )
+    want = ref.range_lookup_ref(keys, ops, starts)
+    for g, w, name in zip(got, want, ["idx", "read_hits", "write_hits"]):
+        assert_array_equal(np.asarray(g), np.asarray(w), err_msg=name)
+    return got
+
+
+class TestRangeLookupFixed:
+    def test_paper_config_uniform(self):
+        """B=256, N=128 — the AOT shapes."""
+        rng = np.random.default_rng(7)
+        starts = make_starts(rng, 128)
+        keys = rng.integers(0, 2**32, size=256, dtype=np.uint32)
+        ops = rng.integers(0, 2, size=256).astype(np.uint32)
+        run_both(keys, ops, starts, block_b=128)
+
+    def test_boundary_keys_match_their_own_range(self):
+        starts = np.array([0, 100, 200, 300], dtype=np.uint32)
+        keys = np.array([0, 99, 100, 199, 200, 300, 2**32 - 1, 150], dtype=np.uint32)
+        ops = np.zeros(8, dtype=np.uint32)
+        idx, rh, wh = run_both(keys, ops, starts, block_b=8)
+        assert_array_equal(np.asarray(idx), [0, 0, 1, 1, 2, 3, 3, 1])
+        assert_array_equal(np.asarray(rh), [2, 3, 1, 2])
+        assert_array_equal(np.asarray(wh), [0, 0, 0, 0])
+
+    def test_pad_slots_excluded_from_histograms(self):
+        starts = np.array([0, 10], dtype=np.uint32)
+        keys = np.array([5, 15, 15, 5], dtype=np.uint32)
+        ops = np.array([ref.OP_PAD, ref.OP_READ, ref.OP_WRITE, ref.OP_PAD], dtype=np.uint32)
+        _, rh, wh = run_both(keys, ops, starts, block_b=4)
+        assert_array_equal(np.asarray(rh), [0, 1])
+        assert_array_equal(np.asarray(wh), [0, 1])
+
+    def test_all_keys_first_range(self):
+        starts = np.array([0, 2**31], dtype=np.uint32)
+        keys = np.zeros(16, dtype=np.uint32)
+        ops = np.zeros(16, dtype=np.uint32)
+        idx, rh, wh = run_both(keys, ops, starts, block_b=8)
+        assert int(np.asarray(rh)[0]) == 16
+
+    def test_single_range_table(self):
+        starts = np.array([0], dtype=np.uint32)
+        keys = np.array([0, 1, 2**32 - 1, 77], dtype=np.uint32)
+        ops = np.array([0, 1, 0, 1], dtype=np.uint32)
+        idx, rh, wh = run_both(keys, ops, starts, block_b=4)
+        assert_array_equal(np.asarray(idx), [0, 0, 0, 0])
+        assert int(np.asarray(rh)[0]) == 2 and int(np.asarray(wh)[0]) == 2
+
+    def test_counter_totals_conserved(self):
+        rng = np.random.default_rng(11)
+        starts = make_starts(rng, 32)
+        keys = rng.integers(0, 2**32, size=512, dtype=np.uint32)
+        ops = rng.integers(0, 3, size=512).astype(np.uint32)
+        _, rh, wh = run_both(keys, ops, starts, block_b=64)
+        assert int(np.asarray(rh).sum()) == int((ops == ref.OP_READ).sum())
+        assert int(np.asarray(wh).sum()) == int((ops == ref.OP_WRITE).sum())
+
+    def test_rejects_non_multiple_batch(self):
+        starts = np.array([0], dtype=np.uint32)
+        with pytest.raises(ValueError):
+            range_lookup.range_lookup(
+                jnp.zeros(10, jnp.uint32), jnp.zeros(10, jnp.uint32),
+                jnp.asarray(starts), block_b=8,
+            )
+
+
+class TestRangeLookupHypothesis:
+    # Shapes are drawn from small fixed sets so jax's jit cache is hit and the
+    # sweep stays fast; values still vary freely across examples.
+    @settings(max_examples=30, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        n=st.sampled_from([1, 2, 16, 128]),
+        blocks=st.sampled_from([1, 2]),
+        block_b=st.sampled_from([8, 128]),
+    )
+    def test_matches_ref_random(self, seed, n, blocks, block_b):
+        rng = np.random.default_rng(seed)
+        starts = make_starts(rng, n) if n > 1 else np.zeros(1, dtype=np.uint32)
+        b = blocks * block_b
+        keys = rng.integers(0, 2**32, size=b, dtype=np.uint32)
+        ops = rng.integers(0, 3, size=b).astype(np.uint32)
+        run_both(keys, ops, starts, block_b=block_b)
+
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1), n=st.sampled_from([2, 16, 64]))
+    def test_keys_on_exact_boundaries(self, seed, n):
+        """Keys equal to boundary values land in the range they start."""
+        rng = np.random.default_rng(seed)
+        starts = make_starts(rng, n)
+        keys = np.resize(starts, 64).astype(np.uint32)
+        ops = np.zeros(64, dtype=np.uint32)
+        idx, _, _ = run_both(keys, ops, starts, block_b=32)
+        for k, i in zip(keys, np.asarray(idx)):
+            assert starts[i] <= k
+            if i + 1 < n:
+                assert k < starts[i + 1]
+
+
+class TestLoadMatmul:
+    def test_paper_config(self):
+        rng = np.random.default_rng(3)
+        n, s = 128, 16
+        read = rng.random(n).astype(np.float32) * 1000
+        write = rng.random(n).astype(np.float32) * 1000
+        tail = np.zeros((n, s), np.float32)
+        member = np.zeros((n, s), np.float32)
+        for r in range(n):
+            chain = rng.choice(s, size=3, replace=False)
+            member[r, chain] = 1.0
+            tail[r, chain[-1]] = 1.0
+        cost = jnp.float32(3.0)
+        got = load_matmul.load_estimate(
+            jnp.asarray(read), jnp.asarray(write), jnp.asarray(tail),
+            jnp.asarray(member), cost,
+        )
+        want = ref.load_estimate_ref(read, write, tail, member, 3.0)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        seed=st.integers(0, 2**31 - 1),
+        n=st.sampled_from([1, 16, 128]),
+        s=st.sampled_from([1, 4, 16]),
+        cost=st.floats(0.0, 10.0, allow_nan=False),
+    )
+    def test_matches_ref_random(self, seed, n, s, cost):
+        rng = np.random.default_rng(seed)
+        read = rng.random(n).astype(np.float32) * 100
+        write = rng.random(n).astype(np.float32) * 100
+        tail = (rng.random((n, s)) < 0.3).astype(np.float32)
+        member = np.maximum(tail, (rng.random((n, s)) < 0.3).astype(np.float32))
+        got = load_matmul.load_estimate(
+            jnp.asarray(read), jnp.asarray(write), jnp.asarray(tail),
+            jnp.asarray(member), jnp.float32(cost),
+        )
+        want = ref.load_estimate_ref(read, write, tail, member, cost)
+        assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+    def test_zero_counters_zero_load(self):
+        z = jnp.zeros(8, jnp.float32)
+        m = jnp.ones((8, 4), jnp.float32)
+        got = load_matmul.load_estimate(z, z, m, m, jnp.float32(5.0))
+        assert_array_equal(np.asarray(got), np.zeros(4, np.float32))

@@ -1,0 +1,47 @@
+"""L2 shape/semantics tests for model.py entry points."""
+
+import jax.numpy as jnp
+import numpy as np
+from numpy.testing import assert_allclose, assert_array_equal
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_dataplane_step_shapes_and_values():
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 2**32, size=model.BATCH, dtype=np.uint32)
+    ops = rng.integers(0, 3, size=model.BATCH).astype(np.uint32)
+    starts = np.unique(
+        rng.integers(0, 2**32, size=4 * model.NUM_RANGES, dtype=np.uint64)
+    )[: model.NUM_RANGES].astype(np.uint32)
+    starts[0] = 0
+    idx, rh, wh = model.dataplane_step(
+        jnp.asarray(keys), jnp.asarray(ops), jnp.asarray(starts)
+    )
+    assert idx.shape == (model.BATCH,)
+    assert rh.shape == wh.shape == (model.NUM_RANGES,)
+    want = ref.range_lookup_ref(keys, ops, starts)
+    assert_array_equal(np.asarray(idx), np.asarray(want[0]))
+    assert_array_equal(np.asarray(rh), np.asarray(want[1]))
+    assert_array_equal(np.asarray(wh), np.asarray(want[2]))
+
+
+def test_load_estimate_share_sums_to_one():
+    rng = np.random.default_rng(1)
+    n, s = model.NUM_RANGES, model.NUM_NODES
+    read = jnp.asarray(rng.random(n).astype(np.float32) * 50 + 1)
+    write = jnp.asarray(rng.random(n).astype(np.float32) * 50)
+    tail = jnp.asarray((rng.random((n, s)) < 0.2).astype(np.float32))
+    member = jnp.maximum(tail, jnp.asarray((rng.random((n, s)) < 0.2).astype(np.float32)))
+    loads, share = model.load_estimate(read, write, tail, member, jnp.float32(3.0))
+    assert loads.shape == share.shape == (s,)
+    assert_allclose(float(jnp.sum(share)), 1.0, rtol=1e-5)
+
+
+def test_load_estimate_zero_counters_no_nan():
+    n, s = model.NUM_RANGES, model.NUM_NODES
+    z = jnp.zeros(n, jnp.float32)
+    m = jnp.zeros((n, s), jnp.float32)
+    loads, share = model.load_estimate(z, z, m, m, jnp.float32(1.0))
+    assert not bool(jnp.any(jnp.isnan(share)))

@@ -1,0 +1,17 @@
+//! Regenerates the paper's fig13c result (see DESIGN.md §4 experiment
+//! index). Scale with TURBOKV_BENCH_SCALE (default 0.25 for quick runs;
+//! 1.0 = full figure fidelity, same as `turbokv exp fig13c`).
+use turbokv::experiments::{run_by_name, Scale};
+
+fn main() {
+    let scale = Scale(
+        std::env::var("TURBOKV_BENCH_SCALE")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0.25),
+    );
+    let t0 = std::time::Instant::now();
+    let report = run_by_name("fig13c", scale).expect("experiment");
+    println!("{report}");
+    println!("bench fig13c: regenerated in {:.2}s (scale {:.2})", t0.elapsed().as_secs_f64(), scale.0);
+}

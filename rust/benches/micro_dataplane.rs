@@ -1,0 +1,52 @@
+//! Micro M1: switch dataplane lookup — rust reference vs the XLA batched
+//! artifact, across batch sizes. This is the L1 kernel's request-path
+//! integration point; interpret-mode Pallas on CPU is not a TPU proxy
+//! (DESIGN.md §6), so the interesting rust-side numbers are the reference
+//! path's throughput and the PJRT call overhead.
+use std::rc::Rc;
+
+use turbokv::experiments::benchkit::Bench;
+use turbokv::partition::Directory;
+use turbokv::runtime::xla_lookup::XlaLookup;
+use turbokv::runtime::Runtime;
+use turbokv::switch::{DataplaneLookup, MatchActionTable, RegisterArrays, RustLookup};
+use turbokv::types::Key;
+use turbokv::util::rng::Rng;
+
+fn main() {
+    let dir = Directory::initial(128, 16, 3);
+    let mut table = MatchActionTable::new();
+    table.install_from_directory(&dir);
+    let mut rng = Rng::new(42);
+
+    for &batch in &[1usize, 16, 64, 256, 1024] {
+        let mvs: Vec<Key> = (0..batch).map(|_| Key(rng.next_u128())).collect();
+        let writes: Vec<bool> = (0..batch).map(|_| rng.chance(0.3)).collect();
+
+        let mut regs = RegisterArrays::new();
+        regs.resize_counters(table.len());
+        let mut rust = RustLookup;
+        let b = Bench::run(&format!("lookup/rust/batch{batch}"), 20, 200, || {
+            std::hint::black_box(rust.lookup_batch(&table, &mut regs, &mvs, &writes));
+        });
+        println!("{}", b.report_throughput(batch as f64));
+    }
+
+    match Runtime::load("artifacts") {
+        Ok(rt) => {
+            let rt = Rc::new(rt);
+            for &batch in &[1usize, 64, 256, 1024] {
+                let mvs: Vec<Key> = (0..batch).map(|_| Key(rng.next_u128())).collect();
+                let writes: Vec<bool> = (0..batch).map(|_| rng.chance(0.3)).collect();
+                let mut regs = RegisterArrays::new();
+                regs.resize_counters(table.len());
+                let mut xla = XlaLookup::new(rt.clone());
+                let b = Bench::run(&format!("lookup/xla/batch{batch}"), 5, 30, || {
+                    std::hint::black_box(xla.lookup_batch(&table, &mut regs, &mvs, &writes));
+                });
+                println!("{}", b.report_throughput(batch as f64));
+            }
+        }
+        Err(e) => println!("(xla path skipped: {e:#}; run `make artifacts`)"),
+    }
+}

@@ -1,0 +1,61 @@
+//! Micro M2: storage-engine throughput — LSM get/put/scan and hash-table
+//! get/put at the experiment's data shape (16 B keys, 128 B values).
+use turbokv::experiments::benchkit::Bench;
+use turbokv::store::hashtable::HashTable;
+use turbokv::store::{Lsm, LsmOptions};
+use turbokv::types::Key;
+use turbokv::util::rng::Rng;
+
+fn main() {
+    let n_keys: u128 = 20_000;
+    let value = vec![0xABu8; 128];
+    let mut rng = Rng::new(7);
+
+    // LSM: preload, then measure.
+    let mut db = Lsm::new(LsmOptions::default());
+    for i in 0..n_keys {
+        db.put(Key(i), value.clone());
+    }
+    let keys: Vec<Key> = (0..2_000).map(|_| Key(rng.gen_range(n_keys as u64) as u128)).collect();
+
+    let b = Bench::run("lsm/get/2k-random", 3, 30, || {
+        for &k in &keys {
+            std::hint::black_box(db.get(k));
+        }
+    });
+    println!("{}", b.report_throughput(keys.len() as f64));
+
+    let mut i = n_keys;
+    let b = Bench::run("lsm/put/2k-sequential", 3, 30, || {
+        for _ in 0..2_000 {
+            db.put(Key(i), value.clone());
+            i += 1;
+        }
+    });
+    println!("{}", b.report_throughput(2_000.0));
+
+    let b = Bench::run("lsm/scan/256-span", 3, 30, || {
+        let start = rng.gen_range(n_keys as u64 - 256) as u128;
+        std::hint::black_box(db.scan(Key(start), Key(start + 255)));
+    });
+    println!("{}", b.report_throughput(256.0));
+
+    // Hash engine.
+    let mut ht = HashTable::new(4096);
+    for i in 0..n_keys {
+        ht.put(Key(i), value.clone());
+    }
+    let b = Bench::run("hash/get/2k-random", 3, 30, || {
+        for &k in &keys {
+            std::hint::black_box(ht.get(k));
+        }
+    });
+    println!("{}", b.report_throughput(keys.len() as f64));
+
+    println!(
+        "lsm stats: {:?}, levels {:?}, {} table bytes",
+        db.stats,
+        db.level_files(),
+        db.table_bytes()
+    );
+}

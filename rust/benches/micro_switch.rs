@@ -1,0 +1,63 @@
+//! Micro M3: switch pipeline packet-processing rate (parser → batched
+//! match-action → routing action) and the DES engine's raw event rate —
+//! the L3 hot paths that bound how fast figure sweeps run.
+use turbokv::config::ClusterConfig;
+use turbokv::experiments::benchkit::Bench;
+use turbokv::net::packet::{Ip, Packet, Tos};
+use turbokv::net::topology::Topology;
+use turbokv::partition::Directory;
+use turbokv::sim::Engine;
+use turbokv::switch::{RustLookup, Switch};
+use turbokv::types::{Key, OpCode};
+use turbokv::util::rng::Rng;
+
+fn main() {
+    let cfg = ClusterConfig::default();
+    let topo = Topology::build(&cfg);
+    let dir = Directory::initial(128, 16, 3);
+    let mut sw = Switch::new(topo.tor_of_rack(0), topo.switches[0].role);
+    sw.table.install_from_directory(&dir);
+    sw.registers.resize_counters(dir.len());
+    for n in 0..16 {
+        sw.registers.set_node(n as u16, topo.node_ip(n), n as u16);
+    }
+
+    let mut rng = Rng::new(3);
+    for &batch in &[1usize, 16, 64, 256] {
+        let pkts: Vec<Packet> = (0..batch)
+            .map(|_| {
+                Packet::request(
+                    topo.client_ip(0),
+                    Ip(0),
+                    Tos::RangeData,
+                    if rng.chance(0.3) { OpCode::Put } else { OpCode::Get },
+                    Key(rng.next_u128()),
+                    Key::MIN,
+                    vec![0u8; 128],
+                )
+            })
+            .collect();
+        let b = Bench::run(&format!("switch/pipeline/batch{batch}"), 20, 200, || {
+            let emits = sw.process_batch(pkts.clone(), &topo, &mut RustLookup, 750_000, 800_000);
+            std::hint::black_box(emits);
+        });
+        println!("{}", b.report_throughput(batch as f64));
+    }
+
+    // Raw DES event throughput.
+    let b = Bench::run("sim/engine/100k-events", 2, 20, || {
+        let mut eng: Engine<u64> = Engine::new();
+        for i in 0..1_000u64 {
+            eng.schedule(i % 97, i);
+        }
+        let mut n = 0u64;
+        while let Some((_, v)) = eng.pop() {
+            n += 1;
+            if n < 100_000 {
+                eng.schedule(v % 101 + 1, v.wrapping_mul(31));
+            }
+        }
+        std::hint::black_box(n);
+    });
+    println!("{}", b.report_throughput(100_000.0));
+}

@@ -1,0 +1,18 @@
+//! Regenerates Tables 1 and 2 (request latency analysis, uniform and
+//! zipf-1.2) in one run — the same rows `turbokv exp fig14`/`fig15` print.
+use turbokv::experiments::{latency_experiment, Scale};
+
+fn main() {
+    let scale = Scale(
+        std::env::var("TURBOKV_BENCH_SCALE")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0.25),
+    );
+    let t0 = std::time::Instant::now();
+    let (table1, _) = latency_experiment(scale, None);
+    println!("{table1}");
+    let (table2, _) = latency_experiment(scale, Some(1.2));
+    println!("{table2}");
+    println!("bench tables: regenerated in {:.2}s (scale {:.2})", t0.elapsed().as_secs_f64(), scale.0);
+}

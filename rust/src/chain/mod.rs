@@ -1,0 +1,144 @@
+//! Chain replication (van Renesse & Schneider, OSDI'04) — the consistency
+//! protocol TurboKV uses for every sub-range (paper §4.1.2).
+//!
+//! Reads go to the tail; writes enter at the head, propagate through each
+//! successor, and the tail replies — (n+1) messages per write against the
+//! classical primary-backup protocol's 2n (Fig. 6), which the ablation
+//! bench A2 reproduces. This module holds the protocol-level logic and
+//! bookkeeping; the message flow itself is driven by the cluster simulator.
+
+use crate::types::NodeId;
+
+/// A node's position in a chain.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    Head,
+    Middle,
+    Tail,
+    /// Chains of length 1: the node is both head and tail.
+    Solo,
+    NotMember,
+}
+
+/// Role of `node` within `chain`.
+pub fn role_of(chain: &[NodeId], node: NodeId) -> Role {
+    let Some(pos) = chain.iter().position(|&n| n == node) else {
+        return Role::NotMember;
+    };
+    match (pos, chain.len()) {
+        (_, 1) => Role::Solo,
+        (0, _) => Role::Head,
+        (p, len) if p == len - 1 => Role::Tail,
+        _ => Role::Middle,
+    }
+}
+
+/// Messages needed to complete one write under chain replication:
+/// head→…→tail hops plus the tail's reply (paper §4.1.2: "(n+1) instead of
+/// (2n)").
+pub fn cr_write_messages(chain_len: usize) -> usize {
+    chain_len + 1
+}
+
+/// Messages for the classical primary-backup protocol: primary sends to
+/// n-1 backups, collects n-1 acks, then replies (2n for n nodes counting
+/// the request delivery + reply, per the paper's accounting).
+pub fn pb_write_messages(chain_len: usize) -> usize {
+    2 * chain_len
+}
+
+/// Chain repair after a node failure (paper §5.2): drop the failed node
+/// (predecessor now forwards to the old successor); optionally extend with
+/// a replacement at the tail to restore the replication factor.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Repair {
+    pub new_chain: Vec<NodeId>,
+    /// Node that must receive a copy of the sub-range's data (the new
+    /// tail), if a replacement was appended.
+    pub needs_copy: Option<NodeId>,
+}
+
+/// Compute the repaired chain. `replacement` is chosen by the controller
+/// (a functional node not already in the chain).
+pub fn repair_chain(chain: &[NodeId], failed: NodeId, replacement: Option<NodeId>) -> Repair {
+    let mut new_chain: Vec<NodeId> = chain.iter().copied().filter(|&n| n != failed).collect();
+    assert!(!new_chain.is_empty(), "chain lost its last replica");
+    let needs_copy = match replacement {
+        Some(r) if !new_chain.contains(&r) => {
+            new_chain.push(r);
+            Some(r)
+        }
+        _ => None,
+    };
+    Repair { new_chain, needs_copy }
+}
+
+/// Can the chain still serve after `failures` simultaneous failures?
+/// (paper §4.1.2: "TurboKV can sustain up to (r-1) node failures").
+pub fn sustains(replication: usize, failures: usize) -> bool {
+    failures < replication
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roles() {
+        let chain = [3usize, 7, 9];
+        assert_eq!(role_of(&chain, 3), Role::Head);
+        assert_eq!(role_of(&chain, 7), Role::Middle);
+        assert_eq!(role_of(&chain, 9), Role::Tail);
+        assert_eq!(role_of(&chain, 4), Role::NotMember);
+        assert_eq!(role_of(&[5], 5), Role::Solo);
+    }
+
+    #[test]
+    fn message_counts_match_paper() {
+        // r=3: CR uses 4 messages, primary-backup 6.
+        assert_eq!(cr_write_messages(3), 4);
+        assert_eq!(pb_write_messages(3), 6);
+        for n in 1..10 {
+            assert!(cr_write_messages(n) <= pb_write_messages(n));
+        }
+    }
+
+    #[test]
+    fn repair_drops_failed_and_extends() {
+        let r = repair_chain(&[1, 2, 3], 2, Some(8));
+        assert_eq!(r.new_chain, vec![1, 3, 8]);
+        assert_eq!(r.needs_copy, Some(8));
+    }
+
+    #[test]
+    fn repair_head_and_tail_failures() {
+        // Head fails: successor becomes the new head.
+        let r = repair_chain(&[1, 2, 3], 1, None);
+        assert_eq!(r.new_chain, vec![2, 3]);
+        assert_eq!(r.needs_copy, None);
+        // Tail fails: predecessor becomes the new tail.
+        let r = repair_chain(&[1, 2, 3], 3, None);
+        assert_eq!(r.new_chain, vec![1, 2]);
+    }
+
+    #[test]
+    fn repair_skips_replacement_already_in_chain() {
+        let r = repair_chain(&[1, 2, 3], 2, Some(3));
+        assert_eq!(r.new_chain, vec![1, 3]);
+        assert_eq!(r.needs_copy, None);
+    }
+
+    #[test]
+    #[should_panic(expected = "last replica")]
+    fn repair_refuses_to_empty_chain() {
+        repair_chain(&[5], 5, None);
+    }
+
+    #[test]
+    fn sustains_r_minus_one() {
+        assert!(sustains(3, 0));
+        assert!(sustains(3, 2));
+        assert!(!sustains(3, 3));
+        assert!(!sustains(1, 1));
+    }
+}

@@ -1,0 +1,339 @@
+//! The TurboKV controller (paper §5): periodic query-statistics collection
+//! from the switches' register arrays, load estimation, greedy hot-range
+//! migration, and failure handling with chain repair.
+//!
+//! The controller is an *application* controller, separate from the SDN
+//! controller (§3); here it is a set of epoch-driven routines over the
+//! cluster state, mutating the authoritative directory and pushing table
+//! updates to every switch through the "control plane" (direct calls).
+
+use crate::chain::repair_chain;
+use crate::net::topology::SwitchRole;
+use crate::types::NodeId;
+
+use super::Cluster;
+
+/// Node-load estimation engine. The rust fallback mirrors the XLA
+/// `loadbalance.hlo.txt` artifact; `runtime::xla_lookup::XlaEstimator` runs
+/// the artifact itself.
+pub trait LoadEstimator {
+    fn name(&self) -> &'static str;
+
+    /// `read`/`write`: per-range counters; `tail`/`member`: one-hot
+    /// `[ranges x nodes]` row-major chain incidence. Returns per-node load.
+    fn estimate(
+        &mut self,
+        read: &[f32],
+        write: &[f32],
+        tail: &[f32],
+        member: &[f32],
+        num_nodes: usize,
+        write_cost: f32,
+    ) -> Vec<f32>;
+}
+
+/// Reference estimator: the same math as kernels/load_matmul.py.
+#[derive(Debug, Default)]
+pub struct RustEstimator;
+
+impl LoadEstimator for RustEstimator {
+    fn name(&self) -> &'static str {
+        "rust"
+    }
+
+    fn estimate(
+        &mut self,
+        read: &[f32],
+        write: &[f32],
+        tail: &[f32],
+        member: &[f32],
+        num_nodes: usize,
+        write_cost: f32,
+    ) -> Vec<f32> {
+        let n = read.len();
+        let mut load = vec![0.0f32; num_nodes];
+        for i in 0..n {
+            for s in 0..num_nodes {
+                load[s] += read[i] * tail[i * num_nodes + s]
+                    + write_cost * write[i] * member[i * num_nodes + s];
+            }
+        }
+        load
+    }
+}
+
+/// Controller bookkeeping.
+#[derive(Debug, Default)]
+pub struct ControllerState {
+    pub epochs: u64,
+    pub migrations: u64,
+    pub repairs: u64,
+    /// Hot sub-range divisions (§4.1.1 / §5.1).
+    pub splits: u64,
+    /// Nodes that failed since the last epoch (detected now).
+    pub pending_failures: Vec<NodeId>,
+    /// Last epoch's per-range read+write counters (observability).
+    pub last_read: Vec<u64>,
+    pub last_write: Vec<u64>,
+    /// Last computed per-node load estimate.
+    pub last_load: Vec<f32>,
+}
+
+/// One controller epoch: collect + reset switch counters, repair failures,
+/// then (if enabled) migrate hot sub-ranges off over-utilized nodes.
+pub fn run_epoch(cl: &mut Cluster) {
+    cl.controller.epochs += 1;
+
+    // --- §5.1: collect per-range statistics from the ToR switches.
+    let records = cl.dir.len();
+    #[allow(unused_mut)]
+    let mut read = vec![0u64; records];
+    #[allow(unused_mut)]
+    let mut write = vec![0u64; records];
+    for sw in &mut cl.switches {
+        if !matches!(sw.role, SwitchRole::Tor { .. }) {
+            // Non-ToR switches also keep counters; reset them but only the
+            // ToRs feed the estimate (each request is counted exactly once
+            // at its coordinator ToR).
+            sw.registers.drain_counters();
+            continue;
+        }
+        let (r, w) = sw.registers.drain_counters();
+        for (acc, v) in read.iter_mut().zip(r) {
+            *acc += v;
+        }
+        for (acc, v) in write.iter_mut().zip(w) {
+            *acc += v;
+        }
+    }
+    cl.controller.last_read = read.clone();
+    cl.controller.last_write = write.clone();
+
+    // --- §5.2: failure handling first (repairs trump balancing).
+    let failures = std::mem::take(&mut cl.controller.pending_failures);
+    for node in failures {
+        repair_node_failure(cl, node);
+    }
+    // Dead switches: their rack's nodes are unreachable (§5.2).
+    let dead_switch_nodes: Vec<NodeId> = cl
+        .switches
+        .iter()
+        .filter(|s| !s.alive)
+        .flat_map(|s| cl.topo.nodes_of_tor(s.id))
+        .filter(|&n| cl.nodes[n].alive)
+        .collect();
+    for node in dead_switch_nodes {
+        cl.nodes[node].alive = false;
+        repair_node_failure(cl, node);
+    }
+
+    // --- §5.1: load balancing by data migration.
+    if !cl.cfg.controller.migration {
+        return;
+    }
+    // Optional §4.1.1/§5.1 sub-range division: very hot records are split
+    // at a prefix-aligned midpoint first, so migration can move "a subset
+    // of the hot data in a sub-range" instead of the whole record.
+    if cl.cfg.controller.split_hot {
+        split_hot_ranges(cl, &mut read, &mut write);
+    }
+    let num_nodes = cl.nodes.len();
+    let (tail, member) = cl.dir.onehot(num_nodes);
+    let read_f: Vec<f32> = read.iter().map(|&v| v as f32).collect();
+    let write_f: Vec<f32> = write.iter().map(|&v| v as f32).collect();
+    let load = cl.estimator.estimate(
+        &read_f,
+        &write_f,
+        &tail,
+        &member,
+        num_nodes,
+        cl.cfg.controller.write_cost as f32,
+    );
+    cl.controller.last_load = load.clone();
+    let total: f32 = load.iter().sum();
+    if total <= 0.0 {
+        return;
+    }
+    // A node is over-utilized when its load share exceeds both the
+    // configured factor AND the uniform share by >4 sigma of the epoch's
+    // multinomial sampling noise — small epochs must not migrate on noise.
+    let samples: u64 = read.iter().sum::<u64>() + write.iter().sum::<u64>();
+    let uniform_share = 1.0f32 / num_nodes as f32;
+    let sigma = (uniform_share * (1.0 - uniform_share) / (samples.max(1) as f32)).sqrt();
+    let threshold =
+        (cl.cfg.controller.overload_factor as f32 * uniform_share).max(uniform_share + 4.0 * sigma);
+
+    for _ in 0..cl.cfg.controller.max_migrations_per_epoch {
+        // Greedy: most-loaded live node above threshold.
+        let Some((hot_node, _)) = load_ranked(cl, &read, &write)
+            .into_iter()
+            .find(|&(n, share)| cl.nodes[n].alive && share > threshold)
+        else {
+            break;
+        };
+        if !migrate_one(cl, hot_node, &read, &write) {
+            break;
+        }
+    }
+}
+
+/// §4.1.1/§5.1 sub-range division: split any record whose hit count is
+/// > 8x the per-record mean at a prefix-aligned midpoint. Both halves keep
+/// the original chain (no data moves — migration may then move one half);
+/// counters are halved across the split; every switch's table and counter
+/// registers are updated through the control plane.
+fn split_hot_ranges(cl: &mut Cluster, read: &mut Vec<u64>, write: &mut Vec<u64>) {
+    let total: u64 = read.iter().sum::<u64>() + write.iter().sum::<u64>();
+    if total == 0 {
+        return;
+    }
+    let mut i = 0;
+    while i < cl.dir.len() {
+        let mean = (total / cl.dir.len() as u64).max(1);
+        let weight = read[i] + write[i];
+        let (start, end) = cl.dir.bounds(i);
+        // Midpoint in 32-bit-prefix space, kept 2^96-aligned so the XLA
+        // dataplane's prefix matching stays exact.
+        let lo = start.prefix32();
+        let hi = end.prefix32();
+        let splittable = start.is_prefix_aligned() && hi > lo + 1;
+        if weight > 8 * mean && splittable {
+            let mid = crate::types::Key::from_prefix32(lo + (hi - lo) / 2 + 1);
+            debug_assert!(mid > start && mid <= end);
+            let chain = cl.dir.chain(i).to_vec();
+            cl.dir.split(i, mid, chain.clone());
+            for sw in &mut cl.switches {
+                sw.table.split(i, mid, chain.iter().map(|&n| n as u16).collect());
+                sw.registers.insert_counter_slot(i + 1);
+            }
+            // Halve the observed counters across the two halves.
+            read.insert(i + 1, read[i] / 2);
+            read[i] -= read[i + 1];
+            write.insert(i + 1, write[i] / 2);
+            write[i] -= write[i + 1];
+            cl.controller.splits += 1;
+            // The still-hot halves get re-examined next epoch with fresh
+            // counters.
+        }
+        i += 1;
+    }
+}
+
+/// Per-node load shares, hottest first, recomputed from current chains.
+fn load_ranked(cl: &mut Cluster, read: &[u64], write: &[u64]) -> Vec<(NodeId, f32)> {
+    let num_nodes = cl.nodes.len();
+    let (tail, member) = cl.dir.onehot(num_nodes);
+    let read_f: Vec<f32> = read.iter().map(|&v| v as f32).collect();
+    let write_f: Vec<f32> = write.iter().map(|&v| v as f32).collect();
+    let load = cl.estimator.estimate(
+        &read_f,
+        &write_f,
+        &tail,
+        &member,
+        num_nodes,
+        cl.cfg.controller.write_cost as f32,
+    );
+    let total: f32 = load.iter().sum::<f32>().max(1e-9);
+    let mut ranked: Vec<(NodeId, f32)> = load
+        .iter()
+        .enumerate()
+        .map(|(n, &l)| (n, l / total))
+        .collect();
+    ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    ranked
+}
+
+/// Migrate the hottest sub-range served by `hot_node` to the least-utilized
+/// node (greedy selection, §5.1). Returns false if no migration applies.
+fn migrate_one(cl: &mut Cluster, hot_node: NodeId, read: &[u64], write: &[u64]) -> bool {
+    // Hottest range where hot_node is the tail (reads) or any member.
+    let mut candidate: Option<(usize, u64)> = None;
+    for idx in cl.dir.ranges_of_node(hot_node) {
+        let weight = if cl.dir.tail(idx) == hot_node {
+            read[idx] + write[idx]
+        } else {
+            write[idx]
+        };
+        if weight > candidate.map(|(_, w)| w).unwrap_or(0) {
+            candidate = Some((idx, weight));
+        }
+    }
+    let Some((idx, weight)) = candidate else { return false };
+    if weight == 0 {
+        return false;
+    }
+    // Least-utilized live node not already in the chain.
+    let ranked = load_ranked(cl, read, write);
+    let chain = cl.dir.chain(idx).to_vec();
+    let Some(&(target, _)) = ranked
+        .iter()
+        .rev()
+        .find(|&&(n, _)| cl.nodes[n].alive && !chain.contains(&n))
+    else {
+        return false;
+    };
+
+    // Physically move the sub-range's data (extract → ingest → delete old
+    // copy, §5.1).
+    let (start, end) = cl.dir.bounds(idx);
+    let pairs = cl.nodes[hot_node].extract_range(start, end);
+    cl.nodes[target].ingest(pairs);
+    cl.nodes[hot_node].delete_range(start, end);
+
+    // Reconfigure the chain: target takes hot_node's position.
+    let new_chain: Vec<NodeId> = chain
+        .iter()
+        .map(|&n| if n == hot_node { target } else { n })
+        .collect();
+    cl.dir.set_chain(idx, new_chain.clone());
+    push_chain_update(cl, idx, &new_chain);
+    cl.controller.migrations += 1;
+    true
+}
+
+/// §5.2 storage-node failure: remove the node from every chain, then
+/// restore the replication factor by appending replacements at chain tails
+/// and copying the sub-range data from a surviving replica.
+fn repair_node_failure(cl: &mut Cluster, failed: NodeId) {
+    let affected = cl.dir.ranges_of_node(failed);
+    for idx in affected {
+        let chain = cl.dir.chain(idx).to_vec();
+        // Pick the live node with the fewest ranges as replacement.
+        let replacement = least_loaded_replacement(cl, &chain, failed);
+        let repair = repair_chain(&chain, failed, replacement);
+        // Copy data from a surviving replica to the new tail.
+        if let Some(new_node) = repair.needs_copy {
+            let source = repair
+                .new_chain
+                .iter()
+                .copied()
+                .find(|&n| n != new_node && cl.nodes[n].alive);
+            if let Some(src) = source {
+                let (start, end) = cl.dir.bounds(idx);
+                let pairs = cl.nodes[src].extract_range(start, end);
+                cl.nodes[new_node].ingest(pairs);
+            }
+        }
+        cl.dir.set_chain(idx, repair.new_chain.clone());
+        push_chain_update(cl, idx, &repair.new_chain);
+        cl.controller.repairs += 1;
+    }
+}
+
+fn least_loaded_replacement(
+    cl: &Cluster,
+    chain: &[NodeId],
+    failed: NodeId,
+) -> Option<NodeId> {
+    (0..cl.nodes.len())
+        .filter(|&n| cl.nodes[n].alive && n != failed && !chain.contains(&n))
+        .min_by_key(|&n| cl.dir.ranges_of_node(n).len())
+}
+
+/// Control plane push: update record `idx`'s chain in every switch table.
+fn push_chain_update(cl: &mut Cluster, idx: usize, chain: &[NodeId]) {
+    let regs: Vec<u16> = chain.iter().map(|&n| n as u16).collect();
+    for sw in &mut cl.switches {
+        sw.table.set_chain(idx, regs.clone());
+    }
+}

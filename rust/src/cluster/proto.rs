@@ -1,0 +1,166 @@
+//! Reply payload codec and scan-coverage assembly for the client library.
+//!
+//! Replies travel as standard IP packets with the result in the payload
+//! (paper Fig. 8(b)); multi-sub-range scans return one reply per sub-range
+//! (the switch splits the request, §4.3), so the client assembles replies
+//! until the requested interval is fully covered.
+
+use anyhow::{bail, Result};
+
+use crate::store::blob::{get_bytes, get_uvarint, put_bytes, put_uvarint};
+use crate::types::{Key, Reply, Value};
+
+/// Encode a reply into packet payload bytes.
+pub fn encode_reply(r: &Reply) -> Vec<u8> {
+    let mut out = Vec::new();
+    match r {
+        Reply::Value(None) => out.push(0),
+        Reply::Value(Some(v)) => {
+            out.push(1);
+            put_bytes(&mut out, v);
+        }
+        Reply::Ack => out.push(2),
+        Reply::Pairs(pairs) => {
+            out.push(3);
+            put_uvarint(&mut out, pairs.len() as u64);
+            for (k, v) in pairs {
+                out.extend_from_slice(&k.to_bytes());
+                put_bytes(&mut out, v);
+            }
+        }
+        Reply::WrongNode => out.push(4),
+    }
+    out
+}
+
+/// Decode a reply payload.
+pub fn decode_reply(data: &[u8]) -> Result<Reply> {
+    if data.is_empty() {
+        bail!("empty reply payload");
+    }
+    let mut pos = 1usize;
+    Ok(match data[0] {
+        0 => Reply::Value(None),
+        1 => Reply::Value(Some(get_bytes(data, &mut pos)?.to_vec())),
+        2 => Reply::Ack,
+        3 => {
+            let n = get_uvarint(data, &mut pos)? as usize;
+            let mut pairs: Vec<(Key, Value)> = Vec::with_capacity(n);
+            for _ in 0..n {
+                if pos + 16 > data.len() {
+                    bail!("truncated pair key");
+                }
+                let mut kb = [0u8; 16];
+                kb.copy_from_slice(&data[pos..pos + 16]);
+                pos += 16;
+                let v = get_bytes(data, &mut pos)?.to_vec();
+                pairs.push((Key::from_bytes(kb), v));
+            }
+            Reply::Pairs(pairs)
+        }
+        4 => Reply::WrongNode,
+        other => bail!("bad reply tag {other}"),
+    })
+}
+
+/// Tracks which parts of a scanned interval have been answered.
+#[derive(Clone, Debug)]
+pub struct Coverage {
+    target: (Key, Key),
+    /// Received intervals, kept merged and sorted.
+    got: Vec<(Key, Key)>,
+}
+
+impl Coverage {
+    pub fn new(start: Key, end: Key) -> Coverage {
+        assert!(start <= end);
+        Coverage { target: (start, end), got: Vec::new() }
+    }
+
+    /// Record a received interval (inclusive).
+    pub fn add(&mut self, start: Key, end: Key) {
+        self.got.push((start, end));
+        self.got.sort();
+        // Merge adjacent/overlapping intervals.
+        let mut merged: Vec<(Key, Key)> = Vec::with_capacity(self.got.len());
+        for &(s, e) in &self.got {
+            match merged.last_mut() {
+                Some(last) if s <= last.1.next() => last.1 = last.1.max(e),
+                _ => merged.push((s, e)),
+            }
+        }
+        self.got = merged;
+    }
+
+    /// Is the whole target interval covered?
+    pub fn complete(&self) -> bool {
+        self.got
+            .first()
+            .map(|&(s, e)| s <= self.target.0 && e >= self.target.1)
+            .unwrap_or(false)
+    }
+
+    pub fn parts_received(&self) -> usize {
+        self.got.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reply_roundtrip() {
+        let cases = vec![
+            Reply::Value(None),
+            Reply::Value(Some(b"hello".to_vec())),
+            Reply::Ack,
+            Reply::Pairs(vec![(Key(1), b"a".to_vec()), (Key(2), vec![0; 128])]),
+            Reply::Pairs(vec![]),
+            Reply::WrongNode,
+        ];
+        for r in cases {
+            let decoded = decode_reply(&encode_reply(&r)).unwrap();
+            assert_eq!(decoded, r);
+        }
+    }
+
+    #[test]
+    fn reply_decode_rejects_garbage() {
+        assert!(decode_reply(&[]).is_err());
+        assert!(decode_reply(&[9]).is_err());
+        let mut bytes = encode_reply(&Reply::Value(Some(vec![1; 50])));
+        bytes.truncate(10);
+        assert!(decode_reply(&bytes).is_err());
+    }
+
+    #[test]
+    fn coverage_completes_out_of_order() {
+        let mut c = Coverage::new(Key(10), Key(99));
+        assert!(!c.complete());
+        c.add(Key(50), Key(99));
+        assert!(!c.complete());
+        c.add(Key(10), Key(49));
+        assert!(c.complete());
+        assert_eq!(c.parts_received(), 1, "intervals merged");
+    }
+
+    #[test]
+    fn coverage_detects_gaps() {
+        let mut c = Coverage::new(Key(0), Key(100));
+        c.add(Key(0), Key(40));
+        c.add(Key(60), Key(100));
+        assert!(!c.complete());
+        assert_eq!(c.parts_received(), 2);
+        c.add(Key(41), Key(59));
+        assert!(c.complete());
+    }
+
+    #[test]
+    fn coverage_tolerates_overlap_and_overshoot() {
+        let mut c = Coverage::new(Key(10), Key(20));
+        c.add(Key(0), Key(15));
+        c.add(Key(12), Key(30));
+        assert!(c.complete());
+    }
+}

@@ -1,0 +1,152 @@
+//! Minimal CLI argument parser (clap is unavailable offline — DESIGN.md §3).
+//!
+//! Grammar: `turbokv <subcommand> [positional...] [--flag] [--key=value]
+//! [--key value]`. `--section.key=value` flags are folded into the config
+//! as TOML-subset overrides.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use super::schema::Config;
+use super::value::parse;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw argv (without the program name).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(flag) = arg.strip_prefix("--") {
+                if flag.is_empty() {
+                    bail!("bare `--` is not supported");
+                }
+                if let Some((k, v)) = flag.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|next| !next.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    args.options.insert(flag.to_string(), v);
+                } else {
+                    args.switches.push(flag.to_string());
+                }
+            } else if args.subcommand.is_none() {
+                args.subcommand = Some(arg);
+            } else {
+                args.positional.push(arg);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Build a [`Config`]: defaults, then `--config <file>`, then any
+    /// `--section.key=value` overrides (dotted keys only).
+    pub fn to_config(&self) -> Result<Config> {
+        let mut cfg = match self.get("config") {
+            Some(path) => Config::from_file(path)?,
+            None => Config::default(),
+        };
+        let mut doc_lines = Vec::new();
+        for (k, v) in &self.options {
+            if k == "config" {
+                continue;
+            }
+            let path = if k.contains('.') || k == "coordination" {
+                k.clone()
+            } else {
+                continue; // non-config option (handled by the subcommand)
+            };
+            // Re-serialize as a flat `a.b.c = v` doc; quote non-literals.
+            let literal = if v.parse::<i64>().is_ok()
+                || v.parse::<f64>().is_ok()
+                || v == "true"
+                || v == "false"
+            {
+                v.clone()
+            } else {
+                format!("{v:?}")
+            };
+            // Dotted keys become nested sections.
+            match path.rsplit_once('.') {
+                Some((section, key)) => doc_lines.push(format!("[{section}]\n{key} = {literal}")),
+                None => doc_lines.push(format!("{path} = {literal}")),
+            }
+        }
+        for chunk in doc_lines {
+            let doc = parse(&chunk)?;
+            cfg.apply(&doc)?;
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::schema::Coordination;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_and_positionals() {
+        let a = Args::parse(argv("exp fig13a --verbose --out=results --seed 9")).unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("exp"));
+        assert_eq!(a.positional, vec!["fig13a"]);
+        assert!(a.has("verbose"));
+        assert_eq!(a.get("out"), Some("results"));
+        assert_eq!(a.get("seed"), Some("9"));
+    }
+
+    #[test]
+    fn dotted_flags_override_config() {
+        let a = Args::parse(argv(
+            "run --coordination=server-driven --workload.write_ratio=0.5 --cluster.racks=2",
+        ))
+        .unwrap();
+        let cfg = a.to_config().unwrap();
+        assert_eq!(cfg.coordination, Coordination::ServerDriven);
+        assert_eq!(cfg.workload.write_ratio, 0.5);
+        assert_eq!(cfg.cluster.racks, 2);
+    }
+
+    #[test]
+    fn string_values_survive_quoting() {
+        let a = Args::parse(argv("run --dataplane.mode=xla")).unwrap();
+        let cfg = a.to_config().unwrap();
+        assert_eq!(cfg.dataplane.mode, crate::config::schema::DataplaneMode::Xla);
+    }
+
+    #[test]
+    fn invalid_override_is_error() {
+        let a = Args::parse(argv("run --cluster.replication=99")).unwrap();
+        assert!(a.to_config().is_err());
+    }
+
+    #[test]
+    fn flag_without_value_before_another_flag() {
+        let a = Args::parse(argv("bench --quiet --reps=3")).unwrap();
+        assert!(a.has("quiet"));
+        assert_eq!(a.get("reps"), Some("3"));
+    }
+}

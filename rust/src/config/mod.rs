@@ -1,0 +1,12 @@
+//! Configuration system: TOML-subset parser ([`value`]), typed schema with
+//! paper-testbed defaults ([`schema`]), and the CLI front-end ([`cli`]).
+
+pub mod cli;
+pub mod schema;
+pub mod value;
+
+pub use cli::Args;
+pub use schema::{
+    ClusterConfig, Config, ControllerConfig, Coordination, DataplaneConfig, DataplaneMode,
+    Partitioning, SimConfig, WorkloadConfig,
+};

@@ -1,0 +1,455 @@
+//! Typed configuration for the cluster, simulator, workload and controller.
+//!
+//! Every experiment is described by a [`Config`]: defaults reproduce the
+//! paper's testbed (Fig. 12: 16 storage nodes in 4 racks, 4 clients,
+//! 8 switches, 128-record index table, chain length 3) and can be overridden
+//! from a TOML-subset file (`config::value`) and/or CLI `--section.key=v`
+//! flags.
+
+use super::value::{parse, Value};
+use anyhow::{bail, Context, Result};
+
+/// How clients' requests find the storage node holding the data (paper §1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Coordination {
+    /// TurboKV: switches hold the directory and route by key (§4).
+    InSwitch,
+    /// Ideal client-driven: client holds a fresh directory, sends directly.
+    ClientDriven,
+    /// Server-driven: random storage node coordinates, forwards if needed.
+    ServerDriven,
+}
+
+impl Coordination {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "in-switch" | "inswitch" | "turbokv" => Coordination::InSwitch,
+            "client-driven" | "client" => Coordination::ClientDriven,
+            "server-driven" | "server" => Coordination::ServerDriven,
+            other => bail!("unknown coordination mode {other:?}"),
+        })
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Coordination::InSwitch => "in-switch",
+            Coordination::ClientDriven => "client-driven",
+            Coordination::ServerDriven => "server-driven",
+        }
+    }
+
+    pub const ALL: [Coordination; 3] = [
+        Coordination::InSwitch,
+        Coordination::ClientDriven,
+        Coordination::ServerDriven,
+    ];
+}
+
+/// Key→partition strategy (paper §4.1.1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Partitioning {
+    Range,
+    Hash,
+}
+
+impl Partitioning {
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "range" => Partitioning::Range,
+            "hash" => Partitioning::Hash,
+            other => bail!("unknown partitioning {other:?}"),
+        })
+    }
+}
+
+/// Which engine the switch's data plane lookup runs on.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DataplaneMode {
+    /// Pure-rust exact match over u128 boundaries.
+    Rust,
+    /// AOT-compiled XLA artifact via PJRT (batched, 32-bit prefixes).
+    Xla,
+}
+
+/// Cluster layout (paper Fig. 12 defaults).
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    pub racks: usize,
+    pub nodes_per_rack: usize,
+    pub clients: usize,
+    /// Records in the switch index table (paper §8: 128).
+    pub num_ranges: usize,
+    /// Chain length r (paper §7: 3).
+    pub replication: usize,
+    pub partitioning: Partitioning,
+}
+
+impl ClusterConfig {
+    pub fn nodes(&self) -> usize {
+        self.racks * self.nodes_per_rack
+    }
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            racks: 4,
+            nodes_per_rack: 4,
+            clients: 4,
+            num_ranges: 128,
+            replication: 3,
+            partitioning: Partitioning::Range,
+        }
+    }
+}
+
+/// Latency/service-time model for the discrete-event simulator, calibrated
+/// against the BMV2/Mininet magnitudes in the paper's Tables 1–2 (software
+/// switches and python storage shims — hence millisecond scale).
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    /// Per-link propagation delay (ns).
+    pub link_latency_ns: u64,
+    /// Link bandwidth in bits per nanosecond (= Gbit/s).
+    pub link_gbps: f64,
+    /// Switch pipeline traversal: parser + match-action stages + deparser.
+    pub switch_pipeline_ns: u64,
+    /// Extra cost of one clone+recirculate pass (range splitting, Alg. 1).
+    pub switch_recirc_ns: u64,
+    /// Extra per-packet cost of the key-based routing action (range match,
+    /// register fetch, header rewrite) over plain L2/L3 forwarding — the
+    /// BMV2 overhead that makes ideal client-driven marginally faster than
+    /// TurboKV on reads (paper Tables 1–2).
+    pub switch_keyroute_ns: u64,
+    /// Storage-node service time for a local Get.
+    pub node_read_ns: u64,
+    /// Storage-node service time for applying one Put/Del locally.
+    pub node_write_ns: u64,
+    /// Storage-node service time for scanning one sub-range.
+    pub node_scan_ns: u64,
+    /// Directory lookup on a storage node (server/client-driven successor
+    /// mapping and server-driven coordination, §8.1).
+    pub node_dir_lookup_ns: u64,
+    /// Per-request coordinator overhead when a storage node fronts a
+    /// request it does not own (server-driven forwarding step).
+    pub node_forward_ns: u64,
+    /// Service-time jitter fraction (lognormal-ish spread via exponential).
+    pub service_jitter: f64,
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            link_latency_ns: 200_000,       // 0.2 ms mininet veth
+            link_gbps: 1.0,                 // mininet default-ish
+            switch_pipeline_ns: 1_500_000,  // 1.5 ms BMV2 software pipeline
+            switch_recirc_ns: 2_000_000,    // clone + second pipeline pass
+            switch_keyroute_ns: 800_000,    // range match + header rewrite
+            node_read_ns: 18_000_000,       // python shim + LevelDB get
+            node_write_ns: 11_000_000,      // per-replica write apply
+            node_scan_ns: 22_000_000,       // per-sub-range scan
+            node_dir_lookup_ns: 2_500_000,  // directory mapping on a node
+            node_forward_ns: 8_000_000,     // request coordination overhead (python shim)
+            service_jitter: 0.18,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+/// Workload description (paper §8: YCSB, 16 B keys, 128 B values).
+#[derive(Clone, Debug)]
+pub struct WorkloadConfig {
+    /// Distinct keys loaded before the run.
+    pub num_keys: u64,
+    pub value_size: usize,
+    /// Fractions; must sum to <= 1, remainder is Get.
+    pub write_ratio: f64,
+    pub scan_ratio: f64,
+    /// Zipf skew; `None` = uniform.
+    pub zipf_theta: Option<f64>,
+    /// Operations per client in the measured phase.
+    pub ops_per_client: u64,
+    /// Outstanding requests per client (closed loop).
+    pub concurrency: usize,
+    /// Sub-ranges spanned by one scan on average (controls Alg. 1 splits).
+    pub scan_spans: usize,
+    pub seed: u64,
+}
+
+impl Default for WorkloadConfig {
+    fn default() -> Self {
+        WorkloadConfig {
+            num_keys: 20_000,
+            value_size: 128,
+            write_ratio: 0.0,
+            scan_ratio: 0.0,
+            zipf_theta: None,
+            ops_per_client: 2_000,
+            concurrency: 5,
+            scan_spans: 2,
+            seed: 7,
+        }
+    }
+}
+
+/// Controller behaviour (paper §5).
+#[derive(Clone, Debug)]
+pub struct ControllerConfig {
+    /// Statistics reporting epoch (ns of simulated time).
+    pub epoch_ns: u64,
+    /// Enable hot-range migration (§5.1).
+    pub migration: bool,
+    /// A node is over-utilized when its load share exceeds
+    /// `overload_factor / num_nodes`.
+    pub overload_factor: f64,
+    /// Relative cost of a write application vs a read (load estimate).
+    pub write_cost: f64,
+    /// Max sub-ranges migrated per epoch.
+    pub max_migrations_per_epoch: usize,
+    /// Split very hot sub-ranges at a prefix-aligned midpoint before
+    /// migrating, so only "a subset of the hot data in a sub-range" moves
+    /// (paper §5.1 / §4.1.1 sub-range division).
+    pub split_hot: bool,
+}
+
+impl Default for ControllerConfig {
+    fn default() -> Self {
+        ControllerConfig {
+            epoch_ns: 2_000_000_000, // 2 s
+            migration: false,
+            overload_factor: 1.6,
+            write_cost: 3.0,
+            max_migrations_per_epoch: 4,
+            split_hot: false,
+        }
+    }
+}
+
+/// Dataplane lookup engine selection.
+#[derive(Clone, Debug)]
+pub struct DataplaneConfig {
+    pub mode: DataplaneMode,
+    /// Directory containing *.hlo.txt + manifest.json (XLA mode).
+    pub artifacts_dir: String,
+}
+
+impl Default for DataplaneConfig {
+    fn default() -> Self {
+        DataplaneConfig { mode: DataplaneMode::Rust, artifacts_dir: "artifacts".into() }
+    }
+}
+
+/// Root configuration.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    pub cluster: ClusterConfig,
+    pub sim: SimConfig,
+    pub workload: WorkloadConfig,
+    pub controller: ControllerConfig,
+    pub dataplane: DataplaneConfig,
+    pub coordination: Coordination,
+}
+
+impl Default for Coordination {
+    fn default() -> Self {
+        Coordination::InSwitch
+    }
+}
+
+macro_rules! ovr {
+    ($tbl:expr, $key:expr, $slot:expr, int) => {
+        if let Some(v) = $tbl.get($key) {
+            $slot = v
+                .as_int()
+                .with_context(|| format!("{} must be an integer", $key))? as _;
+        }
+    };
+    ($tbl:expr, $key:expr, $slot:expr, float) => {
+        if let Some(v) = $tbl.get($key) {
+            $slot = v
+                .as_float()
+                .with_context(|| format!("{} must be a number", $key))? as _;
+        }
+    };
+    ($tbl:expr, $key:expr, $slot:expr, bool) => {
+        if let Some(v) = $tbl.get($key) {
+            $slot = v
+                .as_bool()
+                .with_context(|| format!("{} must be a boolean", $key))?;
+        }
+    };
+}
+
+impl Config {
+    /// Apply overrides from a parsed TOML-subset document.
+    pub fn apply(&mut self, doc: &Value) -> Result<()> {
+        if let Some(v) = doc.get("coordination") {
+            self.coordination = Coordination::parse(
+                v.as_str().context("coordination must be a string")?,
+            )?;
+        }
+        ovr!(doc, "cluster.racks", self.cluster.racks, int);
+        ovr!(doc, "cluster.nodes_per_rack", self.cluster.nodes_per_rack, int);
+        ovr!(doc, "cluster.clients", self.cluster.clients, int);
+        ovr!(doc, "cluster.num_ranges", self.cluster.num_ranges, int);
+        ovr!(doc, "cluster.replication", self.cluster.replication, int);
+        if let Some(v) = doc.get("cluster.partitioning") {
+            self.cluster.partitioning =
+                Partitioning::parse(v.as_str().context("partitioning must be a string")?)?;
+        }
+
+        ovr!(doc, "sim.link_latency_ns", self.sim.link_latency_ns, int);
+        ovr!(doc, "sim.link_gbps", self.sim.link_gbps, float);
+        ovr!(doc, "sim.switch_pipeline_ns", self.sim.switch_pipeline_ns, int);
+        ovr!(doc, "sim.switch_recirc_ns", self.sim.switch_recirc_ns, int);
+        ovr!(doc, "sim.switch_keyroute_ns", self.sim.switch_keyroute_ns, int);
+        ovr!(doc, "sim.node_read_ns", self.sim.node_read_ns, int);
+        ovr!(doc, "sim.node_write_ns", self.sim.node_write_ns, int);
+        ovr!(doc, "sim.node_scan_ns", self.sim.node_scan_ns, int);
+        ovr!(doc, "sim.node_dir_lookup_ns", self.sim.node_dir_lookup_ns, int);
+        ovr!(doc, "sim.node_forward_ns", self.sim.node_forward_ns, int);
+        ovr!(doc, "sim.service_jitter", self.sim.service_jitter, float);
+        ovr!(doc, "sim.seed", self.sim.seed, int);
+
+        ovr!(doc, "workload.num_keys", self.workload.num_keys, int);
+        ovr!(doc, "workload.value_size", self.workload.value_size, int);
+        ovr!(doc, "workload.write_ratio", self.workload.write_ratio, float);
+        ovr!(doc, "workload.scan_ratio", self.workload.scan_ratio, float);
+        ovr!(doc, "workload.ops_per_client", self.workload.ops_per_client, int);
+        ovr!(doc, "workload.concurrency", self.workload.concurrency, int);
+        ovr!(doc, "workload.scan_spans", self.workload.scan_spans, int);
+        ovr!(doc, "workload.seed", self.workload.seed, int);
+        if let Some(v) = doc.get("workload.zipf_theta") {
+            let t = v.as_float().context("zipf_theta must be a number")?;
+            self.workload.zipf_theta = if t <= 0.0 { None } else { Some(t) };
+        }
+
+        ovr!(doc, "controller.epoch_ns", self.controller.epoch_ns, int);
+        ovr!(doc, "controller.migration", self.controller.migration, bool);
+        ovr!(doc, "controller.overload_factor", self.controller.overload_factor, float);
+        ovr!(doc, "controller.write_cost", self.controller.write_cost, float);
+        ovr!(
+            doc,
+            "controller.max_migrations_per_epoch",
+            self.controller.max_migrations_per_epoch,
+            int
+        );
+        ovr!(doc, "controller.split_hot", self.controller.split_hot, bool);
+
+        if let Some(v) = doc.get("dataplane.mode") {
+            self.dataplane.mode = match v.as_str().context("dataplane.mode must be a string")? {
+                "rust" => DataplaneMode::Rust,
+                "xla" => DataplaneMode::Xla,
+                other => bail!("unknown dataplane mode {other:?}"),
+            };
+        }
+        if let Some(v) = doc.get("dataplane.artifacts_dir") {
+            self.dataplane.artifacts_dir =
+                v.as_str().context("artifacts_dir must be a string")?.to_string();
+        }
+        self.validate()
+    }
+
+    /// Parse + apply a config document.
+    pub fn from_str(text: &str) -> Result<Config> {
+        let mut cfg = Config::default();
+        let doc = parse(text)?;
+        cfg.apply(&doc)?;
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &str) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {path}"))?;
+        Config::from_str(&text)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        let nodes = self.cluster.nodes();
+        if nodes == 0 || self.cluster.clients == 0 {
+            bail!("cluster must have nodes and clients");
+        }
+        if self.cluster.replication == 0 || self.cluster.replication > nodes {
+            bail!(
+                "replication {} must be in 1..={nodes}",
+                self.cluster.replication
+            );
+        }
+        if self.cluster.num_ranges == 0 {
+            bail!("num_ranges must be positive");
+        }
+        let w = self.workload.write_ratio;
+        let s = self.workload.scan_ratio;
+        if !(0.0..=1.0).contains(&w) || !(0.0..=1.0).contains(&s) || w + s > 1.0 {
+            bail!("write_ratio + scan_ratio must be within [0, 1]");
+        }
+        if self.workload.concurrency == 0 {
+            bail!("concurrency must be positive");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_testbed() {
+        let cfg = Config::default();
+        assert_eq!(cfg.cluster.nodes(), 16);
+        assert_eq!(cfg.cluster.clients, 4);
+        assert_eq!(cfg.cluster.num_ranges, 128);
+        assert_eq!(cfg.cluster.replication, 3);
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn overrides_apply() {
+        let cfg = Config::from_str(
+            r#"
+            coordination = "server-driven"
+            [cluster]
+            racks = 2
+            nodes_per_rack = 2
+            replication = 2
+            [workload]
+            write_ratio = 0.3
+            zipf_theta = 1.2
+            [controller]
+            migration = true
+            [dataplane]
+            mode = "xla"
+        "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.coordination, Coordination::ServerDriven);
+        assert_eq!(cfg.cluster.nodes(), 4);
+        assert_eq!(cfg.workload.write_ratio, 0.3);
+        assert_eq!(cfg.workload.zipf_theta, Some(1.2));
+        assert!(cfg.controller.migration);
+        assert_eq!(cfg.dataplane.mode, DataplaneMode::Xla);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        assert!(Config::from_str("[cluster]\nreplication = 99").is_err());
+        assert!(Config::from_str("[workload]\nwrite_ratio = 0.9\nscan_ratio = 0.2").is_err());
+        assert!(Config::from_str("coordination = \"bogus\"").is_err());
+        assert!(Config::from_str("[dataplane]\nmode = \"gpu\"").is_err());
+    }
+
+    #[test]
+    fn zipf_zero_means_uniform() {
+        let cfg = Config::from_str("[workload]\nzipf_theta = 0.0").unwrap();
+        assert_eq!(cfg.workload.zipf_theta, None);
+    }
+
+    #[test]
+    fn coordination_names_roundtrip() {
+        for c in Coordination::ALL {
+            assert_eq!(Coordination::parse(c.name()).unwrap(), c);
+        }
+    }
+}

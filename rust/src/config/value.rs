@@ -1,0 +1,314 @@
+//! A small TOML-subset parser for experiment/system configuration files.
+//!
+//! Supported: `[section.subsection]` headers, `key = value` pairs with
+//! string / integer / float / boolean / array values, `#` comments, and
+//! bare or quoted keys. This covers everything the shipped configs use;
+//! crates.io (and thus a full TOML crate) is unreachable in this image.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+    Table(BTreeMap<String, Value>),
+}
+
+#[derive(Debug, thiserror::Error)]
+#[error("config parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(v) => Some(*v),
+            _ => None,
+        }
+    }
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(v) => Some(*v),
+            Value::Int(v) => Some(*v as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(v) => Some(*v),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+    pub fn as_table(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Table(t) => Some(t),
+            _ => None,
+        }
+    }
+
+    /// Dotted-path lookup: `get("sim.link_latency_us")`.
+    pub fn get(&self, path: &str) -> Option<&Value> {
+        let mut cur = self;
+        for part in path.split('.') {
+            cur = cur.as_table()?.get(part)?;
+        }
+        Some(cur)
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "{s:?}"),
+            Value::Int(v) => write!(f, "{v}"),
+            Value::Float(v) => write!(f, "{v}"),
+            Value::Bool(v) => write!(f, "{v}"),
+            Value::Array(items) => {
+                write!(f, "[")?;
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{item}")?;
+                }
+                write!(f, "]")
+            }
+            Value::Table(t) => {
+                write!(f, "{{")?;
+                for (i, (k, v)) in t.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{k} = {v}")?;
+                }
+                write!(f, "}}")
+            }
+        }
+    }
+}
+
+fn err(line: usize, msg: impl Into<String>) -> ParseError {
+    ParseError { line, msg: msg.into() }
+}
+
+/// Parse a TOML-subset document into a root table.
+pub fn parse(text: &str) -> Result<Value, ParseError> {
+    let mut root = BTreeMap::new();
+    let mut section: Vec<String> = Vec::new();
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = lineno + 1;
+        let trimmed = strip_comment(raw).trim();
+        if trimmed.is_empty() {
+            continue;
+        }
+        if let Some(rest) = trimmed.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| err(line, "unterminated section header"))?
+                .trim();
+            if name.is_empty() {
+                return Err(err(line, "empty section name"));
+            }
+            section = name.split('.').map(|s| s.trim().to_string()).collect();
+            // Materialize the section table.
+            table_at(&mut root, &section, line)?;
+            continue;
+        }
+        let eq = trimmed
+            .find('=')
+            .ok_or_else(|| err(line, format!("expected `key = value`, got {trimmed:?}")))?;
+        let key = trimmed[..eq].trim().trim_matches('"').to_string();
+        if key.is_empty() {
+            return Err(err(line, "empty key"));
+        }
+        let value = parse_value(trimmed[eq + 1..].trim(), line)?;
+        let tbl = table_at(&mut root, &section, line)?;
+        if tbl.insert(key.clone(), value).is_some() {
+            return Err(err(line, format!("duplicate key {key:?}")));
+        }
+    }
+    Ok(Value::Table(root))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` outside of a quoted string starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn table_at<'a>(
+    root: &'a mut BTreeMap<String, Value>,
+    path: &[String],
+    line: usize,
+) -> Result<&'a mut BTreeMap<String, Value>, ParseError> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| Value::Table(BTreeMap::new()));
+        cur = match entry {
+            Value::Table(t) => t,
+            _ => return Err(err(line, format!("{part:?} is not a table"))),
+        };
+    }
+    Ok(cur)
+}
+
+fn parse_value(text: &str, line: usize) -> Result<Value, ParseError> {
+    if text.is_empty() {
+        return Err(err(line, "missing value"));
+    }
+    if let Some(rest) = text.strip_prefix('"') {
+        let end = rest
+            .find('"')
+            .ok_or_else(|| err(line, "unterminated string"))?;
+        if !rest[end + 1..].trim().is_empty() {
+            return Err(err(line, "trailing characters after string"));
+        }
+        return Ok(Value::Str(rest[..end].to_string()));
+    }
+    if let Some(rest) = text.strip_prefix('[') {
+        let inner = rest
+            .strip_suffix(']')
+            .ok_or_else(|| err(line, "unterminated array"))?;
+        let mut items = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part, line)?);
+            }
+        }
+        return Ok(Value::Array(items));
+    }
+    match text {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    let clean = text.replace('_', "");
+    if let Ok(v) = clean.parse::<i64>() {
+        return Ok(Value::Int(v));
+    }
+    if let Ok(v) = clean.parse::<f64>() {
+        return Ok(Value::Float(v));
+    }
+    Err(err(line, format!("cannot parse value {text:?}")))
+}
+
+/// Split on commas that are not nested inside brackets or strings.
+fn split_top_level(text: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut start = 0usize;
+    for (i, c) in text.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&text[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&text[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_sections() {
+        let doc = r#"
+            # experiment config
+            name = "fig13a"
+            seed = 42
+            skew = 0.95
+            enabled = true
+
+            [sim]
+            link_latency_us = 500
+            rates = [1.0, 2.5, 10]
+
+            [sim.switch]
+            pipeline_ns = 2_000
+        "#;
+        let v = parse(doc).unwrap();
+        assert_eq!(v.get("name").unwrap().as_str(), Some("fig13a"));
+        assert_eq!(v.get("seed").unwrap().as_int(), Some(42));
+        assert_eq!(v.get("skew").unwrap().as_float(), Some(0.95));
+        assert_eq!(v.get("enabled").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("sim.link_latency_us").unwrap().as_int(), Some(500));
+        assert_eq!(v.get("sim.switch.pipeline_ns").unwrap().as_int(), Some(2000));
+        let rates = v.get("sim.rates").unwrap().as_array().unwrap();
+        assert_eq!(rates.len(), 3);
+        assert_eq!(rates[2].as_float(), Some(10.0));
+    }
+
+    #[test]
+    fn comments_inside_strings_preserved() {
+        let v = parse("msg = \"a # not comment\" # real comment").unwrap();
+        assert_eq!(v.get("msg").unwrap().as_str(), Some("a # not comment"));
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let v = parse("m = [[1, 2], [3, 4]]").unwrap();
+        let outer = v.get("m").unwrap().as_array().unwrap();
+        assert_eq!(outer.len(), 2);
+        assert_eq!(outer[1].as_array().unwrap()[0].as_int(), Some(3));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("a = 1\nb = @bad").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = parse("a = 1\na = 2").unwrap_err();
+        assert!(e.msg.contains("duplicate"));
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("[unclosed").is_err());
+        assert!(parse("novalue =").is_err());
+        assert!(parse("x = \"unterminated").is_err());
+        assert!(parse("just a line").is_err());
+    }
+
+    #[test]
+    fn int_float_interop() {
+        let v = parse("x = 3").unwrap();
+        assert_eq!(v.get("x").unwrap().as_float(), Some(3.0));
+        assert_eq!(v.get("x").unwrap().as_str(), None);
+    }
+}

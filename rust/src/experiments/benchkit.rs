@@ -1,0 +1,93 @@
+//! Minimal wall-clock benchmark harness (criterion is unavailable offline —
+//! DESIGN.md §3). Used by the `benches/` targets (`harness = false`).
+
+use std::time::Instant;
+
+/// One measured benchmark: warmup, then `reps` timed runs; reports
+/// min/mean/max in a criterion-like line.
+pub struct Bench {
+    pub name: String,
+    samples_ns: Vec<f64>,
+}
+
+impl Bench {
+    /// Run `f` with `warmup` unmeasured and `reps` measured iterations.
+    pub fn run(name: &str, warmup: usize, reps: usize, mut f: impl FnMut()) -> Bench {
+        for _ in 0..warmup {
+            f();
+        }
+        let mut samples_ns = Vec::with_capacity(reps);
+        for _ in 0..reps {
+            let t0 = Instant::now();
+            f();
+            samples_ns.push(t0.elapsed().as_nanos() as f64);
+        }
+        Bench { name: name.to_string(), samples_ns }
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        self.samples_ns.iter().sum::<f64>() / self.samples_ns.len() as f64
+    }
+
+    pub fn min_ns(&self) -> f64 {
+        self.samples_ns.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max_ns(&self) -> f64 {
+        self.samples_ns.iter().cloned().fold(0.0, f64::max)
+    }
+
+    /// Std deviation of the samples.
+    pub fn std_ns(&self) -> f64 {
+        let mean = self.mean_ns();
+        let var = self
+            .samples_ns
+            .iter()
+            .map(|s| (s - mean) * (s - mean))
+            .sum::<f64>()
+            / self.samples_ns.len() as f64;
+        var.sqrt()
+    }
+
+    /// criterion-style report line.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} time: [{} {} {}]  ±{}",
+            self.name,
+            fmt(self.min_ns()),
+            fmt(self.mean_ns()),
+            fmt(self.max_ns()),
+            fmt(self.std_ns()),
+        )
+    }
+
+    /// Report with a derived throughput given items per iteration.
+    pub fn report_throughput(&self, items_per_iter: f64) -> String {
+        let per_sec = items_per_iter / (self.mean_ns() / 1e9);
+        format!("{}  thrpt: {:.0} elem/s", self.report(), per_sec)
+    }
+}
+
+fn fmt(ns: f64) -> String {
+    crate::util::fmt_ns(ns as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_and_reports() {
+        let mut count = 0u64;
+        let b = Bench::run("spin", 2, 10, || {
+            count += 1;
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert_eq!(count, 12, "warmup + reps iterations");
+        assert!(b.mean_ns() > 0.0);
+        assert!(b.min_ns() <= b.mean_ns() && b.mean_ns() <= b.max_ns());
+        let line = b.report_throughput(1000.0);
+        assert!(line.contains("spin"));
+        assert!(line.contains("thrpt"));
+    }
+}

@@ -1,0 +1,337 @@
+//! Experiment harness: one function per table/figure of the paper's §8,
+//! plus the ablations from DESIGN.md §4. Each returns a rendered text
+//! report (the same rows/series the paper plots) and optionally writes CSV
+//! series for plotting.
+
+pub mod benchkit;
+
+use std::fmt::Write as _;
+
+use crate::cluster::{Cluster, RunStats};
+use crate::config::{Config, Coordination};
+use crate::metrics::Metrics;
+use crate::types::OpCode;
+
+/// Result of one workload run under one coordination mode.
+pub struct RunResult {
+    pub mode: Coordination,
+    pub metrics: Metrics,
+    pub stats: RunStats,
+}
+
+impl RunResult {
+    pub fn throughput(&self) -> f64 {
+        self.metrics.throughput()
+    }
+}
+
+/// Execute one configured run.
+pub fn run_once(cfg: Config) -> RunResult {
+    let mode = cfg.coordination;
+    let mut cl = Cluster::build_auto(cfg).expect("cluster build");
+    let stats = cl.run();
+    RunResult { mode, metrics: cl.metrics.clone(), stats }
+}
+
+/// Scale knob for experiment size: 1.0 = full figure fidelity; benches use
+/// smaller factors for quick regeneration.
+#[derive(Clone, Copy, Debug)]
+pub struct Scale(pub f64);
+
+impl Scale {
+    pub fn ops(&self, full: u64) -> u64 {
+        ((full as f64 * self.0) as u64).max(200)
+    }
+}
+
+fn base_cfg(scale: Scale) -> Config {
+    let mut cfg = Config::default();
+    cfg.workload.num_keys = 20_000;
+    cfg.workload.ops_per_client = scale.ops(2_000);
+    cfg.workload.concurrency = 5;
+    cfg
+}
+
+fn skew_label(theta: Option<f64>) -> String {
+    match theta {
+        None => "uniform".into(),
+        Some(t) => format!("zipf-{t}"),
+    }
+}
+
+// ------------------------------------------------------------- Figure 13
+
+/// Fig. 13(a): throughput vs skewness, read-only workload, three modes.
+pub fn fig13a(scale: Scale) -> String {
+    let skews: [Option<f64>; 5] = [None, Some(0.9), Some(0.95), Some(0.99), Some(1.2)];
+    let mut out = String::from(
+        "Figure 13(a): Throughput vs Skewness — read-only (ops/s)\n\
+         skew        in-switch  client-driven  server-driven   vs-client  vs-server\n",
+    );
+    for theta in skews {
+        let mut row = std::collections::BTreeMap::new();
+        for mode in Coordination::ALL {
+            let mut cfg = base_cfg(scale);
+            cfg.coordination = mode;
+            cfg.workload.zipf_theta = theta;
+            row.insert(mode.name(), run_once(cfg).throughput());
+        }
+        let (t, c, s) = (row["in-switch"], row["client-driven"], row["server-driven"]);
+        let _ = writeln!(
+            out,
+            "{:<11} {t:>9.1} {c:>14.1} {s:>14.1}   {:>+8.1}%  {:>+8.1}%",
+            skew_label(theta),
+            (t / c - 1.0) * 100.0,
+            (t / s - 1.0) * 100.0,
+        );
+    }
+    out
+}
+
+/// Fig. 13(b)/(c): throughput vs write ratio (uniform / zipf-0.95).
+pub fn fig13bc(scale: Scale, theta: Option<f64>) -> String {
+    let ratios = [0.0, 0.2, 0.4, 0.6, 0.8, 1.0];
+    let mut out = format!(
+        "Figure 13({}): Throughput vs Write Ratio — {} (ops/s)\n\
+         write_ratio  in-switch  client-driven  server-driven   vs-client  vs-server\n",
+        if theta.is_none() { "b" } else { "c" },
+        skew_label(theta),
+    );
+    for ratio in ratios {
+        let mut row = std::collections::BTreeMap::new();
+        for mode in Coordination::ALL {
+            let mut cfg = base_cfg(scale);
+            cfg.coordination = mode;
+            cfg.workload.zipf_theta = theta;
+            cfg.workload.write_ratio = ratio;
+            row.insert(mode.name(), run_once(cfg).throughput());
+        }
+        let (t, c, s) = (row["in-switch"], row["client-driven"], row["server-driven"]);
+        let _ = writeln!(
+            out,
+            "{ratio:<12.1} {t:>9.1} {c:>14.1} {s:>14.1}   {:>+8.1}%  {:>+8.1}%",
+            (t / c - 1.0) * 100.0,
+            (t / s - 1.0) * 100.0,
+        );
+    }
+    out
+}
+
+// -------------------------------------------------- Figures 14/15, Tables 1/2
+
+/// The mixed workload used for the latency CDFs: reads + writes + scans.
+fn latency_cfg(scale: Scale, theta: Option<f64>, mode: Coordination) -> Config {
+    let mut cfg = base_cfg(scale);
+    cfg.coordination = mode;
+    cfg.workload.zipf_theta = theta;
+    cfg.workload.write_ratio = 0.3;
+    cfg.workload.scan_ratio = 0.2;
+    cfg.workload.scan_spans = 2;
+    cfg
+}
+
+/// Figs. 14/15 + Tables 1/2: per-op latency distributions for one skew.
+/// Returns (rendered table, per-mode CDF CSV).
+pub fn latency_experiment(scale: Scale, theta: Option<f64>) -> (String, Vec<(String, String)>) {
+    let figure = if theta.is_none() { "Fig. 14 / Table 1" } else { "Fig. 15 / Table 2" };
+    let mut out = format!(
+        "{figure}: request latency — {} workload (ms)\n\
+         {:<28} {:>8} {:>8} {:>8}   {:>8} {:>8} {:>8}   {:>8} {:>8} {:>8}\n",
+        skew_label(theta),
+        "",
+        "rd-mean", "rd-p50", "rd-p99",
+        "wr-mean", "wr-p50", "wr-p99",
+        "sc-mean", "sc-p50", "sc-p99",
+    );
+    let mut csvs = Vec::new();
+    for mode in Coordination::ALL {
+        let mut res = run_once(latency_cfg(scale, theta, mode));
+        let r = res.metrics.latency_stats_ms(OpCode::Get).unwrap_or((0.0, 0.0, 0.0));
+        let w = res.metrics.latency_stats_ms(OpCode::Put).unwrap_or((0.0, 0.0, 0.0));
+        let s = res.metrics.latency_stats_ms(OpCode::Range).unwrap_or((0.0, 0.0, 0.0));
+        let _ = writeln!(
+            out,
+            "{:<28} {:>8.1} {:>8.1} {:>8.1}   {:>8.1} {:>8.1} {:>8.1}   {:>8.1} {:>8.1} {:>8.1}",
+            mode.name(),
+            r.0, r.1, r.2, w.0, w.1, w.2, s.0, s.1, s.2
+        );
+        csvs.push((mode.name().to_string(), res.metrics.cdf_csv(200)));
+    }
+    (out, csvs)
+}
+
+// ------------------------------------------------------------- Ablations
+
+/// A1: load-balancing migration off / on / on+hot-range-splitting under a
+/// skewed workload (§5.1, §4.1.1 sub-range division).
+pub fn ablation_migration(scale: Scale) -> String {
+    let mut out = String::from(
+        "Ablation A1: controller migration under zipf-1.2 (in-switch)\n\
+         policy         throughput  p99-read-ms  migrations  splits\n",
+    );
+    for (label, migration, split) in [
+        ("off", false, false),
+        ("migrate", true, false),
+        ("split+migrate", true, true),
+    ] {
+        let mut cfg = base_cfg(scale);
+        cfg.coordination = Coordination::InSwitch;
+        cfg.workload.zipf_theta = Some(1.2);
+        cfg.workload.ops_per_client = scale.ops(4_000);
+        cfg.controller.migration = migration;
+        cfg.controller.split_hot = split;
+        cfg.controller.epoch_ns = 500_000_000;
+        cfg.controller.overload_factor = 1.3;
+        let mode = cfg.coordination;
+        let mut cl = Cluster::build_auto(cfg).expect("cluster build");
+        let stats = cl.run();
+        let mut res = RunResult { mode, metrics: cl.metrics.clone(), stats };
+        let splits = cl.controller.splits;
+        let p99 = res.metrics.latency_stats_ms(OpCode::Get).map(|(_, _, p)| p).unwrap_or(0.0);
+        let _ = writeln!(
+            out,
+            "{label:<14} {:>10.1} {:>12.1} {:>11} {:>7}",
+            res.throughput(),
+            p99,
+            res.stats.migrations,
+            splits,
+        );
+    }
+    out
+}
+
+/// A2: chain length r ∈ {1,2,3,5} — write cost (CR's n+1 messages, §4.1.2).
+pub fn ablation_chain(scale: Scale) -> String {
+    let mut out = String::from(
+        "Ablation A2: replication factor vs write throughput (in-switch, write-only)\n\
+         r  cr-msgs  pb-msgs  throughput  wr-mean-ms\n",
+    );
+    for r in [1usize, 2, 3, 5] {
+        let mut cfg = base_cfg(scale);
+        cfg.coordination = Coordination::InSwitch;
+        cfg.cluster.replication = r;
+        cfg.workload.write_ratio = 1.0;
+        let mut res = run_once(cfg);
+        let mean = res.metrics.latency_stats_ms(OpCode::Put).map(|(m, _, _)| m).unwrap_or(0.0);
+        let _ = writeln!(
+            out,
+            "{r}  {:>7} {:>8} {:>11.1} {:>11.1}",
+            crate::chain::cr_write_messages(r),
+            crate::chain::pb_write_messages(r),
+            res.throughput(),
+            mean
+        );
+    }
+    out
+}
+
+/// A3: hierarchical indexing — single rack vs the paper's 4 racks (§6).
+pub fn ablation_multirack(scale: Scale) -> String {
+    let mut out = String::from(
+        "Ablation A3: rack scaling with hierarchical indexing (in-switch, read-only zipf-0.99)\n\
+         racks  nodes  switches  throughput  rd-mean-ms\n",
+    );
+    for racks in [1usize, 2, 4, 8] {
+        let mut cfg = base_cfg(scale);
+        cfg.coordination = Coordination::InSwitch;
+        cfg.cluster.racks = racks;
+        cfg.cluster.nodes_per_rack = 4;
+        cfg.workload.zipf_theta = Some(0.99);
+        let mut res = run_once(cfg.clone());
+        let mean = res.metrics.latency_stats_ms(OpCode::Get).map(|(m, _, _)| m).unwrap_or(0.0);
+        let _ = writeln!(
+            out,
+            "{racks:<6} {:<6} {:<9} {:>10.1} {:>11.1}",
+            cfg.cluster.nodes(),
+            racks + (racks / 2).max(1) + 2,
+            res.throughput(),
+            mean
+        );
+    }
+    out
+}
+
+/// F1: node failure → chain repair → availability (§5.2).
+pub fn failure_experiment(scale: Scale) -> String {
+    let mut cfg = base_cfg(scale);
+    cfg.coordination = Coordination::InSwitch;
+    cfg.workload.ops_per_client = scale.ops(2_000);
+    cfg.controller.epoch_ns = 300_000_000;
+    let mut cl = Cluster::build(cfg);
+    cl.timeout_ns = 2_000_000_000;
+    cl.schedule_node_failure(5, 1_000_000_000);
+    let stats = cl.run();
+    let mut out = String::from("Failure experiment F1: node 5 fails at t=1s (in-switch)\n");
+    let _ = writeln!(
+        out,
+        "completed={} repairs={} retries={} throughput={:.1} ops/s",
+        cl.metrics.completed(),
+        stats.repairs,
+        stats.retries,
+        cl.metrics.throughput()
+    );
+    let full_chains = (0..cl.dir.len())
+        .filter(|&i| cl.dir.chain(i).len() == cl.cfg.cluster.replication)
+        .count();
+    let _ = writeln!(out, "chains restored to r={}: {}/{}", cl.cfg.cluster.replication, full_chains, cl.dir.len());
+    out
+}
+
+/// Convenience: run an experiment by id (CLI + benches share this).
+pub fn run_by_name(name: &str, scale: Scale) -> anyhow::Result<String> {
+    Ok(match name {
+        "fig13a" => fig13a(scale),
+        "fig13b" => fig13bc(scale, None),
+        "fig13c" => fig13bc(scale, Some(0.95)),
+        "fig14" | "table1" => latency_experiment(scale, None).0,
+        "fig15" | "table2" => latency_experiment(scale, Some(1.2)).0,
+        "ablation_migration" => ablation_migration(scale),
+        "ablation_chain" => ablation_chain(scale),
+        "ablation_multirack" => ablation_multirack(scale),
+        "failure" => failure_experiment(scale),
+        other => anyhow::bail!(
+            "unknown experiment {other:?}; known: fig13a fig13b fig13c fig14 fig15 \
+             ablation_migration ablation_chain ablation_multirack failure"
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TINY: Scale = Scale(0.08);
+
+    #[test]
+    fn fig13a_shape_holds_at_tiny_scale() {
+        let report = fig13a(TINY);
+        assert!(report.contains("uniform"));
+        assert!(report.contains("zipf-1.2"));
+        // 5 data rows + 2 header lines.
+        assert_eq!(report.lines().count(), 7);
+    }
+
+    #[test]
+    fn latency_experiment_emits_all_ops() {
+        let (report, csvs) = latency_experiment(TINY, None);
+        assert!(report.contains("in-switch"));
+        assert!(report.contains("server-driven"));
+        assert_eq!(csvs.len(), 3);
+        for (_, csv) in &csvs {
+            assert!(csv.contains("read,"));
+            assert!(csv.contains("write,"));
+            assert!(csv.contains("scan,"));
+        }
+    }
+
+    #[test]
+    fn run_by_name_rejects_unknown() {
+        assert!(run_by_name("fig99", TINY).is_err());
+    }
+
+    #[test]
+    fn failure_report_shows_full_restoration() {
+        let report = failure_experiment(TINY);
+        assert!(report.contains("chains restored to r=3: 128/128"), "{report}");
+    }
+}

@@ -1,0 +1,46 @@
+//! Hashing substrate: RIPEMD-160 (the digest TurboKV's hash partitioning
+//! uses, paper §4.1.1) and the key→ring-position mapping built on it.
+
+pub mod ripemd160;
+
+use crate::types::Key;
+
+/// Position of a key on the hash-partitioning ring: the first 16 bytes of
+/// its RIPEMD-160 digest interpreted as a big-endian u128. The ring space
+/// `0..2^128` is then divided into sub-ranges exactly like the range table
+/// (paper §4.1.1: "the whole output range of the hash function is treated
+/// as a fixed space ... partitioned into sub-ranges").
+pub fn ring_position(key: Key) -> Key {
+    let digest = ripemd160::ripemd160(&key.to_bytes());
+    let mut b = [0u8; 16];
+    b.copy_from_slice(&digest[..16]);
+    Key::from_bytes(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_position_deterministic() {
+        let k = Key(12345);
+        assert_eq!(ring_position(k), ring_position(k));
+        assert_ne!(ring_position(Key(1)), ring_position(Key(2)));
+    }
+
+    #[test]
+    fn ring_positions_spread_uniformly() {
+        // RIPEMD-160 is "an extremely random hash function" (paper §4.1.1):
+        // sequential keys should spread across 16 equal ring slices.
+        let mut buckets = [0u32; 16];
+        for i in 0..4096u128 {
+            let pos = ring_position(Key(i));
+            buckets[(pos.0 >> 124) as usize] += 1;
+        }
+        let (lo, hi) = (
+            *buckets.iter().min().unwrap(),
+            *buckets.iter().max().unwrap(),
+        );
+        assert!(hi < 2 * lo, "buckets={buckets:?}");
+    }
+}

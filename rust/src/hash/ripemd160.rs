@@ -1,0 +1,253 @@
+//! RIPEMD-160 (Dobbertin, Bosselaers & Preneel 1996), implemented from the
+//! specification.
+//!
+//! TurboKV's hash partitioning hashes every key "into a 20-byte fixed-length
+//! digest using RIPEMD160" (paper §4.1.1); the first 16 bytes of the digest
+//! place the key on the consistent-hash ring. Verified against the official
+//! test vectors from the RIPEMD-160 paper/appendix.
+
+/// Output digest size in bytes.
+pub const DIGEST_LEN: usize = 20;
+
+// Message-word selection for the left (R) and right (R') lines.
+const RL: [[usize; 16]; 5] = [
+    [0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12, 13, 14, 15],
+    [7, 4, 13, 1, 10, 6, 15, 3, 12, 0, 9, 5, 2, 14, 11, 8],
+    [3, 10, 14, 4, 9, 15, 8, 1, 2, 7, 0, 6, 13, 11, 5, 12],
+    [1, 9, 11, 10, 0, 8, 12, 4, 13, 3, 7, 15, 14, 5, 6, 2],
+    [4, 0, 5, 9, 7, 12, 2, 10, 14, 1, 3, 8, 11, 6, 15, 13],
+];
+const RR: [[usize; 16]; 5] = [
+    [5, 14, 7, 0, 9, 2, 11, 4, 13, 6, 15, 8, 1, 10, 3, 12],
+    [6, 11, 3, 7, 0, 13, 5, 10, 14, 15, 8, 12, 4, 9, 1, 2],
+    [15, 5, 1, 3, 7, 14, 6, 9, 11, 8, 12, 2, 10, 0, 4, 13],
+    [8, 6, 4, 1, 3, 11, 15, 0, 5, 12, 2, 13, 9, 7, 10, 14],
+    [12, 15, 10, 4, 1, 5, 8, 7, 6, 2, 13, 14, 0, 3, 9, 11],
+];
+
+// Rotation amounts for the left and right lines.
+const SL: [[u32; 16]; 5] = [
+    [11, 14, 15, 12, 5, 8, 7, 9, 11, 13, 14, 15, 6, 7, 9, 8],
+    [7, 6, 8, 13, 11, 9, 7, 15, 7, 12, 15, 9, 11, 7, 13, 12],
+    [11, 13, 6, 7, 14, 9, 13, 15, 14, 8, 13, 6, 5, 12, 7, 5],
+    [11, 12, 14, 15, 14, 15, 9, 8, 9, 14, 5, 6, 8, 6, 5, 12],
+    [9, 15, 5, 11, 6, 8, 13, 12, 5, 12, 13, 14, 11, 8, 5, 6],
+];
+const SR: [[u32; 16]; 5] = [
+    [8, 9, 9, 11, 13, 15, 15, 5, 7, 7, 8, 11, 14, 14, 12, 6],
+    [9, 13, 15, 7, 12, 8, 9, 11, 7, 7, 12, 7, 6, 15, 13, 11],
+    [9, 7, 15, 11, 8, 6, 6, 14, 12, 13, 5, 14, 13, 13, 7, 5],
+    [15, 5, 8, 11, 14, 14, 6, 14, 6, 9, 12, 9, 12, 5, 15, 8],
+    [8, 5, 12, 9, 12, 5, 14, 6, 8, 13, 6, 5, 15, 13, 11, 11],
+];
+
+// Round constants.
+const KL: [u32; 5] = [0x0000_0000, 0x5a82_7999, 0x6ed9_eba1, 0x8f1b_bcdc, 0xa953_fd4e];
+const KR: [u32; 5] = [0x50a2_8be6, 0x5c4d_d124, 0x6d70_3ef3, 0x7a6d_76e9, 0x0000_0000];
+
+#[inline]
+fn f(round: usize, x: u32, y: u32, z: u32) -> u32 {
+    match round {
+        0 => x ^ y ^ z,
+        1 => (x & y) | (!x & z),
+        2 => (x | !y) ^ z,
+        3 => (x & z) | (y & !z),
+        _ => x ^ (y | !z),
+    }
+}
+
+/// Streaming RIPEMD-160 state.
+#[derive(Clone)]
+pub struct Ripemd160 {
+    h: [u32; 5],
+    buf: [u8; 64],
+    buf_len: usize,
+    total_len: u64,
+}
+
+impl Default for Ripemd160 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Ripemd160 {
+    pub fn new() -> Self {
+        Ripemd160 {
+            h: [0x6745_2301, 0xefcd_ab89, 0x98ba_dcfe, 0x1032_5476, 0xc3d2_e1f0],
+            buf: [0u8; 64],
+            buf_len: 0,
+            total_len: 0,
+        }
+    }
+
+    fn compress(&mut self, block: &[u8; 64]) {
+        let mut x = [0u32; 16];
+        for (i, w) in x.iter_mut().enumerate() {
+            *w = u32::from_le_bytes([
+                block[4 * i],
+                block[4 * i + 1],
+                block[4 * i + 2],
+                block[4 * i + 3],
+            ]);
+        }
+        let (mut al, mut bl, mut cl, mut dl, mut el) =
+            (self.h[0], self.h[1], self.h[2], self.h[3], self.h[4]);
+        let (mut ar, mut br, mut cr, mut dr, mut er) = (al, bl, cl, dl, el);
+
+        for round in 0..5 {
+            for j in 0..16 {
+                // Left line.
+                let t = al
+                    .wrapping_add(f(round, bl, cl, dl))
+                    .wrapping_add(x[RL[round][j]])
+                    .wrapping_add(KL[round])
+                    .rotate_left(SL[round][j])
+                    .wrapping_add(el);
+                al = el;
+                el = dl;
+                dl = cl.rotate_left(10);
+                cl = bl;
+                bl = t;
+                // Right line (rounds run in reverse function order).
+                let t = ar
+                    .wrapping_add(f(4 - round, br, cr, dr))
+                    .wrapping_add(x[RR[round][j]])
+                    .wrapping_add(KR[round])
+                    .rotate_left(SR[round][j])
+                    .wrapping_add(er);
+                ar = er;
+                er = dr;
+                dr = cr.rotate_left(10);
+                cr = br;
+                br = t;
+            }
+        }
+
+        let t = self.h[1].wrapping_add(cl).wrapping_add(dr);
+        self.h[1] = self.h[2].wrapping_add(dl).wrapping_add(er);
+        self.h[2] = self.h[3].wrapping_add(el).wrapping_add(ar);
+        self.h[3] = self.h[4].wrapping_add(al).wrapping_add(br);
+        self.h[4] = self.h[0].wrapping_add(bl).wrapping_add(cr);
+        self.h[0] = t;
+    }
+
+    pub fn update(&mut self, mut data: &[u8]) {
+        self.total_len = self.total_len.wrapping_add(data.len() as u64);
+        if self.buf_len > 0 {
+            let take = (64 - self.buf_len).min(data.len());
+            self.buf[self.buf_len..self.buf_len + take].copy_from_slice(&data[..take]);
+            self.buf_len += take;
+            data = &data[take..];
+            if self.buf_len == 64 {
+                let block = self.buf;
+                self.compress(&block);
+                self.buf_len = 0;
+            }
+        }
+        while data.len() >= 64 {
+            let mut block = [0u8; 64];
+            block.copy_from_slice(&data[..64]);
+            self.compress(&block);
+            data = &data[64..];
+        }
+        if !data.is_empty() {
+            self.buf[..data.len()].copy_from_slice(data);
+            self.buf_len = data.len();
+        }
+    }
+
+    pub fn finalize(mut self) -> [u8; DIGEST_LEN] {
+        let bit_len = self.total_len.wrapping_mul(8);
+        // Padding: 0x80 then zeros until 56 mod 64, then little-endian length.
+        self.update(&[0x80]);
+        while self.buf_len != 56 {
+            self.update(&[0]);
+        }
+        self.total_len = self.total_len.wrapping_sub(self.buf_len as u64); // length bytes not counted
+        let mut block = self.buf;
+        block[56..64].copy_from_slice(&bit_len.to_le_bytes());
+        self.compress(&block);
+        let mut out = [0u8; DIGEST_LEN];
+        for (i, word) in self.h.iter().enumerate() {
+            out[4 * i..4 * i + 4].copy_from_slice(&word.to_le_bytes());
+        }
+        out
+    }
+}
+
+/// One-shot digest.
+pub fn ripemd160(data: &[u8]) -> [u8; DIGEST_LEN] {
+    let mut h = Ripemd160::new();
+    h.update(data);
+    h.finalize()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hex(d: &[u8]) -> String {
+        d.iter().map(|b| format!("{b:02x}")).collect()
+    }
+
+    // Official test vectors from the RIPEMD-160 publication.
+    #[test]
+    fn official_vectors() {
+        let cases: &[(&[u8], &str)] = &[
+            (b"", "9c1185a5c5e9fc54612808977ee8f548b2258d31"),
+            (b"a", "0bdc9d2d256b3ee9daae347be6f4dc835a467ffe"),
+            (b"abc", "8eb208f7e05d987a9b044a8e98c6b087f15a0bfc"),
+            (b"message digest", "5d0689ef49d2fae572b881b123a85ffa21595f36"),
+            (
+                b"abcdefghijklmnopqrstuvwxyz",
+                "f71c27109c692c1b56bbdceb5b9d2865b3708dbc",
+            ),
+            (
+                b"abcdbcdecdefdefgefghfghighijhijkijkljklmklmnlmnomnopnopq",
+                "12a053384a9c0c88e405a06c27dcf49ada62eb2b",
+            ),
+            (
+                b"ABCDEFGHIJKLMNOPQRSTUVWXYZabcdefghijklmnopqrstuvwxyz0123456789",
+                "b0e20b6e3116640286ed3a87a5713079b21f5189",
+            ),
+        ];
+        for (input, want) in cases {
+            assert_eq!(&hex(&ripemd160(input)), want, "input={:?}", input);
+        }
+    }
+
+    #[test]
+    fn million_a() {
+        let mut h = Ripemd160::new();
+        let chunk = [b'a'; 1000];
+        for _ in 0..1000 {
+            h.update(&chunk);
+        }
+        assert_eq!(
+            hex(&h.finalize()),
+            "52783243c1697bdbe16d37f97f68f08325dc1528"
+        );
+    }
+
+    #[test]
+    fn eight_times_digits() {
+        let input = b"1234567890".repeat(8);
+        assert_eq!(
+            hex(&ripemd160(&input)),
+            "9b752e45573d4b39f4dbd3323cab82bf63326bfb"
+        );
+    }
+
+    #[test]
+    fn streaming_equals_oneshot_across_split_points() {
+        let data: Vec<u8> = (0..300u32).map(|i| (i % 251) as u8).collect();
+        let want = ripemd160(&data);
+        for split in [0usize, 1, 63, 64, 65, 128, 299, 300] {
+            let mut h = Ripemd160::new();
+            h.update(&data[..split]);
+            h.update(&data[split..]);
+            assert_eq!(h.finalize(), want, "split={split}");
+        }
+    }
+}

@@ -1,0 +1,39 @@
+//! TurboKV: scaling up distributed key-value stores with in-switch
+//! coordination.
+//!
+//! Reproduction of Eldakiky, Du & Ramadan, *"TurboKV: Scaling Up The
+//! Performance of Distributed Key-Value Stores With In-Switch Coordination"*
+//! (2020) as a three-layer rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the coordination plane: a discrete-event
+//!   data-center simulator, P4-style programmable switches holding the
+//!   directory in match-action tables, chain-replicated storage nodes
+//!   running a from-scratch LSM engine, the controller (statistics, load
+//!   balancing, failure handling), the client library with all three
+//!   coordination modes of §1, and the experiment harness for every table
+//!   and figure in §8.
+//! * **L2/L1 (python/compile)** — the switch's batched match-action lookup
+//!   and the controller's load estimate as Pallas kernels inside jax
+//!   graphs, AOT-lowered to HLO text.
+//! * **runtime** — loads those artifacts via the PJRT C API (`xla` crate)
+//!   so python is never on the request path.
+//!
+//! See DESIGN.md for the full inventory and EXPERIMENTS.md for results.
+
+pub mod chain;
+pub mod cluster;
+pub mod experiments;
+pub mod config;
+pub mod hash;
+pub mod partition;
+pub mod switch;
+pub mod metrics;
+pub mod net;
+pub mod sim;
+pub mod store;
+pub mod testkit;
+pub mod types;
+pub mod util;
+
+pub mod runtime;
+pub mod workload;

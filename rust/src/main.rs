@@ -1,0 +1,136 @@
+//! TurboKV launcher.
+//!
+//! Subcommands:
+//!   run                 run one workload under the configured coordination
+//!                       mode and print the metrics summary
+//!   exp <name>          regenerate a paper table/figure (fig13a fig13b
+//!                       fig13c fig14 fig15 ablation_* failure); writes the
+//!                       report (and CDF CSVs for fig14/15) under --out
+//!   smoke               verify the PJRT runtime + AOT artifacts
+//!   help                this text
+//!
+//! Config: defaults reproduce the paper's testbed; override with
+//! `--config file.toml` and/or dotted flags like
+//! `--coordination=server-driven --workload.write_ratio=0.5
+//! --dataplane.mode=xla`.
+
+use anyhow::{bail, Context, Result};
+
+use turbokv::cluster::Cluster;
+use turbokv::config::Args;
+use turbokv::experiments::{self, Scale};
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    match args.subcommand.as_deref() {
+        Some("run") => cmd_run(&args),
+        Some("exp") => cmd_exp(&args),
+        Some("smoke") => cmd_smoke(&args),
+        Some("help") | None => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        Some(other) => bail!("unknown subcommand {other:?}; try `turbokv help`"),
+    }
+}
+
+const HELP: &str = "\
+turbokv — in-switch coordination for distributed key-value stores
+usage: turbokv <run|exp|smoke|help> [options]
+
+  turbokv run [--coordination=in-switch|client-driven|server-driven]
+              [--config cfg.toml] [--workload.write_ratio=0.3]
+              [--workload.zipf_theta=1.2] [--dataplane.mode=rust|xla] ...
+  turbokv exp <fig13a|fig13b|fig13c|fig14|fig15|ablation_migration|
+               ablation_chain|ablation_multirack|failure|all>
+              [--scale=1.0] [--out=results]
+  turbokv smoke [--dataplane.artifacts_dir=artifacts]
+";
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let cfg = args.to_config()?;
+    let verify = args.has("verify");
+    eprintln!(
+        "running: mode={} partitioning={:?} keys={} ops/client={} clients={} dataplane={:?}",
+        cfg.coordination.name(),
+        cfg.cluster.partitioning,
+        cfg.workload.num_keys,
+        cfg.workload.ops_per_client,
+        cfg.cluster.clients,
+        cfg.dataplane.mode,
+    );
+    let mut cl = Cluster::build_auto(cfg)?;
+    cl.verify_reads = verify;
+    let stats = cl.run();
+    println!("{}", cl.metrics.summary());
+    println!(
+        "events={} epochs={} migrations={} repairs={} verify_failures={}",
+        stats.events, stats.epochs, stats.migrations, stats.repairs, cl.verify_failures
+    );
+    Ok(())
+}
+
+fn cmd_exp(args: &Args) -> Result<()> {
+    let name = args
+        .positional
+        .first()
+        .context("usage: turbokv exp <name> [--scale=1.0] [--out=results]")?
+        .clone();
+    let scale = Scale(
+        args.get("scale")
+            .map(|s| s.parse::<f64>())
+            .transpose()
+            .context("--scale must be a number")?
+            .unwrap_or(1.0),
+    );
+    let out_dir = args.get("out").unwrap_or("results").to_string();
+    std::fs::create_dir_all(&out_dir).ok();
+
+    let names: Vec<String> = if name == "all" {
+        ["fig13a", "fig13b", "fig13c", "fig14", "fig15", "ablation_migration",
+         "ablation_chain", "ablation_multirack", "failure"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect()
+    } else {
+        vec![name]
+    };
+
+    for name in names {
+        let t0 = std::time::Instant::now();
+        let report = experiments::run_by_name(&name, scale)?;
+        println!("{report}");
+        let path = format!("{out_dir}/{name}.txt");
+        std::fs::write(&path, &report).with_context(|| format!("writing {path}"))?;
+        // CDF CSV series for the latency figures.
+        if name == "fig14" || name == "fig15" {
+            let theta = if name == "fig15" { Some(1.2) } else { None };
+            let (_, csvs) = experiments::latency_experiment(scale, theta);
+            for (mode, csv) in csvs {
+                let csv_path = format!("{out_dir}/{name}_cdf_{mode}.csv");
+                std::fs::write(&csv_path, csv)?;
+            }
+        }
+        eprintln!("[{name}] done in {:.1}s -> {path}", t0.elapsed().as_secs_f64());
+    }
+    Ok(())
+}
+
+fn cmd_smoke(args: &Args) -> Result<()> {
+    println!("{}", turbokv::runtime::pjrt_smoke()?);
+    let cfg = args.to_config()?;
+    match turbokv::runtime::Runtime::load(&cfg.dataplane.artifacts_dir) {
+        Ok(rt) => {
+            println!(
+                "artifacts OK: batch={} ranges={} nodes={} ({} / {})",
+                rt.manifest.batch,
+                rt.manifest.num_ranges,
+                rt.manifest.num_nodes,
+                rt.dataplane.name,
+                rt.loadbalance.name,
+            );
+        }
+        Err(e) => println!("artifacts missing ({e:#}); run `make artifacts`"),
+    }
+    Ok(())
+}

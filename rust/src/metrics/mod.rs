@@ -1,0 +1,205 @@
+//! Experiment metrics: per-operation latency recorders and throughput,
+//! exported in the shapes the paper's tables and figures use.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use crate::types::{OpCode, SimTime};
+use crate::util::hist::SampleSet;
+use crate::util::ns_to_ms;
+
+/// Latency + throughput recorder for one experiment run.
+#[derive(Debug, Default, Clone)]
+pub struct Metrics {
+    per_op: BTreeMap<&'static str, SampleSet>,
+    all: SampleSet,
+    completed: u64,
+    first_completion: Option<SimTime>,
+    last_completion: SimTime,
+    /// Requests that observed a stale directory (server/client-driven
+    /// forwarding, §8 comparison), by op.
+    pub forwarded: u64,
+    /// Replies that failed (e.g., issued during node failure).
+    pub errors: u64,
+}
+
+fn op_name(op: OpCode) -> &'static str {
+    match op {
+        OpCode::Get => "read",
+        OpCode::Put => "write",
+        OpCode::Del => "write", // paper groups Put/Del as updates
+        OpCode::Range => "scan",
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, op: OpCode, latency_ns: u64, completed_at: SimTime) {
+        self.per_op.entry(op_name(op)).or_default().record(latency_ns);
+        self.all.record(latency_ns);
+        self.completed += 1;
+        if self.first_completion.is_none() {
+            self.first_completion = Some(completed_at);
+        }
+        self.last_completion = self.last_completion.max(completed_at);
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed
+    }
+
+    /// Ops per simulated second over the measured window.
+    pub fn throughput(&self) -> f64 {
+        match self.first_completion {
+            Some(first) if self.last_completion > first => {
+                self.completed as f64 / ((self.last_completion - first) as f64 / 1e9)
+            }
+            _ => 0.0,
+        }
+    }
+
+    /// (mean, p50, p99) in milliseconds for one op class — a row cell of
+    /// the paper's Tables 1–2.
+    pub fn latency_stats_ms(&mut self, op: OpCode) -> Option<(f64, f64, f64)> {
+        let s = self.per_op.get_mut(op_name(op))?;
+        if s.is_empty() {
+            return None;
+        }
+        Some((
+            ns_to_ms(s.mean() as u64),
+            ns_to_ms(s.quantile(0.5)),
+            ns_to_ms(s.quantile(0.99)),
+        ))
+    }
+
+    /// CDF points (ms, fraction) for one op class — Figs. 14/15 series.
+    pub fn cdf_ms(&mut self, op: OpCode, points: usize) -> Vec<(f64, f64)> {
+        match self.per_op.get_mut(op_name(op)) {
+            Some(s) => s
+                .cdf(points)
+                .into_iter()
+                .map(|(ns, frac)| (ns_to_ms(ns), frac))
+                .collect(),
+            None => Vec::new(),
+        }
+    }
+
+    pub fn count_for(&self, op: OpCode) -> usize {
+        self.per_op.get(op_name(op)).map(|s| s.len()).unwrap_or(0)
+    }
+
+    pub fn merge(&mut self, other: &Metrics) {
+        for (k, v) in &other.per_op {
+            self.per_op.entry(k).or_default().merge(v);
+        }
+        self.all.merge(&other.all);
+        self.completed += other.completed;
+        self.first_completion = match (self.first_completion, other.first_completion) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        self.last_completion = self.last_completion.max(other.last_completion);
+        self.forwarded += other.forwarded;
+        self.errors += other.errors;
+    }
+
+    /// Human-readable summary block.
+    pub fn summary(&mut self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "completed={} throughput={:.1} ops/s forwarded={} errors={}",
+            self.completed,
+            self.throughput(),
+            self.forwarded,
+            self.errors
+        );
+        for op in [OpCode::Get, OpCode::Put, OpCode::Range] {
+            if let Some((mean, p50, p99)) = self.latency_stats_ms(op) {
+                let _ = writeln!(
+                    out,
+                    "  {:5}  mean={mean:8.2}ms  p50={p50:8.2}ms  p99={p99:8.2}ms  n={}",
+                    op_name(op),
+                    self.count_for(op),
+                );
+            }
+        }
+        out
+    }
+
+    /// CSV export of CDF series for plotting (op, latency_ms, fraction).
+    pub fn cdf_csv(&mut self, points: usize) -> String {
+        let mut out = String::from("op,latency_ms,fraction\n");
+        for op in [OpCode::Get, OpCode::Put, OpCode::Range] {
+            for (ms, frac) in self.cdf_ms(op, points) {
+                let _ = writeln!(out, "{},{ms:.4},{frac:.6}", op_name(op));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_reports_per_op() {
+        let mut m = Metrics::new();
+        for i in 1..=100u64 {
+            m.record(OpCode::Get, i * 1_000_000, i * 10_000_000);
+        }
+        m.record(OpCode::Put, 500_000_000, 2_000_000_000);
+        let (mean, p50, p99) = m.latency_stats_ms(OpCode::Get).unwrap();
+        assert!((p50 - 50.0).abs() < 1.0, "p50={p50}");
+        assert!((p99 - 99.0).abs() < 1.0);
+        assert!((mean - 50.5).abs() < 0.1);
+        assert_eq!(m.count_for(OpCode::Get), 100);
+        assert_eq!(m.count_for(OpCode::Put), 1);
+        assert!(m.latency_stats_ms(OpCode::Range).is_none());
+    }
+
+    #[test]
+    fn del_counts_as_write() {
+        let mut m = Metrics::new();
+        m.record(OpCode::Del, 1_000_000, 1);
+        assert_eq!(m.count_for(OpCode::Put), 1);
+    }
+
+    #[test]
+    fn throughput_over_window() {
+        let mut m = Metrics::new();
+        // 11 completions between t=1s and t=2s => 11 ops over 1 s window.
+        for i in 0..=10u64 {
+            m.record(OpCode::Get, 1_000_000, 1_000_000_000 + i * 100_000_000);
+        }
+        assert!((m.throughput() - 11.0).abs() < 0.01, "{}", m.throughput());
+    }
+
+    #[test]
+    fn merge_combines_everything() {
+        let mut a = Metrics::new();
+        let mut b = Metrics::new();
+        a.record(OpCode::Get, 10_000_000, 1_000);
+        b.record(OpCode::Get, 20_000_000, 2_000);
+        b.forwarded = 3;
+        a.merge(&b);
+        assert_eq!(a.completed(), 2);
+        assert_eq!(a.count_for(OpCode::Get), 2);
+        assert_eq!(a.forwarded, 3);
+    }
+
+    #[test]
+    fn csv_has_all_recorded_ops() {
+        let mut m = Metrics::new();
+        m.record(OpCode::Get, 5_000_000, 1);
+        m.record(OpCode::Range, 7_000_000, 2);
+        let csv = m.cdf_csv(16);
+        assert!(csv.contains("read,"));
+        assert!(csv.contains("scan,"));
+        assert!(!csv.contains("write,"));
+    }
+}

@@ -1,0 +1,8 @@
+//! Network substrate: TurboKV wire formats (Fig. 8) and the data-center
+//! topology with standard L2/L3 shortest-path routing (Figs. 11–12).
+
+pub mod packet;
+pub mod topology;
+
+pub use packet::{ChainHeader, Ip, Packet, Tos, TurboHeader};
+pub use topology::{Addr, SwitchRole, Topology};

@@ -1,0 +1,393 @@
+//! TurboKV wire format (paper Fig. 8).
+//!
+//! A request packet is `Ethernet | IPv4 | TurboKV header`; after the switch
+//! processes it, a *chain header* is inserted carrying the replica chain's
+//! node IPs (ordered head→tail) followed by the client IP (Fig. 8(c), §4.2).
+//! Replies are standard IP packets with the result in the payload.
+//!
+//! The simulator passes parsed [`Packet`] values between components, but the
+//! full byte-level codec is implemented and round-trip tested: packet sizes
+//! on the wire drive the simulator's transmission-delay model, and the
+//! switch pipeline's parser stage (switch/pipeline.rs) consumes these
+//! headers exactly as a P4 parser state machine would.
+
+use anyhow::{bail, Context, Result};
+
+use crate::types::{Key, OpCode};
+
+/// EtherType marking TurboKV packets (the switch's parser keys on this,
+/// §4.2: "programmable switches use the Ethernet Type ... to identify
+/// TurboKV packets").
+pub const ETHERTYPE_TURBOKV: u16 = 0x88B5; // local experimental ethertype
+/// EtherType for ordinary IPv4 traffic.
+pub const ETHERTYPE_IPV4: u16 = 0x0800;
+
+/// ToS values distinguishing TurboKV packet kinds (§4.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum Tos {
+    /// Range-partitioned data packet, not yet processed by a switch.
+    RangeData = 0x10,
+    /// Hash-partitioned data packet, not yet processed by a switch.
+    HashData = 0x20,
+    /// TurboKV packet already processed by a coordinator switch.
+    Processed = 0x30,
+    /// Ordinary traffic.
+    Normal = 0x00,
+}
+
+impl Tos {
+    pub fn from_u8(v: u8) -> Tos {
+        match v {
+            0x10 => Tos::RangeData,
+            0x20 => Tos::HashData,
+            0x30 => Tos::Processed,
+            _ => Tos::Normal,
+        }
+    }
+}
+
+/// 32-bit IPv4 address.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord, Default)]
+pub struct Ip(pub u32);
+
+impl Ip {
+    pub fn new(a: u8, b: u8, c: u8, d: u8) -> Ip {
+        Ip(u32::from_be_bytes([a, b, c, d]))
+    }
+    pub fn octets(self) -> [u8; 4] {
+        self.0.to_be_bytes()
+    }
+}
+
+impl std::fmt::Debug for Ip {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let [a, b, c, d] = self.octets();
+        write!(f, "{a}.{b}.{c}.{d}")
+    }
+}
+
+impl std::fmt::Display for Ip {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+/// Ethernet header (only the fields the pipeline uses).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct EthHeader {
+    pub dst: [u8; 6],
+    pub src: [u8; 6],
+    pub ethertype: u16,
+}
+
+pub const ETH_LEN: usize = 14;
+
+/// IPv4 header (modelled subset: ToS, src, dst; fixed 20-byte length on the
+/// wire).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Ipv4Header {
+    pub tos: Tos,
+    pub src: Ip,
+    pub dst: Ip,
+}
+
+pub const IPV4_LEN: usize = 20;
+
+/// TurboKV header (Fig. 8(a)): OpCode, Key, endKey/hashedKey.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TurboHeader {
+    pub op: OpCode,
+    pub key: Key,
+    /// End of range for Range ops; hashed key for hash partitioning.
+    pub end_key: Key,
+}
+
+pub const TURBO_LEN: usize = 1 + 16 + 16;
+
+/// Chain header (Fig. 8(c)): CLength + node IPs head→tail + client IP last.
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub struct ChainHeader {
+    /// IPs remaining on the chain path, ending with the client IP.
+    /// `CLength` on the wire is `ips.len()`.
+    pub ips: Vec<Ip>,
+}
+
+impl ChainHeader {
+    pub fn wire_len(&self) -> usize {
+        1 + 4 * self.ips.len()
+    }
+}
+
+/// A parsed TurboKV packet as it travels through the simulator.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Packet {
+    pub eth: EthHeader,
+    pub ipv4: Ipv4Header,
+    /// Present iff `eth.ethertype == ETHERTYPE_TURBOKV`.
+    pub turbo: Option<TurboHeader>,
+    /// Present only after switch processing (ToS == Processed).
+    pub chain: Option<ChainHeader>,
+    /// Application payload (Put value on requests; result on replies).
+    pub payload: Vec<u8>,
+    /// Simulation-side request-correlation id. Stands in for the client
+    /// library's request table (keyed by client port + key in a real
+    /// deployment); NOT part of the wire format — `encode`/`decode` ignore
+    /// it, so freshly decoded packets carry `tag == 0`.
+    pub tag: u64,
+    /// Simulation-side marker: this packet is a chain-replication hop
+    /// between storage nodes (baseline coordination modes address those to
+    /// a dedicated replication port in a real deployment). Not on the
+    /// wire; `decode` yields `false`.
+    pub chain_hop: bool,
+}
+
+impl Packet {
+    /// A fresh client request packet (Fig. 8(a)).
+    pub fn request(src: Ip, dst: Ip, tos: Tos, op: OpCode, key: Key, end_key: Key, payload: Vec<u8>) -> Packet {
+        Packet {
+            eth: EthHeader { dst: [0; 6], src: [0; 6], ethertype: ETHERTYPE_TURBOKV },
+            ipv4: Ipv4Header { tos, src, dst },
+            turbo: Some(TurboHeader { op, key, end_key }),
+            chain: None,
+            payload,
+            tag: 0,
+            chain_hop: false,
+        }
+    }
+
+    /// A standard-IP reply packet (Fig. 8(b)).
+    pub fn reply(src: Ip, dst: Ip, payload: Vec<u8>) -> Packet {
+        Packet {
+            eth: EthHeader { dst: [0; 6], src: [0; 6], ethertype: ETHERTYPE_IPV4 },
+            ipv4: Ipv4Header { tos: Tos::Normal, src, dst },
+            turbo: None,
+            chain: None,
+            payload,
+            tag: 0,
+            chain_hop: false,
+        }
+    }
+
+    /// Total bytes on the wire (drives transmission delay).
+    pub fn wire_len(&self) -> usize {
+        ETH_LEN
+            + IPV4_LEN
+            + self.turbo.map(|_| TURBO_LEN).unwrap_or(0)
+            + self.chain.as_ref().map(|c| c.wire_len()).unwrap_or(0)
+            + self.payload.len()
+    }
+
+    /// Serialize to wire bytes.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.wire_len());
+        out.extend_from_slice(&self.eth.dst);
+        out.extend_from_slice(&self.eth.src);
+        out.extend_from_slice(&self.eth.ethertype.to_be_bytes());
+        // IPv4: version/IHL, ToS, total length, then (zeroed id/frag/ttl/
+        // proto/cksum), src, dst — 20 bytes.
+        out.push(0x45);
+        out.push(self.ipv4.tos as u8);
+        let total_len = (self.wire_len() - ETH_LEN) as u16;
+        out.extend_from_slice(&total_len.to_be_bytes());
+        out.extend_from_slice(&[0u8; 8]); // id, flags/frag, ttl, proto, cksum
+        out.extend_from_slice(&self.ipv4.src.0.to_be_bytes());
+        out.extend_from_slice(&self.ipv4.dst.0.to_be_bytes());
+        if let Some(t) = &self.turbo {
+            out.push(t.op as u8);
+            out.extend_from_slice(&t.key.to_bytes());
+            out.extend_from_slice(&t.end_key.to_bytes());
+        }
+        if let Some(c) = &self.chain {
+            out.push(c.ips.len() as u8);
+            for ip in &c.ips {
+                out.extend_from_slice(&ip.0.to_be_bytes());
+            }
+        }
+        out.extend_from_slice(&self.payload);
+        out
+    }
+
+    /// Parse wire bytes. The chain header is present iff the packet is a
+    /// TurboKV packet with ToS == Processed (that is how the storage shim's
+    /// parser decides, mirroring the P4 parser state machine).
+    pub fn decode(bytes: &[u8]) -> Result<Packet> {
+        if bytes.len() < ETH_LEN + IPV4_LEN {
+            bail!("packet too short: {} bytes", bytes.len());
+        }
+        let mut dst = [0u8; 6];
+        dst.copy_from_slice(&bytes[0..6]);
+        let mut src = [0u8; 6];
+        src.copy_from_slice(&bytes[6..12]);
+        let ethertype = u16::from_be_bytes([bytes[12], bytes[13]]);
+        let ip = &bytes[ETH_LEN..];
+        if ip[0] != 0x45 {
+            bail!("unsupported IPv4 version/IHL {:#x}", ip[0]);
+        }
+        let tos = Tos::from_u8(ip[1]);
+        let total_len = u16::from_be_bytes([ip[2], ip[3]]) as usize;
+        if total_len + ETH_LEN > bytes.len() {
+            bail!("truncated packet: header claims {total_len} bytes");
+        }
+        let src_ip = Ip(u32::from_be_bytes([ip[12], ip[13], ip[14], ip[15]]));
+        let dst_ip = Ip(u32::from_be_bytes([ip[16], ip[17], ip[18], ip[19]]));
+        let mut rest = &bytes[ETH_LEN + IPV4_LEN..ETH_LEN + total_len];
+
+        let turbo = if ethertype == ETHERTYPE_TURBOKV {
+            if rest.len() < TURBO_LEN {
+                bail!("truncated TurboKV header");
+            }
+            let op = OpCode::from_u8(rest[0]).context("bad opcode")?;
+            let mut kb = [0u8; 16];
+            kb.copy_from_slice(&rest[1..17]);
+            let mut eb = [0u8; 16];
+            eb.copy_from_slice(&rest[17..33]);
+            rest = &rest[TURBO_LEN..];
+            Some(TurboHeader { op, key: Key::from_bytes(kb), end_key: Key::from_bytes(eb) })
+        } else {
+            None
+        };
+
+        let chain = if turbo.is_some() && tos == Tos::Processed {
+            if rest.is_empty() {
+                bail!("missing chain header");
+            }
+            let n = rest[0] as usize;
+            if rest.len() < 1 + 4 * n {
+                bail!("truncated chain header: CLength={n}");
+            }
+            let mut ips = Vec::with_capacity(n);
+            for i in 0..n {
+                let o = 1 + 4 * i;
+                ips.push(Ip(u32::from_be_bytes([
+                    rest[o], rest[o + 1], rest[o + 2], rest[o + 3],
+                ])));
+            }
+            rest = &rest[1 + 4 * n..];
+            Some(ChainHeader { ips })
+        } else {
+            None
+        };
+
+        Ok(Packet {
+            eth: EthHeader { dst, src, ethertype },
+            ipv4: Ipv4Header { tos, src: src_ip, dst: dst_ip },
+            turbo,
+            chain,
+            payload: rest.to_vec(),
+            tag: 0,
+            chain_hop: false,
+        })
+    }
+
+    pub fn is_turbokv(&self) -> bool {
+        self.eth.ethertype == ETHERTYPE_TURBOKV
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall, FnStrategy};
+    use crate::util::rng::Rng;
+
+    fn sample_request() -> Packet {
+        Packet::request(
+            Ip::new(10, 1, 0, 1),
+            Ip::new(10, 0, 2, 3),
+            Tos::RangeData,
+            OpCode::Put,
+            Key(0xABCD << 96),
+            Key::MIN,
+            vec![7u8; 128],
+        )
+    }
+
+    #[test]
+    fn request_roundtrip() {
+        let pkt = sample_request();
+        let decoded = Packet::decode(&pkt.encode()).unwrap();
+        assert_eq!(pkt, decoded);
+        assert_eq!(decoded.turbo.unwrap().op, OpCode::Put);
+    }
+
+    #[test]
+    fn processed_packet_with_chain_roundtrip() {
+        let mut pkt = sample_request();
+        pkt.ipv4.tos = Tos::Processed;
+        pkt.chain = Some(ChainHeader {
+            ips: vec![Ip::new(10, 0, 0, 1), Ip::new(10, 0, 1, 2), Ip::new(10, 1, 0, 1)],
+        });
+        let decoded = Packet::decode(&pkt.encode()).unwrap();
+        assert_eq!(pkt, decoded);
+        assert_eq!(decoded.chain.unwrap().ips.len(), 3);
+    }
+
+    #[test]
+    fn reply_is_plain_ipv4() {
+        let pkt = Packet::reply(Ip::new(10, 0, 0, 1), Ip::new(10, 1, 0, 1), b"value".to_vec());
+        assert!(!pkt.is_turbokv());
+        let decoded = Packet::decode(&pkt.encode()).unwrap();
+        assert_eq!(decoded.turbo, None);
+        assert_eq!(decoded.chain, None);
+        assert_eq!(decoded.payload, b"value");
+    }
+
+    #[test]
+    fn wire_len_matches_encoding() {
+        let mut pkt = sample_request();
+        assert_eq!(pkt.encode().len(), pkt.wire_len());
+        pkt.ipv4.tos = Tos::Processed;
+        pkt.chain = Some(ChainHeader { ips: vec![Ip::new(1, 2, 3, 4); 4] });
+        assert_eq!(pkt.encode().len(), pkt.wire_len());
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(Packet::decode(&[]).is_err());
+        assert!(Packet::decode(&[0u8; 10]).is_err());
+        let mut bytes = sample_request().encode();
+        bytes[ETH_LEN] = 0x46; // wrong IHL
+        assert!(Packet::decode(&bytes).is_err());
+        let mut bytes = sample_request().encode();
+        bytes.truncate(ETH_LEN + IPV4_LEN + 5); // cut into TurboKV header
+        assert!(Packet::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn prop_roundtrip_random_packets() {
+        let strat = FnStrategy(|rng: &mut Rng| {
+            let op = OpCode::from_u8(rng.gen_range(4) as u8).unwrap();
+            let tos = match rng.gen_range(3) {
+                0 => Tos::RangeData,
+                1 => Tos::HashData,
+                _ => Tos::Processed,
+            };
+            let mut pkt = Packet::request(
+                Ip(rng.next_u32()),
+                Ip(rng.next_u32()),
+                tos,
+                op,
+                Key(rng.next_u128()),
+                Key(rng.next_u128()),
+                (0..rng.gen_range(200)).map(|_| rng.next_u32() as u8).collect(),
+            );
+            if tos == Tos::Processed {
+                let n = rng.gen_range(6) as usize + 1;
+                pkt.chain = Some(ChainHeader {
+                    ips: (0..n).map(|_| Ip(rng.next_u32())).collect(),
+                });
+            }
+            pkt
+        });
+        forall("packet-roundtrip", 0xFEED, 256, &strat, |pkt| {
+            let decoded = Packet::decode(&pkt.encode())
+                .map_err(|e| format!("decode failed: {e}"))?;
+            if &decoded == pkt {
+                Ok(())
+            } else {
+                Err(format!("roundtrip mismatch: {decoded:?}"))
+            }
+        });
+    }
+}

@@ -1,0 +1,351 @@
+//! Data-center network topology (paper Figs. 11–12).
+//!
+//! The default build reproduces the paper's testbed: 4 racks of 4 storage
+//! nodes behind ToR switches, 2 aggregation switches, 1 core switch and a
+//! client edge switch (8 switches total) with 4 clients. Routing between
+//! any two endpoints follows BFS shortest paths, precomputed per switch —
+//! the "standard L2/L3 protocol" the paper assumes for non-TurboKV packets.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::config::ClusterConfig;
+use crate::net::packet::Ip;
+use crate::types::{ClientId, NodeId, SwitchId};
+
+/// Network endpoint or forwarding element.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Addr {
+    Client(ClientId),
+    Switch(SwitchId),
+    Node(NodeId),
+}
+
+/// Role of a switch in the hierarchy (decides which index tables it holds,
+/// §6 hierarchical indexing).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SwitchRole {
+    /// Top-of-rack: full directory records with chains for its rack.
+    Tor { rack: usize },
+    /// Aggregation: sub-range → port toward the right ToR, no chains.
+    Agg,
+    /// Core: sub-range → port toward the right AGG, no chains.
+    Core,
+    /// Client edge: same key-based routing role as core (first TurboKV
+    /// switch on the client's path).
+    Edge,
+}
+
+#[derive(Clone, Debug)]
+pub struct SwitchInfo {
+    pub id: SwitchId,
+    pub role: SwitchRole,
+    pub name: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct Topology {
+    pub switches: Vec<SwitchInfo>,
+    pub num_nodes: usize,
+    pub num_clients: usize,
+    /// Adjacency: neighbors of every address.
+    adj: BTreeMap<Addr, Vec<Addr>>,
+    /// next_hop[switch][dest endpoint] = neighbor to forward to.
+    next_hop: Vec<BTreeMap<Addr, Addr>>,
+    /// Rack of each storage node.
+    pub node_rack: Vec<usize>,
+    node_ips: Vec<Ip>,
+    client_ips: Vec<Ip>,
+    ip_to_addr: BTreeMap<Ip, Addr>,
+}
+
+impl Topology {
+    /// Build the paper's tree: `racks` ToRs (nodes_per_rack nodes each),
+    /// `max(1, racks/2)` AGGs, one core, one client edge switch.
+    pub fn build(cfg: &ClusterConfig) -> Topology {
+        let racks = cfg.racks;
+        let nodes = cfg.nodes();
+        let clients = cfg.clients;
+        let aggs = (racks / 2).max(1);
+
+        let mut switches = Vec::new();
+        for rack in 0..racks {
+            switches.push(SwitchInfo {
+                id: switches.len(),
+                role: SwitchRole::Tor { rack },
+                name: format!("tor{rack}"),
+            });
+        }
+        let agg0 = switches.len();
+        for a in 0..aggs {
+            switches.push(SwitchInfo {
+                id: switches.len(),
+                role: SwitchRole::Agg,
+                name: format!("agg{a}"),
+            });
+        }
+        let core_id = switches.len();
+        switches.push(SwitchInfo { id: core_id, role: SwitchRole::Core, name: "core".into() });
+        let edge_id = switches.len();
+        switches.push(SwitchInfo { id: edge_id, role: SwitchRole::Edge, name: "edge".into() });
+
+        let mut adj: BTreeMap<Addr, Vec<Addr>> = BTreeMap::new();
+        let connect = |a: Addr, b: Addr, adj: &mut BTreeMap<Addr, Vec<Addr>>| {
+            adj.entry(a).or_default().push(b);
+            adj.entry(b).or_default().push(a);
+        };
+
+        let mut node_rack = Vec::with_capacity(nodes);
+        for n in 0..nodes {
+            let rack = n / cfg.nodes_per_rack;
+            node_rack.push(rack);
+            connect(Addr::Node(n), Addr::Switch(rack), &mut adj);
+        }
+        for rack in 0..racks {
+            let agg = agg0 + (rack * aggs / racks.max(1)).min(aggs - 1);
+            connect(Addr::Switch(rack), Addr::Switch(agg), &mut adj);
+        }
+        for a in 0..aggs {
+            connect(Addr::Switch(agg0 + a), Addr::Switch(core_id), &mut adj);
+        }
+        connect(Addr::Switch(edge_id), Addr::Switch(core_id), &mut adj);
+        for c in 0..clients {
+            connect(Addr::Client(c), Addr::Switch(edge_id), &mut adj);
+        }
+
+        // BFS next-hop tables per switch for all endpoints.
+        let endpoints: Vec<Addr> = (0..nodes)
+            .map(Addr::Node)
+            .chain((0..clients).map(Addr::Client))
+            .collect();
+        let mut next_hop = vec![BTreeMap::new(); switches.len()];
+        for &dest in &endpoints {
+            // BFS from dest over the graph; for each switch the parent
+            // pointer gives the next hop toward dest.
+            let mut parent: BTreeMap<Addr, Addr> = BTreeMap::new();
+            let mut queue = VecDeque::from([dest]);
+            parent.insert(dest, dest);
+            while let Some(cur) = queue.pop_front() {
+                for &nb in adj.get(&cur).into_iter().flatten() {
+                    if !parent.contains_key(&nb) {
+                        parent.insert(nb, cur);
+                        queue.push_back(nb);
+                    }
+                }
+            }
+            for sw in &switches {
+                if let Some(&hop) = parent.get(&Addr::Switch(sw.id)) {
+                    next_hop[sw.id].insert(dest, hop);
+                }
+            }
+        }
+
+        // IP assignment: nodes 10.0.rack.host+1, clients 10.1.0.c+1.
+        let node_ips: Vec<Ip> = (0..nodes)
+            .map(|n| Ip::new(10, 0, (n / cfg.nodes_per_rack) as u8, (n % cfg.nodes_per_rack) as u8 + 1))
+            .collect();
+        let client_ips: Vec<Ip> = (0..clients).map(|c| Ip::new(10, 1, 0, c as u8 + 1)).collect();
+        let mut ip_to_addr = BTreeMap::new();
+        for (n, &ip) in node_ips.iter().enumerate() {
+            ip_to_addr.insert(ip, Addr::Node(n));
+        }
+        for (c, &ip) in client_ips.iter().enumerate() {
+            ip_to_addr.insert(ip, Addr::Client(c));
+        }
+
+        Topology {
+            switches,
+            num_nodes: nodes,
+            num_clients: clients,
+            adj,
+            next_hop,
+            node_rack,
+            node_ips,
+            client_ips,
+            ip_to_addr,
+        }
+    }
+
+    pub fn node_ip(&self, n: NodeId) -> Ip {
+        self.node_ips[n]
+    }
+
+    pub fn client_ip(&self, c: ClientId) -> Ip {
+        self.client_ips[c]
+    }
+
+    pub fn addr_of_ip(&self, ip: Ip) -> Option<Addr> {
+        self.ip_to_addr.get(&ip).copied()
+    }
+
+    /// First-hop switch of an endpoint.
+    pub fn edge_switch(&self, endpoint: Addr) -> SwitchId {
+        match self.adj.get(&endpoint).and_then(|v| v.first()) {
+            Some(Addr::Switch(s)) => *s,
+            _ => panic!("endpoint {endpoint:?} not attached to a switch"),
+        }
+    }
+
+    /// Next hop from a switch toward an endpoint.
+    pub fn next_hop(&self, sw: SwitchId, dest: Addr) -> Option<Addr> {
+        self.next_hop[sw].get(&dest).copied()
+    }
+
+    /// Full path between two endpoints (inclusive of both).
+    pub fn path(&self, from: Addr, to: Addr) -> Vec<Addr> {
+        if from == to {
+            return vec![from];
+        }
+        let mut path = vec![from];
+        let mut cur = Addr::Switch(self.edge_switch(from));
+        path.push(cur);
+        let mut guard = 0;
+        while cur != to {
+            let Addr::Switch(sw) = cur else { break };
+            let hop = self
+                .next_hop(sw, to)
+                .unwrap_or_else(|| panic!("no route from {cur:?} to {to:?}"));
+            path.push(hop);
+            cur = hop;
+            guard += 1;
+            assert!(guard < 64, "routing loop from {from:?} to {to:?}");
+        }
+        path
+    }
+
+    /// Number of switch hops between endpoints (the latency driver the
+    /// in-switch coordination reduces, §2.2).
+    pub fn hops(&self, from: Addr, to: Addr) -> usize {
+        self.path(from, to).iter().filter(|a| matches!(a, Addr::Switch(_))).count()
+    }
+
+    /// The ToR switch of a rack.
+    pub fn tor_of_rack(&self, rack: usize) -> SwitchId {
+        self.switches
+            .iter()
+            .find(|s| matches!(s.role, SwitchRole::Tor { rack: r } if r == rack))
+            .map(|s| s.id)
+            .expect("rack has a ToR")
+    }
+
+    /// Storage nodes attached to a ToR.
+    pub fn nodes_of_tor(&self, sw: SwitchId) -> Vec<NodeId> {
+        match self.switches[sw].role {
+            SwitchRole::Tor { rack } => (0..self.num_nodes)
+                .filter(|&n| self.node_rack[n] == rack)
+                .collect(),
+            _ => Vec::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+
+    fn paper_topology() -> Topology {
+        Topology::build(&ClusterConfig::default())
+    }
+
+    #[test]
+    fn paper_testbed_has_eight_switches() {
+        let t = paper_topology();
+        assert_eq!(t.switches.len(), 8, "4 ToR + 2 AGG + core + edge");
+        assert_eq!(t.num_nodes, 16);
+        assert_eq!(t.num_clients, 4);
+    }
+
+    #[test]
+    fn client_to_node_path_goes_through_hierarchy() {
+        let t = paper_topology();
+        let path = t.path(Addr::Client(0), Addr::Node(0));
+        // client -> edge -> core -> agg0 -> tor0 -> node0
+        assert_eq!(path.len(), 6);
+        assert_eq!(path[0], Addr::Client(0));
+        assert_eq!(*path.last().unwrap(), Addr::Node(0));
+        assert_eq!(t.hops(Addr::Client(0), Addr::Node(0)), 4);
+    }
+
+    #[test]
+    fn same_rack_nodes_one_switch_hop() {
+        let t = paper_topology();
+        assert_eq!(t.hops(Addr::Node(0), Addr::Node(1)), 1);
+        let path = t.path(Addr::Node(0), Addr::Node(3));
+        assert_eq!(path, vec![Addr::Node(0), Addr::Switch(0), Addr::Node(3)]);
+    }
+
+    #[test]
+    fn cross_rack_paths_use_agg_or_core() {
+        let t = paper_topology();
+        // Racks 0 and 1 share agg0: node -> tor0 -> agg -> tor1 -> node.
+        assert_eq!(t.hops(Addr::Node(0), Addr::Node(4)), 3);
+        // Racks 0 and 3 cross the core: 5 switch hops.
+        assert_eq!(t.hops(Addr::Node(0), Addr::Node(12)), 5);
+    }
+
+    #[test]
+    fn all_endpoint_pairs_are_routable() {
+        let t = paper_topology();
+        let eps: Vec<Addr> = (0..16)
+            .map(Addr::Node)
+            .chain((0..4).map(Addr::Client))
+            .collect();
+        for &a in &eps {
+            for &b in &eps {
+                let path = t.path(a, b);
+                assert_eq!(path[0], a);
+                assert_eq!(*path.last().unwrap(), b);
+                // No repeated elements (loop freedom).
+                let mut seen = path.clone();
+                seen.sort();
+                seen.dedup();
+                assert_eq!(seen.len(), path.len(), "loop in {a:?}->{b:?}: {path:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn ips_are_unique_and_resolvable() {
+        let t = paper_topology();
+        let mut ips: Vec<Ip> = (0..16).map(|n| t.node_ip(n)).collect();
+        ips.extend((0..4).map(|c| t.client_ip(c)));
+        let mut dedup = ips.clone();
+        dedup.sort();
+        dedup.dedup();
+        assert_eq!(dedup.len(), ips.len());
+        assert_eq!(t.addr_of_ip(t.node_ip(7)), Some(Addr::Node(7)));
+        assert_eq!(t.addr_of_ip(t.client_ip(2)), Some(Addr::Client(2)));
+        assert_eq!(t.addr_of_ip(Ip::new(9, 9, 9, 9)), None);
+    }
+
+    #[test]
+    fn tor_lookup_and_rack_membership() {
+        let t = paper_topology();
+        for rack in 0..4 {
+            let tor = t.tor_of_rack(rack);
+            let nodes = t.nodes_of_tor(tor);
+            assert_eq!(nodes.len(), 4);
+            for n in nodes {
+                assert_eq!(t.node_rack[n], rack);
+            }
+        }
+    }
+
+    #[test]
+    fn single_rack_topology_works() {
+        let cfg = ClusterConfig { racks: 1, nodes_per_rack: 4, clients: 2, ..Default::default() };
+        let t = Topology::build(&cfg);
+        // 1 ToR + 1 AGG + core + edge.
+        assert_eq!(t.switches.len(), 4);
+        assert_eq!(t.hops(Addr::Client(0), Addr::Node(3)), 4);
+    }
+
+    #[test]
+    fn larger_cluster_scales() {
+        let cfg = ClusterConfig { racks: 8, nodes_per_rack: 8, clients: 8, ..Default::default() };
+        let t = Topology::build(&cfg);
+        assert_eq!(t.num_nodes, 64);
+        assert_eq!(t.switches.len(), 8 + 4 + 1 + 1);
+        assert_eq!(t.hops(Addr::Node(0), Addr::Node(63)), 5);
+    }
+}

@@ -1,0 +1,371 @@
+//! The directory: sub-range → replica-chain mapping table (paper Fig. 5).
+//!
+//! The whole key span `0..2^128` (or the hash ring for hash partitioning)
+//! is divided into disjoint sub-ranges; each sub-range has a *replica list*
+//! ordered head→tail (chain replication, §4.1.2). This is the structure
+//! the switches hold in their match-action tables, the controller mutates,
+//! and client/server-driven baselines replicate locally.
+
+use crate::types::{Key, NodeId};
+
+/// One mapping-table record.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SubRange {
+    /// First key of the sub-range (inclusive). The end is the next
+    /// sub-range's start (exclusive); the last sub-range ends at Key::MAX.
+    pub start: Key,
+    /// Replica chain, `chain[0]` = head, `chain.last()` = tail (Fig. 5).
+    pub chain: Vec<NodeId>,
+}
+
+/// The full mapping table: sub-ranges sorted by start key, starting at
+/// `Key::MIN` and covering the whole span.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Directory {
+    ranges: Vec<SubRange>,
+    /// Version bumps on every mutation (stale-directory detection for the
+    /// client-driven baseline).
+    pub version: u64,
+}
+
+impl Directory {
+    /// The paper's initial layout: `num_ranges` equal sub-ranges over the
+    /// key span; range `i`'s chain is nodes `[i, i+1, .., i+r-1] mod n`, so
+    /// with the testbed numbers (128 ranges, 16 nodes, r=3) every node is
+    /// head of 8, middle of 8 and tail of 8 sub-ranges (paper §8).
+    pub fn initial(num_ranges: usize, num_nodes: usize, replication: usize) -> Directory {
+        assert!(num_ranges > 0 && num_nodes > 0);
+        assert!(replication <= num_nodes, "chain longer than cluster");
+        assert!(
+            num_ranges < (1 << 25),
+            "num_ranges too large for even key-span division"
+        );
+        let step = (u128::MAX / num_ranges as u128).saturating_add(1);
+        let ranges = (0..num_ranges)
+            .map(|i| SubRange {
+                start: Key(step * i as u128),
+                chain: (0..replication).map(|j| (i + j) % num_nodes).collect(),
+            })
+            .collect();
+        Directory { ranges, version: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.ranges.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ranges.is_empty()
+    }
+
+    pub fn ranges(&self) -> &[SubRange] {
+        &self.ranges
+    }
+
+    /// Index of the sub-range containing `mv` (a matching value).
+    pub fn lookup(&self, mv: Key) -> usize {
+        debug_assert!(!self.ranges.is_empty());
+        debug_assert_eq!(self.ranges[0].start, Key::MIN, "table must cover the span");
+        self.ranges.partition_point(|r| r.start <= mv) - 1
+    }
+
+    /// Sub-range bounds `[start, end]` (inclusive end).
+    pub fn bounds(&self, idx: usize) -> (Key, Key) {
+        let start = self.ranges[idx].start;
+        let end = match self.ranges.get(idx + 1) {
+            Some(next) => Key(next.start.0 - 1),
+            None => Key::MAX,
+        };
+        (start, end)
+    }
+
+    pub fn chain(&self, idx: usize) -> &[NodeId] {
+        &self.ranges[idx].chain
+    }
+
+    pub fn head(&self, idx: usize) -> NodeId {
+        self.ranges[idx].chain[0]
+    }
+
+    pub fn tail(&self, idx: usize) -> NodeId {
+        *self.ranges[idx].chain.last().expect("non-empty chain")
+    }
+
+    /// Successor of `node` in range `idx`'s chain (CR forwarding, §4.1.2).
+    pub fn successor(&self, idx: usize, node: NodeId) -> Option<NodeId> {
+        let chain = self.chain(idx);
+        chain
+            .iter()
+            .position(|&n| n == node)
+            .and_then(|pos| chain.get(pos + 1))
+            .copied()
+    }
+
+    /// Replace a chain (controller reconfiguration).
+    pub fn set_chain(&mut self, idx: usize, chain: Vec<NodeId>) {
+        assert!(!chain.is_empty(), "empty chain");
+        let mut uniq = chain.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), chain.len(), "duplicate node in chain");
+        self.ranges[idx].chain = chain;
+        self.version += 1;
+    }
+
+    /// Split sub-range `idx` at key `at` (the new sub-range starts at
+    /// `at`), giving the upper half `upper_chain`. Returns the new range's
+    /// index. Mirrors §4.1.1's capacity-driven division and §5.1's
+    /// hot-range splitting.
+    pub fn split(&mut self, idx: usize, at: Key, upper_chain: Vec<NodeId>) -> usize {
+        let (start, end) = self.bounds(idx);
+        assert!(start < at && at <= end, "split point outside range");
+        self.ranges.insert(idx + 1, SubRange { start: at, chain: upper_chain });
+        self.version += 1;
+        idx + 1
+    }
+
+    /// All range indexes that `node` participates in.
+    pub fn ranges_of_node(&self, node: NodeId) -> Vec<usize> {
+        (0..self.ranges.len())
+            .filter(|&i| self.ranges[i].chain.contains(&node))
+            .collect()
+    }
+
+    /// Remove a failed node from every chain (paper §5.2: predecessor
+    /// linked to successor, chain shortened by one). Returns the affected
+    /// range indexes. Panics if any chain would become empty — the caller
+    /// (controller) must re-extend chains via [`Directory::set_chain`].
+    pub fn remove_node(&mut self, node: NodeId) -> Vec<usize> {
+        let affected = self.ranges_of_node(node);
+        for &i in &affected {
+            let chain = &mut self.ranges[i].chain;
+            chain.retain(|&n| n != node);
+            assert!(!chain.is_empty(), "range {i} lost its last replica");
+        }
+        if !affected.is_empty() {
+            self.version += 1;
+        }
+        affected
+    }
+
+    /// Sub-range start boundaries as 32-bit prefixes for the XLA dataplane.
+    /// Returns `None` if any boundary is not 2^96-aligned (the controller
+    /// keeps them aligned; see DESIGN.md §Hardware-Adaptation).
+    pub fn starts_prefix32(&self) -> Option<Vec<u32>> {
+        self.ranges
+            .iter()
+            .map(|r| r.start.is_prefix_aligned().then(|| r.start.prefix32()))
+            .collect()
+    }
+
+    /// One-hot chain-membership matrices `[num_ranges x num_nodes]` for the
+    /// controller's XLA load estimate (tail incidence, member incidence).
+    pub fn onehot(&self, num_nodes: usize) -> (Vec<f32>, Vec<f32>) {
+        let n = self.ranges.len();
+        let mut tail = vec![0.0f32; n * num_nodes];
+        let mut member = vec![0.0f32; n * num_nodes];
+        for (i, r) in self.ranges.iter().enumerate() {
+            for &node in &r.chain {
+                member[i * num_nodes + node] = 1.0;
+            }
+            tail[i * num_nodes + self.tail(i)] = 1.0;
+        }
+        (tail, member)
+    }
+
+    /// Sanity invariants: full coverage, sorted starts, non-empty unique
+    /// chains. Used by property tests and debug assertions.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        if self.ranges.is_empty() {
+            return Err("empty directory".into());
+        }
+        if self.ranges[0].start != Key::MIN {
+            return Err("first range must start at MIN".into());
+        }
+        for w in self.ranges.windows(2) {
+            if w[0].start >= w[1].start {
+                return Err(format!("unsorted starts: {:?} then {:?}", w[0].start, w[1].start));
+            }
+        }
+        for (i, r) in self.ranges.iter().enumerate() {
+            if r.chain.is_empty() {
+                return Err(format!("range {i} has empty chain"));
+            }
+            let mut uniq = r.chain.clone();
+            uniq.sort_unstable();
+            uniq.dedup();
+            if uniq.len() != r.chain.len() {
+                return Err(format!("range {i} has duplicate replicas"));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall, FnStrategy};
+    use crate::util::rng::Rng;
+
+    fn paper_dir() -> Directory {
+        Directory::initial(128, 16, 3)
+    }
+
+    #[test]
+    fn initial_layout_matches_paper() {
+        let d = paper_dir();
+        assert_eq!(d.len(), 128);
+        d.check_invariants().unwrap();
+        // Every node: head of 8, middle of 8, tail of 8 => 24 sub-ranges.
+        for node in 0..16 {
+            let ranges = d.ranges_of_node(node);
+            assert_eq!(ranges.len(), 24, "node {node}");
+            let heads = ranges.iter().filter(|&&i| d.head(i) == node).count();
+            let tails = ranges.iter().filter(|&&i| d.tail(i) == node).count();
+            assert_eq!(heads, 8);
+            assert_eq!(tails, 8);
+        }
+    }
+
+    #[test]
+    fn lookup_finds_containing_range() {
+        let d = paper_dir();
+        assert_eq!(d.lookup(Key::MIN), 0);
+        assert_eq!(d.lookup(Key::MAX), 127);
+        for idx in [0usize, 1, 63, 127] {
+            let (start, end) = d.bounds(idx);
+            assert_eq!(d.lookup(start), idx);
+            assert_eq!(d.lookup(end), idx);
+            if idx > 0 {
+                assert_eq!(d.lookup(Key(start.0 - 1)), idx - 1);
+            }
+        }
+    }
+
+    #[test]
+    fn bounds_partition_the_span() {
+        let d = Directory::initial(7, 4, 2);
+        let mut expected_start = Key::MIN;
+        for i in 0..d.len() {
+            let (start, end) = d.bounds(i);
+            assert_eq!(start, expected_start);
+            assert!(start <= end);
+            expected_start = end.next();
+        }
+        assert_eq!(d.bounds(d.len() - 1).1, Key::MAX);
+    }
+
+    #[test]
+    fn successor_walks_the_chain() {
+        let d = paper_dir();
+        let chain = d.chain(0).to_vec();
+        assert_eq!(d.successor(0, chain[0]), Some(chain[1]));
+        assert_eq!(d.successor(0, chain[1]), Some(chain[2]));
+        assert_eq!(d.successor(0, chain[2]), None); // tail
+        assert_eq!(d.successor(0, 99), None); // not in chain
+    }
+
+    #[test]
+    fn split_preserves_invariants_and_routing() {
+        let mut d = paper_dir();
+        let (start, end) = d.bounds(5);
+        let mid = Key((start.0 >> 1) + (end.0 >> 1));
+        let old_version = d.version;
+        let new_idx = d.split(5, mid, vec![9, 10, 11]);
+        assert_eq!(new_idx, 6);
+        assert_eq!(d.len(), 129);
+        assert!(d.version > old_version);
+        d.check_invariants().unwrap();
+        assert_eq!(d.lookup(Key(mid.0 - 1)), 5);
+        assert_eq!(d.lookup(mid), 6);
+        assert_eq!(d.chain(6), &[9, 10, 11]);
+    }
+
+    #[test]
+    #[should_panic(expected = "split point outside range")]
+    fn split_rejects_out_of_range_point() {
+        let mut d = paper_dir();
+        let (start, _) = d.bounds(3);
+        d.split(3, start, vec![0]);
+    }
+
+    #[test]
+    fn remove_node_shortens_chains() {
+        let mut d = paper_dir();
+        let affected = d.remove_node(7);
+        assert_eq!(affected.len(), 24);
+        for &i in &affected {
+            assert!(!d.chain(i).contains(&7));
+            assert_eq!(d.chain(i).len(), 2);
+        }
+        d.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prefix32_alignment() {
+        let d = paper_dir();
+        let starts = d.starts_prefix32().expect("initial boundaries aligned");
+        assert_eq!(starts.len(), 128);
+        assert_eq!(starts[0], 0);
+        for w in starts.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        // A misaligned split breaks the XLA-compatible export.
+        let mut d2 = d.clone();
+        let (start, end) = d2.bounds(0);
+        let misaligned = Key(start.0 + 5);
+        assert!(misaligned < end);
+        d2.split(0, misaligned, vec![1, 2, 3]);
+        assert!(d2.starts_prefix32().is_none());
+    }
+
+    #[test]
+    fn onehot_shapes_and_rows() {
+        let d = Directory::initial(8, 4, 2);
+        let (tail, member) = d.onehot(4);
+        assert_eq!(tail.len(), 32);
+        assert_eq!(member.len(), 32);
+        for i in 0..8 {
+            let t: f32 = tail[i * 4..(i + 1) * 4].iter().sum();
+            let m: f32 = member[i * 4..(i + 1) * 4].iter().sum();
+            assert_eq!(t, 1.0, "exactly one tail per range");
+            assert_eq!(m, 2.0, "r=2 members per range");
+        }
+    }
+
+    #[test]
+    fn prop_lookup_matches_linear_scan_after_random_splits() {
+        let strat = FnStrategy(|rng: &mut Rng| {
+            let splits = rng.gen_range(20) as usize;
+            let probes: Vec<u128> = (0..50).map(|_| rng.next_u128()).collect();
+            let points: Vec<u128> = (0..splits).map(|_| rng.next_u128()).collect();
+            (points, probes)
+        });
+        forall("directory-lookup-linear", 0xD1F, 64, &strat, |(points, probes)| {
+            let mut d = Directory::initial(4, 8, 3);
+            for &p in points {
+                let key = Key(p);
+                let idx = d.lookup(key);
+                let (start, end) = d.bounds(idx);
+                if key > start && key <= end {
+                    d.split(idx, key, d.chain(idx).to_vec());
+                }
+            }
+            d.check_invariants().map_err(|e| e)?;
+            for &p in probes {
+                let key = Key(p);
+                let idx = d.lookup(key);
+                // Linear-scan oracle.
+                let oracle = (0..d.len())
+                    .rev()
+                    .find(|&i| d.ranges()[i].start <= key)
+                    .unwrap();
+                if idx != oracle {
+                    return Err(format!("lookup({key:?}) = {idx}, oracle {oracle}"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,38 @@
+//! Partition management: the directory information TurboKV stores in the
+//! switches (paper §4.1).
+
+pub mod directory;
+
+pub use directory::{Directory, SubRange};
+
+use crate::config::Partitioning;
+use crate::hash::ring_position;
+use crate::types::Key;
+
+/// The *matching value* the switch matches against its table (paper
+/// §4.1.3): the key itself under range partitioning, the key's RIPEMD-160
+/// ring position under hash partitioning.
+pub fn matching_value(partitioning: Partitioning, key: Key) -> Key {
+    match partitioning {
+        Partitioning::Range => key,
+        Partitioning::Hash => ring_position(key),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn range_matching_is_identity() {
+        let k = Key(42 << 96);
+        assert_eq!(matching_value(Partitioning::Range, k), k);
+    }
+
+    #[test]
+    fn hash_matching_uses_ring() {
+        let k = Key(42);
+        assert_eq!(matching_value(Partitioning::Hash, k), ring_position(k));
+        assert_ne!(matching_value(Partitioning::Hash, k), k);
+    }
+}

@@ -1,0 +1,238 @@
+//! Minimal JSON parser for `artifacts/manifest.json` (no serde offline —
+//! DESIGN.md §3 dependency note). Supports objects, arrays, strings,
+//! integers/floats, booleans and null; no escapes beyond `\" \\ \/ \n \t`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as u64),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+pub fn parse(text: &str) -> Result<Json> {
+    let bytes = text.as_bytes();
+    let mut pos = 0usize;
+    let v = value(bytes, &mut pos)?;
+    skip_ws(bytes, &mut pos);
+    if pos != bytes.len() {
+        bail!("trailing data at byte {pos}");
+    }
+    Ok(v)
+}
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while *pos < b.len() && (b[*pos] as char).is_ascii_whitespace() {
+        *pos += 1;
+    }
+}
+
+fn value(b: &[u8], pos: &mut usize) -> Result<Json> {
+    skip_ws(b, pos);
+    if *pos >= b.len() {
+        bail!("unexpected end of input");
+    }
+    match b[*pos] {
+        b'{' => object(b, pos),
+        b'[' => array(b, pos),
+        b'"' => Ok(Json::Str(string(b, pos)?)),
+        b't' => lit(b, pos, "true", Json::Bool(true)),
+        b'f' => lit(b, pos, "false", Json::Bool(false)),
+        b'n' => lit(b, pos, "null", Json::Null),
+        _ => number(b, pos),
+    }
+}
+
+fn lit(b: &[u8], pos: &mut usize, word: &str, v: Json) -> Result<Json> {
+    if b[*pos..].starts_with(word.as_bytes()) {
+        *pos += word.len();
+        Ok(v)
+    } else {
+        bail!("bad literal at byte {pos}");
+    }
+}
+
+fn number(b: &[u8], pos: &mut usize) -> Result<Json> {
+    let start = *pos;
+    while *pos < b.len() && matches!(b[*pos], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E') {
+        *pos += 1;
+    }
+    let s = std::str::from_utf8(&b[start..*pos])?;
+    Ok(Json::Num(s.parse::<f64>().with_context(|| format!("bad number {s:?}"))?))
+}
+
+fn string(b: &[u8], pos: &mut usize) -> Result<String> {
+    debug_assert_eq!(b[*pos], b'"');
+    *pos += 1;
+    let mut out = String::new();
+    while *pos < b.len() {
+        match b[*pos] {
+            b'"' => {
+                *pos += 1;
+                return Ok(out);
+            }
+            b'\\' => {
+                *pos += 1;
+                if *pos >= b.len() {
+                    break;
+                }
+                out.push(match b[*pos] {
+                    b'"' => '"',
+                    b'\\' => '\\',
+                    b'/' => '/',
+                    b'n' => '\n',
+                    b't' => '\t',
+                    other => bail!("unsupported escape \\{}", other as char),
+                });
+                *pos += 1;
+            }
+            c => {
+                out.push(c as char);
+                *pos += 1;
+            }
+        }
+    }
+    bail!("unterminated string");
+}
+
+fn object(b: &[u8], pos: &mut usize) -> Result<Json> {
+    *pos += 1; // {
+    let mut map = BTreeMap::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b'}' {
+        *pos += 1;
+        return Ok(Json::Obj(map));
+    }
+    loop {
+        skip_ws(b, pos);
+        if *pos >= b.len() || b[*pos] != b'"' {
+            bail!("expected object key at byte {pos}");
+        }
+        let key = string(b, pos)?;
+        skip_ws(b, pos);
+        if *pos >= b.len() || b[*pos] != b':' {
+            bail!("expected ':' at byte {pos}");
+        }
+        *pos += 1;
+        map.insert(key, value(b, pos)?);
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b'}') => {
+                *pos += 1;
+                return Ok(Json::Obj(map));
+            }
+            _ => bail!("expected ',' or '}}' at byte {pos}"),
+        }
+    }
+}
+
+fn array(b: &[u8], pos: &mut usize) -> Result<Json> {
+    *pos += 1; // [
+    let mut out = Vec::new();
+    skip_ws(b, pos);
+    if *pos < b.len() && b[*pos] == b']' {
+        *pos += 1;
+        return Ok(Json::Arr(out));
+    }
+    loop {
+        out.push(value(b, pos)?);
+        skip_ws(b, pos);
+        match b.get(*pos) {
+            Some(b',') => *pos += 1,
+            Some(b']') => {
+                *pos += 1;
+                return Ok(Json::Arr(out));
+            }
+            _ => bail!("expected ',' or ']' at byte {pos}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_shape() {
+        let doc = r#"{
+            "batch": 256,
+            "num_ranges": 128,
+            "artifacts": {
+                "dataplane": {
+                    "file": "dataplane.hlo.txt",
+                    "inputs": [{"name": "keys", "shape": [256], "dtype": "u32"}]
+                }
+            },
+            "flag": true,
+            "nothing": null,
+            "pi": 3.5
+        }"#;
+        let j = parse(doc).unwrap();
+        assert_eq!(j.get("batch").unwrap().as_u64(), Some(256));
+        let dp = j.get("artifacts").unwrap().get("dataplane").unwrap();
+        assert_eq!(dp.get("file").unwrap().as_str(), Some("dataplane.hlo.txt"));
+        let inputs = dp.get("inputs").unwrap().as_arr().unwrap();
+        assert_eq!(inputs[0].get("shape").unwrap().as_arr().unwrap()[0].as_u64(), Some(256));
+        assert_eq!(j.get("flag"), Some(&Json::Bool(true)));
+        assert_eq!(j.get("nothing"), Some(&Json::Null));
+        assert_eq!(j.get("pi").unwrap().as_u64(), None);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse("{").is_err());
+        assert!(parse("[1, 2").is_err());
+        assert!(parse("\"open").is_err());
+        assert!(parse("{} extra").is_err());
+        assert!(parse("{bad: 1}").is_err());
+    }
+
+    #[test]
+    fn strings_with_escapes() {
+        let j = parse(r#"{"s": "a\"b\\c\nd"}"#).unwrap();
+        assert_eq!(j.get("s").unwrap().as_str(), Some("a\"b\\c\nd"));
+    }
+
+    #[test]
+    fn empty_containers() {
+        assert_eq!(parse("[]").unwrap(), Json::Arr(vec![]));
+        assert_eq!(parse("{}").unwrap(), Json::Obj(Default::default()));
+    }
+}

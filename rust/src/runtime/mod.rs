@@ -1,0 +1,148 @@
+//! PJRT runtime: load the AOT-compiled HLO-text artifacts produced by
+//! `python/compile/aot.py` and execute them from the rust request path.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax >= 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md). Python runs only at
+//! `make artifacts` time; this module is all that touches the artifacts at
+//! run time.
+
+pub mod json;
+pub mod xla_lookup;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use json::Json;
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub batch: usize,
+    pub num_ranges: usize,
+    pub num_nodes: usize,
+    pub dataplane_file: PathBuf,
+    pub loadbalance_file: PathBuf,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &str) -> Result<Manifest> {
+        let dir = Path::new(artifacts_dir);
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {artifacts_dir}/manifest.json — run `make artifacts`"))?;
+        let doc = json::parse(&text)?;
+        let u = |k: &str| -> Result<usize> {
+            Ok(doc
+                .get(k)
+                .and_then(Json::as_u64)
+                .with_context(|| format!("manifest missing {k}"))? as usize)
+        };
+        let file = |k: &str| -> Result<PathBuf> {
+            Ok(dir.join(
+                doc.get("artifacts")
+                    .and_then(|a| a.get(k))
+                    .and_then(|a| a.get("file"))
+                    .and_then(Json::as_str)
+                    .with_context(|| format!("manifest missing artifacts.{k}.file"))?,
+            ))
+        };
+        Ok(Manifest {
+            batch: u("batch")?,
+            num_ranges: u("num_ranges")?,
+            num_nodes: u("num_nodes")?,
+            dataplane_file: file("dataplane")?,
+            loadbalance_file: file("loadbalance")?,
+        })
+    }
+}
+
+/// A compiled artifact ready to execute on the PJRT CPU client.
+pub struct Artifact {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+}
+
+/// Shared PJRT client + the compiled artifacts.
+pub struct Runtime {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    pub dataplane: Artifact,
+    pub loadbalance: Artifact,
+}
+
+impl Runtime {
+    /// Construct the CPU PJRT client and compile both artifacts.
+    pub fn load(artifacts_dir: &str) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let compile = |path: &Path, name: &str| -> Result<Artifact> {
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?;
+            Ok(Artifact { exe, name: name.to_string() })
+        };
+        let dataplane = compile(&manifest.dataplane_file, "dataplane")?;
+        let loadbalance = compile(&manifest.loadbalance_file, "loadbalance")?;
+        Ok(Runtime { client, manifest, dataplane, loadbalance })
+    }
+}
+
+impl Artifact {
+    /// Execute with the given input literals; returns the flattened tuple
+    /// elements (aot.py lowers with `return_tuple=True`).
+    pub fn execute(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result.to_tuple()?)
+    }
+}
+
+/// Smoke check that the PJRT CPU client can be constructed.
+pub fn pjrt_smoke() -> Result<String> {
+    let client = xla::PjRtClient::cpu()?;
+    Ok(format!(
+        "platform={} devices={}",
+        client.platform_name(),
+        client.device_count()
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Artifacts are produced by `make artifacts`; tests that need them are
+    /// skipped (with a note) when the directory is absent so `cargo test`
+    /// works standalone.
+    pub fn artifacts_dir() -> Option<&'static str> {
+        if std::path::Path::new("artifacts/manifest.json").exists() {
+            Some("artifacts")
+        } else {
+            eprintln!("skipping: artifacts/ missing — run `make artifacts`");
+            None
+        }
+    }
+
+    #[test]
+    fn manifest_parses_paper_shapes() {
+        let Some(dir) = artifacts_dir() else { return };
+        let m = Manifest::load(dir).unwrap();
+        assert_eq!(m.batch, 256);
+        assert_eq!(m.num_ranges, 128);
+        assert_eq!(m.num_nodes, 16);
+        assert!(m.dataplane_file.exists());
+        assert!(m.loadbalance_file.exists());
+    }
+
+    #[test]
+    fn manifest_missing_dir_is_helpful_error() {
+        let err = Manifest::load("/nonexistent").unwrap_err();
+        assert!(format!("{err:#}").contains("make artifacts"));
+    }
+}

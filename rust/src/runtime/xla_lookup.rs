@@ -1,0 +1,261 @@
+//! XLA-backed dataplane engines: the Pallas `range_lookup` kernel as the
+//! switch's batched match-action stage, and the `load_matmul` kernel as the
+//! controller's load estimator — both executed via PJRT from compiled
+//! `artifacts/*.hlo.txt` (DESIGN.md §Hardware-Adaptation).
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::cluster::controller::LoadEstimator;
+use crate::switch::{DataplaneLookup, MatchActionTable, RegisterArrays, RustLookup};
+use crate::types::Key;
+
+use super::Runtime;
+
+const OP_READ: u32 = 0;
+const OP_WRITE: u32 = 1;
+const OP_PAD: u32 = 2;
+
+/// Batched dataplane lookup through the compiled `dataplane.hlo.txt`.
+///
+/// Matching uses 32-bit key prefixes, which is exact while all table
+/// boundaries stay `2^96`-aligned; if the table diverges from the compiled
+/// shape (record count != compiled N) or alignment breaks, the engine
+/// transparently falls back to the rust reference path and counts it.
+pub struct XlaLookup {
+    rt: Rc<Runtime>,
+    fallback: RustLookup,
+    pub batches: u64,
+    pub fallback_batches: u64,
+}
+
+impl XlaLookup {
+    pub fn new(rt: Rc<Runtime>) -> XlaLookup {
+        XlaLookup { rt, fallback: RustLookup, batches: 0, fallback_batches: 0 }
+    }
+
+    fn lookup_xla(
+        &mut self,
+        starts: &[u32],
+        regs: &mut RegisterArrays,
+        mvs: &[Key],
+        is_write: &[bool],
+    ) -> Result<Vec<usize>> {
+        let b = self.rt.manifest.batch;
+        let starts_lit = xla::Literal::vec1(starts);
+        let mut out = Vec::with_capacity(mvs.len());
+        for chunk_start in (0..mvs.len()).step_by(b) {
+            let chunk = &mvs[chunk_start..(chunk_start + b).min(mvs.len())];
+            let wchunk = &is_write[chunk_start..chunk_start + chunk.len()];
+            let mut keys = vec![0u32; b];
+            let mut ops = vec![OP_PAD; b];
+            for (i, (mv, &w)) in chunk.iter().zip(wchunk).enumerate() {
+                keys[i] = mv.prefix32();
+                ops[i] = if w { OP_WRITE } else { OP_READ };
+            }
+            let outputs = self.rt.dataplane.execute(&[
+                xla::Literal::vec1(&keys),
+                xla::Literal::vec1(&ops),
+                starts_lit.clone(),
+            ])?;
+            let idx: Vec<i32> = outputs[0].to_vec()?;
+            let read_hits: Vec<i32> = outputs[1].to_vec()?;
+            let write_hits: Vec<i32> = outputs[2].to_vec()?;
+            regs.add_deltas(&read_hits, &write_hits);
+            out.extend(idx[..chunk.len()].iter().map(|&i| i as usize));
+            self.batches += 1;
+        }
+        Ok(out)
+    }
+}
+
+impl DataplaneLookup for XlaLookup {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn lookup_batch(
+        &mut self,
+        table: &MatchActionTable,
+        regs: &mut RegisterArrays,
+        mvs: &[Key],
+        is_write: &[bool],
+    ) -> Vec<usize> {
+        let compiled_n = self.rt.manifest.num_ranges;
+        match table.starts_prefix32() {
+            Some(starts) if starts.len() == compiled_n => {
+                match self.lookup_xla(&starts, regs, mvs, is_write) {
+                    Ok(idxs) => idxs,
+                    Err(_) => {
+                        self.fallback_batches += 1;
+                        self.fallback.lookup_batch(table, regs, mvs, is_write)
+                    }
+                }
+            }
+            _ => {
+                self.fallback_batches += 1;
+                self.fallback.lookup_batch(table, regs, mvs, is_write)
+            }
+        }
+    }
+}
+
+/// Controller load estimation through the compiled `loadbalance.hlo.txt`.
+pub struct XlaEstimator {
+    rt: Rc<Runtime>,
+    pub calls: u64,
+    pub fallback_calls: u64,
+}
+
+impl XlaEstimator {
+    pub fn new(rt: Rc<Runtime>) -> XlaEstimator {
+        XlaEstimator { rt, calls: 0, fallback_calls: 0 }
+    }
+
+    fn estimate_xla(
+        &mut self,
+        read: &[f32],
+        write: &[f32],
+        tail: &[f32],
+        member: &[f32],
+        write_cost: f32,
+    ) -> Result<Vec<f32>> {
+        let n = self.rt.manifest.num_ranges as i64;
+        let s = self.rt.manifest.num_nodes as i64;
+        let outputs = self.rt.loadbalance.execute(&[
+            xla::Literal::vec1(read),
+            xla::Literal::vec1(write),
+            xla::Literal::vec1(tail).reshape(&[n, s])?,
+            xla::Literal::vec1(member).reshape(&[n, s])?,
+            xla::Literal::from(write_cost),
+        ])?;
+        self.calls += 1;
+        Ok(outputs[0].to_vec()?)
+    }
+}
+
+impl LoadEstimator for XlaEstimator {
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+
+    fn estimate(
+        &mut self,
+        read: &[f32],
+        write: &[f32],
+        tail: &[f32],
+        member: &[f32],
+        num_nodes: usize,
+        write_cost: f32,
+    ) -> Vec<f32> {
+        let m = &self.rt.manifest;
+        if read.len() == m.num_ranges && num_nodes == m.num_nodes {
+            if let Ok(loads) = self.estimate_xla(read, write, tail, member, write_cost) {
+                return loads;
+            }
+        }
+        self.fallback_calls += 1;
+        crate::cluster::controller::RustEstimator.estimate(
+            read, write, tail, member, num_nodes, write_cost,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::controller::RustEstimator;
+    use crate::partition::Directory;
+    use crate::util::rng::Rng;
+
+    fn runtime() -> Option<Rc<Runtime>> {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            eprintln!("skipping: artifacts/ missing — run `make artifacts`");
+            return None;
+        }
+        Some(Rc::new(Runtime::load("artifacts").unwrap()))
+    }
+
+    fn installed_table(dir: &Directory) -> (MatchActionTable, RegisterArrays) {
+        let mut t = MatchActionTable::new();
+        t.install_from_directory(dir);
+        let mut regs = RegisterArrays::new();
+        regs.resize_counters(t.len());
+        (t, regs)
+    }
+
+    /// The pinning test: XLA dataplane == rust reference, bit for bit, on
+    /// random batches over the paper's table shape.
+    #[test]
+    fn xla_lookup_matches_rust_reference() {
+        let Some(rt) = runtime() else { return };
+        let dir = Directory::initial(128, 16, 3);
+        let (table, mut regs_xla) = installed_table(&dir);
+        let (_, mut regs_rust) = installed_table(&dir);
+        let mut xla_engine = XlaLookup::new(rt);
+        let mut rust_engine = RustLookup;
+
+        let mut rng = Rng::new(0xBA7C4);
+        for round in 0..4 {
+            let n = [1usize, 17, 256, 700][round];
+            let mvs: Vec<Key> = (0..n).map(|_| Key(rng.next_u128())).collect();
+            let is_write: Vec<bool> = (0..n).map(|_| rng.chance(0.3)).collect();
+            let got = xla_engine.lookup_batch(&table, &mut regs_xla, &mvs, &is_write);
+            let want = rust_engine.lookup_batch(&table, &mut regs_rust, &mvs, &is_write);
+            assert_eq!(got, want, "round {round}");
+        }
+        assert_eq!(regs_xla.counters(), regs_rust.counters());
+        assert_eq!(xla_engine.fallback_batches, 0);
+        assert!(xla_engine.batches >= 4);
+    }
+
+    #[test]
+    fn xla_lookup_falls_back_on_misaligned_table() {
+        let Some(rt) = runtime() else { return };
+        let dir = Directory::initial(128, 16, 3);
+        let (mut table, mut regs) = installed_table(&dir);
+        // Misaligned split: prefix export fails, engine must fall back —
+        // also changes the record count, either reason suffices.
+        let (s, e) = table.bounds(0);
+        table.split(0, Key(s.0 + (e.0 - s.0) / 3 + 1), vec![1, 2]);
+        regs.insert_counter_slot(1);
+        let mut engine = XlaLookup::new(rt);
+        let mvs = vec![Key(0), Key(u128::MAX)];
+        let idxs = engine.lookup_batch(&table, &mut regs, &mvs, &[false, false]);
+        assert_eq!(idxs, vec![0, table.len() - 1]);
+        assert_eq!(engine.fallback_batches, 1);
+    }
+
+    #[test]
+    fn xla_estimator_matches_rust_reference() {
+        let Some(rt) = runtime() else { return };
+        let dir = Directory::initial(128, 16, 3);
+        let (tail, member) = dir.onehot(16);
+        let mut rng = Rng::new(77);
+        let read: Vec<f32> = (0..128).map(|_| rng.gen_range(1000) as f32).collect();
+        let write: Vec<f32> = (0..128).map(|_| rng.gen_range(500) as f32).collect();
+        let mut xla_est = XlaEstimator::new(rt);
+        let got = xla_est.estimate(&read, &write, &tail, &member, 16, 3.0);
+        let want = RustEstimator.estimate(&read, &write, &tail, &member, 16, 3.0);
+        assert_eq!(got.len(), 16);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() <= 1e-2 * w.abs().max(1.0), "{g} vs {w}");
+        }
+        assert_eq!(xla_est.fallback_calls, 0);
+    }
+
+    #[test]
+    fn xla_estimator_falls_back_on_shape_mismatch() {
+        let Some(rt) = runtime() else { return };
+        let mut est = XlaEstimator::new(rt);
+        // 8 ranges != compiled 128: must fall back, still correct.
+        let read = vec![1.0f32; 8];
+        let write = vec![0.0f32; 8];
+        let tail = vec![1.0f32; 8 * 4];
+        let member = vec![1.0f32; 8 * 4];
+        let got = est.estimate(&read, &write, &tail, &member, 4, 2.0);
+        assert_eq!(got, vec![8.0f32; 4]);
+        assert_eq!(est.fallback_calls, 1);
+    }
+}

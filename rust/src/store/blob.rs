@@ -1,0 +1,183 @@
+//! Storage-node "filesystem": named immutable blobs with CRC-checked
+//! encoding helpers.
+//!
+//! Sixteen simulated storage nodes live in one process, so the WAL and SSTs
+//! are kept in an in-memory blob store with the same interface a disk
+//! implementation would have (create/read/delete/list + fsync-point
+//! semantics: blobs are immutable once sealed). The byte formats are real —
+//! varint framing and CRC32 checksums — so recovery and corruption tests
+//! are meaningful.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// CRC-32 (IEEE 802.3, reflected), table-driven.
+pub fn crc32(data: &[u8]) -> u32 {
+    const POLY: u32 = 0xEDB8_8320;
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, entry) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { POLY ^ (c >> 1) } else { c >> 1 };
+            }
+            *entry = c;
+        }
+        t
+    });
+    let mut crc = 0xFFFF_FFFFu32;
+    for &b in data {
+        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    !crc
+}
+
+/// LEB128-style varint.
+pub fn put_uvarint(out: &mut Vec<u8>, mut v: u64) {
+    while v >= 0x80 {
+        out.push((v as u8) | 0x80);
+        v >>= 7;
+    }
+    out.push(v as u8);
+}
+
+pub fn get_uvarint(data: &[u8], pos: &mut usize) -> Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        if *pos >= data.len() {
+            bail!("truncated varint");
+        }
+        let b = data[*pos];
+        *pos += 1;
+        if shift >= 63 && b > 1 {
+            bail!("varint overflow");
+        }
+        v |= ((b & 0x7F) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+pub fn put_bytes(out: &mut Vec<u8>, data: &[u8]) {
+    put_uvarint(out, data.len() as u64);
+    out.extend_from_slice(data);
+}
+
+pub fn get_bytes<'a>(data: &'a [u8], pos: &mut usize) -> Result<&'a [u8]> {
+    let len = get_uvarint(data, pos)? as usize;
+    if *pos + len > data.len() {
+        bail!("truncated byte string: want {len}");
+    }
+    let s = &data[*pos..*pos + len];
+    *pos += len;
+    Ok(s)
+}
+
+/// In-memory blob store standing in for a storage node's local disk.
+#[derive(Debug, Default, Clone)]
+pub struct BlobStore {
+    blobs: BTreeMap<String, Vec<u8>>,
+}
+
+impl BlobStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn put(&mut self, name: &str, data: Vec<u8>) {
+        self.blobs.insert(name.to_string(), data);
+    }
+
+    /// Append to a blob (creating it if absent) — the WAL's fsync-append
+    /// path; avoids rewriting the whole log on every record.
+    pub fn append(&mut self, name: &str, data: &[u8]) {
+        self.blobs.entry(name.to_string()).or_default().extend_from_slice(data);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&[u8]> {
+        self.blobs.get(name).map(|v| v.as_slice())
+    }
+
+    pub fn delete(&mut self, name: &str) -> bool {
+        self.blobs.remove(name).is_some()
+    }
+
+    pub fn list(&self, prefix: &str) -> Vec<String> {
+        self.blobs
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .cloned()
+            .collect()
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.blobs.values().map(|v| v.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crc32_known_vectors() {
+        // Standard check value for "123456789".
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_ne!(crc32(b"a"), crc32(b"b"));
+    }
+
+    #[test]
+    fn varint_roundtrip() {
+        let cases = [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX];
+        for &v in &cases {
+            let mut buf = Vec::new();
+            put_uvarint(&mut buf, v);
+            let mut pos = 0;
+            assert_eq!(get_uvarint(&buf, &mut pos).unwrap(), v);
+            assert_eq!(pos, buf.len());
+        }
+    }
+
+    #[test]
+    fn varint_rejects_truncation_and_overflow() {
+        let mut buf = Vec::new();
+        put_uvarint(&mut buf, u64::MAX);
+        assert!(get_uvarint(&buf[..buf.len() - 1], &mut 0).is_err());
+        let bad = [0xFFu8; 11];
+        assert!(get_uvarint(&bad, &mut 0).is_err());
+    }
+
+    #[test]
+    fn bytes_roundtrip() {
+        let mut buf = Vec::new();
+        put_bytes(&mut buf, b"hello");
+        put_bytes(&mut buf, b"");
+        put_bytes(&mut buf, &[0xAB; 200]);
+        let mut pos = 0;
+        assert_eq!(get_bytes(&buf, &mut pos).unwrap(), b"hello");
+        assert_eq!(get_bytes(&buf, &mut pos).unwrap(), b"");
+        assert_eq!(get_bytes(&buf, &mut pos).unwrap(), &[0xAB; 200]);
+        assert_eq!(pos, buf.len());
+        assert!(get_bytes(&buf, &mut pos).is_err());
+    }
+
+    #[test]
+    fn blobstore_crud_and_listing() {
+        let mut fs = BlobStore::new();
+        fs.put("wal/000001", vec![1, 2, 3]);
+        fs.put("sst/000002", vec![4; 10]);
+        fs.put("sst/000003", vec![5; 20]);
+        assert_eq!(fs.get("wal/000001"), Some(&[1u8, 2, 3][..]));
+        assert_eq!(fs.list("sst/"), vec!["sst/000002", "sst/000003"]);
+        assert_eq!(fs.total_bytes(), 33);
+        assert!(fs.delete("sst/000002"));
+        assert!(!fs.delete("sst/000002"));
+        assert_eq!(fs.list("sst/").len(), 1);
+    }
+}

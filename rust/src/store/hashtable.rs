@@ -1,0 +1,265 @@
+//! Hash-partitioning storage engine: an open hash table whose collisions
+//! are "handled using separate chaining in the form of binary search tree"
+//! (paper §4.1.1). No ordered scans — hash partitioning cannot serve range
+//! queries, which the engine surfaces by simply not implementing them.
+
+use crate::types::{Key, Value};
+
+/// Unbalanced BST node for one bucket's chain. Workloads hash keys before
+/// insertion so chains are short and effectively randomly ordered.
+struct BstNode {
+    key: Key,
+    value: Value,
+    left: Option<Box<BstNode>>,
+    right: Option<Box<BstNode>>,
+}
+
+impl BstNode {
+    fn get(&self, key: Key) -> Option<&Value> {
+        match key.cmp(&self.key) {
+            std::cmp::Ordering::Equal => Some(&self.value),
+            std::cmp::Ordering::Less => self.left.as_ref()?.get(key),
+            std::cmp::Ordering::Greater => self.right.as_ref()?.get(key),
+        }
+    }
+
+    fn insert(node: &mut Option<Box<BstNode>>, key: Key, value: Value) -> bool {
+        match node {
+            None => {
+                *node = Some(Box::new(BstNode { key, value, left: None, right: None }));
+                true
+            }
+            Some(n) => match key.cmp(&n.key) {
+                std::cmp::Ordering::Equal => {
+                    n.value = value;
+                    false
+                }
+                std::cmp::Ordering::Less => BstNode::insert(&mut n.left, key, value),
+                std::cmp::Ordering::Greater => BstNode::insert(&mut n.right, key, value),
+            },
+        }
+    }
+
+    /// Remove `key`; returns (new_subtree, removed).
+    fn remove(node: Option<Box<BstNode>>, key: Key) -> (Option<Box<BstNode>>, bool) {
+        let Some(mut n) = node else { return (None, false) };
+        match key.cmp(&n.key) {
+            std::cmp::Ordering::Less => {
+                let (sub, removed) = BstNode::remove(n.left.take(), key);
+                n.left = sub;
+                (Some(n), removed)
+            }
+            std::cmp::Ordering::Greater => {
+                let (sub, removed) = BstNode::remove(n.right.take(), key);
+                n.right = sub;
+                (Some(n), removed)
+            }
+            std::cmp::Ordering::Equal => match (n.left.take(), n.right.take()) {
+                (None, None) => (None, true),
+                (Some(l), None) => (Some(l), true),
+                (None, Some(r)) => (Some(r), true),
+                (Some(l), Some(r)) => {
+                    // Replace with the in-order successor (min of right).
+                    let (r, succ) = BstNode::pop_min(r);
+                    let mut replacement = succ;
+                    replacement.left = Some(l);
+                    replacement.right = r;
+                    (Some(replacement), true)
+                }
+            },
+        }
+    }
+
+    fn pop_min(mut node: Box<BstNode>) -> (Option<Box<BstNode>>, Box<BstNode>) {
+        if let Some(left) = node.left.take() {
+            let (sub, min) = BstNode::pop_min(left);
+            node.left = sub;
+            (Some(node), min)
+        } else {
+            let right = node.right.take();
+            (right, node)
+        }
+    }
+
+    fn for_each(&self, f: &mut impl FnMut(Key, &Value)) {
+        if let Some(l) = &self.left {
+            l.for_each(f);
+        }
+        f(self.key, &self.value);
+        if let Some(r) = &self.right {
+            r.for_each(f);
+        }
+    }
+}
+
+/// Fixed-bucket hash table with BST chains.
+pub struct HashTable {
+    buckets: Vec<Option<Box<BstNode>>>,
+    len: usize,
+}
+
+impl HashTable {
+    pub fn new(buckets: usize) -> Self {
+        assert!(buckets > 0);
+        HashTable { buckets: (0..buckets).map(|_| None).collect(), len: 0 }
+    }
+
+    fn bucket_of(&self, key: Key) -> usize {
+        // Multiplicative hash of the low 64 bits, folded with the high.
+        let h = (key.0 as u64 ^ (key.0 >> 64) as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        (h % self.buckets.len() as u64) as usize
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn put(&mut self, key: Key, value: Value) {
+        let b = self.bucket_of(key);
+        if BstNode::insert(&mut self.buckets[b], key, value) {
+            self.len += 1;
+        }
+    }
+
+    pub fn get(&self, key: Key) -> Option<&Value> {
+        let b = self.bucket_of(key);
+        self.buckets[b].as_ref()?.get(key)
+    }
+
+    pub fn del(&mut self, key: Key) -> bool {
+        let b = self.bucket_of(key);
+        let (sub, removed) = BstNode::remove(self.buckets[b].take(), key);
+        self.buckets[b] = sub;
+        if removed {
+            self.len -= 1;
+        }
+        removed
+    }
+
+    pub fn for_each(&self, mut f: impl FnMut(Key, &Value)) {
+        for bucket in self.buckets.iter().flatten() {
+            bucket.for_each(&mut f);
+        }
+    }
+
+    /// Longest chain length (for the uniformity test).
+    pub fn max_chain(&self) -> usize {
+        fn depth_count(n: &BstNode) -> usize {
+            1 + n.left.as_deref().map(depth_count).unwrap_or(0)
+                + n.right.as_deref().map(depth_count).unwrap_or(0)
+        }
+        self.buckets
+            .iter()
+            .flatten()
+            .map(|b| depth_count(b))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall, FnStrategy};
+    use crate::util::rng::Rng;
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn put_get_del_overwrite() {
+        let mut h = HashTable::new(16);
+        h.put(Key(1), b"a".to_vec());
+        h.put(Key(2), b"b".to_vec());
+        assert_eq!(h.get(Key(1)), Some(&b"a".to_vec()));
+        h.put(Key(1), b"a2".to_vec());
+        assert_eq!(h.get(Key(1)), Some(&b"a2".to_vec()));
+        assert_eq!(h.len(), 2);
+        assert!(h.del(Key(1)));
+        assert!(!h.del(Key(1)));
+        assert_eq!(h.get(Key(1)), None);
+        assert_eq!(h.len(), 1);
+    }
+
+    #[test]
+    fn collisions_chain_in_bst() {
+        // One bucket forces every key into the same BST chain.
+        let mut h = HashTable::new(1);
+        for i in 0..100u128 {
+            h.put(Key(i), vec![i as u8]);
+        }
+        assert_eq!(h.len(), 100);
+        assert_eq!(h.max_chain(), 100);
+        for i in 0..100u128 {
+            assert_eq!(h.get(Key(i)), Some(&vec![i as u8]));
+        }
+        // Delete interior nodes (exercises two-child removal).
+        for i in (0..100u128).step_by(3) {
+            assert!(h.del(Key(i)));
+        }
+        for i in 0..100u128 {
+            let want = if i % 3 == 0 { None } else { Some(vec![i as u8]) };
+            assert_eq!(h.get(Key(i)).cloned(), want, "key {i}");
+        }
+    }
+
+    #[test]
+    fn for_each_visits_everything_once() {
+        let mut h = HashTable::new(8);
+        for i in 0..50u128 {
+            h.put(Key(i), vec![1]);
+        }
+        let mut seen = Vec::new();
+        h.for_each(|k, _| seen.push(k.0));
+        seen.sort_unstable();
+        assert_eq!(seen, (0..50).collect::<Vec<u128>>());
+    }
+
+    #[test]
+    fn buckets_reasonably_uniform() {
+        let mut h = HashTable::new(64);
+        for i in 0..6_400u128 {
+            h.put(Key(i), vec![]);
+        }
+        // With 100 per bucket expected, max BST chain should be modest.
+        assert!(h.max_chain() < 200, "max_chain={}", h.max_chain());
+    }
+
+    #[test]
+    fn prop_matches_btreemap_model() {
+        let strat = FnStrategy(|rng: &mut Rng| {
+            let n = rng.gen_range(300) as usize;
+            (0..n)
+                .map(|_| (rng.gen_range(40) as u128, rng.gen_range(4)))
+                .collect::<Vec<_>>()
+        });
+        forall("hashtable-vs-btreemap", 0x4A54, 64, &strat, |ops| {
+            let mut h = HashTable::new(4); // few buckets: deep chains
+            let mut model: BTreeMap<u128, Value> = BTreeMap::new();
+            for &(key, action) in ops {
+                if action < 3 {
+                    let v = vec![action as u8];
+                    h.put(Key(key), v.clone());
+                    model.insert(key, v);
+                } else {
+                    let removed = h.del(Key(key));
+                    let model_removed = model.remove(&key).is_some();
+                    if removed != model_removed {
+                        return Err(format!("del({key}) mismatch"));
+                    }
+                }
+            }
+            if h.len() != model.len() {
+                return Err(format!("len {} vs {}", h.len(), model.len()));
+            }
+            for (&k, v) in &model {
+                if h.get(Key(k)) != Some(v) {
+                    return Err(format!("key {k} mismatch"));
+                }
+            }
+            Ok(())
+        });
+    }
+}

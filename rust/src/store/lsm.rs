@@ -1,0 +1,498 @@
+//! The LSM-tree storage engine (the paper's per-node LevelDB).
+//!
+//! Components: a skiplist memtable in front of a WAL, L0 (overlapping
+//! tables, newest first) and two leveled runs L1/L2 (sorted,
+//! non-overlapping). Mutations append to the WAL then the memtable; when
+//! the memtable exceeds its budget it flushes to a new L0 table; when L0
+//! grows past its trigger all of L0+L1 merge into a new L1 run; when L1
+//! exceeds its byte budget it merges into L2 (the bottom level, where
+//! tombstones are dropped). A manifest blob records the live file set so
+//! the engine recovers from `BlobStore` contents alone (WAL tail replay
+//! included).
+
+use anyhow::{Context, Result};
+
+use super::blob::{get_uvarint, put_uvarint, BlobStore};
+use super::skiplist::SkipList;
+use super::sst::{merge_entries, Entry, Sst};
+use super::wal::{replay, WalRecord, WalWriter};
+use crate::types::{Key, Value};
+
+/// Engine tuning knobs.
+#[derive(Clone, Debug)]
+pub struct LsmOptions {
+    /// Flush the memtable once it holds roughly this many bytes.
+    pub memtable_bytes: usize,
+    /// Compact L0 into L1 when it has this many tables.
+    pub l0_trigger: usize,
+    /// Merge L1 into L2 when its data exceeds this many bytes.
+    pub l1_bytes: usize,
+    pub seed: u64,
+}
+
+impl Default for LsmOptions {
+    fn default() -> Self {
+        LsmOptions {
+            memtable_bytes: 256 << 10,
+            l0_trigger: 4,
+            l1_bytes: 4 << 20,
+            seed: 0x15A,
+        }
+    }
+}
+
+/// Counters for observability and the store microbench.
+#[derive(Clone, Debug, Default)]
+pub struct LsmStats {
+    pub puts: u64,
+    pub dels: u64,
+    pub gets: u64,
+    pub scans: u64,
+    pub flushes: u64,
+    pub compactions: u64,
+}
+
+pub struct Lsm {
+    opts: LsmOptions,
+    fs: BlobStore,
+    mem: SkipList,
+    wal: WalWriter,
+    l0: Vec<Sst>, // newest first
+    l1: Vec<Sst>, // single run, kept as one table
+    l2: Vec<Sst>, // single run (bottom)
+    next_file: u64,
+    next_seqno: u64,
+    /// Bytes of the WAL already persisted to the blob store.
+    wal_synced: usize,
+    pub stats: LsmStats,
+}
+
+const MANIFEST: &str = "MANIFEST";
+const WAL_BLOB: &str = "wal/current";
+
+impl Lsm {
+    pub fn new(opts: LsmOptions) -> Lsm {
+        let seed = opts.seed;
+        Lsm {
+            opts,
+            fs: BlobStore::new(),
+            mem: SkipList::new(seed),
+            wal: WalWriter::new(),
+            l0: Vec::new(),
+            l1: Vec::new(),
+            l2: Vec::new(),
+            next_file: 1,
+            next_seqno: 1,
+            wal_synced: 0,
+            stats: LsmStats::default(),
+        }
+    }
+
+    /// Recover an engine from a previously persisted blob store.
+    pub fn recover(opts: LsmOptions, fs: BlobStore) -> Result<Lsm> {
+        let mut lsm = Lsm::new(opts);
+        if let Some(m) = fs.get(MANIFEST) {
+            let mut pos = 0usize;
+            lsm.next_file = get_uvarint(m, &mut pos)?;
+            lsm.next_seqno = get_uvarint(m, &mut pos)?;
+            for level in [&mut lsm.l0, &mut lsm.l1, &mut lsm.l2] {
+                let count = get_uvarint(m, &mut pos)? as usize;
+                for _ in 0..count {
+                    let file_no = get_uvarint(m, &mut pos)?;
+                    let name = sst_name(file_no);
+                    let data = fs
+                        .get(&name)
+                        .with_context(|| format!("manifest references missing {name}"))?;
+                    level.push(Sst::decode(file_no, data)?);
+                }
+            }
+        }
+        // Replay WAL tail into the memtable.
+        if let Some(wal_bytes) = fs.get(WAL_BLOB) {
+            for rec in replay(wal_bytes)? {
+                lsm.next_seqno = lsm.next_seqno.max(rec.seqno + 1);
+                lsm.mem.insert(rec.key, rec.seqno, rec.value.clone());
+                lsm.wal.append(&rec);
+            }
+        }
+        lsm.fs = fs;
+        Ok(lsm)
+    }
+
+    /// Hand the blob store over (e.g., to simulate a crash + recovery).
+    pub fn into_fs(mut self) -> BlobStore {
+        self.persist_wal();
+        self.fs
+    }
+
+    /// Persist the WAL's unsynced suffix (append-only, like a real fsync
+    /// after `write()` — rewriting the whole log per record was the top
+    /// profile entry, see EXPERIMENTS.md §Perf).
+    fn persist_wal(&mut self) {
+        let bytes = self.wal.bytes();
+        if self.wal_synced > bytes.len() {
+            // Log was rotated (flush): rewrite.
+            self.fs.put(WAL_BLOB, bytes.to_vec());
+        } else {
+            let bytes = bytes[self.wal_synced..].to_vec();
+            self.fs.append(WAL_BLOB, &bytes);
+        }
+        self.wal_synced = self.wal.bytes().len();
+    }
+
+    /// Reset the persisted WAL after a memtable flush.
+    fn persist_wal_rotate(&mut self) {
+        self.fs.put(WAL_BLOB, self.wal.bytes().to_vec());
+        self.wal_synced = self.wal.bytes().len();
+    }
+
+    fn write_manifest(&mut self) {
+        let mut m = Vec::new();
+        put_uvarint(&mut m, self.next_file);
+        put_uvarint(&mut m, self.next_seqno);
+        for level in [&self.l0, &self.l1, &self.l2] {
+            put_uvarint(&mut m, level.len() as u64);
+            for sst in level.iter() {
+                put_uvarint(&mut m, sst.file_no);
+            }
+        }
+        self.fs.put(MANIFEST, m);
+    }
+
+    pub fn put(&mut self, key: Key, value: Value) {
+        self.stats.puts += 1;
+        self.write(key, Some(value));
+    }
+
+    pub fn del(&mut self, key: Key) {
+        self.stats.dels += 1;
+        self.write(key, None);
+    }
+
+    fn write(&mut self, key: Key, value: Option<Value>) {
+        let seqno = self.next_seqno;
+        self.next_seqno += 1;
+        self.wal.append(&WalRecord { seqno, key, value: value.clone() });
+        self.persist_wal();
+        self.mem.insert(key, seqno, value);
+        if self.mem.approx_bytes() >= self.opts.memtable_bytes {
+            self.flush();
+        }
+    }
+
+    pub fn get(&mut self, key: Key) -> Option<Value> {
+        self.stats.gets += 1;
+        if let Some((_, v)) = self.mem.get(key) {
+            return v.cloned();
+        }
+        for sst in &self.l0 {
+            if sst.covers(key) {
+                if let Some(e) = sst.get(key) {
+                    return e.value.clone();
+                }
+            }
+        }
+        for level in [&self.l1, &self.l2] {
+            for sst in level {
+                if sst.covers(key) {
+                    if let Some(e) = sst.get(key) {
+                        return e.value.clone();
+                    }
+                }
+            }
+        }
+        None
+    }
+
+    /// All live pairs with `key in [start, end]`, sorted by key.
+    pub fn scan(&mut self, start: Key, end: Key) -> Vec<(Key, Value)> {
+        self.stats.scans += 1;
+        // Streams ordered newest→oldest: memtable, L0 (already newest
+        // first), L1, L2. merge_entries resolves shadowing.
+        let mut streams: Vec<Vec<Entry>> = Vec::with_capacity(3 + self.l0.len());
+        streams.push(
+            self.mem
+                .range(start, end)
+                .map(|(key, seqno, value)| Entry { key, seqno, value: value.cloned() })
+                .collect(),
+        );
+        for sst in &self.l0 {
+            streams.push(sst.range(start, end).to_vec());
+        }
+        for level in [&self.l1, &self.l2] {
+            for sst in level {
+                streams.push(sst.range(start, end).to_vec());
+            }
+        }
+        merge_entries(streams, true)
+            .into_iter()
+            .filter_map(|e| e.value.map(|v| (e.key, v)))
+            .collect()
+    }
+
+    /// Force a memtable flush (also called on migration extract).
+    pub fn flush(&mut self) {
+        if self.mem.is_empty() {
+            return;
+        }
+        let entries: Vec<Entry> = self
+            .mem
+            .iter()
+            .map(|(key, seqno, value)| Entry { key, seqno, value: value.cloned() })
+            .collect();
+        let file_no = self.next_file;
+        self.next_file += 1;
+        let sst = Sst::build(file_no, entries);
+        self.fs.put(&sst_name(file_no), sst.encode());
+        self.l0.insert(0, sst);
+        self.mem = SkipList::new(self.opts.seed ^ file_no);
+        self.wal.take();
+        self.persist_wal_rotate();
+        self.stats.flushes += 1;
+        self.write_manifest();
+        if self.l0.len() >= self.opts.l0_trigger {
+            self.compact_l0();
+        }
+    }
+
+    fn compact_l0(&mut self) {
+        self.stats.compactions += 1;
+        let mut streams: Vec<Vec<Entry>> = Vec::new();
+        for sst in self.l0.drain(..) {
+            self.fs.delete(&sst_name(sst.file_no));
+            streams.push(sst.iter().cloned().collect());
+        }
+        for sst in self.l1.drain(..) {
+            self.fs.delete(&sst_name(sst.file_no));
+            streams.push(sst.iter().cloned().collect());
+        }
+        // Tombstones survive into L1 (they may shadow L2 entries).
+        let merged = merge_entries(streams, false);
+        if !merged.is_empty() {
+            let file_no = self.next_file;
+            self.next_file += 1;
+            let sst = Sst::build(file_no, merged);
+            self.fs.put(&sst_name(file_no), sst.encode());
+            self.l1.push(sst);
+        }
+        self.write_manifest();
+        let l1_bytes: usize = self.l1.iter().map(|s| s.data_bytes()).sum();
+        if l1_bytes > self.opts.l1_bytes {
+            self.compact_l1();
+        }
+    }
+
+    fn compact_l1(&mut self) {
+        self.stats.compactions += 1;
+        let mut streams: Vec<Vec<Entry>> = Vec::new();
+        for sst in self.l1.drain(..) {
+            self.fs.delete(&sst_name(sst.file_no));
+            streams.push(sst.iter().cloned().collect());
+        }
+        for sst in self.l2.drain(..) {
+            self.fs.delete(&sst_name(sst.file_no));
+            streams.push(sst.iter().cloned().collect());
+        }
+        // Bottom level: tombstones can finally be dropped.
+        let merged = merge_entries(streams, true);
+        if !merged.is_empty() {
+            let file_no = self.next_file;
+            self.next_file += 1;
+            let sst = Sst::build(file_no, merged);
+            self.fs.put(&sst_name(file_no), sst.encode());
+            self.l2.push(sst);
+        }
+        self.write_manifest();
+    }
+
+    /// Number of live SST files per level (for tests/observability).
+    pub fn level_files(&self) -> [usize; 3] {
+        [self.l0.len(), self.l1.len(), self.l2.len()]
+    }
+
+    /// Total stored bytes across all levels.
+    pub fn table_bytes(&self) -> usize {
+        self.l0
+            .iter()
+            .chain(&self.l1)
+            .chain(&self.l2)
+            .map(|s| s.data_bytes())
+            .sum()
+    }
+}
+
+fn sst_name(file_no: u64) -> String {
+    format!("sst/{file_no:08}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall, FnStrategy};
+    use crate::util::rng::Rng;
+    use std::collections::BTreeMap;
+
+    fn small_opts() -> LsmOptions {
+        LsmOptions { memtable_bytes: 2_000, l0_trigger: 3, l1_bytes: 8_000, seed: 1 }
+    }
+
+    #[test]
+    fn put_get_del() {
+        let mut db = Lsm::new(LsmOptions::default());
+        db.put(Key(1), b"one".to_vec());
+        db.put(Key(2), b"two".to_vec());
+        assert_eq!(db.get(Key(1)), Some(b"one".to_vec()));
+        db.del(Key(1));
+        assert_eq!(db.get(Key(1)), None);
+        assert_eq!(db.get(Key(2)), Some(b"two".to_vec()));
+        assert_eq!(db.get(Key(3)), None);
+    }
+
+    #[test]
+    fn survives_flushes_and_compactions() {
+        let mut db = Lsm::new(small_opts());
+        let n = 500u128;
+        for i in 0..n {
+            db.put(Key(i), format!("value-{i}").into_bytes());
+        }
+        assert!(db.stats.flushes > 0, "flushes: {:?}", db.stats);
+        assert!(db.stats.compactions > 0);
+        for i in 0..n {
+            assert_eq!(db.get(Key(i)), Some(format!("value-{i}").into_bytes()), "key {i}");
+        }
+    }
+
+    #[test]
+    fn overwrites_visible_after_compaction() {
+        let mut db = Lsm::new(small_opts());
+        for round in 0..5u64 {
+            for i in 0..100u128 {
+                db.put(Key(i), format!("r{round}-{i}").into_bytes());
+            }
+        }
+        db.flush();
+        for i in 0..100u128 {
+            assert_eq!(db.get(Key(i)), Some(format!("r4-{i}").into_bytes()));
+        }
+    }
+
+    #[test]
+    fn tombstones_shadow_older_levels() {
+        let mut db = Lsm::new(small_opts());
+        for i in 0..200u128 {
+            db.put(Key(i), vec![1u8; 20]);
+        }
+        db.flush();
+        for i in 0..200u128 {
+            if i % 2 == 0 {
+                db.del(Key(i));
+            }
+        }
+        db.flush();
+        for i in 0..200u128 {
+            let want = if i % 2 == 0 { None } else { Some(vec![1u8; 20]) };
+            assert_eq!(db.get(Key(i)), want, "key {i}");
+        }
+        let scanned = db.scan(Key(0), Key(199));
+        assert_eq!(scanned.len(), 100);
+    }
+
+    #[test]
+    fn scan_merges_all_sources_sorted() {
+        let mut db = Lsm::new(small_opts());
+        // Interleave writes so data spans memtable + L0 + L1.
+        for i in (0..300u128).step_by(3) {
+            db.put(Key(i), b"a".to_vec());
+        }
+        db.flush();
+        for i in (1..300u128).step_by(3) {
+            db.put(Key(i), b"b".to_vec());
+        }
+        db.flush();
+        for i in (2..300u128).step_by(3) {
+            db.put(Key(i), b"c".to_vec());
+        }
+        let got = db.scan(Key(0), Key(299));
+        assert_eq!(got.len(), 300);
+        for w in got.windows(2) {
+            assert!(w[0].0 < w[1].0);
+        }
+        let sub = db.scan(Key(10), Key(19));
+        assert_eq!(sub.len(), 10);
+    }
+
+    #[test]
+    fn recovery_from_wal_and_manifest() {
+        let mut db = Lsm::new(small_opts());
+        for i in 0..150u128 {
+            db.put(Key(i), format!("v{i}").into_bytes());
+        }
+        db.del(Key(0));
+        // Unflushed tail lives only in WAL; simulate crash + recover.
+        let fs = db.into_fs();
+        let mut db2 = Lsm::recover(small_opts(), fs).unwrap();
+        assert_eq!(db2.get(Key(0)), None);
+        for i in 1..150u128 {
+            assert_eq!(db2.get(Key(i)), Some(format!("v{i}").into_bytes()), "key {i}");
+        }
+        // Writes continue with monotone seqnos after recovery.
+        db2.put(Key(1), b"post-recovery".to_vec());
+        assert_eq!(db2.get(Key(1)), Some(b"post-recovery".to_vec()));
+    }
+
+    #[test]
+    fn prop_lsm_matches_btreemap_model() {
+        let strat = FnStrategy(|rng: &mut Rng| {
+            let n = rng.gen_range(300) as usize;
+            (0..n)
+                .map(|_| {
+                    let key = rng.gen_range(60) as u128;
+                    let action = rng.gen_range(10);
+                    (key, action)
+                })
+                .collect::<Vec<_>>()
+        });
+        forall("lsm-vs-btreemap", 0xDB, 48, &strat, |ops| {
+            let mut db = Lsm::new(small_opts());
+            let mut model: BTreeMap<u128, Value> = BTreeMap::new();
+            for &(key, action) in ops {
+                if action < 7 {
+                    let v = vec![action as u8; 10];
+                    db.put(Key(key), v.clone());
+                    model.insert(key, v);
+                } else {
+                    db.del(Key(key));
+                    model.remove(&key);
+                }
+            }
+            for key in 0..60u128 {
+                let got = db.get(Key(key));
+                let want = model.get(&key).cloned();
+                if got != want {
+                    return Err(format!("key {key}: got {got:?} want {want:?}"));
+                }
+            }
+            let scan = db.scan(Key(0), Key(u128::MAX));
+            let model_pairs: Vec<(Key, Value)> =
+                model.iter().map(|(&k, v)| (Key(k), v.clone())).collect();
+            if scan != model_pairs {
+                return Err(format!("scan mismatch: {} vs {} pairs", scan.len(), model_pairs.len()));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn stats_count_operations() {
+        let mut db = Lsm::new(LsmOptions::default());
+        db.put(Key(1), vec![1]);
+        db.get(Key(1));
+        db.get(Key(2));
+        db.del(Key(1));
+        db.scan(Key(0), Key(10));
+        assert_eq!(db.stats.puts, 1);
+        assert_eq!(db.stats.gets, 2);
+        assert_eq!(db.stats.dels, 1);
+        assert_eq!(db.stats.scans, 1);
+    }
+}

@@ -1,0 +1,14 @@
+//! Storage substrate: the from-scratch LSM engine (LevelDB stand-in),
+//! the hash-table engine for hash partitioning, and the storage-node shim
+//! (paper §3, §4.1.1). See DESIGN.md §2 for the substitution rationale.
+
+pub mod blob;
+pub mod hashtable;
+pub mod lsm;
+pub mod node;
+pub mod skiplist;
+pub mod sst;
+pub mod wal;
+
+pub use lsm::{Lsm, LsmOptions};
+pub use node::{Engine, StorageNode};

@@ -1,0 +1,219 @@
+//! Storage-node shim: "a simple shim that is responsible for reforming
+//! TurboKV query packets to API calls for the key-value store, and handling
+//! TurboKV controller's data migration requests" (paper §3).
+//!
+//! The shim owns the node's engine (LSM for range partitioning, hash table
+//! for hash partitioning), applies operations, and implements the
+//! controller-driven migration primitives: extract / ingest / delete of a
+//! whole sub-range.
+
+use crate::types::{Key, NodeId, OpCode, Reply, Request, Value};
+
+use super::hashtable::HashTable;
+use super::lsm::{Lsm, LsmOptions};
+
+/// Per-node storage engine, selected by the cluster's partitioning scheme.
+pub enum Engine {
+    Lsm(Lsm),
+    Hash(HashTable),
+}
+
+impl Engine {
+    pub fn lsm(opts: LsmOptions) -> Engine {
+        Engine::Lsm(Lsm::new(opts))
+    }
+
+    pub fn hash(buckets: usize) -> Engine {
+        Engine::Hash(HashTable::new(buckets))
+    }
+
+    pub fn get(&mut self, key: Key) -> Option<Value> {
+        match self {
+            Engine::Lsm(db) => db.get(key),
+            Engine::Hash(h) => h.get(key).cloned(),
+        }
+    }
+
+    pub fn put(&mut self, key: Key, value: Value) {
+        match self {
+            Engine::Lsm(db) => db.put(key, value),
+            Engine::Hash(h) => h.put(key, value),
+        }
+    }
+
+    pub fn del(&mut self, key: Key) {
+        match self {
+            Engine::Lsm(db) => db.del(key),
+            Engine::Hash(h) => {
+                h.del(key);
+            }
+        }
+    }
+
+    /// Ordered scan. Hash engines cannot serve scans (paper §4.1.1: "range
+    /// queries can not be supported"); they return `None`.
+    pub fn scan(&mut self, start: Key, end: Key) -> Option<Vec<(Key, Value)>> {
+        match self {
+            Engine::Lsm(db) => Some(db.scan(start, end)),
+            Engine::Hash(_) => None,
+        }
+    }
+}
+
+/// A storage node: engine + shim.
+pub struct StorageNode {
+    pub id: NodeId,
+    pub engine: Engine,
+    /// Cleared when the controller declares the node failed (§5.2).
+    pub alive: bool,
+    /// Operations applied (for load accounting in tests).
+    pub ops_applied: u64,
+    /// Scans attempted against a hash engine.
+    pub unsupported_scans: u64,
+}
+
+impl StorageNode {
+    pub fn new(id: NodeId, engine: Engine) -> StorageNode {
+        StorageNode { id, engine, alive: true, ops_applied: 0, unsupported_scans: 0 }
+    }
+
+    /// Apply one key-value operation locally and produce the reply the
+    /// tail node would send (paper §4.3 / Fig. 9).
+    pub fn apply(&mut self, req: &Request) -> Reply {
+        self.ops_applied += 1;
+        match req.op {
+            OpCode::Get => Reply::Value(self.engine.get(req.key)),
+            OpCode::Put => {
+                self.engine.put(req.key, req.value.clone());
+                Reply::Ack
+            }
+            OpCode::Del => {
+                self.engine.del(req.key);
+                Reply::Ack
+            }
+            OpCode::Range => match self.engine.scan(req.key, req.end_key) {
+                Some(pairs) => Reply::Pairs(pairs),
+                None => {
+                    self.unsupported_scans += 1;
+                    Reply::Pairs(Vec::new())
+                }
+            },
+        }
+    }
+
+    /// Migration: copy out all pairs in `[start, end]` (controller moves a
+    /// hot sub-range, §5.1). For hash engines the range is over *hashed*
+    /// positions, which the cluster resolves before calling; here we simply
+    /// filter stored keys through the supplied predicate.
+    pub fn extract_range(&mut self, start: Key, end: Key) -> Vec<(Key, Value)> {
+        match &mut self.engine {
+            Engine::Lsm(db) => db.scan(start, end),
+            Engine::Hash(h) => {
+                let mut out = Vec::new();
+                h.for_each(|k, v| {
+                    if start <= k && k <= end {
+                        out.push((k, v.clone()));
+                    }
+                });
+                out.sort_by_key(|(k, _)| *k);
+                out
+            }
+        }
+    }
+
+    /// Migration: bulk-load pairs (target side).
+    pub fn ingest(&mut self, pairs: Vec<(Key, Value)>) {
+        for (k, v) in pairs {
+            self.engine.put(k, v);
+        }
+    }
+
+    /// Migration: drop the old copy after a move (§5.1: "After the
+    /// sub-range's data is migrated ... the old copy is removed").
+    pub fn delete_range(&mut self, start: Key, end: Key) {
+        let keys: Vec<Key> = match &mut self.engine {
+            Engine::Lsm(db) => db.scan(start, end).into_iter().map(|(k, _)| k).collect(),
+            Engine::Hash(h) => {
+                let mut keys = Vec::new();
+                h.for_each(|k, _| {
+                    if start <= k && k <= end {
+                        keys.push(k);
+                    }
+                });
+                keys
+            }
+        };
+        for k in keys {
+            self.engine.del(k);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lsm_node(id: NodeId) -> StorageNode {
+        StorageNode::new(id, Engine::lsm(LsmOptions { memtable_bytes: 4_000, ..Default::default() }))
+    }
+
+    #[test]
+    fn applies_all_op_codes() {
+        let mut node = lsm_node(0);
+        assert_eq!(node.apply(&Request::put(Key(5), b"v".to_vec())), Reply::Ack);
+        assert_eq!(node.apply(&Request::get(Key(5))), Reply::Value(Some(b"v".to_vec())));
+        assert_eq!(node.apply(&Request::del(Key(5))), Reply::Ack);
+        assert_eq!(node.apply(&Request::get(Key(5))), Reply::Value(None));
+        for i in 10..20u128 {
+            node.apply(&Request::put(Key(i), vec![i as u8]));
+        }
+        match node.apply(&Request::range(Key(12), Key(15))) {
+            Reply::Pairs(pairs) => {
+                assert_eq!(pairs.iter().map(|(k, _)| k.0).collect::<Vec<_>>(), vec![12, 13, 14, 15])
+            }
+            other => panic!("expected pairs, got {other:?}"),
+        }
+        assert_eq!(node.ops_applied, 15); // 4 singles + 10 puts + 1 range
+    }
+
+    #[test]
+    fn hash_engine_rejects_scans() {
+        let mut node = StorageNode::new(1, Engine::hash(64));
+        node.apply(&Request::put(Key(1), b"x".to_vec()));
+        let reply = node.apply(&Request::range(Key(0), Key(10)));
+        assert_eq!(reply, Reply::Pairs(Vec::new()));
+        assert_eq!(node.unsupported_scans, 1);
+    }
+
+    #[test]
+    fn migration_extract_ingest_delete() {
+        let mut src = lsm_node(0);
+        let mut dst = lsm_node(1);
+        for i in 0..100u128 {
+            src.apply(&Request::put(Key(i), format!("v{i}").into_bytes()));
+        }
+        let moved = src.extract_range(Key(40), Key(59));
+        assert_eq!(moved.len(), 20);
+        dst.ingest(moved);
+        src.delete_range(Key(40), Key(59));
+        // Source keeps everything outside the migrated range.
+        assert_eq!(src.apply(&Request::get(Key(39))), Reply::Value(Some(b"v39".to_vec())));
+        assert_eq!(src.apply(&Request::get(Key(45))), Reply::Value(None));
+        // Destination serves the migrated range.
+        assert_eq!(dst.apply(&Request::get(Key(45))), Reply::Value(Some(b"v45".to_vec())));
+    }
+
+    #[test]
+    fn hash_engine_migration_filters_by_key() {
+        let mut src = StorageNode::new(0, Engine::hash(16));
+        for i in 0..50u128 {
+            src.apply(&Request::put(Key(i), vec![i as u8]));
+        }
+        let moved = src.extract_range(Key(10), Key(19));
+        assert_eq!(moved.len(), 10);
+        assert!(moved.windows(2).all(|w| w[0].0 < w[1].0));
+        src.delete_range(Key(10), Key(19));
+        assert_eq!(src.apply(&Request::get(Key(15))), Reply::Value(None));
+        assert_eq!(src.apply(&Request::get(Key(25))), Reply::Value(Some(vec![25])));
+    }
+}

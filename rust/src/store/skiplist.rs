@@ -1,0 +1,253 @@
+//! Arena-based skiplist — the LSM memtable's ordered index.
+//!
+//! LevelDB keeps its memtable in a skiplist; ours is a safe-Rust
+//! re-implementation using index-based towers in a `Vec` arena (no raw
+//! pointers). Entries map `Key -> (seqno, Option<Value>)`; `None` is a
+//! tombstone. Newer seqnos shadow older ones for the same key.
+
+use crate::types::{Key, Value};
+use crate::util::rng::Rng;
+
+const MAX_HEIGHT: usize = 12;
+
+struct Node {
+    key: Key,
+    seqno: u64,
+    value: Option<Value>,
+    /// next[level] = arena index of the successor at that level (0 = head
+    /// sentinel's slot, usize::MAX = nil).
+    next: [u32; MAX_HEIGHT],
+}
+
+const NIL: u32 = u32::MAX;
+
+/// Ordered map from `Key` to the *latest* `(seqno, Option<Value>)` entry.
+pub struct SkipList {
+    arena: Vec<Node>,
+    height: usize,
+    rng: Rng,
+    len: usize,
+    approx_bytes: usize,
+}
+
+impl SkipList {
+    pub fn new(seed: u64) -> Self {
+        let head = Node { key: Key::MIN, seqno: 0, value: None, next: [NIL; MAX_HEIGHT] };
+        SkipList { arena: vec![head], height: 1, rng: Rng::new(seed), len: 0, approx_bytes: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Approximate memory footprint (drives flush decisions).
+    pub fn approx_bytes(&self) -> usize {
+        self.approx_bytes
+    }
+
+    fn random_height(&mut self) -> usize {
+        // p = 1/4 per extra level, like LevelDB.
+        let mut h = 1;
+        while h < MAX_HEIGHT && self.rng.gen_range(4) == 0 {
+            h += 1;
+        }
+        h
+    }
+
+    /// Find predecessors of `key` at every level.
+    fn find_prev(&self, key: Key) -> [u32; MAX_HEIGHT] {
+        let mut prev = [0u32; MAX_HEIGHT];
+        let mut cur = 0u32; // head
+        for level in (0..self.height).rev() {
+            loop {
+                let next = self.arena[cur as usize].next[level];
+                if next != NIL && self.arena[next as usize].key < key {
+                    cur = next;
+                } else {
+                    break;
+                }
+            }
+            prev[level] = cur;
+        }
+        prev
+    }
+
+    /// Insert or overwrite: an existing node for the key is updated in
+    /// place when the new seqno is higher (the memtable only needs the
+    /// latest version; older versions live in flushed SSTs).
+    pub fn insert(&mut self, key: Key, seqno: u64, value: Option<Value>) {
+        let prev = self.find_prev(key);
+        let at0 = self.arena[prev[0] as usize].next[0];
+        if at0 != NIL && self.arena[at0 as usize].key == key {
+            let node = &mut self.arena[at0 as usize];
+            if seqno >= node.seqno {
+                self.approx_bytes = self.approx_bytes
+                    + value.as_ref().map(|v| v.len()).unwrap_or(0)
+                    - node.value.as_ref().map(|v| v.len()).unwrap_or(0);
+                node.seqno = seqno;
+                node.value = value;
+            }
+            return;
+        }
+        let h = self.random_height();
+        if h > self.height {
+            self.height = h;
+        }
+        let idx = self.arena.len() as u32;
+        let mut next = [NIL; MAX_HEIGHT];
+        for level in 0..h {
+            let p = prev[level] as usize;
+            next[level] = self.arena[p].next[level];
+            self.arena[p].next[level] = idx;
+        }
+        self.approx_bytes += 16 + 8 + value.as_ref().map(|v| v.len()).unwrap_or(0) + 40;
+        self.arena.push(Node { key, seqno, value, next });
+        self.len += 1;
+    }
+
+    /// Latest entry for `key`: `Some((seqno, None))` is a tombstone,
+    /// `None` means the memtable has no record of the key.
+    pub fn get(&self, key: Key) -> Option<(u64, Option<&Value>)> {
+        let prev = self.find_prev(key);
+        let at0 = self.arena[prev[0] as usize].next[0];
+        if at0 != NIL && self.arena[at0 as usize].key == key {
+            let n = &self.arena[at0 as usize];
+            Some((n.seqno, n.value.as_ref()))
+        } else {
+            None
+        }
+    }
+
+    /// Iterate entries with `key in [start, end]` in key order.
+    pub fn range(&self, start: Key, end: Key) -> impl Iterator<Item = (Key, u64, Option<&Value>)> {
+        let prev = self.find_prev(start);
+        let mut cur = self.arena[prev[0] as usize].next[0];
+        let arena = &self.arena;
+        std::iter::from_fn(move || {
+            if cur == NIL {
+                return None;
+            }
+            let n = &arena[cur as usize];
+            if n.key > end {
+                return None;
+            }
+            cur = n.next[0];
+            Some((n.key, n.seqno, n.value.as_ref()))
+        })
+    }
+
+    /// All entries in key order (for flushing to an SST).
+    pub fn iter(&self) -> impl Iterator<Item = (Key, u64, Option<&Value>)> {
+        self.range(Key::MIN, Key::MAX)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{forall, FnStrategy};
+    use std::collections::BTreeMap;
+
+    #[test]
+    fn insert_get_basic() {
+        let mut sl = SkipList::new(1);
+        sl.insert(Key(10), 1, Some(b"a".to_vec()));
+        sl.insert(Key(5), 2, Some(b"b".to_vec()));
+        sl.insert(Key(20), 3, None); // tombstone
+        assert_eq!(sl.get(Key(10)), Some((1, Some(&b"a".to_vec()))));
+        assert_eq!(sl.get(Key(5)), Some((2, Some(&b"b".to_vec()))));
+        assert_eq!(sl.get(Key(20)), Some((3, None)));
+        assert_eq!(sl.get(Key(7)), None);
+        assert_eq!(sl.len(), 3);
+    }
+
+    #[test]
+    fn newer_seqno_overwrites() {
+        let mut sl = SkipList::new(2);
+        sl.insert(Key(1), 1, Some(b"old".to_vec()));
+        sl.insert(Key(1), 5, Some(b"new".to_vec()));
+        assert_eq!(sl.get(Key(1)), Some((5, Some(&b"new".to_vec()))));
+        // Stale write is ignored.
+        sl.insert(Key(1), 3, Some(b"stale".to_vec()));
+        assert_eq!(sl.get(Key(1)), Some((5, Some(&b"new".to_vec()))));
+        assert_eq!(sl.len(), 1);
+    }
+
+    #[test]
+    fn iter_is_sorted() {
+        let mut sl = SkipList::new(3);
+        let mut rng = crate::util::rng::Rng::new(9);
+        for _ in 0..500 {
+            sl.insert(Key(rng.next_u128()), 1, Some(vec![1]));
+        }
+        let keys: Vec<Key> = sl.iter().map(|(k, _, _)| k).collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted);
+        assert_eq!(keys.len(), 500);
+    }
+
+    #[test]
+    fn range_bounds_inclusive() {
+        let mut sl = SkipList::new(4);
+        for i in 0..10u128 {
+            sl.insert(Key(i * 10), 1, Some(vec![i as u8]));
+        }
+        let got: Vec<Key> = sl.range(Key(20), Key(50)).map(|(k, _, _)| k).collect();
+        assert_eq!(got, vec![Key(20), Key(30), Key(40), Key(50)]);
+        let empty: Vec<Key> = sl.range(Key(91), Key(95)).map(|(k, _, _)| k).collect();
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn prop_matches_btreemap_model() {
+        let strat = FnStrategy(|rng: &mut crate::util::rng::Rng| {
+            let n = rng.gen_range(200) as usize;
+            (0..n)
+                .map(|i| {
+                    let key = rng.gen_range(50) as u128; // collisions likely
+                    let del = rng.chance(0.2);
+                    (key, i as u64, del)
+                })
+                .collect::<Vec<_>>()
+        });
+        forall("skiplist-vs-btreemap", 0xA11CE, 64, &strat, |ops| {
+            let mut sl = SkipList::new(7);
+            let mut model: BTreeMap<u128, (u64, Option<Value>)> = BTreeMap::new();
+            for &(key, seqno, del) in ops {
+                let value = if del { None } else { Some(vec![seqno as u8]) };
+                sl.insert(Key(key), seqno, value.clone());
+                model.insert(key, (seqno, value));
+            }
+            for (&key, (seqno, value)) in &model {
+                let got = sl.get(Key(key));
+                let want = Some((*seqno, value.as_ref()));
+                if got != want {
+                    return Err(format!("key {key}: got {got:?}, want {want:?}"));
+                }
+            }
+            let sl_keys: Vec<u128> = sl.iter().map(|(k, _, _)| k.0).collect();
+            let model_keys: Vec<u128> = model.keys().copied().collect();
+            if sl_keys != model_keys {
+                return Err(format!("key sets differ: {sl_keys:?} vs {model_keys:?}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn approx_bytes_grows_and_tracks_overwrites() {
+        let mut sl = SkipList::new(5);
+        sl.insert(Key(1), 1, Some(vec![0u8; 100]));
+        let b1 = sl.approx_bytes();
+        assert!(b1 >= 100);
+        sl.insert(Key(1), 2, Some(vec![0u8; 10]));
+        assert!(sl.approx_bytes() < b1);
+        sl.insert(Key(2), 3, Some(vec![0u8; 100]));
+        assert!(sl.approx_bytes() > b1);
+    }
+}

@@ -1,0 +1,250 @@
+//! Sorted String Tables: immutable sorted runs of key/value entries, the
+//! on-"disk" format of the LSM engine (LevelDB's SSTs, paper §4.1.1:
+//! "keys are stored in lexicographic order on SSTs").
+//!
+//! Encoding: header (entry count), entries `[key 16B | seqno varint | tag |
+//! value bytes]` in ascending key order, footer CRC over the body. Readers
+//! decode once and serve point gets by binary search and scans by slice.
+
+use anyhow::{bail, Result};
+
+use super::blob::{crc32, get_bytes, get_uvarint, put_bytes, put_uvarint};
+use crate::types::{Key, Value};
+
+/// One SST entry. `value == None` is a tombstone.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Entry {
+    pub key: Key,
+    pub seqno: u64,
+    pub value: Option<Value>,
+}
+
+/// An immutable, decoded SST.
+#[derive(Clone, Debug)]
+pub struct Sst {
+    pub file_no: u64,
+    entries: Vec<Entry>,
+    data_bytes: usize,
+}
+
+impl Sst {
+    /// Build from sorted entries (asserts order, unique keys).
+    pub fn build(file_no: u64, entries: Vec<Entry>) -> Sst {
+        for w in entries.windows(2) {
+            assert!(w[0].key < w[1].key, "SST entries must be sorted and unique");
+        }
+        let data_bytes = entries
+            .iter()
+            .map(|e| 24 + e.value.as_ref().map(|v| v.len()).unwrap_or(0))
+            .sum();
+        Sst { file_no, entries, data_bytes }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut body = Vec::with_capacity(self.data_bytes + 16);
+        put_uvarint(&mut body, self.entries.len() as u64);
+        for e in &self.entries {
+            body.extend_from_slice(&e.key.to_bytes());
+            put_uvarint(&mut body, e.seqno);
+            match &e.value {
+                Some(v) => {
+                    body.push(1);
+                    put_bytes(&mut body, v);
+                }
+                None => body.push(0),
+            }
+        }
+        let crc = crc32(&body);
+        body.extend_from_slice(&crc.to_le_bytes());
+        body
+    }
+
+    pub fn decode(file_no: u64, data: &[u8]) -> Result<Sst> {
+        if data.len() < 4 {
+            bail!("SST too short");
+        }
+        let (body, crc_bytes) = data.split_at(data.len() - 4);
+        let want = u32::from_le_bytes([crc_bytes[0], crc_bytes[1], crc_bytes[2], crc_bytes[3]]);
+        if crc32(body) != want {
+            bail!("SST {file_no} checksum mismatch");
+        }
+        let mut pos = 0usize;
+        let count = get_uvarint(body, &mut pos)? as usize;
+        let mut entries = Vec::with_capacity(count);
+        for _ in 0..count {
+            if pos + 16 > body.len() {
+                bail!("truncated SST entry");
+            }
+            let mut kb = [0u8; 16];
+            kb.copy_from_slice(&body[pos..pos + 16]);
+            pos += 16;
+            let seqno = get_uvarint(body, &mut pos)?;
+            if pos >= body.len() {
+                bail!("truncated SST tag");
+            }
+            let tag = body[pos];
+            pos += 1;
+            let value = match tag {
+                1 => Some(get_bytes(body, &mut pos)?.to_vec()),
+                0 => None,
+                other => bail!("bad SST value tag {other}"),
+            };
+            entries.push(Entry { key: Key::from_bytes(kb), seqno, value });
+        }
+        Ok(Sst::build(file_no, entries))
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn data_bytes(&self) -> usize {
+        self.data_bytes
+    }
+
+    pub fn min_key(&self) -> Option<Key> {
+        self.entries.first().map(|e| e.key)
+    }
+
+    pub fn max_key(&self) -> Option<Key> {
+        self.entries.last().map(|e| e.key)
+    }
+
+    /// Could this table contain `key`?
+    pub fn covers(&self, key: Key) -> bool {
+        match (self.min_key(), self.max_key()) {
+            (Some(lo), Some(hi)) => lo <= key && key <= hi,
+            _ => false,
+        }
+    }
+
+    /// Point lookup by binary search.
+    pub fn get(&self, key: Key) -> Option<&Entry> {
+        self.entries
+            .binary_search_by_key(&key, |e| e.key)
+            .ok()
+            .map(|i| &self.entries[i])
+    }
+
+    /// Entries with `key in [start, end]`.
+    pub fn range(&self, start: Key, end: Key) -> &[Entry] {
+        let lo = self.entries.partition_point(|e| e.key < start);
+        let hi = self.entries.partition_point(|e| e.key <= end);
+        &self.entries[lo..hi]
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Entry> {
+        self.entries.iter()
+    }
+}
+
+/// Merge several entry streams (each sorted by key, streams ordered
+/// newest-to-oldest) into one sorted, deduplicated stream. When
+/// `drop_tombstones` (bottom-level compaction), deletes are elided.
+pub fn merge_entries(streams: Vec<Vec<Entry>>, drop_tombstones: bool) -> Vec<Entry> {
+    // (key, stream_priority) heap-less merge: concatenate + stable sort is
+    // O(n log n) and simple; priority = stream index (lower = newer).
+    let mut tagged: Vec<(usize, Entry)> = Vec::new();
+    for (pri, stream) in streams.into_iter().enumerate() {
+        for e in stream {
+            tagged.push((pri, e));
+        }
+    }
+    tagged.sort_by(|a, b| a.1.key.cmp(&b.1.key).then(a.0.cmp(&b.0)));
+    let mut out: Vec<Entry> = Vec::with_capacity(tagged.len());
+    let mut last_key: Option<Key> = None;
+    for (_, e) in tagged {
+        if last_key == Some(e.key) {
+            continue; // older duplicate, shadowed (even if the winner was a
+                      // tombstone that gets dropped below)
+        }
+        last_key = Some(e.key);
+        if drop_tombstones && e.value.is_none() {
+            continue;
+        }
+        out.push(e);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(k: u128, seq: u64, v: Option<&[u8]>) -> Entry {
+        Entry { key: Key(k), seqno: seq, value: v.map(|b| b.to_vec()) }
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let entries = vec![
+            entry(1, 10, Some(b"one")),
+            entry(5, 11, None),
+            entry(9, 12, Some(&[0xAB; 100])),
+        ];
+        let sst = Sst::build(7, entries.clone());
+        let decoded = Sst::decode(7, &sst.encode()).unwrap();
+        assert_eq!(decoded.iter().cloned().collect::<Vec<_>>(), entries);
+        assert_eq!(decoded.min_key(), Some(Key(1)));
+        assert_eq!(decoded.max_key(), Some(Key(9)));
+    }
+
+    #[test]
+    fn checksum_detects_corruption() {
+        let sst = Sst::build(1, vec![entry(1, 1, Some(b"x"))]);
+        let mut bytes = sst.encode();
+        bytes[5] ^= 0x01;
+        assert!(Sst::decode(1, &bytes).is_err());
+    }
+
+    #[test]
+    fn get_and_range() {
+        let sst = Sst::build(
+            1,
+            (0..100).map(|i| entry(i * 2, i as u64, Some(b"v"))).collect(),
+        );
+        assert!(sst.get(Key(50)).is_some());
+        assert!(sst.get(Key(51)).is_none());
+        assert!(sst.covers(Key(51)));
+        assert!(!sst.covers(Key(500)));
+        let r = sst.range(Key(10), Key(20));
+        assert_eq!(r.len(), 6); // 10,12,14,16,18,20
+        assert_eq!(sst.range(Key(300), Key(400)).len(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "sorted")]
+    fn build_rejects_unsorted() {
+        Sst::build(1, vec![entry(5, 1, None), entry(3, 2, None)]);
+    }
+
+    #[test]
+    fn merge_newest_wins() {
+        // Stream 0 (newest) shadows stream 1.
+        let newest = vec![entry(1, 10, Some(b"new")), entry(3, 11, None)];
+        let oldest = vec![entry(1, 2, Some(b"old")), entry(2, 3, Some(b"keep")), entry(3, 4, Some(b"dead"))];
+        let merged = merge_entries(vec![newest, oldest], false);
+        assert_eq!(
+            merged,
+            vec![entry(1, 10, Some(b"new")), entry(2, 3, Some(b"keep")), entry(3, 11, None)]
+        );
+        let bottom = merge_entries(
+            vec![
+                vec![entry(1, 10, Some(b"new")), entry(3, 11, None)],
+                vec![entry(1, 2, Some(b"old")), entry(2, 3, Some(b"keep")), entry(3, 4, Some(b"dead"))],
+            ],
+            true,
+        );
+        assert_eq!(bottom, vec![entry(1, 10, Some(b"new")), entry(2, 3, Some(b"keep"))]);
+    }
+
+    #[test]
+    fn merge_empty_streams() {
+        assert!(merge_entries(vec![], false).is_empty());
+        assert!(merge_entries(vec![vec![], vec![]], true).is_empty());
+    }
+}

@@ -1,0 +1,84 @@
+//! Dataplane lookup engines.
+//!
+//! The range match + counter update is the switch's compute hot-spot. Two
+//! interchangeable engines implement it:
+//!
+//! * [`RustLookup`] — exact per-key binary search over full 128-bit
+//!   matching values (the reference data plane).
+//! * `runtime::xla_lookup::XlaLookup` — the AOT-compiled Pallas kernel
+//!   (batched 32-bit-prefix compare; see DESIGN.md §Hardware-Adaptation),
+//!   executed via PJRT. An equivalence test pins the two together.
+
+use super::registers::RegisterArrays;
+use super::table::MatchActionTable;
+use crate::types::Key;
+
+/// A batched range-match engine.
+pub trait DataplaneLookup {
+    fn name(&self) -> &'static str;
+
+    /// Match each value against the table, bumping the per-record
+    /// read/write counters in `regs`; returns the matched record index per
+    /// value.
+    fn lookup_batch(
+        &mut self,
+        table: &MatchActionTable,
+        regs: &mut RegisterArrays,
+        mvs: &[Key],
+        is_write: &[bool],
+    ) -> Vec<usize>;
+}
+
+/// Reference engine: per-key binary search on u128 boundaries.
+#[derive(Debug, Default, Clone)]
+pub struct RustLookup;
+
+impl DataplaneLookup for RustLookup {
+    fn name(&self) -> &'static str {
+        "rust"
+    }
+
+    fn lookup_batch(
+        &mut self,
+        table: &MatchActionTable,
+        regs: &mut RegisterArrays,
+        mvs: &[Key],
+        is_write: &[bool],
+    ) -> Vec<usize> {
+        debug_assert_eq!(mvs.len(), is_write.len());
+        mvs.iter()
+            .zip(is_write)
+            .map(|(&mv, &w)| {
+                let idx = table.lookup(mv);
+                regs.bump(idx, w);
+                idx
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::Directory;
+
+    #[test]
+    fn rust_lookup_matches_table_and_counts() {
+        let dir = Directory::initial(16, 4, 2);
+        let mut table = MatchActionTable::new();
+        table.install_from_directory(&dir);
+        let mut regs = RegisterArrays::new();
+        regs.resize_counters(table.len());
+        let mut engine = RustLookup;
+
+        let mvs: Vec<Key> = (0..16u32).map(|i| Key::from_prefix32(i << 28)).collect();
+        let writes: Vec<bool> = (0..16).map(|i| i % 2 == 0).collect();
+        let idxs = engine.lookup_batch(&table, &mut regs, &mvs, &writes);
+        for (mv, idx) in mvs.iter().zip(&idxs) {
+            assert_eq!(table.lookup(*mv), *idx);
+        }
+        let (read, write) = regs.counters();
+        assert_eq!(read.iter().sum::<u64>(), 8);
+        assert_eq!(write.iter().sum::<u64>(), 8);
+    }
+}

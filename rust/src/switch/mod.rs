@@ -1,0 +1,13 @@
+//! The programmable-switch data plane (paper §4): match-action tables,
+//! register arrays, the P4-style pipeline with range splitting, and the
+//! pluggable lookup engine (rust reference / XLA artifact).
+
+pub mod lookup;
+pub mod pipeline;
+pub mod registers;
+pub mod table;
+
+pub use lookup::{DataplaneLookup, RustLookup};
+pub use pipeline::{Emit, Switch, SwitchStats};
+pub use registers::{RegIndex, RegisterArrays};
+pub use table::{ChainAction, MatchActionTable, Record};

@@ -1,0 +1,408 @@
+//! The programmable-switch model: parser → ingress match-action → egress
+//! (range splitting via clone+recirculate, Alg. 1) → deparser (paper §4,
+//! Fig. 4).
+//!
+//! `Switch::process_batch` is pure packet-transformation logic: it takes
+//! the packets that arrived during one pipeline busy period, performs the
+//! key-based routing (one batched lookup — this is where the XLA dataplane
+//! engine plugs in), and returns the packets to emit with the neighbor to
+//! send each to. The cluster's event loop adds link and pipeline delays.
+
+use crate::net::packet::{ChainHeader, Ip, Packet, Tos};
+use crate::net::topology::{Addr, SwitchRole, Topology};
+use crate::types::{Key, OpCode, SwitchId};
+
+use super::lookup::DataplaneLookup;
+use super::registers::RegisterArrays;
+use super::table::MatchActionTable;
+
+/// One packet leaving the switch.
+#[derive(Clone, Debug)]
+pub struct Emit {
+    /// Immediate neighbor (next switch or attached endpoint).
+    pub to: Addr,
+    pub pkt: Packet,
+    /// Additional processing delay accumulated inside the switch (e.g.,
+    /// recirculation passes for range splitting).
+    pub extra_delay_ns: u64,
+}
+
+/// Data-plane observability counters.
+#[derive(Clone, Debug, Default)]
+pub struct SwitchStats {
+    /// TurboKV packets that went through key-based routing here.
+    pub keyrouted: u64,
+    /// Packets forwarded by standard L2/L3.
+    pub ipv4_forwarded: u64,
+    /// Clone+recirculate passes for multi-sub-range scans.
+    pub recirculated: u64,
+    /// Packets dropped (no route / dead switch).
+    pub dropped: u64,
+    /// Batched lookup invocations.
+    pub lookup_batches: u64,
+    /// Total matching values looked up.
+    pub lookups: u64,
+}
+
+/// A programmable switch.
+pub struct Switch {
+    pub id: SwitchId,
+    pub role: SwitchRole,
+    pub table: MatchActionTable,
+    pub registers: RegisterArrays,
+    pub stats: SwitchStats,
+    /// Cleared by the switch-failure experiment (§5.2).
+    pub alive: bool,
+}
+
+impl Switch {
+    pub fn new(id: SwitchId, role: SwitchRole) -> Switch {
+        Switch {
+            id,
+            role,
+            table: MatchActionTable::new(),
+            registers: RegisterArrays::new(),
+            stats: SwitchStats::default(),
+            alive: true,
+        }
+    }
+
+    fn is_tor(&self) -> bool {
+        matches!(self.role, SwitchRole::Tor { .. })
+    }
+
+    /// Process a batch of packets arriving in one pipeline pass.
+    ///
+    /// `recirc_ns` is the extra delay of one clone+recirculate pass;
+    /// `keyroute_ns` the extra per-packet cost of the key-based routing
+    /// action over plain L2/L3 forwarding.
+    pub fn process_batch(
+        &mut self,
+        pkts: Vec<Packet>,
+        topo: &Topology,
+        lookup: &mut dyn DataplaneLookup,
+        recirc_ns: u64,
+        keyroute_ns: u64,
+    ) -> Vec<Emit> {
+        if !self.alive {
+            self.stats.dropped += pkts.len() as u64;
+            return Vec::new();
+        }
+        let mut out = Vec::with_capacity(pkts.len());
+        // Work items: (packet, accumulated extra delay). Recirculated
+        // clones are pushed back with increased delay.
+        let mut work: Vec<(Packet, u64)> = pkts.into_iter().map(|p| (p, 0)).collect();
+
+        while !work.is_empty() {
+            // Parser stage: split this pass into key-routed TurboKV packets
+            // and standard L2/L3 traffic.
+            let mut fresh: Vec<(Packet, u64)> = Vec::new();
+            for (pkt, delay) in work.drain(..) {
+                let needs_keyrouting = pkt.is_turbokv()
+                    && matches!(pkt.ipv4.tos, Tos::RangeData | Tos::HashData)
+                    && !self.table.is_empty();
+                if needs_keyrouting {
+                    fresh.push((pkt, delay));
+                } else {
+                    self.forward_ipv4(pkt, delay, topo, &mut out);
+                }
+            }
+            if fresh.is_empty() {
+                break;
+            }
+
+            // Ingress match-action: ONE batched lookup over the pass
+            // (where the XLA dataplane artifact runs).
+            let mvs: Vec<Key> = fresh.iter().map(|(p, _)| matching_value(p)).collect();
+            let writes: Vec<bool> = fresh
+                .iter()
+                .map(|(p, _)| p.turbo.expect("turbokv pkt").op.is_update())
+                .collect();
+            let idxs = lookup.lookup_batch(&self.table, &mut self.registers, &mvs, &writes);
+            self.stats.lookup_batches += 1;
+            self.stats.lookups += mvs.len() as u64;
+
+            // Egress: range splitting (Alg. 1) may recirculate clones,
+            // which re-enter the next pass with added delay.
+            for ((mut pkt, delay), idx) in fresh.into_iter().zip(idxs) {
+                self.stats.keyrouted += 1;
+                let delay = delay + keyroute_ns;
+                let turbo = pkt.turbo.expect("turbokv pkt");
+                let (_, range_end) = self.table.bounds(idx);
+                if turbo.op == OpCode::Range
+                    && pkt.ipv4.tos == Tos::RangeData
+                    && turbo.end_key > range_end
+                {
+                    // pkt_cir covers the rest of the requested range.
+                    let mut cir = pkt.clone();
+                    cir.turbo.as_mut().unwrap().key = range_end.next();
+                    work.push((cir, delay + recirc_ns));
+                    self.stats.recirculated += 1;
+                    // pkt_out is clipped to the matched sub-range.
+                    pkt.turbo.as_mut().unwrap().end_key = range_end;
+                }
+                self.route_matched(pkt, delay, idx, topo, &mut out);
+            }
+        }
+        out
+    }
+
+    /// Key-based routing action for a packet matched to record `idx`.
+    fn route_matched(
+        &mut self,
+        mut pkt: Packet,
+        delay: u64,
+        idx: usize,
+        topo: &Topology,
+        out: &mut Vec<Emit>,
+    ) {
+        let op = pkt.turbo.expect("turbokv pkt").op;
+        let action = self.table.action(idx).clone();
+        // Reads are served by the tail, updates enter at the head (§4.3).
+        let target_reg = if op.is_update() { action.head() } else { action.tail() };
+        let target_node = target_reg as usize;
+        let target_addr = Addr::Node(target_node);
+
+        let attached = self.is_tor() && topo.next_hop(self.id, target_addr) == Some(target_addr);
+        if attached {
+            // Full coordinator processing (Fig. 9): set destination to the
+            // chain entry point, mark processed, insert the chain header.
+            let client_ip = pkt.ipv4.src;
+            pkt.ipv4.dst = self.registers.node_ip(target_reg);
+            pkt.ipv4.tos = Tos::Processed;
+            let mut ips: Vec<Ip> = Vec::new();
+            if op.is_update() {
+                // Remaining chain after the head, then the client.
+                for &reg in &action.chain[1..] {
+                    ips.push(self.registers.node_ip(reg));
+                }
+            }
+            ips.push(client_ip);
+            pkt.chain = Some(ChainHeader { ips });
+            out.push(Emit { to: target_addr, pkt, extra_delay_ns: delay });
+        } else {
+            // Hierarchical indexing (§6): AGG/Core/Edge (or a foreign ToR)
+            // only picks the egress port toward the head/tail; no chain
+            // header, ToS unchanged.
+            match topo.next_hop(self.id, target_addr) {
+                Some(hop) => out.push(Emit { to: hop, pkt, extra_delay_ns: delay }),
+                None => self.stats.dropped += 1,
+            }
+        }
+    }
+
+    /// Standard L2/L3 forwarding by destination IP.
+    fn forward_ipv4(&mut self, pkt: Packet, delay: u64, topo: &Topology, out: &mut Vec<Emit>) {
+        match topo.addr_of_ip(pkt.ipv4.dst).and_then(|dest| topo.next_hop(self.id, dest)) {
+            Some(hop) => {
+                self.stats.ipv4_forwarded += 1;
+                out.push(Emit { to: hop, pkt, extra_delay_ns: delay });
+            }
+            None => self.stats.dropped += 1,
+        }
+    }
+}
+
+/// The matching value (§4.1.3): the key for range partitioning, the
+/// hashedKey field for hash partitioning (§4.2: "In case of hash
+/// partitioning, the endKey/hashedKey is set with the hashed value of the
+/// key to perform the routing based on it").
+fn matching_value(pkt: &Packet) -> Key {
+    let t = pkt.turbo.expect("turbokv pkt");
+    match pkt.ipv4.tos {
+        Tos::HashData => t.end_key,
+        _ => t.key,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ClusterConfig;
+    use crate::net::packet::ETHERTYPE_IPV4;
+    use crate::partition::Directory;
+    use crate::switch::lookup::RustLookup;
+
+    /// Build the paper topology with a fully-installed ToR for rack 0 and
+    /// an edge switch.
+    fn setup() -> (Topology, Directory, Switch, Switch) {
+        let cfg = ClusterConfig::default();
+        let topo = Topology::build(&cfg);
+        let dir = Directory::initial(128, 16, 3);
+        let mk = |id: usize, role: SwitchRole| {
+            let mut sw = Switch::new(id, role);
+            sw.table.install_from_directory(&dir);
+            sw.registers.resize_counters(dir.len());
+            for n in 0..16 {
+                sw.registers.set_node(n as u16, topo.node_ip(n), n as u16);
+            }
+            sw
+        };
+        let tor0 = mk(topo.tor_of_rack(0), SwitchRole::Tor { rack: 0 });
+        let edge_id = topo.switches.iter().find(|s| s.role == SwitchRole::Edge).unwrap().id;
+        let edge = mk(edge_id, SwitchRole::Edge);
+        (topo, dir, tor0, edge)
+    }
+
+    fn get_pkt(topo: &Topology, key: Key) -> Packet {
+        Packet::request(topo.client_ip(0), Ip(0), Tos::RangeData, OpCode::Get, key, Key::MIN, vec![])
+    }
+
+    #[test]
+    fn tor_routes_get_to_tail_with_chain_header() {
+        let (topo, dir, mut tor0, _) = setup();
+        // Pick a range whose tail is in rack 0.
+        let idx = (0..dir.len()).find(|&i| dir.tail(i) < 4).unwrap();
+        let (start, _) = dir.bounds(idx);
+        let emits =
+            tor0.process_batch(vec![get_pkt(&topo, start)], &topo, &mut RustLookup, 0, 0);
+        assert_eq!(emits.len(), 1);
+        let e = &emits[0];
+        let tail = dir.tail(idx);
+        assert_eq!(e.to, Addr::Node(tail));
+        assert_eq!(e.pkt.ipv4.tos, Tos::Processed);
+        assert_eq!(e.pkt.ipv4.dst, topo.node_ip(tail));
+        // GET chain header: just the client IP (Fig. 9(c)).
+        assert_eq!(e.pkt.chain.as_ref().unwrap().ips, vec![topo.client_ip(0)]);
+        assert_eq!(tor0.stats.keyrouted, 1);
+    }
+
+    #[test]
+    fn tor_routes_put_to_head_with_full_chain() {
+        let (topo, dir, mut tor0, _) = setup();
+        let idx = (0..dir.len()).find(|&i| dir.head(i) < 4).unwrap();
+        let (start, _) = dir.bounds(idx);
+        let pkt = Packet::request(
+            topo.client_ip(1),
+            Ip(0),
+            Tos::RangeData,
+            OpCode::Put,
+            start,
+            Key::MIN,
+            vec![9; 128],
+        );
+        let emits = tor0.process_batch(vec![pkt], &topo, &mut RustLookup, 0, 0);
+        let e = &emits[0];
+        let chain = dir.chain(idx);
+        assert_eq!(e.to, Addr::Node(chain[0]));
+        let hdr = e.pkt.chain.as_ref().unwrap();
+        // Remaining chain (after head) + client IP.
+        assert_eq!(hdr.ips.len(), chain.len());
+        assert_eq!(hdr.ips[0], topo.node_ip(chain[1]));
+        assert_eq!(hdr.ips[1], topo.node_ip(chain[2]));
+        assert_eq!(*hdr.ips.last().unwrap(), topo.client_ip(1));
+    }
+
+    #[test]
+    fn edge_switch_forwards_toward_target_without_chain() {
+        let (topo, dir, _, mut edge) = setup();
+        let (start, _) = dir.bounds(0);
+        let emits = edge.process_batch(vec![get_pkt(&topo, start)], &topo, &mut RustLookup, 0, 0);
+        assert_eq!(emits.len(), 1);
+        let e = &emits[0];
+        assert_eq!(e.pkt.ipv4.tos, Tos::RangeData, "still unprocessed");
+        assert!(e.pkt.chain.is_none());
+        // Next hop from edge toward any node is the core switch.
+        assert!(matches!(e.to, Addr::Switch(_)));
+    }
+
+    #[test]
+    fn processed_packets_use_ipv4_path() {
+        let (topo, _, mut tor0, _) = setup();
+        let mut pkt = get_pkt(&topo, Key::MIN);
+        pkt.ipv4.tos = Tos::Processed;
+        pkt.ipv4.dst = topo.node_ip(2);
+        pkt.chain = Some(ChainHeader { ips: vec![topo.client_ip(0)] });
+        let emits = tor0.process_batch(vec![pkt], &topo, &mut RustLookup, 0, 0);
+        assert_eq!(emits.len(), 1);
+        assert_eq!(emits[0].to, Addr::Node(2));
+        assert_eq!(tor0.stats.ipv4_forwarded, 1);
+        assert_eq!(tor0.stats.keyrouted, 0);
+    }
+
+    #[test]
+    fn replies_route_back_to_client() {
+        let (topo, _, mut tor0, _) = setup();
+        let mut reply = Packet::reply(topo.node_ip(0), topo.client_ip(0), b"v".to_vec());
+        reply.eth.ethertype = ETHERTYPE_IPV4;
+        let emits = tor0.process_batch(vec![reply], &topo, &mut RustLookup, 0, 0);
+        assert_eq!(emits.len(), 1);
+        // ToR forwards up toward the client edge.
+        assert!(matches!(emits[0].to, Addr::Switch(_)));
+    }
+
+    #[test]
+    fn range_spanning_ranges_is_split_with_recirculation() {
+        let (topo, dir, _, mut edge) = setup();
+        // Span exactly 3 sub-ranges: [start of r0 .. middle of r2].
+        let (s0, _) = dir.bounds(0);
+        let (s2, e2) = dir.bounds(2);
+        let mid2 = Key(s2.0 + (e2.0 - s2.0) / 2);
+        let pkt = Packet::request(
+            topo.client_ip(0), Ip(0), Tos::RangeData, OpCode::Range, s0, mid2, vec![],
+        );
+        let emits = edge.process_batch(vec![pkt], &topo, &mut RustLookup, 500, 0);
+        assert_eq!(emits.len(), 3, "one packet per spanned sub-range");
+        assert_eq!(edge.stats.recirculated, 2);
+        // Clipped bounds per packet, recirculated ones carry extra delay.
+        let mut delays: Vec<u64> = emits.iter().map(|e| e.extra_delay_ns).collect();
+        delays.sort_unstable();
+        assert_eq!(delays, vec![0, 500, 1000]);
+        let mut covered: Vec<(Key, Key)> = emits
+            .iter()
+            .map(|e| {
+                let t = e.pkt.turbo.unwrap();
+                (t.key, t.end_key)
+            })
+            .collect();
+        covered.sort();
+        assert_eq!(covered[0].0, s0);
+        assert_eq!(covered[2].1, mid2);
+        // Contiguous, non-overlapping coverage.
+        assert_eq!(covered[0].1.next(), covered[1].0);
+        assert_eq!(covered[1].1.next(), covered[2].0);
+    }
+
+    #[test]
+    fn dead_switch_drops_everything() {
+        let (topo, _, mut tor0, _) = setup();
+        tor0.alive = false;
+        let emits = tor0.process_batch(vec![get_pkt(&topo, Key::MIN)], &topo, &mut RustLookup, 0, 0);
+        assert!(emits.is_empty());
+        assert_eq!(tor0.stats.dropped, 1);
+    }
+
+    #[test]
+    fn hash_tos_matches_on_hashed_key_field() {
+        let (topo, dir, mut tor0, _) = setup();
+        // Key would land in range 0, hashedKey (end_key) in the last range.
+        let (last_start, _) = dir.bounds(dir.len() - 1);
+        let pkt = Packet::request(
+            topo.client_ip(0), Ip(0), Tos::HashData, OpCode::Get, Key::MIN, last_start, vec![],
+        );
+        let emits = tor0.process_batch(vec![pkt], &topo, &mut RustLookup, 0, 0);
+        assert_eq!(emits.len(), 1);
+        let expected_tail = dir.tail(dir.len() - 1);
+        // Routed by the hashedKey, not the raw key.
+        let dest_ip = emits[0].pkt.ipv4.dst;
+        assert_eq!(dest_ip, topo.node_ip(expected_tail));
+    }
+
+    #[test]
+    fn counters_track_reads_and_writes() {
+        let (topo, dir, mut tor0, _) = setup();
+        let (s0, _) = dir.bounds(0);
+        let (s1, _) = dir.bounds(1);
+        let pkts = vec![
+            get_pkt(&topo, s0),
+            get_pkt(&topo, s0),
+            Packet::request(topo.client_ip(0), Ip(0), Tos::RangeData, OpCode::Put, s1, Key::MIN, vec![1]),
+        ];
+        tor0.process_batch(pkts, &topo, &mut RustLookup, 0, 0);
+        let (read, write) = tor0.registers.counters();
+        assert_eq!(read[0], 2);
+        assert_eq!(write[1], 1);
+        assert_eq!(tor0.stats.lookup_batches, 1, "one batched lookup per pass");
+        assert_eq!(tor0.stats.lookups, 3);
+    }
+}

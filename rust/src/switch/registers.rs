@@ -1,0 +1,158 @@
+//! Switch register arrays (paper §7): "We used 4 register arrays, one for
+//! saving the storage nodes' IP addresses, one for saving the forwarding
+//! port of the storage nodes, one for counting the read access requests of
+//! the indexing records and the last one for counting the update access
+//! requests."
+//!
+//! Node forwarding info is stored once per node and referenced from
+//! match-action records by register *index* (Fig. 7(c)), so chain updates
+//! touch one table record instead of rewriting per-range IP lists.
+
+use crate::net::packet::Ip;
+
+/// Index into the node IP/port register arrays.
+pub type RegIndex = u16;
+
+#[derive(Clone, Debug, Default)]
+pub struct RegisterArrays {
+    /// Storage-node IP addresses.
+    node_ip: Vec<Ip>,
+    /// Forwarding port of each storage node. In the simulator a "port" is
+    /// the neighbor slot on the switch; kept for wire fidelity.
+    node_port: Vec<u16>,
+    /// Per-index-record read hit counters (Get/Range).
+    read_count: Vec<u64>,
+    /// Per-index-record update hit counters (Put/Del).
+    write_count: Vec<u64>,
+}
+
+impl RegisterArrays {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Install a node's forwarding info; returns its register index.
+    /// Idempotent per node id == index convention used by the controller.
+    pub fn set_node(&mut self, idx: RegIndex, ip: Ip, port: u16) {
+        let i = idx as usize;
+        if self.node_ip.len() <= i {
+            self.node_ip.resize(i + 1, Ip(0));
+            self.node_port.resize(i + 1, 0);
+        }
+        self.node_ip[i] = ip;
+        self.node_port[i] = port;
+    }
+
+    pub fn node_ip(&self, idx: RegIndex) -> Ip {
+        self.node_ip[idx as usize]
+    }
+
+    pub fn node_port(&self, idx: RegIndex) -> u16 {
+        self.node_port[idx as usize]
+    }
+
+    pub fn num_nodes(&self) -> usize {
+        self.node_ip.len()
+    }
+
+    /// Size the hit-counter arrays for `records` index records.
+    pub fn resize_counters(&mut self, records: usize) {
+        self.read_count.resize(records, 0);
+        self.write_count.resize(records, 0);
+    }
+
+    /// Counter arrays must be re-sized when records are inserted mid-table:
+    /// shift counts at/after `at` up by one (new record starts at zero).
+    pub fn insert_counter_slot(&mut self, at: usize) {
+        self.read_count.insert(at, 0);
+        self.write_count.insert(at, 0);
+    }
+
+    pub fn bump(&mut self, record: usize, is_write: bool) {
+        if is_write {
+            self.write_count[record] += 1;
+        } else {
+            self.read_count[record] += 1;
+        }
+    }
+
+    /// Batched counter-delta application (XLA dataplane path).
+    pub fn add_deltas(&mut self, read: &[i32], write: &[i32]) {
+        assert_eq!(read.len(), self.read_count.len());
+        assert_eq!(write.len(), self.write_count.len());
+        for (c, &d) in self.read_count.iter_mut().zip(read) {
+            *c += d as u64;
+        }
+        for (c, &d) in self.write_count.iter_mut().zip(write) {
+            *c += d as u64;
+        }
+    }
+
+    /// Controller epoch: read and reset both counter arrays (§5.1: the
+    /// controller "resets these counters in the beginning of each time
+    /// period").
+    pub fn drain_counters(&mut self) -> (Vec<u64>, Vec<u64>) {
+        let zeros_r = vec![0; self.read_count.len()];
+        let zeros_w = vec![0; self.write_count.len()];
+        let read = std::mem::replace(&mut self.read_count, zeros_r);
+        let write = std::mem::replace(&mut self.write_count, zeros_w);
+        (read, write)
+    }
+
+    pub fn counters(&self) -> (&[u64], &[u64]) {
+        (&self.read_count, &self.write_count)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn node_registers_grow_and_store() {
+        let mut r = RegisterArrays::new();
+        r.set_node(3, Ip::new(10, 0, 0, 4), 7);
+        r.set_node(0, Ip::new(10, 0, 0, 1), 1);
+        assert_eq!(r.num_nodes(), 4);
+        assert_eq!(r.node_ip(3), Ip::new(10, 0, 0, 4));
+        assert_eq!(r.node_port(3), 7);
+        assert_eq!(r.node_ip(0), Ip::new(10, 0, 0, 1));
+    }
+
+    #[test]
+    fn counters_bump_and_drain() {
+        let mut r = RegisterArrays::new();
+        r.resize_counters(4);
+        r.bump(0, false);
+        r.bump(0, false);
+        r.bump(2, true);
+        let (read, write) = r.drain_counters();
+        assert_eq!(read, vec![2, 0, 0, 0]);
+        assert_eq!(write, vec![0, 0, 1, 0]);
+        // Reset after drain.
+        let (read, write) = r.counters();
+        assert!(read.iter().all(|&c| c == 0));
+        assert!(write.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn insert_slot_shifts_counts() {
+        let mut r = RegisterArrays::new();
+        r.resize_counters(3);
+        r.bump(1, false);
+        r.insert_counter_slot(1);
+        let (read, _) = r.counters();
+        assert_eq!(read, &[0, 0, 1, 0]);
+    }
+
+    #[test]
+    fn add_deltas_accumulates() {
+        let mut r = RegisterArrays::new();
+        r.resize_counters(3);
+        r.add_deltas(&[1, 0, 2], &[0, 3, 0]);
+        r.add_deltas(&[1, 1, 0], &[0, 0, 0]);
+        let (read, write) = r.counters();
+        assert_eq!(read, &[2, 1, 2]);
+        assert_eq!(write, &[0, 3, 0]);
+    }
+}

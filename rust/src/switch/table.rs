@@ -1,0 +1,190 @@
+//! The key-based match-action table (paper §4.1.3, Fig. 7(b)).
+//!
+//! Each record is `match: [start, end) sub-range` → `action: key-based
+//! routing` with action data `(chain register indexes, length)`. Records
+//! are kept sorted and disjoint, covering the whole matching-value span, so
+//! lookup is the P4 range match. The control plane (controller) installs,
+//! splits and rewrites records; the data plane only reads.
+
+use crate::partition::Directory;
+use crate::types::{Key, NodeId};
+
+use super::registers::RegIndex;
+
+/// Action data of one record (Fig. 7(b)): the chain as register indexes,
+/// head first. Non-ToR switches (§6 hierarchical indexing) only keep the
+/// head/tail entries they forward toward.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ChainAction {
+    pub chain: Vec<RegIndex>,
+}
+
+impl ChainAction {
+    pub fn head(&self) -> RegIndex {
+        self.chain[0]
+    }
+    pub fn tail(&self) -> RegIndex {
+        *self.chain.last().expect("non-empty chain")
+    }
+    pub fn len(&self) -> usize {
+        self.chain.len()
+    }
+}
+
+/// One table record.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Record {
+    /// Sub-range start (inclusive); end is the next record's start.
+    pub start: Key,
+    pub action: ChainAction,
+}
+
+/// The match-action table.
+#[derive(Clone, Debug, Default)]
+pub struct MatchActionTable {
+    records: Vec<Record>,
+}
+
+impl MatchActionTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Rebuild the whole table from a directory snapshot (controller boot
+    /// or full reinstall; nodes are registered with register index ==
+    /// NodeId by the cluster builder).
+    pub fn install_from_directory(&mut self, dir: &Directory) {
+        self.records = dir
+            .ranges()
+            .iter()
+            .map(|r| Record {
+                start: r.start,
+                action: ChainAction {
+                    chain: r.chain.iter().map(|&n| n as RegIndex).collect(),
+                },
+            })
+            .collect();
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn records(&self) -> &[Record] {
+        &self.records
+    }
+
+    /// Range match: index of the record whose sub-range contains `mv`.
+    pub fn lookup(&self, mv: Key) -> usize {
+        debug_assert!(!self.records.is_empty());
+        self.records.partition_point(|r| r.start <= mv) - 1
+    }
+
+    /// `[start, end]` bounds of record `idx` (inclusive end).
+    pub fn bounds(&self, idx: usize) -> (Key, Key) {
+        let start = self.records[idx].start;
+        let end = match self.records.get(idx + 1) {
+            Some(next) => Key(next.start.0 - 1),
+            None => Key::MAX,
+        };
+        (start, end)
+    }
+
+    pub fn action(&self, idx: usize) -> &ChainAction {
+        &self.records[idx].action
+    }
+
+    /// Control plane: replace one record's chain (migration, repair).
+    pub fn set_chain(&mut self, idx: usize, chain: Vec<RegIndex>) {
+        assert!(!chain.is_empty());
+        self.records[idx].action = ChainAction { chain };
+    }
+
+    /// Control plane: split record `idx` at `at`; the new upper record gets
+    /// `upper_chain`. Returns the new record's index (callers must also
+    /// insert a counter slot in the register arrays).
+    pub fn split(&mut self, idx: usize, at: Key, upper_chain: Vec<RegIndex>) -> usize {
+        let (start, end) = self.bounds(idx);
+        assert!(start < at && at <= end, "split point outside record");
+        self.records.insert(idx + 1, Record { start: at, action: ChainAction { chain: upper_chain } });
+        idx + 1
+    }
+
+    /// Sub-range starts as 32-bit prefixes for the XLA dataplane (None if
+    /// any start is not 2^96-aligned).
+    pub fn starts_prefix32(&self) -> Option<Vec<u32>> {
+        self.records
+            .iter()
+            .map(|r| r.start.is_prefix_aligned().then(|| r.start.prefix32()))
+            .collect()
+    }
+
+    /// Nodes referenced by record `idx`'s chain, as NodeIds (register
+    /// index == NodeId by construction).
+    pub fn chain_nodes(&self, idx: usize) -> Vec<NodeId> {
+        self.records[idx].action.chain.iter().map(|&r| r as NodeId).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> MatchActionTable {
+        let dir = Directory::initial(8, 4, 3);
+        let mut t = MatchActionTable::new();
+        t.install_from_directory(&dir);
+        t
+    }
+
+    #[test]
+    fn install_matches_directory() {
+        let dir = Directory::initial(8, 4, 3);
+        let t = table();
+        assert_eq!(t.len(), 8);
+        for i in 0..8 {
+            assert_eq!(t.chain_nodes(i), dir.chain(i));
+            assert_eq!(t.bounds(i), dir.bounds(i));
+        }
+    }
+
+    #[test]
+    fn lookup_matches_bounds() {
+        let t = table();
+        for i in 0..t.len() {
+            let (start, end) = t.bounds(i);
+            assert_eq!(t.lookup(start), i);
+            assert_eq!(t.lookup(end), i);
+        }
+        assert_eq!(t.lookup(Key::MIN), 0);
+        assert_eq!(t.lookup(Key::MAX), t.len() - 1);
+    }
+
+    #[test]
+    fn split_and_set_chain() {
+        let mut t = table();
+        let (s, e) = t.bounds(2);
+        let mid = Key(s.0 / 2 + e.0 / 2);
+        let new_idx = t.split(2, mid, vec![0, 1]);
+        assert_eq!(new_idx, 3);
+        assert_eq!(t.len(), 9);
+        assert_eq!(t.lookup(mid), 3);
+        assert_eq!(t.action(3).chain, vec![0, 1]);
+        t.set_chain(3, vec![2, 3]);
+        assert_eq!(t.chain_nodes(3), vec![2, 3]);
+        assert_eq!(t.action(3).head(), 2);
+        assert_eq!(t.action(3).tail(), 3);
+    }
+
+    #[test]
+    fn prefix32_export() {
+        let t = table();
+        let starts = t.starts_prefix32().unwrap();
+        assert_eq!(starts.len(), 8);
+        assert!(starts.windows(2).all(|w| w[0] < w[1]));
+    }
+}

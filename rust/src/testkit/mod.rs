@@ -1,0 +1,197 @@
+//! Minimal property-based testing harness.
+//!
+//! proptest is unavailable offline (DESIGN.md §3 dependency note), so this
+//! module provides the slice of it our invariant tests need: seeded random
+//! case generation, a configurable number of cases, and greedy shrinking to
+//! a minimal counterexample before panicking.
+
+use crate::util::rng::Rng;
+
+/// Number of cases per property (override with `TURBOKV_PROP_CASES`).
+pub fn default_cases() -> usize {
+    std::env::var("TURBOKV_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(128)
+}
+
+/// A generator + shrinker for a case type.
+pub trait Strategy {
+    type Case: Clone + std::fmt::Debug;
+    fn generate(&self, rng: &mut Rng) -> Self::Case;
+    /// Candidate smaller cases, most aggressive first. Default: no shrink.
+    fn shrink(&self, _case: &Self::Case) -> Vec<Self::Case> {
+        Vec::new()
+    }
+}
+
+/// Run `check` against `cases` random cases from `strategy`; on failure,
+/// shrink greedily and panic with the minimal failing case.
+pub fn forall<S: Strategy>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    strategy: &S,
+    check: impl Fn(&S::Case) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for i in 0..cases {
+        let case = strategy.generate(&mut rng);
+        if let Err(msg) = check(&case) {
+            let minimal = shrink_loop(strategy, case, &check);
+            panic!(
+                "property {name:?} failed (case {i}/{cases}, seed {seed}):\n  {msg}\n  minimal case: {minimal:?}"
+            );
+        }
+    }
+}
+
+fn shrink_loop<S: Strategy>(
+    strategy: &S,
+    mut case: S::Case,
+    check: &impl Fn(&S::Case) -> Result<(), String>,
+) -> S::Case {
+    // Greedy descent, bounded to avoid pathological loops.
+    'outer: for _ in 0..1000 {
+        for candidate in strategy.shrink(&case) {
+            if check(&candidate).is_err() {
+                case = candidate;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    case
+}
+
+/// Strategy: u64 in [lo, hi], shrinking toward lo.
+pub struct U64Range {
+    pub lo: u64,
+    pub hi: u64,
+}
+
+impl Strategy for U64Range {
+    type Case = u64;
+    fn generate(&self, rng: &mut Rng) -> u64 {
+        self.lo + rng.gen_range(self.hi - self.lo + 1)
+    }
+    fn shrink(&self, case: &u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        if *case > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (case - self.lo) / 2);
+            out.push(case - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Strategy: vectors with length in [0, max_len], elements from `inner`,
+/// shrinking by halving then element dropping, then shrinking elements.
+pub struct VecOf<S> {
+    pub inner: S,
+    pub max_len: usize,
+}
+
+impl<S: Strategy> Strategy for VecOf<S> {
+    type Case = Vec<S::Case>;
+    fn generate(&self, rng: &mut Rng) -> Vec<S::Case> {
+        let len = rng.gen_range(self.max_len as u64 + 1) as usize;
+        (0..len).map(|_| self.inner.generate(rng)).collect()
+    }
+    fn shrink(&self, case: &Vec<S::Case>) -> Vec<Vec<S::Case>> {
+        let mut out = Vec::new();
+        if !case.is_empty() {
+            out.push(case[..case.len() / 2].to_vec());
+            out.push(case[case.len() / 2..].to_vec());
+            for i in 0..case.len().min(8) {
+                let mut dropped = case.clone();
+                dropped.remove(i);
+                out.push(dropped);
+            }
+        }
+        // Shrink individual elements (first few positions).
+        for i in 0..case.len().min(4) {
+            for smaller in self.inner.shrink(&case[i]) {
+                let mut c = case.clone();
+                c[i] = smaller;
+                out.push(c);
+            }
+        }
+        out
+    }
+}
+
+/// Strategy from a plain closure (no shrinking).
+pub struct FnStrategy<F>(pub F);
+
+impl<T: Clone + std::fmt::Debug, F: Fn(&mut Rng) -> T> Strategy for FnStrategy<F> {
+    type Case = T;
+    fn generate(&self, rng: &mut Rng) -> T {
+        (self.0)(rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        forall("sum-commutes", 1, 64, &U64Range { lo: 0, hi: 1000 }, |&x| {
+            if x + 1 == 1 + x {
+                Ok(())
+            } else {
+                Err("math broke".into())
+            }
+        });
+    }
+
+    #[test]
+    fn failing_property_shrinks_to_minimal() {
+        let result = std::panic::catch_unwind(|| {
+            forall("fails-above-10", 2, 256, &U64Range { lo: 0, hi: 1000 }, |&x| {
+                if x <= 10 {
+                    Ok(())
+                } else {
+                    Err(format!("{x} > 10"))
+                }
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // Greedy shrink should land on exactly 11.
+        assert!(msg.contains("minimal case: 11"), "{msg}");
+    }
+
+    #[test]
+    fn vec_strategy_shrinks_length() {
+        let strat = VecOf { inner: U64Range { lo: 0, hi: 100 }, max_len: 50 };
+        let result = std::panic::catch_unwind(|| {
+            forall("no-vec-longer-than-3", 3, 128, &strat, |v| {
+                if v.len() <= 3 {
+                    Ok(())
+                } else {
+                    Err(format!("len {}", v.len()))
+                }
+            });
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // Minimal failing vector has length exactly 4.
+        let start = msg.find("minimal case: ").unwrap() + "minimal case: ".len();
+        let commas = msg[start..].matches(',').count();
+        assert_eq!(commas, 3, "expected 4-element vec in: {msg}");
+    }
+
+    #[test]
+    fn fn_strategy_generates() {
+        let strat = FnStrategy(|rng: &mut Rng| (rng.gen_range(5), rng.gen_range(5)));
+        forall("pairs-in-range", 4, 32, &strat, |&(a, b)| {
+            if a < 5 && b < 5 {
+                Ok(())
+            } else {
+                Err("out of range".into())
+            }
+        });
+    }
+}

@@ -1,0 +1,197 @@
+//! Core value types shared across the whole system.
+//!
+//! TurboKV keys are 16 bytes (128 bits); the whole key span `0..2^128` is
+//! partitioned into sub-ranges recorded in the switches' index tables
+//! (paper §7: "The key size of the key-value pair is 16 bytes with total key
+//! range spans from 0 to 2^128").
+
+use std::fmt;
+
+/// A 16-byte TurboKV key. Ordered lexicographically over its big-endian
+/// bytes, which is identical to integer order on the `u128`.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Key(pub u128);
+
+impl Key {
+    pub const MIN: Key = Key(0);
+    pub const MAX: Key = Key(u128::MAX);
+
+    /// Construct from big-endian bytes (the wire format).
+    pub fn from_bytes(b: [u8; 16]) -> Self {
+        Key(u128::from_be_bytes(b))
+    }
+
+    /// Big-endian wire representation.
+    pub fn to_bytes(self) -> [u8; 16] {
+        self.0.to_be_bytes()
+    }
+
+    /// The top 32 bits — the prefix the XLA dataplane matches on.
+    /// Lossless for routing as long as all sub-range boundaries are
+    /// `2^96`-aligned (see DESIGN.md §Hardware-Adaptation).
+    pub fn prefix32(self) -> u32 {
+        (self.0 >> 96) as u32
+    }
+
+    /// The key whose top 32 bits are `p` and the rest zero — the smallest
+    /// key with that prefix. `Key::from_prefix32(k.prefix32()) <= k`.
+    pub fn from_prefix32(p: u32) -> Self {
+        Key((p as u128) << 96)
+    }
+
+    /// Is this key's value `2^96`-aligned (representable by its prefix)?
+    pub fn is_prefix_aligned(self) -> bool {
+        self.0 & ((1u128 << 96) - 1) == 0
+    }
+
+    /// Successor key, saturating at `Key::MAX`.
+    pub fn next(self) -> Key {
+        Key(self.0.saturating_add(1))
+    }
+}
+
+impl fmt::Debug for Key {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Key({:#034x})", self.0)
+    }
+}
+
+impl fmt::Display for Key {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:032x}", self.0)
+    }
+}
+
+impl From<u128> for Key {
+    fn from(v: u128) -> Self {
+        Key(v)
+    }
+}
+
+/// Values are opaque byte strings (the experiments use 128-byte values,
+/// paper §8).
+pub type Value = Vec<u8>;
+
+/// Key-value operation codes carried in the TurboKV header (paper §4.2:
+/// "Get, Put, Del, and Range").
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Hash)]
+#[repr(u8)]
+pub enum OpCode {
+    Get = 0,
+    Put = 1,
+    Del = 2,
+    Range = 3,
+}
+
+impl OpCode {
+    pub fn from_u8(v: u8) -> Option<OpCode> {
+        match v {
+            0 => Some(OpCode::Get),
+            1 => Some(OpCode::Put),
+            2 => Some(OpCode::Del),
+            3 => Some(OpCode::Range),
+            _ => None,
+        }
+    }
+
+    /// Chain-replication classification: reads go to the tail, updates
+    /// enter at the head (paper §4.1.2).
+    pub fn is_update(self) -> bool {
+        matches!(self, OpCode::Put | OpCode::Del)
+    }
+}
+
+/// Identifier of a storage node (index into the cluster's node list).
+pub type NodeId = usize;
+
+/// Identifier of a switch.
+pub type SwitchId = usize;
+
+/// Identifier of a client.
+pub type ClientId = usize;
+
+/// Simulated time in nanoseconds.
+pub type SimTime = u64;
+
+/// One key-value request as issued by a client application.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub op: OpCode,
+    pub key: Key,
+    /// End of range for `OpCode::Range`, unused otherwise.
+    pub end_key: Key,
+    /// Payload for `Put`.
+    pub value: Value,
+}
+
+impl Request {
+    pub fn get(key: Key) -> Self {
+        Request { op: OpCode::Get, key, end_key: Key::MIN, value: Vec::new() }
+    }
+    pub fn put(key: Key, value: Value) -> Self {
+        Request { op: OpCode::Put, key, end_key: Key::MIN, value }
+    }
+    pub fn del(key: Key) -> Self {
+        Request { op: OpCode::Del, key, end_key: Key::MIN, value: Vec::new() }
+    }
+    pub fn range(start: Key, end: Key) -> Self {
+        Request { op: OpCode::Range, key: start, end_key: end, value: Vec::new() }
+    }
+}
+
+/// Reply payload returned to the client.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Reply {
+    /// `Get`: value if present.
+    Value(Option<Value>),
+    /// `Put` / `Del` acknowledgment.
+    Ack,
+    /// `Range`: matching pairs, sorted by key. A multi-sub-range scan is
+    /// assembled from several of these.
+    Pairs(Vec<(Key, Value)>),
+    /// Routed to a node that no longer owns the key (stale directory).
+    WrongNode,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn key_byte_roundtrip_preserves_order() {
+        let a = Key(0x0123_4567_89ab_cdef_0011_2233_4455_6677);
+        let b = Key::from_bytes(a.to_bytes());
+        assert_eq!(a, b);
+        let lo = Key(5);
+        let hi = Key(6);
+        assert!(lo.to_bytes() < hi.to_bytes());
+        assert!(lo < hi);
+    }
+
+    #[test]
+    fn prefix32_is_top_bits() {
+        let k = Key(0xdead_beef_u128 << 96 | 42);
+        assert_eq!(k.prefix32(), 0xdead_beef);
+        assert!(!k.is_prefix_aligned());
+        assert!(Key::from_prefix32(0xdead_beef).is_prefix_aligned());
+        assert!(Key::from_prefix32(k.prefix32()) <= k);
+    }
+
+    #[test]
+    fn opcode_roundtrip() {
+        for op in [OpCode::Get, OpCode::Put, OpCode::Del, OpCode::Range] {
+            assert_eq!(OpCode::from_u8(op as u8), Some(op));
+        }
+        assert_eq!(OpCode::from_u8(9), None);
+        assert!(OpCode::Put.is_update());
+        assert!(OpCode::Del.is_update());
+        assert!(!OpCode::Get.is_update());
+        assert!(!OpCode::Range.is_update());
+    }
+
+    #[test]
+    fn key_next_saturates() {
+        assert_eq!(Key(7).next(), Key(8));
+        assert_eq!(Key::MAX.next(), Key::MAX);
+    }
+}

@@ -1,0 +1,290 @@
+//! Latency recording: log-bucketed histogram for cheap percentiles plus an
+//! exact sample set for the CDF figures (Figs. 14/15).
+
+/// HDR-style histogram: logarithmic major buckets with linear sub-buckets,
+/// ~2.5% relative error, O(1) record, O(buckets) percentile query.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    /// counts[major][sub]; major = floor(log2(v)) clamped, 32 sub-buckets.
+    counts: Vec<[u64; Histogram::SUB]>,
+    total: u64,
+    sum: f64,
+    min: u64,
+    max: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Histogram {
+    const SUB: usize = 32;
+    const MAJORS: usize = 64;
+
+    pub fn new() -> Self {
+        Histogram {
+            counts: vec![[0u64; Self::SUB]; Self::MAJORS],
+            total: 0,
+            sum: 0.0,
+            min: u64::MAX,
+            max: 0,
+        }
+    }
+
+    #[inline]
+    fn bucket(v: u64) -> (usize, usize) {
+        if v < Self::SUB as u64 {
+            return (0, v as usize);
+        }
+        let major = 63 - v.leading_zeros() as usize; // floor(log2 v) >= 5
+        let shift = major.saturating_sub(5);
+        let sub = ((v >> shift) as usize) & (Self::SUB - 1);
+        (major - 4, sub)
+    }
+
+    #[inline]
+    fn bucket_value(major: usize, sub: usize) -> u64 {
+        if major == 0 {
+            return sub as u64;
+        }
+        let m = major + 4;
+        let shift = m - 5;
+        ((1u64 << m) | ((sub as u64) << shift)) + (1u64 << shift) / 2
+    }
+
+    #[inline]
+    pub fn record(&mut self, v: u64) {
+        let (major, sub) = Self::bucket(v);
+        self.counts[major][sub] += 1;
+        self.total += 1;
+        self.sum += v as f64;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        self.sum / self.total as f64
+    }
+
+    pub fn min(&self) -> u64 {
+        if self.total == 0 { 0 } else { self.min }
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    /// Value at quantile `q` in `[0, 1]` (within bucket resolution).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (major, subs) in self.counts.iter().enumerate() {
+            for (sub, &c) in subs.iter().enumerate() {
+                seen += c;
+                if seen >= target {
+                    return Self::bucket_value(major, sub).clamp(self.min, self.max);
+                }
+            }
+        }
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            for (x, y) in a.iter_mut().zip(b.iter()) {
+                *x += y;
+            }
+        }
+        self.total += other.total;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Exact sample recorder for CDF export. Keeps every sample; the figure
+/// sweeps record ~1e5 points which is fine.
+#[derive(Clone, Debug, Default)]
+pub struct SampleSet {
+    samples: Vec<u64>,
+    sorted: bool,
+}
+
+impl SampleSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, v: u64) {
+        self.samples.push(v);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.samples.sort_unstable();
+            self.sorted = true;
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return 0.0;
+        }
+        self.samples.iter().map(|&v| v as f64).sum::<f64>() / self.samples.len() as f64
+    }
+
+    /// Exact quantile (nearest-rank).
+    pub fn quantile(&mut self, q: f64) -> u64 {
+        if self.samples.is_empty() {
+            return 0;
+        }
+        self.ensure_sorted();
+        let rank = ((q.clamp(0.0, 1.0) * self.samples.len() as f64).ceil() as usize)
+            .clamp(1, self.samples.len());
+        self.samples[rank - 1]
+    }
+
+    /// `(value, cumulative_fraction)` points for CDF plotting, downsampled
+    /// to at most `points` entries.
+    pub fn cdf(&mut self, points: usize) -> Vec<(u64, f64)> {
+        if self.samples.is_empty() {
+            return Vec::new();
+        }
+        self.ensure_sorted();
+        let n = self.samples.len();
+        let step = (n / points.max(1)).max(1);
+        let mut out = Vec::with_capacity(n / step + 1);
+        let mut i = step - 1;
+        while i < n {
+            out.push((self.samples[i], (i + 1) as f64 / n as f64));
+            i += step;
+        }
+        if out.last().map(|&(v, _)| v) != Some(self.samples[n - 1]) {
+            out.push((self.samples[n - 1], 1.0));
+        }
+        out
+    }
+
+    pub fn merge(&mut self, other: &SampleSet) {
+        self.samples.extend_from_slice(&other.samples);
+        self.sorted = false;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn histogram_small_values_exact() {
+        let mut h = Histogram::new();
+        for v in [1u64, 2, 3, 3, 3, 10] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.min(), 1);
+        assert_eq!(h.max(), 10);
+        assert_eq!(h.quantile(0.5), 3);
+        assert!((h.mean() - 22.0 / 6.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn histogram_quantiles_within_relative_error() {
+        let mut h = Histogram::new();
+        let mut rng = Rng::new(1);
+        let mut exact = Vec::new();
+        for _ in 0..100_000 {
+            let v = (rng.exp(1_000_000.0)) as u64 + 1;
+            h.record(v);
+            exact.push(v);
+        }
+        exact.sort_unstable();
+        for q in [0.5, 0.9, 0.99, 0.999] {
+            let want = exact[((q * exact.len() as f64) as usize).min(exact.len() - 1)];
+            let got = h.quantile(q);
+            let rel = (got as f64 - want as f64).abs() / want as f64;
+            assert!(rel < 0.06, "q={q} got={got} want={want} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn histogram_merge_equals_combined() {
+        let mut rng = Rng::new(2);
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        let mut all = Histogram::new();
+        for i in 0..10_000 {
+            let v = rng.gen_range(1 << 20) + 1;
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            all.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        assert_eq!(a.quantile(0.99), all.quantile(0.99));
+        assert_eq!(a.max(), all.max());
+    }
+
+    #[test]
+    fn sampleset_exact_quantiles() {
+        let mut s = SampleSet::new();
+        for v in 1..=100u64 {
+            s.record(v);
+        }
+        assert_eq!(s.quantile(0.5), 50);
+        assert_eq!(s.quantile(0.99), 99);
+        assert_eq!(s.quantile(1.0), 100);
+        assert_eq!(s.quantile(0.0), 1);
+    }
+
+    #[test]
+    fn sampleset_cdf_monotone_ends_at_one() {
+        let mut s = SampleSet::new();
+        let mut rng = Rng::new(3);
+        for _ in 0..5_000 {
+            s.record(rng.gen_range(1_000_000));
+        }
+        let cdf = s.cdf(100);
+        assert!(!cdf.is_empty());
+        for w in cdf.windows(2) {
+            assert!(w[0].0 <= w[1].0);
+            assert!(w[0].1 <= w[1].1);
+        }
+        assert!((cdf.last().unwrap().1 - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_recorders_are_sane() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile(0.5), 0);
+        assert_eq!(h.mean(), 0.0);
+        let mut s = SampleSet::new();
+        assert_eq!(s.quantile(0.9), 0);
+        assert!(s.cdf(10).is_empty());
+    }
+}

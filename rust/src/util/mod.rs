@@ -1,0 +1,42 @@
+//! Foundation utilities: deterministic RNG, zipfian samplers, histograms,
+//! and small helpers. All hand-rolled — see DESIGN.md §3 dependency note.
+
+pub mod hist;
+pub mod rng;
+pub mod zipf;
+
+/// Format a nanosecond duration as a human-readable string.
+pub fn fmt_ns(ns: u64) -> String {
+    if ns >= 1_000_000_000 {
+        format!("{:.3}s", ns as f64 / 1e9)
+    } else if ns >= 1_000_000 {
+        format!("{:.3}ms", ns as f64 / 1e6)
+    } else if ns >= 1_000 {
+        format!("{:.3}us", ns as f64 / 1e3)
+    } else {
+        format!("{ns}ns")
+    }
+}
+
+/// Nanoseconds → milliseconds as f64 (the unit the paper's tables use).
+pub fn ns_to_ms(ns: u64) -> f64 {
+    ns as f64 / 1e6
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(5), "5ns");
+        assert_eq!(fmt_ns(1_500), "1.500us");
+        assert_eq!(fmt_ns(2_500_000), "2.500ms");
+        assert_eq!(fmt_ns(3_200_000_000), "3.200s");
+    }
+
+    #[test]
+    fn ns_to_ms_scale() {
+        assert!((ns_to_ms(72_500_000) - 72.5).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,257 @@
+//! Zipfian key-popularity distributions, YCSB-style.
+//!
+//! The paper's workloads (§8) are YCSB-generated with Zipf skew parameters
+//! 0.9, 0.95, 0.99 and 1.2. We implement the same two samplers YCSB uses:
+//!
+//! * [`Zipf`] — Gray et al.'s rejection-free incremental zipfian generator
+//!   (constant time per sample, no O(n) CDF table), returning ranks in
+//!   `[0, n)` where rank 0 is the most popular item.
+//! * [`ScrambledZipf`] — the zipfian ranks hashed (FNV-1a 64) across the
+//!   item space so hot items are spread over the whole keyspace instead of
+//!   clustering at its start — exactly YCSB's `ScrambledZipfianGenerator`.
+
+use super::rng::Rng;
+
+/// Gray et al. "Quickly generating billion-record synthetic databases"
+/// zipfian generator, as used by YCSB.
+#[derive(Clone, Debug)]
+pub struct Zipf {
+    n: u64,
+    theta: f64,
+    alpha: f64,
+    zetan: f64,
+    eta: f64,
+    zeta2theta: f64,
+}
+
+fn zeta(n: u64, theta: f64) -> f64 {
+    let mut sum = 0.0;
+    for i in 1..=n {
+        sum += 1.0 / (i as f64).powf(theta);
+    }
+    sum
+}
+
+impl Zipf {
+    /// Items `0..n`, skew `theta` (must be in `(0, 1) ∪ (1, ..)`; use
+    /// [`Zipf::uniform`] for no skew). `theta=1.0` is nudged slightly as the
+    /// closed form diverges there.
+    pub fn new(n: u64, theta: f64) -> Self {
+        assert!(n > 0);
+        let theta = if (theta - 1.0).abs() < 1e-9 { 1.0 + 1e-6 } else { theta };
+        let zetan = zeta(n, theta);
+        let zeta2theta = zeta(2, theta);
+        let alpha = 1.0 / (1.0 - theta);
+        let eta = (1.0 - (2.0 / n as f64).powf(1.0 - theta)) / (1.0 - zeta2theta / zetan);
+        Zipf { n, theta, alpha, zetan, eta, zeta2theta }
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    /// Sample a rank in `[0, n)`; rank 0 is the hottest.
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        let u = rng.next_f64();
+        let uz = u * self.zetan;
+        if uz < 1.0 {
+            return 0;
+        }
+        if uz < 1.0 + 0.5f64.powf(self.theta) {
+            return 1;
+        }
+        let rank = (self.n as f64 * (self.eta * u - self.eta + 1.0).powf(self.alpha)) as u64;
+        rank.min(self.n - 1)
+    }
+
+    /// Probability of rank `r` under the exact zipfian pmf (for tests).
+    pub fn pmf(&self, rank: u64) -> f64 {
+        1.0 / ((rank + 1) as f64).powf(self.theta) / self.zetan
+    }
+
+    #[allow(dead_code)]
+    fn zeta2(&self) -> f64 {
+        self.zeta2theta
+    }
+}
+
+/// Key-popularity distribution used by the workload generator.
+#[derive(Clone, Debug)]
+pub enum Popularity {
+    /// Uniform over `[0, n)`.
+    Uniform { n: u64 },
+    /// Scrambled zipfian over `[0, n)`.
+    Zipf(ScrambledZipf),
+}
+
+impl Popularity {
+    pub fn uniform(n: u64) -> Self {
+        Popularity::Uniform { n }
+    }
+
+    pub fn zipf(n: u64, theta: f64) -> Self {
+        Popularity::Zipf(ScrambledZipf::new(n, theta))
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        match self {
+            Popularity::Uniform { n } => rng.gen_range(*n),
+            Popularity::Zipf(z) => z.sample(rng),
+        }
+    }
+
+    pub fn n(&self) -> u64 {
+        match self {
+            Popularity::Uniform { n } => *n,
+            Popularity::Zipf(z) => z.zipf.n(),
+        }
+    }
+}
+
+/// YCSB `ScrambledZipfianGenerator`: zipfian ranks spread over the item
+/// space by FNV-1a hashing, so the hot set is not contiguous.
+#[derive(Clone, Debug)]
+pub struct ScrambledZipf {
+    zipf: Zipf,
+    n: u64,
+}
+
+pub fn fnv1a64(mut x: u64) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x1000_0000_01b3;
+    let mut h = OFFSET;
+    for _ in 0..8 {
+        h ^= x & 0xff;
+        h = h.wrapping_mul(PRIME);
+        x >>= 8;
+    }
+    h
+}
+
+impl ScrambledZipf {
+    pub fn new(n: u64, theta: f64) -> Self {
+        ScrambledZipf { zipf: Zipf::new(n, theta), n }
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> u64 {
+        let rank = self.zipf.sample(rng);
+        fnv1a64(rank) % self.n
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn freq(pop: &Popularity, samples: usize, seed: u64) -> Vec<u64> {
+        let mut rng = Rng::new(seed);
+        let mut counts = vec![0u64; pop.n() as usize];
+        for _ in 0..samples {
+            counts[pop.sample(&mut rng) as usize] += 1;
+        }
+        counts
+    }
+
+    #[test]
+    fn zipf_rank_zero_most_popular() {
+        let z = Zipf::new(1000, 0.99);
+        let mut rng = Rng::new(1);
+        let mut c0 = 0;
+        let mut c_mid = 0;
+        for _ in 0..100_000 {
+            let r = z.sample(&mut rng);
+            assert!(r < 1000);
+            if r == 0 {
+                c0 += 1;
+            }
+            if r == 500 {
+                c_mid += 1;
+            }
+        }
+        assert!(c0 > 50 * c_mid.max(1), "c0={c0} c_mid={c_mid}");
+    }
+
+    #[test]
+    fn zipf_matches_pmf_for_head_ranks() {
+        // Gray et al.'s generator (what YCSB uses) is exact for ranks 0 and
+        // 1 and an approximation beyond, so pin the head tightly and only
+        // require a monotone non-increasing trend for the next ranks.
+        let z = Zipf::new(100, 0.9);
+        let mut rng = Rng::new(2);
+        let n = 200_000;
+        let mut counts = vec![0u64; 100];
+        for _ in 0..n {
+            counts[z.sample(&mut rng) as usize] += 1;
+        }
+        for rank in 0..2 {
+            let got = counts[rank] as f64 / n as f64;
+            let want = z.pmf(rank as u64);
+            assert!(
+                (got - want).abs() / want < 0.1,
+                "rank {rank}: got {got}, want {want}"
+            );
+        }
+        for rank in 1..8 {
+            assert!(
+                counts[rank] as f64 <= counts[rank - 1] as f64 * 1.15,
+                "rank {rank} more popular than {}: {:?}",
+                rank - 1,
+                &counts[..8]
+            );
+        }
+    }
+
+    #[test]
+    fn higher_theta_more_skew() {
+        let mild = Zipf::new(1000, 0.9);
+        let hot = Zipf::new(1000, 1.2);
+        let mut rng = Rng::new(3);
+        let share = |z: &Zipf, rng: &mut Rng| {
+            let mut c0 = 0u64;
+            for _ in 0..50_000 {
+                if z.sample(rng) == 0 {
+                    c0 += 1;
+                }
+            }
+            c0
+        };
+        let s_mild = share(&mild, &mut rng);
+        let s_hot = share(&hot, &mut rng);
+        assert!(s_hot > s_mild, "hot={s_hot} mild={s_mild}");
+    }
+
+    #[test]
+    fn uniform_covers_evenly() {
+        let pop = Popularity::uniform(64);
+        let counts = freq(&pop, 64_000, 4);
+        let (lo, hi) = (
+            *counts.iter().min().unwrap() as f64,
+            *counts.iter().max().unwrap() as f64,
+        );
+        assert!(hi / lo < 1.5, "lo={lo} hi={hi}");
+    }
+
+    #[test]
+    fn scrambled_zipf_spreads_hot_keys() {
+        let pop = Popularity::zipf(1024, 1.2);
+        let counts = freq(&pop, 100_000, 5);
+        // Hot items exist...
+        let max = *counts.iter().max().unwrap();
+        assert!(max > 5_000);
+        // ...but the two hottest are not adjacent (scrambling worked).
+        let mut idx: Vec<usize> = (0..counts.len()).collect();
+        idx.sort_by_key(|&i| std::cmp::Reverse(counts[i]));
+        assert!((idx[0] as i64 - idx[1] as i64).abs() > 1, "top2={:?}", &idx[..2]);
+    }
+
+    #[test]
+    fn fnv_is_deterministic_and_spreads() {
+        assert_eq!(fnv1a64(0), fnv1a64(0));
+        assert_ne!(fnv1a64(0), fnv1a64(1));
+        let mut buckets = [0u32; 16];
+        for i in 0..16_000u64 {
+            buckets[(fnv1a64(i) % 16) as usize] += 1;
+        }
+        assert!(buckets.iter().all(|&b| b > 500), "{buckets:?}");
+    }
+}

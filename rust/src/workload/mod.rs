@@ -1,0 +1,186 @@
+//! YCSB-style workload generation (paper §8: "generated using YCSB basic
+//! database with 16 byte key size and 128 byte value size", uniform and
+//! Zipf 0.9/0.95/0.99/1.2 key popularity, read-only / write-only /
+//! scan-only / mixed operation mixes).
+
+use crate::types::{Key, Request};
+use crate::util::rng::Rng;
+use crate::util::zipf::Popularity;
+
+/// Workload description (mirrors `config::WorkloadConfig`, but owns the
+/// samplers).
+pub struct Generator {
+    pop: Popularity,
+    num_keys: u64,
+    value_size: usize,
+    write_ratio: f64,
+    scan_ratio: f64,
+    /// Average sub-ranges a scan spans, in units of the initial range
+    /// width `2^128 / num_ranges`.
+    scan_spans: usize,
+    range_width: u128,
+}
+
+impl Generator {
+    pub fn new(
+        num_keys: u64,
+        value_size: usize,
+        write_ratio: f64,
+        scan_ratio: f64,
+        zipf_theta: Option<f64>,
+        num_ranges: usize,
+        scan_spans: usize,
+    ) -> Generator {
+        assert!(num_keys > 0);
+        assert!(write_ratio + scan_ratio <= 1.0 + 1e-9);
+        let pop = match zipf_theta {
+            Some(theta) => Popularity::zipf(num_keys, theta),
+            None => Popularity::uniform(num_keys),
+        };
+        Generator {
+            pop,
+            num_keys,
+            value_size,
+            write_ratio,
+            scan_ratio,
+            scan_spans: scan_spans.max(1),
+            range_width: (u128::MAX / num_ranges as u128).saturating_add(1),
+        }
+    }
+
+    /// The `i`-th logical key, spread evenly across the whole key span so
+    /// the initial 128-range index table sees uniform coverage (YCSB's
+    /// hashed keyspace has the same property).
+    pub fn key_of(&self, i: u64) -> Key {
+        let step = u128::MAX / self.num_keys as u128;
+        Key(step * i as u128 + step / 2)
+    }
+
+    /// Deterministic expected value content for key `i` (verification).
+    pub fn value_of(&self, i: u64) -> Vec<u8> {
+        let mut v = vec![0u8; self.value_size];
+        let seed = i.to_le_bytes();
+        for (j, b) in v.iter_mut().enumerate() {
+            *b = seed[j % 8] ^ (j as u8);
+        }
+        v
+    }
+
+    /// All keys for the load phase.
+    pub fn load_keys(&self) -> impl Iterator<Item = (Key, Vec<u8>)> + '_ {
+        (0..self.num_keys).map(|i| (self.key_of(i), self.value_of(i)))
+    }
+
+    /// Sample the next operation.
+    pub fn next(&self, rng: &mut Rng) -> Request {
+        let i = self.pop.sample(rng);
+        let key = self.key_of(i);
+        let r = rng.next_f64();
+        if r < self.write_ratio {
+            Request::put(key, self.value_of(i))
+        } else if r < self.write_ratio + self.scan_ratio {
+            // Scan whose end lands `scan_spans` initial sub-ranges away on
+            // average (exercises the switch's split-and-recirculate path).
+            let spans = 1 + rng.gen_range(self.scan_spans as u64 * 2 - 1) as u128;
+            let end = Key(key.0.saturating_add(self.range_width * spans));
+            Request::range(key, end)
+        } else {
+            Request::get(key)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::types::OpCode;
+
+    fn gen(write: f64, scan: f64, theta: Option<f64>) -> Generator {
+        Generator::new(1000, 128, write, scan, theta, 128, 2)
+    }
+
+    #[test]
+    fn keys_are_stable_and_spread() {
+        let g = gen(0.0, 0.0, None);
+        assert_eq!(g.key_of(5), g.key_of(5));
+        // Keys cover all 16ths of the span.
+        let mut buckets = [false; 16];
+        for i in 0..1000 {
+            buckets[(g.key_of(i).0 >> 124) as usize] = true;
+        }
+        assert!(buckets.iter().all(|&b| b), "{buckets:?}");
+    }
+
+    #[test]
+    fn op_mix_matches_ratios() {
+        let g = gen(0.3, 0.1, None);
+        let mut rng = Rng::new(1);
+        let (mut w, mut s, mut r) = (0u32, 0u32, 0u32);
+        let n = 20_000;
+        for _ in 0..n {
+            match g.next(&mut rng).op {
+                OpCode::Put => w += 1,
+                OpCode::Range => s += 1,
+                OpCode::Get => r += 1,
+                OpCode::Del => unreachable!(),
+            }
+        }
+        assert!((w as f64 / n as f64 - 0.3).abs() < 0.02);
+        assert!((s as f64 / n as f64 - 0.1).abs() < 0.01);
+        assert!((r as f64 / n as f64 - 0.6).abs() < 0.02);
+    }
+
+    #[test]
+    fn read_only_workload_has_only_gets() {
+        let g = gen(0.0, 0.0, Some(0.99));
+        let mut rng = Rng::new(2);
+        for _ in 0..1000 {
+            assert_eq!(g.next(&mut rng).op, OpCode::Get);
+        }
+    }
+
+    #[test]
+    fn zipf_workload_is_skewed() {
+        let g = gen(0.0, 0.0, Some(1.2));
+        let mut rng = Rng::new(3);
+        let mut counts = std::collections::HashMap::new();
+        for _ in 0..20_000 {
+            *counts.entry(g.next(&mut rng).key).or_insert(0u32) += 1;
+        }
+        let max = counts.values().max().copied().unwrap();
+        assert!(max > 2_000, "hottest key should dominate: {max}");
+        // Uniform comparison: max should be near 20.
+        let gu = gen(0.0, 0.0, None);
+        let mut counts = std::collections::HashMap::new();
+        for _ in 0..20_000 {
+            *counts.entry(gu.next(&mut rng).key).or_insert(0u32) += 1;
+        }
+        let max_u = counts.values().max().copied().unwrap();
+        assert!(max_u < 100, "uniform max {max_u}");
+    }
+
+    #[test]
+    fn scans_span_requested_ranges() {
+        let g = gen(0.0, 1.0, None);
+        let mut rng = Rng::new(4);
+        for _ in 0..200 {
+            let req = g.next(&mut rng);
+            assert_eq!(req.op, OpCode::Range);
+            assert!(req.end_key > req.key);
+            if req.end_key.0 == u128::MAX {
+                continue; // clipped at the top of the key span
+            }
+            let spans = (req.end_key.0 - req.key.0) / g.range_width;
+            assert!((1..=4).contains(&spans), "spans={spans}");
+        }
+    }
+
+    #[test]
+    fn load_phase_covers_all_keys() {
+        let g = gen(0.5, 0.0, None);
+        let pairs: Vec<_> = g.load_keys().collect();
+        assert_eq!(pairs.len(), 1000);
+        assert_eq!(pairs[7].1, g.value_of(7));
+        assert_eq!(pairs[7].1.len(), 128);
+    }
+}

@@ -1,0 +1,100 @@
+//! Chain-replication consistency: after any run, all live replicas of a
+//! sub-range hold identical data (writes flowed head→tail); reads observe
+//! the data loaded for them (read-your-loads under read-only workloads).
+
+use turbokv::cluster::Cluster;
+use turbokv::config::{Config, Coordination};
+use turbokv::types::Key;
+
+fn base() -> Config {
+    let mut cfg = Config::default();
+    cfg.workload.num_keys = 3_000;
+    cfg.workload.ops_per_client = 300;
+    cfg.workload.write_ratio = 0.5;
+    cfg
+}
+
+/// All replicas of every sub-range hold identical pairs after the run.
+fn assert_replicas_converged(cl: &mut Cluster) {
+    for idx in 0..cl.dir.len() {
+        let (start, end) = cl.dir.bounds(idx);
+        let chain = cl.dir.chain(idx).to_vec();
+        let reference = cl.nodes[chain[0]].extract_range(start, end);
+        for &replica in &chain[1..] {
+            let got = cl.nodes[replica].extract_range(start, end);
+            assert_eq!(
+                got.len(),
+                reference.len(),
+                "range {idx}: node {replica} vs head {}",
+                chain[0]
+            );
+            for ((k1, v1), (k2, v2)) in reference.iter().zip(&got) {
+                assert_eq!(k1, k2, "range {idx} diverged at key");
+                assert_eq!(v1, v2, "range {idx} diverged at value for {k1:?}");
+            }
+        }
+    }
+}
+
+#[test]
+fn replicas_converge_in_switch_mode() {
+    let mut cfg = base();
+    cfg.coordination = Coordination::InSwitch;
+    let mut cl = Cluster::build(cfg);
+    cl.run();
+    assert_replicas_converged(&mut cl);
+}
+
+#[test]
+fn replicas_converge_client_driven() {
+    let mut cfg = base();
+    cfg.coordination = Coordination::ClientDriven;
+    let mut cl = Cluster::build(cfg);
+    cl.run();
+    assert_replicas_converged(&mut cl);
+}
+
+#[test]
+fn replicas_converge_server_driven() {
+    let mut cfg = base();
+    cfg.coordination = Coordination::ServerDriven;
+    let mut cl = Cluster::build(cfg);
+    cl.run();
+    assert_replicas_converged(&mut cl);
+}
+
+#[test]
+fn replicas_converge_after_migration() {
+    let mut cfg = base();
+    cfg.workload.zipf_theta = Some(1.2);
+    cfg.workload.ops_per_client = 1_500;
+    cfg.controller.migration = true;
+    cfg.controller.epoch_ns = 800_000_000; // enough samples per epoch
+    cfg.controller.overload_factor = 1.3;
+    let mut cl = Cluster::build(cfg);
+    let stats = cl.run();
+    assert!(stats.migrations > 0, "expected migrations under heavy skew");
+    assert_replicas_converged(&mut cl);
+}
+
+#[test]
+fn loaded_data_lands_on_exactly_the_chain() {
+    // After the load phase, each key exists on its chain's nodes and
+    // nowhere else.
+    let cfg = base();
+    let mut cl = Cluster::build(cfg);
+    let probe = Key(u128::MAX / 2);
+    let idx = cl.dir.lookup(probe);
+    let (start, end) = cl.dir.bounds(idx);
+    let chain = cl.dir.chain(idx).to_vec();
+    let on_chain = cl.nodes[chain[0]].extract_range(start, end).len();
+    assert!(on_chain > 0, "load phase populated the range");
+    for n in 0..cl.nodes.len() {
+        let count = cl.nodes[n].extract_range(start, end).len();
+        if chain.contains(&n) {
+            assert_eq!(count, on_chain, "replica {n} complete");
+        } else {
+            assert_eq!(count, 0, "node {n} must not hold range {idx}");
+        }
+    }
+}

@@ -1,0 +1,126 @@
+//! End-to-end integration: the full paper testbed under every coordination
+//! mode, both partitioning schemes, and (when artifacts are present) the
+//! XLA dataplane — all layers composed.
+
+use turbokv::cluster::Cluster;
+use turbokv::config::{Config, Coordination, DataplaneMode, Partitioning};
+use turbokv::types::OpCode;
+
+fn base() -> Config {
+    let mut cfg = Config::default();
+    cfg.workload.num_keys = 4_000;
+    cfg.workload.ops_per_client = 250;
+    cfg.workload.concurrency = 6;
+    cfg
+}
+
+#[test]
+fn mixed_workload_all_modes_complete_and_verify() {
+    for mode in Coordination::ALL {
+        let mut cfg = base();
+        cfg.coordination = mode;
+        cfg.workload.write_ratio = 0.25;
+        cfg.workload.scan_ratio = 0.15;
+        cfg.workload.zipf_theta = Some(0.95);
+        let mut cl = Cluster::build(cfg);
+        let stats = cl.run();
+        assert_eq!(cl.metrics.completed(), 1_000, "mode {mode:?}");
+        assert_eq!(cl.metrics.errors, 0, "mode {mode:?}");
+        assert_eq!(stats.switch_drops, 0, "mode {mode:?}");
+        // All three op classes measured.
+        for op in [OpCode::Get, OpCode::Put, OpCode::Range] {
+            assert!(cl.metrics.count_for(op) > 0, "mode {mode:?} missing {op:?}");
+        }
+    }
+}
+
+#[test]
+fn xla_dataplane_run_matches_rust_dataplane_results() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts/ missing — run `make artifacts`");
+        return;
+    }
+    let run = |mode: DataplaneMode| {
+        let mut cfg = base();
+        cfg.dataplane.mode = mode;
+        cfg.workload.zipf_theta = Some(1.2);
+        let mut cl = Cluster::build_auto(cfg).unwrap();
+        cl.verify_reads = true;
+        cl.run();
+        assert_eq!(cl.verify_failures, 0);
+        // The DES is deterministic and both engines compute identical
+        // routing, so throughput must match exactly.
+        (cl.metrics.completed(), cl.metrics.throughput())
+    };
+    let rust = run(DataplaneMode::Rust);
+    let xla = run(DataplaneMode::Xla);
+    assert_eq!(rust, xla, "identical routing => identical simulation");
+}
+
+#[test]
+fn hash_partitioning_end_to_end() {
+    for mode in Coordination::ALL {
+        let mut cfg = base();
+        cfg.coordination = mode;
+        cfg.cluster.partitioning = Partitioning::Hash;
+        cfg.workload.write_ratio = 0.3;
+        let mut cl = Cluster::build(cfg);
+        cl.verify_reads = true;
+        cl.run();
+        assert_eq!(cl.metrics.completed(), 1_000, "mode {mode:?}");
+    }
+}
+
+#[test]
+fn paper_headline_ordering_throughput() {
+    // Read-only zipf: in-switch ≈ client-driven, both beat server-driven.
+    let mut results = std::collections::BTreeMap::new();
+    for mode in Coordination::ALL {
+        let mut cfg = base();
+        cfg.coordination = mode;
+        cfg.workload.ops_per_client = 800;
+        cfg.workload.zipf_theta = Some(0.99);
+        let mut cl = Cluster::build(cfg);
+        cl.run();
+        results.insert(mode.name(), cl.metrics.throughput());
+    }
+    let (t, c, s) = (
+        results["in-switch"],
+        results["client-driven"],
+        results["server-driven"],
+    );
+    assert!(t > s, "in-switch {t} vs server {s}");
+    assert!(c > s);
+    assert!((t - c).abs() / c < 0.10, "in-switch within 10% of ideal client-driven");
+}
+
+#[test]
+fn scan_results_are_correct_and_sorted() {
+    // Single client, scan-only; every reply must cover the requested range
+    // with the exact loaded pairs.
+    let mut cfg = base();
+    cfg.cluster.clients = 1;
+    cfg.workload.ops_per_client = 60;
+    cfg.workload.scan_ratio = 1.0;
+    cfg.workload.scan_spans = 3;
+    let mut cl = Cluster::build(cfg);
+    cl.run();
+    assert_eq!(cl.metrics.count_for(OpCode::Range), 60);
+    // The switch split multi-range scans (recirculations happened).
+    let recirc: u64 = cl.switches.iter().map(|s| s.stats.recirculated).sum();
+    assert!(recirc > 0, "multi-sub-range scans must recirculate");
+}
+
+#[test]
+fn larger_cluster_smoke() {
+    let mut cfg = base();
+    cfg.cluster.racks = 8;
+    cfg.cluster.nodes_per_rack = 8;
+    cfg.cluster.clients = 8;
+    cfg.cluster.num_ranges = 256;
+    cfg.workload.ops_per_client = 120;
+    let mut cl = Cluster::build(cfg);
+    let stats = cl.run();
+    assert_eq!(cl.metrics.completed(), 8 * 120);
+    assert_eq!(stats.switch_drops, 0);
+}

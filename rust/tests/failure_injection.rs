@@ -1,0 +1,89 @@
+//! Failure injection (paper §5.2): storage-node and switch failures, chain
+//! repair, re-replication, and the (r-1)-failures availability bound.
+
+use turbokv::cluster::Cluster;
+use turbokv::config::{Config, Coordination};
+
+fn base() -> Config {
+    let mut cfg = Config::default();
+    cfg.coordination = Coordination::InSwitch;
+    cfg.workload.num_keys = 3_000;
+    cfg.workload.ops_per_client = 400;
+    cfg.controller.epoch_ns = 250_000_000;
+    cfg
+}
+
+#[test]
+fn single_node_failure_fully_repairs() {
+    let mut cl = Cluster::build(base());
+    cl.timeout_ns = 1_500_000_000;
+    cl.schedule_node_failure(7, 500_000_000);
+    let stats = cl.run();
+    assert_eq!(cl.metrics.completed(), 1_600);
+    assert_eq!(stats.repairs, 24, "node 7 was in 24 chains");
+    cl.dir.check_invariants().unwrap();
+    for idx in 0..cl.dir.len() {
+        assert_eq!(cl.dir.chain(idx).len(), 3, "full replication restored");
+        assert!(!cl.dir.chain(idx).contains(&7));
+    }
+    // Repaired replicas hold the data.
+    let mut checked = 0;
+    for idx in 0..cl.dir.len() {
+        let (start, end) = cl.dir.bounds(idx);
+        let chain = cl.dir.chain(idx).to_vec();
+        let head_pairs = cl.nodes[chain[0]].extract_range(start, end).len();
+        let tail_pairs = cl.nodes[*chain.last().unwrap()].extract_range(start, end).len();
+        assert_eq!(head_pairs, tail_pairs, "range {idx}");
+        checked += 1;
+    }
+    assert_eq!(checked, 128);
+}
+
+#[test]
+fn r_minus_one_simultaneous_failures_survive() {
+    // r=3 sustains 2 failures (§4.1.2).
+    let mut cl = Cluster::build(base());
+    cl.timeout_ns = 1_500_000_000;
+    cl.schedule_node_failure(0, 400_000_000);
+    cl.schedule_node_failure(1, 450_000_000);
+    let stats = cl.run();
+    assert_eq!(cl.metrics.completed(), 1_600, "all requests served despite 2 failures");
+    assert!(stats.repairs >= 40, "repairs={}", stats.repairs);
+    for idx in 0..cl.dir.len() {
+        let chain = cl.dir.chain(idx);
+        assert!(!chain.contains(&0) && !chain.contains(&1));
+        assert_eq!(chain.len(), 3);
+    }
+}
+
+#[test]
+fn switch_failure_fails_over_the_rack() {
+    let mut cfg = base();
+    cfg.workload.ops_per_client = 500;
+    let mut cl = Cluster::build(cfg);
+    cl.timeout_ns = 1_500_000_000;
+    // ToR of rack 2 dies: nodes 8..12 become unreachable (§5.2).
+    let tor2 = cl.topo.tor_of_rack(2);
+    cl.schedule_switch_failure(tor2, 600_000_000);
+    let stats = cl.run();
+    assert_eq!(cl.metrics.completed(), 2_000);
+    assert!(stats.repairs > 0);
+    for idx in 0..cl.dir.len() {
+        for &n in cl.dir.chain(idx) {
+            assert!(!(8..12).contains(&n), "rack-2 node {n} still in chain {idx}");
+        }
+    }
+    assert!(stats.retries > 0, "dropped packets must have retried");
+}
+
+#[test]
+fn failures_then_recovery_metrics_are_sane() {
+    let mut cl = Cluster::build(base());
+    cl.timeout_ns = 1_000_000_000;
+    cl.schedule_node_failure(5, 300_000_000);
+    let stats = cl.run();
+    // Retried requests show up as errors but still complete.
+    assert_eq!(cl.metrics.completed(), 1_600);
+    assert_eq!(stats.retries, cl.metrics.errors);
+    assert!(cl.metrics.throughput() > 0.0);
+}

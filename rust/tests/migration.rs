@@ -1,0 +1,130 @@
+//! Controller load balancing (paper §5.1): statistics-driven hot-range
+//! migration — data moves, tables update everywhere, traffic follows.
+
+use turbokv::cluster::Cluster;
+use turbokv::config::{Config, Coordination};
+use turbokv::net::topology::SwitchRole;
+
+fn skewed_cfg() -> Config {
+    let mut cfg = Config::default();
+    cfg.coordination = Coordination::InSwitch;
+    cfg.workload.num_keys = 5_000;
+    cfg.workload.ops_per_client = 1_200;
+    cfg.workload.zipf_theta = Some(1.2);
+    cfg.controller.migration = true;
+    cfg.controller.epoch_ns = 300_000_000;
+    cfg.controller.overload_factor = 1.3;
+    cfg
+}
+
+#[test]
+fn migrations_move_data_and_update_every_switch() {
+    let mut cl = Cluster::build(skewed_cfg());
+    let before = cl.dir.clone();
+    let stats = cl.run();
+    assert!(stats.migrations > 0);
+    assert!(cl.dir.version > before.version);
+    // Every switch's table mirrors the directory after migration pushes.
+    let migrated: Vec<usize> = (0..cl.dir.len())
+        .filter(|&i| cl.dir.chain(i) != before.chain(i))
+        .collect();
+    assert!(!migrated.is_empty());
+    for sw in &cl.switches {
+        for &idx in &migrated {
+            assert_eq!(
+                sw.table.chain_nodes(idx),
+                cl.dir.chain(idx),
+                "switch {} table out of sync for range {idx}",
+                sw.id
+            );
+        }
+    }
+    // The vacated node no longer holds the migrated ranges' data.
+    for &idx in &migrated {
+        let (start, end) = cl.dir.bounds(idx);
+        let old_chain = before.chain(idx);
+        let new_chain = cl.dir.chain(idx);
+        for &old_node in old_chain {
+            if !new_chain.contains(&old_node) {
+                assert!(
+                    cl.nodes[old_node].extract_range(start, end).is_empty(),
+                    "old copy on node {old_node} not removed for range {idx}"
+                );
+            }
+        }
+        for &new_node in new_chain {
+            assert!(
+                !cl.nodes[new_node].extract_range(start, end).is_empty(),
+                "new replica {new_node} missing data for range {idx}"
+            );
+        }
+    }
+}
+
+#[test]
+fn statistics_reports_reflect_traffic() {
+    let mut cfg = skewed_cfg();
+    cfg.controller.migration = false; // observe stats without rebalancing
+    let mut cl = Cluster::build(cfg);
+    cl.run();
+    // Counters were collected at least once and show skew.
+    assert!(cl.controller.epochs > 0);
+    let total: u64 = cl.controller.last_read.iter().sum::<u64>()
+        + cl.controller.last_write.iter().sum::<u64>();
+    assert!(total > 0, "controller saw traffic");
+    let max = *cl.controller.last_read.iter().max().unwrap();
+    let mean = cl.controller.last_read.iter().sum::<u64>() / cl.controller.last_read.len() as u64;
+    assert!(max > 3 * mean.max(1), "zipf-1.2 must show hot ranges: max={max} mean={mean}");
+}
+
+#[test]
+fn hot_range_splitting_divides_and_stays_consistent() {
+    let mut cfg = skewed_cfg();
+    cfg.controller.split_hot = true;
+    cfg.workload.ops_per_client = 1_500;
+    cfg.controller.epoch_ns = 800_000_000;
+    let mut cl = Cluster::build(cfg);
+    cl.run();
+    assert!(cl.controller.splits > 0, "zipf-1.2 must divide hot sub-ranges");
+    assert!(cl.dir.len() > 128, "directory grew by the splits");
+    cl.dir.check_invariants().unwrap();
+    // Every switch table mirrors the grown directory record-for-record.
+    for sw in &cl.switches {
+        assert_eq!(sw.table.len(), cl.dir.len(), "switch {}", sw.id);
+        for idx in 0..cl.dir.len() {
+            assert_eq!(sw.table.chain_nodes(idx), cl.dir.chain(idx));
+            assert_eq!(sw.table.bounds(idx), cl.dir.bounds(idx));
+        }
+    }
+    // Split points stayed prefix-aligned (XLA-compatible invariant).
+    for r in cl.dir.ranges() {
+        assert!(r.start.is_prefix_aligned(), "{:?}", r.start);
+    }
+}
+
+#[test]
+fn uniform_workload_triggers_no_migration() {
+    let mut cfg = skewed_cfg();
+    cfg.workload.zipf_theta = None;
+    let mut cl = Cluster::build(cfg);
+    let stats = cl.run();
+    assert_eq!(stats.migrations, 0, "balanced load must not migrate");
+}
+
+#[test]
+fn tor_counters_drain_each_epoch() {
+    let mut cl = Cluster::build(skewed_cfg());
+    cl.run();
+    for sw in &cl.switches {
+        if matches!(sw.role, SwitchRole::Tor { .. }) {
+            // After the final epoch the counters were reset; only requests
+            // arriving after it remain.
+            let (read, write) = sw.registers.counters();
+            let residual: u64 = read.iter().sum::<u64>() + write.iter().sum::<u64>();
+            assert!(
+                residual < 4 * 1_200,
+                "counters should drain at epochs: residual={residual}"
+            );
+        }
+    }
+}
