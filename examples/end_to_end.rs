@@ -18,10 +18,15 @@ use turbokv::config::{Config, Coordination, DataplaneMode};
 use turbokv::types::OpCode;
 
 fn main() -> anyhow::Result<()> {
-    let have_artifacts = std::path::Path::new("artifacts/manifest.json").exists();
+    let have_artifacts =
+        cfg!(feature = "pjrt") && std::path::Path::new("artifacts/manifest.json").exists();
     println!(
         "dataplane: {}",
-        if have_artifacts { "xla (AOT Pallas artifacts via PJRT)" } else { "rust (artifacts/ missing)" }
+        if have_artifacts {
+            "xla (AOT Pallas artifacts via PJRT)"
+        } else {
+            "rust (pjrt feature off or artifacts/ missing)"
+        }
     );
 
     let mut rows = Vec::new();

@@ -3,12 +3,8 @@
 //! integration point; interpret-mode Pallas on CPU is not a TPU proxy
 //! (DESIGN.md §6), so the interesting rust-side numbers are the reference
 //! path's throughput and the PJRT call overhead.
-use std::rc::Rc;
-
 use turbokv::experiments::benchkit::Bench;
 use turbokv::partition::Directory;
-use turbokv::runtime::xla_lookup::XlaLookup;
-use turbokv::runtime::Runtime;
 use turbokv::switch::{DataplaneLookup, MatchActionTable, RegisterArrays, RustLookup};
 use turbokv::types::Key;
 use turbokv::util::rng::Rng;
@@ -32,6 +28,15 @@ fn main() {
         println!("{}", b.report_throughput(batch as f64));
     }
 
+    xla_section(&table, &mut rng);
+}
+
+#[cfg(feature = "pjrt")]
+fn xla_section(table: &MatchActionTable, rng: &mut Rng) {
+    use std::rc::Rc;
+    use turbokv::runtime::xla_lookup::XlaLookup;
+    use turbokv::runtime::Runtime;
+
     match Runtime::load("artifacts") {
         Ok(rt) => {
             let rt = Rc::new(rt);
@@ -42,11 +47,16 @@ fn main() {
                 regs.resize_counters(table.len());
                 let mut xla = XlaLookup::new(rt.clone());
                 let b = Bench::run(&format!("lookup/xla/batch{batch}"), 5, 30, || {
-                    std::hint::black_box(xla.lookup_batch(&table, &mut regs, &mvs, &writes));
+                    std::hint::black_box(xla.lookup_batch(table, &mut regs, &mvs, &writes));
                 });
                 println!("{}", b.report_throughput(batch as f64));
             }
         }
         Err(e) => println!("(xla path skipped: {e:#}; run `make artifacts`)"),
     }
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn xla_section(_table: &MatchActionTable, _rng: &mut Rng) {
+    println!("(xla path skipped: built without the `pjrt` feature)");
 }

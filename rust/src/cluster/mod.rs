@@ -121,9 +121,13 @@ impl Cluster {
 
     /// Build honoring `cfg.dataplane.mode`: `xla` loads the AOT artifacts
     /// and runs the switch lookup + controller estimate through PJRT.
+    /// Without the `pjrt` feature (or without `artifacts/manifest.json`)
+    /// the XLA mode is a clear error, never a compile failure — use the
+    /// default `rust` mode for PJRT-free builds.
     pub fn build_auto(cfg: Config) -> anyhow::Result<Cluster> {
         match cfg.dataplane.mode {
             crate::config::DataplaneMode::Rust => Ok(Self::build(cfg)),
+            #[cfg(feature = "pjrt")]
             crate::config::DataplaneMode::Xla => {
                 let rt = std::rc::Rc::new(crate::runtime::Runtime::load(
                     &cfg.dataplane.artifacts_dir,
@@ -134,6 +138,12 @@ impl Cluster {
                     Box::new(crate::runtime::xla_lookup::XlaEstimator::new(rt)),
                 ))
             }
+            #[cfg(not(feature = "pjrt"))]
+            crate::config::DataplaneMode::Xla => anyhow::bail!(
+                "dataplane.mode=xla, but turbokv was built without the `pjrt` feature; \
+                 rebuild with `cargo build --features pjrt` (after `make artifacts`) \
+                 or use --dataplane.mode=rust"
+            ),
         }
     }
 
@@ -193,7 +203,7 @@ impl Cluster {
                 ip: topo.client_ip(c),
                 outstanding: BTreeMap::new(),
                 issued: 0,
-                rng: Rng::new(cfg.workload.seed ^ (c as u64 + 1) * 0x9E37),
+                rng: Rng::new(cfg.workload.seed ^ ((c as u64 + 1) * 0x9E37)),
             })
             .collect();
 
@@ -890,6 +900,23 @@ mod tests {
         assert!(server > turbokv, "server {server} vs turbokv {turbokv}");
         assert!(server > client);
         assert!(turbokv < server * 0.95, "in-switch should clearly beat server-driven");
+    }
+
+    #[test]
+    fn build_auto_xla_without_feature_or_artifacts_is_clear_error() {
+        let mut cfg = small_cfg(Coordination::InSwitch);
+        cfg.dataplane.mode = crate::config::DataplaneMode::Xla;
+        cfg.dataplane.artifacts_dir = "/nonexistent-artifacts".into();
+        // Without the `pjrt` feature: feature error. With it: the missing
+        // artifacts directory errors. Either way: an error, not a panic.
+        let Err(err) = Cluster::build_auto(cfg) else {
+            panic!("xla mode must fail without pjrt/artifacts")
+        };
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("pjrt") || msg.contains("artifacts"),
+            "unhelpful error: {msg}"
+        );
     }
 
     #[test]

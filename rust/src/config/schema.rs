@@ -10,9 +10,10 @@ use super::value::{parse, Value};
 use anyhow::{bail, Context, Result};
 
 /// How clients' requests find the storage node holding the data (paper §1).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Default)]
 pub enum Coordination {
     /// TurboKV: switches hold the directory and route by key (§4).
+    #[default]
     InSwitch,
     /// Ideal client-driven: client holds a fresh directory, sends directly.
     ClientDriven,
@@ -249,12 +250,6 @@ pub struct Config {
     pub controller: ControllerConfig,
     pub dataplane: DataplaneConfig,
     pub coordination: Coordination,
-}
-
-impl Default for Coordination {
-    fn default() -> Self {
-        Coordination::InSwitch
-    }
 }
 
 macro_rules! ovr {

@@ -18,12 +18,21 @@ pub enum Value {
     Table(BTreeMap<String, Value>),
 }
 
-#[derive(Debug, thiserror::Error)]
-#[error("config parse error at line {line}: {msg}")]
+/// Error with the 1-based line number it occurred on. Hand-implemented
+/// (`thiserror` is unreachable offline — DESIGN.md §3 dependency note).
+#[derive(Debug)]
 pub struct ParseError {
     pub line: usize,
     pub msg: String,
 }
+
+impl fmt::Display for ParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 impl Value {
     pub fn as_str(&self) -> Option<&str> {

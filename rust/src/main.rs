@@ -117,20 +117,11 @@ fn cmd_exp(args: &Args) -> Result<()> {
 }
 
 fn cmd_smoke(args: &Args) -> Result<()> {
-    println!("{}", turbokv::runtime::pjrt_smoke()?);
     let cfg = args.to_config()?;
-    match turbokv::runtime::Runtime::load(&cfg.dataplane.artifacts_dir) {
-        Ok(rt) => {
-            println!(
-                "artifacts OK: batch={} ranges={} nodes={} ({} / {})",
-                rt.manifest.batch,
-                rt.manifest.num_ranges,
-                rt.manifest.num_nodes,
-                rt.dataplane.name,
-                rt.loadbalance.name,
-            );
-        }
-        Err(e) => println!("artifacts missing ({e:#}); run `make artifacts`"),
+    let (report, ok) = turbokv::runtime::smoke_report(&cfg.dataplane.artifacts_dir);
+    print!("{report}");
+    if !ok {
+        bail!("smoke check failed (see report above)");
     }
     Ok(())
 }

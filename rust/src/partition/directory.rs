@@ -101,24 +101,23 @@ impl Directory {
             .copied()
     }
 
-    /// Replace a chain (controller reconfiguration).
+    /// Replace a chain (controller reconfiguration). Validation is the
+    /// shared [`crate::util::validate_chain`] — the same check the switch
+    /// table enforces, so the two structures cannot diverge.
     pub fn set_chain(&mut self, idx: usize, chain: Vec<NodeId>) {
-        assert!(!chain.is_empty(), "empty chain");
-        let mut uniq = chain.clone();
-        uniq.sort_unstable();
-        uniq.dedup();
-        assert_eq!(uniq.len(), chain.len(), "duplicate node in chain");
+        crate::util::validate_chain(&chain);
         self.ranges[idx].chain = chain;
         self.version += 1;
     }
 
     /// Split sub-range `idx` at key `at` (the new sub-range starts at
-    /// `at`), giving the upper half `upper_chain`. Returns the new range's
-    /// index. Mirrors §4.1.1's capacity-driven division and §5.1's
-    /// hot-range splitting.
+    /// `at`), giving the upper half `upper_chain` (validated like
+    /// [`Directory::set_chain`]). Returns the new range's index. Mirrors
+    /// §4.1.1's capacity-driven division and §5.1's hot-range splitting.
     pub fn split(&mut self, idx: usize, at: Key, upper_chain: Vec<NodeId>) -> usize {
         let (start, end) = self.bounds(idx);
         assert!(start < at && at <= end, "split point outside range");
+        crate::util::validate_chain(&upper_chain);
         self.ranges.insert(idx + 1, SubRange { start: at, chain: upper_chain });
         self.version += 1;
         idx + 1
@@ -188,14 +187,8 @@ impl Directory {
             }
         }
         for (i, r) in self.ranges.iter().enumerate() {
-            if r.chain.is_empty() {
-                return Err(format!("range {i} has empty chain"));
-            }
-            let mut uniq = r.chain.clone();
-            uniq.sort_unstable();
-            uniq.dedup();
-            if uniq.len() != r.chain.len() {
-                return Err(format!("range {i} has duplicate replicas"));
+            if let Some(violation) = crate::util::chain_violation(&r.chain) {
+                return Err(format!("range {i}: {violation}"));
             }
         }
         Ok(())
@@ -291,6 +284,63 @@ mod tests {
     }
 
     #[test]
+    #[should_panic(expected = "duplicate node in chain")]
+    fn split_rejects_duplicate_chain() {
+        let mut d = paper_dir();
+        let (_, end) = d.bounds(0);
+        d.split(0, Key(end.0 / 2 + 1), vec![1, 1, 2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate node in chain")]
+    fn set_chain_rejects_duplicates() {
+        let mut d = paper_dir();
+        d.set_chain(0, vec![3, 3, 4]);
+    }
+
+    #[test]
+    fn split_at_start_next_and_end() {
+        // Smallest legal split point: start.next(). The lower sub-range
+        // shrinks to the single key `start`.
+        let mut d = paper_dir();
+        let (start, end) = d.bounds(4);
+        let new_idx = d.split(4, start.next(), vec![0, 1, 2]);
+        assert_eq!(d.bounds(4), (start, start));
+        assert_eq!(d.bounds(new_idx), (start.next(), end));
+        assert_eq!(d.lookup(start), 4);
+        assert_eq!(d.lookup(start.next()), new_idx);
+        d.check_invariants().unwrap();
+
+        // Largest legal split point: end. The upper sub-range is exactly
+        // the single key `end`; `bounds`' `next.start.0 - 1` arithmetic
+        // must give the lower half [start, end-1] without off-by-one.
+        let mut d = paper_dir();
+        let (start, end) = d.bounds(7);
+        let new_idx = d.split(7, end, vec![0, 1, 2]);
+        assert_eq!(d.bounds(7), (start, Key(end.0 - 1)));
+        assert_eq!(d.bounds(new_idx), (end, end));
+        assert_eq!(d.lookup(Key(end.0 - 1)), 7);
+        assert_eq!(d.lookup(end), new_idx);
+        d.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn split_last_range_at_key_max() {
+        // The final sub-range ends at Key::MAX with no successor record;
+        // splitting exactly there must not underflow and must route MAX to
+        // the new single-key range.
+        let mut d = paper_dir();
+        let last = d.len() - 1;
+        let (start, _) = d.bounds(last);
+        let new_idx = d.split(last, Key::MAX, vec![0, 1, 2]);
+        assert_eq!(d.bounds(last), (start, Key(u128::MAX - 1)));
+        assert_eq!(d.bounds(new_idx), (Key::MAX, Key::MAX));
+        assert_eq!(d.lookup(Key::MAX), new_idx);
+        assert_eq!(d.lookup(Key(u128::MAX - 1)), last);
+        d.check_invariants().unwrap();
+    }
+
+    #[test]
     fn remove_node_shortens_chains() {
         let mut d = paper_dir();
         let affected = d.remove_node(7);
@@ -352,7 +402,7 @@ mod tests {
                     d.split(idx, key, d.chain(idx).to_vec());
                 }
             }
-            d.check_invariants().map_err(|e| e)?;
+            d.check_invariants()?;
             for &p in probes {
                 let key = Key(p);
                 let idx = d.lookup(key);

@@ -8,6 +8,7 @@
 //! run time.
 
 pub mod json;
+#[cfg(feature = "pjrt")]
 pub mod xla_lookup;
 
 use std::path::{Path, PathBuf};
@@ -58,12 +59,14 @@ impl Manifest {
 }
 
 /// A compiled artifact ready to execute on the PJRT CPU client.
+#[cfg(feature = "pjrt")]
 pub struct Artifact {
     exe: xla::PjRtLoadedExecutable,
     pub name: String,
 }
 
 /// Shared PJRT client + the compiled artifacts.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     #[allow(dead_code)]
     client: xla::PjRtClient,
@@ -72,6 +75,7 @@ pub struct Runtime {
     pub loadbalance: Artifact,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Construct the CPU PJRT client and compile both artifacts.
     pub fn load(artifacts_dir: &str) -> Result<Runtime> {
@@ -94,6 +98,7 @@ impl Runtime {
     }
 }
 
+#[cfg(feature = "pjrt")]
 impl Artifact {
     /// Execute with the given input literals; returns the flattened tuple
     /// elements (aot.py lowers with `return_tuple=True`).
@@ -104,6 +109,7 @@ impl Artifact {
 }
 
 /// Smoke check that the PJRT CPU client can be constructed.
+#[cfg(feature = "pjrt")]
 pub fn pjrt_smoke() -> Result<String> {
     let client = xla::PjRtClient::cpu()?;
     Ok(format!(
@@ -111,6 +117,68 @@ pub fn pjrt_smoke() -> Result<String> {
         client.platform_name(),
         client.device_count()
     ))
+}
+
+/// Without the `pjrt` feature there is no PJRT client at all; callers get
+/// a clear error instead of a compile failure.
+#[cfg(not(feature = "pjrt"))]
+pub fn pjrt_smoke() -> Result<String> {
+    anyhow::bail!(
+        "turbokv was built without the `pjrt` feature; \
+         rebuild with `cargo build --features pjrt` to execute XLA artifacts"
+    )
+}
+
+/// Human-readable runtime status for `turbokv smoke`, meaningful under
+/// both feature configurations. Returns the rendered report and whether
+/// the full PJRT-runtime + artifacts check passed — callers gating on
+/// smoke (scripts, CI) must treat `ok == false` as a failure.
+pub fn smoke_report(artifacts_dir: &str) -> (String, bool) {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    let mut ok = true;
+    match pjrt_smoke() {
+        Ok(info) => {
+            let _ = writeln!(out, "pjrt: {info}");
+        }
+        Err(e) => {
+            ok = false;
+            let _ = writeln!(out, "pjrt unavailable: {e:#}");
+        }
+    }
+    #[cfg(feature = "pjrt")]
+    match Runtime::load(artifacts_dir) {
+        Ok(rt) => {
+            let _ = writeln!(
+                out,
+                "artifacts OK: batch={} ranges={} nodes={} ({} / {})",
+                rt.manifest.batch,
+                rt.manifest.num_ranges,
+                rt.manifest.num_nodes,
+                rt.dataplane.name,
+                rt.loadbalance.name,
+            );
+        }
+        Err(e) => {
+            ok = false;
+            let _ = writeln!(out, "artifacts missing ({e:#}); run `make artifacts`");
+        }
+    }
+    #[cfg(not(feature = "pjrt"))]
+    match Manifest::load(artifacts_dir) {
+        Ok(m) => {
+            let _ = writeln!(
+                out,
+                "manifest OK: batch={} ranges={} nodes={} \
+                 (execution requires the `pjrt` feature)",
+                m.batch, m.num_ranges, m.num_nodes,
+            );
+        }
+        Err(e) => {
+            let _ = writeln!(out, "artifacts missing ({e:#})");
+        }
+    }
+    (out, ok)
 }
 
 #[cfg(test)]

@@ -29,6 +29,9 @@ impl ChainAction {
     pub fn len(&self) -> usize {
         self.chain.len()
     }
+    pub fn is_empty(&self) -> bool {
+        self.chain.is_empty()
+    }
 }
 
 /// One table record.
@@ -99,17 +102,23 @@ impl MatchActionTable {
     }
 
     /// Control plane: replace one record's chain (migration, repair).
+    /// Enforces the same non-empty/unique validation as
+    /// [`Directory::set_chain`](crate::partition::Directory::set_chain)
+    /// (one shared helper, [`crate::util::validate_chain`]), so a table
+    /// install can never diverge from the directory it mirrors.
     pub fn set_chain(&mut self, idx: usize, chain: Vec<RegIndex>) {
-        assert!(!chain.is_empty());
+        crate::util::validate_chain(&chain);
         self.records[idx].action = ChainAction { chain };
     }
 
     /// Control plane: split record `idx` at `at`; the new upper record gets
-    /// `upper_chain`. Returns the new record's index (callers must also
-    /// insert a counter slot in the register arrays).
+    /// `upper_chain` (validated like [`MatchActionTable::set_chain`]).
+    /// Returns the new record's index (callers must also insert a counter
+    /// slot in the register arrays).
     pub fn split(&mut self, idx: usize, at: Key, upper_chain: Vec<RegIndex>) -> usize {
         let (start, end) = self.bounds(idx);
         assert!(start < at && at <= end, "split point outside record");
+        crate::util::validate_chain(&upper_chain);
         self.records.insert(idx + 1, Record { start: at, action: ChainAction { chain: upper_chain } });
         idx + 1
     }
@@ -178,6 +187,53 @@ mod tests {
         assert_eq!(t.chain_nodes(3), vec![2, 3]);
         assert_eq!(t.action(3).head(), 2);
         assert_eq!(t.action(3).tail(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate node in chain")]
+    fn set_chain_rejects_duplicate_replicas() {
+        let mut t = table();
+        t.set_chain(0, vec![2, 2, 3]);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty chain")]
+    fn set_chain_rejects_empty_chain() {
+        let mut t = table();
+        t.set_chain(0, Vec::new());
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate node in chain")]
+    fn split_rejects_duplicate_chain() {
+        let mut t = table();
+        let (s, e) = t.bounds(1);
+        t.split(1, Key(s.0 / 2 + e.0 / 2), vec![5, 5]);
+    }
+
+    #[test]
+    fn split_at_boundary_points() {
+        // Smallest legal split point: start.next(). The lower record
+        // shrinks to the single key `start`.
+        let mut t = table();
+        let (s, e) = t.bounds(2);
+        let ni = t.split(2, s.next(), vec![7]);
+        assert_eq!(t.bounds(2), (s, s));
+        assert_eq!(t.bounds(ni), (s.next(), e));
+        assert_eq!(t.lookup(s), 2);
+        assert_eq!(t.lookup(s.next()), ni);
+
+        // Largest legal split point: end — including Key::MAX on the last
+        // record, where the old `bounds` arithmetic (`next.start.0 - 1`)
+        // must not underflow or mis-cover.
+        let mut t = table();
+        let last = t.len() - 1;
+        let (ls, _) = t.bounds(last);
+        let ni = t.split(last, Key::MAX, vec![7]);
+        assert_eq!(t.bounds(last), (ls, Key(u128::MAX - 1)));
+        assert_eq!(t.bounds(ni), (Key::MAX, Key::MAX));
+        assert_eq!(t.lookup(Key::MAX), ni);
+        assert_eq!(t.lookup(Key(u128::MAX - 1)), last);
     }
 
     #[test]

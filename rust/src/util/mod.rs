@@ -23,6 +23,30 @@ pub fn ns_to_ms(ns: u64) -> f64 {
     ns as f64 / 1e6
 }
 
+/// Check that a replica chain (directory record or switch match-action
+/// record) is non-empty with unique members; returns a description of the
+/// violation, if any. One shared implementation so the switch table can
+/// never accept a chain the directory would reject.
+pub fn chain_violation<T: Ord + Copy>(chain: &[T]) -> Option<&'static str> {
+    if chain.is_empty() {
+        return Some("empty chain");
+    }
+    let mut uniq = chain.to_vec();
+    uniq.sort_unstable();
+    uniq.dedup();
+    if uniq.len() != chain.len() {
+        return Some("duplicate node in chain");
+    }
+    None
+}
+
+/// Panicking form of [`chain_violation`] for control-plane mutation paths.
+pub fn validate_chain<T: Ord + Copy>(chain: &[T]) {
+    if let Some(violation) = chain_violation(chain) {
+        panic!("{violation}");
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -38,5 +62,13 @@ mod tests {
     #[test]
     fn ns_to_ms_scale() {
         assert!((ns_to_ms(72_500_000) - 72.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn chain_violation_cases() {
+        assert_eq!(chain_violation::<usize>(&[]), Some("empty chain"));
+        assert_eq!(chain_violation(&[1, 2, 1]), Some("duplicate node in chain"));
+        assert_eq!(chain_violation(&[3]), None);
+        assert_eq!(chain_violation(&[1u16, 2, 3]), None);
     }
 }

@@ -202,6 +202,61 @@ mod tests {
     }
 
     #[test]
+    fn zipf_frequencies_monotone_in_rank_for_paper_thetas() {
+        // `paper_headline_ordering_throughput` (tests/e2e.rs) silently
+        // depends on rank 0 being hottest and popularity decaying with
+        // rank for every skew the paper uses. Exact per-rank monotonicity
+        // is too strict for a sampled distribution, so the head ranks are
+        // checked individually and the tail via geometric rank buckets,
+        // whose means must strictly decay.
+        for theta in [0.9, 0.99, 1.2] {
+            let n = 64u64;
+            let z = Zipf::new(n, theta);
+            let mut rng = Rng::new(0x51D ^ theta.to_bits());
+            let mut counts = vec![0u64; n as usize];
+            for _ in 0..400_000 {
+                let r = z.sample(&mut rng);
+                assert!(r < n, "theta={theta}: rank {r} out of range");
+                counts[r as usize] += 1;
+            }
+            assert!(counts[0] > counts[1], "theta={theta}: {:?}", &counts[..4]);
+            assert!(counts[1] > counts[3], "theta={theta}: {:?}", &counts[..4]);
+            let mean = |lo: usize, hi: usize| {
+                counts[lo..hi].iter().sum::<u64>() as f64 / (hi - lo) as f64
+            };
+            let buckets = [
+                mean(0, 1),
+                mean(1, 2),
+                mean(2, 4),
+                mean(4, 8),
+                mean(8, 16),
+                mean(16, 32),
+                mean(32, 64),
+            ];
+            for w in buckets.windows(2) {
+                assert!(
+                    w[0] > w[1],
+                    "theta={theta}: rank buckets not monotone: {buckets:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn scrambled_zipf_stays_in_range() {
+        for theta in [0.9, 0.99, 1.2] {
+            for n in [1u64, 2, 7, 1000] {
+                let z = ScrambledZipf::new(n, theta);
+                let mut rng = Rng::new(n ^ theta.to_bits());
+                for _ in 0..10_000 {
+                    let v = z.sample(&mut rng);
+                    assert!(v < n, "theta={theta} n={n}: sample {v} out of [0, n)");
+                }
+            }
+        }
+    }
+
+    #[test]
     fn higher_theta_more_skew() {
         let mild = Zipf::new(1000, 0.9);
         let hot = Zipf::new(1000, 1.2);

@@ -36,6 +36,10 @@ fn mixed_workload_all_modes_complete_and_verify() {
 
 #[test]
 fn xla_dataplane_run_matches_rust_dataplane_results() {
+    if !cfg!(feature = "pjrt") {
+        eprintln!("skipping: built without the `pjrt` feature");
+        return;
+    }
     if !std::path::Path::new("artifacts/manifest.json").exists() {
         eprintln!("skipping: artifacts/ missing — run `make artifacts`");
         return;
