@@ -46,7 +46,7 @@ fn main() -> anyhow::Result<()> {
         let t0 = std::time::Instant::now();
         let mut cl = Cluster::build_auto(cfg)?;
         cl.verify_reads = true;
-        let stats = cl.run();
+        let stats = cl.run()?;
         let (read_mean, _, read_p99) =
             cl.metrics.latency_stats_ms(OpCode::Get).unwrap_or((0.0, 0.0, 0.0));
         println!(

@@ -20,7 +20,7 @@ fn main() {
     cl.schedule_node_failure(9, 2_000_000_000);
     println!("nodes 3 and 9 will fail at t=0.8s and t=2.0s (sim time)...\n");
 
-    let stats = cl.run();
+    let stats = cl.run().expect("run failed");
     println!("{}", cl.metrics.summary());
     println!(
         "repairs={} retransmissions={} epochs={}",

@@ -16,7 +16,7 @@ fn run(migration: bool) -> (f64, f64, u64, Vec<u64>) {
     cfg.controller.epoch_ns = 400_000_000;
     cfg.controller.overload_factor = 1.3;
     let mut cl = Cluster::build(cfg);
-    let stats = cl.run();
+    let stats = cl.run().expect("run failed");
     let served: Vec<u64> = cl.nodes.iter().map(|n| n.ops_applied).collect();
     (
         cl.metrics.throughput(),

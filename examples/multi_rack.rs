@@ -21,10 +21,10 @@ fn main() {
         let switches = racks + (racks / 2).max(1) + 2;
         let mut cl = Cluster::build(cfg);
         let max_hops = (0..cl.topo.num_nodes)
-            .map(|n| cl.topo.hops(Addr::Client(0), Addr::Node(n)))
+            .map(|n| cl.topo.hops(Addr::Client(0), Addr::Node(n)).expect("routable"))
             .max()
             .unwrap();
-        cl.run();
+        cl.run().expect("run failed");
         let (mean, _, _) = cl.metrics.latency_stats_ms(OpCode::Get).unwrap();
         println!(
             "{racks:<6} {:<6} {switches:<9} {:>17.1} {mean:>14.1} {max_hops:>9}",

@@ -29,7 +29,7 @@ fn main() {
 
     let mut cl = Cluster::build(cfg);
     cl.verify_reads = true;
-    let stats = cl.run();
+    let stats = cl.run().expect("run failed");
 
     println!("{}", cl.metrics.summary());
     println!(

@@ -5,10 +5,7 @@ use turbokv::experiments::{run_by_name, Scale};
 
 fn main() {
     let scale = Scale(
-        std::env::var("TURBOKV_BENCH_SCALE")
-            .ok()
-            .and_then(|s| s.parse().ok())
-            .unwrap_or(0.25),
+        turbokv::experiments::benchkit::env_scale_or(0.25),
     );
     let t0 = std::time::Instant::now();
     let report = run_by_name("fig13c", scale).expect("experiment");

@@ -1,6 +1,6 @@
 //! Micro M2: storage-engine throughput — LSM get/put/scan and hash-table
 //! get/put at the experiment's data shape (16 B keys, 128 B values).
-use turbokv::experiments::benchkit::Bench;
+use turbokv::experiments::benchkit::{scaled_reps, Bench};
 use turbokv::store::hashtable::HashTable;
 use turbokv::store::{Lsm, LsmOptions};
 use turbokv::types::Key;
@@ -18,7 +18,7 @@ fn main() {
     }
     let keys: Vec<Key> = (0..2_000).map(|_| Key(rng.gen_range(n_keys as u64) as u128)).collect();
 
-    let b = Bench::run("lsm/get/2k-random", 3, 30, || {
+    let b = Bench::run("lsm/get/2k-random", 3, scaled_reps(30), || {
         for &k in &keys {
             std::hint::black_box(db.get(k));
         }
@@ -26,7 +26,7 @@ fn main() {
     println!("{}", b.report_throughput(keys.len() as f64));
 
     let mut i = n_keys;
-    let b = Bench::run("lsm/put/2k-sequential", 3, 30, || {
+    let b = Bench::run("lsm/put/2k-sequential", 3, scaled_reps(30), || {
         for _ in 0..2_000 {
             db.put(Key(i), value.clone());
             i += 1;
@@ -34,7 +34,7 @@ fn main() {
     });
     println!("{}", b.report_throughput(2_000.0));
 
-    let b = Bench::run("lsm/scan/256-span", 3, 30, || {
+    let b = Bench::run("lsm/scan/256-span", 3, scaled_reps(30), || {
         let start = rng.gen_range(n_keys as u64 - 256) as u128;
         std::hint::black_box(db.scan(Key(start), Key(start + 255)));
     });
@@ -45,7 +45,7 @@ fn main() {
     for i in 0..n_keys {
         ht.put(Key(i), value.clone());
     }
-    let b = Bench::run("hash/get/2k-random", 3, 30, || {
+    let b = Bench::run("hash/get/2k-random", 3, scaled_reps(30), || {
         for &k in &keys {
             std::hint::black_box(ht.get(k));
         }

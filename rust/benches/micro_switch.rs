@@ -2,7 +2,7 @@
 //! match-action → routing action) and the DES engine's raw event rate —
 //! the L3 hot paths that bound how fast figure sweeps run.
 use turbokv::config::ClusterConfig;
-use turbokv::experiments::benchkit::Bench;
+use turbokv::experiments::benchkit::{scaled_reps, Bench};
 use turbokv::net::packet::{Ip, Packet, Tos};
 use turbokv::net::topology::Topology;
 use turbokv::partition::Directory;
@@ -37,7 +37,7 @@ fn main() {
                 )
             })
             .collect();
-        let b = Bench::run(&format!("switch/pipeline/batch{batch}"), 20, 200, || {
+        let b = Bench::run(&format!("switch/pipeline/batch{batch}"), 20, scaled_reps(200), || {
             let emits = sw.process_batch(pkts.clone(), &topo, &mut RustLookup, 750_000, 800_000);
             std::hint::black_box(emits);
         });
@@ -45,7 +45,7 @@ fn main() {
     }
 
     // Raw DES event throughput.
-    let b = Bench::run("sim/engine/100k-events", 2, 20, || {
+    let b = Bench::run("sim/engine/100k-events", 2, scaled_reps(20), || {
         let mut eng: Engine<u64> = Engine::new();
         for i in 0..1_000u64 {
             eng.schedule(i % 97, i);

@@ -4,10 +4,7 @@ use turbokv::experiments::{latency_experiment, Scale};
 
 fn main() {
     let scale = Scale(
-        std::env::var("TURBOKV_BENCH_SCALE")
-            .ok()
-            .and_then(|s| s.parse().ok())
-            .unwrap_or(0.25),
+        turbokv::experiments::benchkit::env_scale_or(0.25),
     );
     let t0 = std::time::Instant::now();
     let (table1, _) = latency_experiment(scale, None);

@@ -1,0 +1,167 @@
+//! The typed message bus between role actors.
+//!
+//! The cluster is decomposed into role actors — client, switch, node,
+//! controller — mirroring the paper's role structure (§3). Actors never
+//! touch the simulation engine or each other's state directly: a handler
+//! receives one [`Event`], emits zero or more [`Msg`] values onto the
+//! [`Bus`], and returns. The slim `Cluster::run` driver drains the bus
+//! after every dispatched event and converts each message into a scheduled
+//! engine event — the single place where links (delay, byte-level codec
+//! boundary) and the event queue meet the protocol logic.
+//!
+//! Packets move through the bus *by value*: co-located hops never
+//! re-encode, and the driver asserts (in debug builds) that every packet
+//! crossing a link boundary is equivalent to its byte-level wire form.
+
+use crate::net::packet::Packet;
+use crate::net::topology::Addr;
+use crate::types::{ClientId, NodeId, SimTime, SwitchId};
+
+/// Simulation events, dispatched by `Cluster::run` to the role actors.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Event {
+    /// A packet reaches a component's ingress.
+    Arrive { at: Addr, pkt: Packet },
+    /// A switch pipeline pass fires over its buffered packets.
+    SwitchPass { sw: SwitchId },
+    /// A storage node finishes servicing a packet.
+    NodeDone { node: NodeId, pkt: Packet },
+    /// A client slot is free to issue its next request.
+    ClientIssue { client: ClientId },
+    /// Retransmission check for an outstanding request.
+    Timeout { client: ClientId, tag: u64, attempt: u32 },
+    /// Controller statistics epoch (§5.1).
+    Epoch,
+    /// Fault injection (§5.2).
+    FailNode { node: NodeId },
+    FailSwitch { sw: SwitchId },
+}
+
+/// A message emitted by a role actor; the driver converts each into an
+/// engine event.
+#[derive(Debug)]
+pub enum Msg {
+    /// Put `pkt` on the wire toward the immediate neighbor `to`.
+    /// `extra_delay_ns` is processing delay accumulated inside the sender
+    /// (e.g. switch recirculation passes); the driver adds the link's
+    /// propagation + transmission delay on top.
+    Wire { to: Addr, pkt: Packet, extra_delay_ns: u64 },
+    /// Schedule `ev` to fire `delay` ns from now.
+    After { delay: u64, ev: Event },
+    /// Schedule `ev` at the absolute simulated time `at` (>= now).
+    At { at: SimTime, ev: Event },
+    /// A protocol violation or mis-wiring: fail the run with this error
+    /// instead of aborting the process.
+    Fault(anyhow::Error),
+}
+
+/// The actors' outbox plus the current simulated time. Messages keep
+/// their emission order — the driver schedules them in exactly that
+/// order, which is what makes the refactored cluster bit-identical to
+/// the old monolithic event loop.
+#[derive(Debug, Default)]
+pub struct Bus {
+    now: SimTime,
+    msgs: Vec<Msg>,
+}
+
+impl Bus {
+    pub fn new() -> Bus {
+        Bus::default()
+    }
+
+    /// Current simulated time (set by the driver before each dispatch).
+    pub fn now(&self) -> SimTime {
+        self.now
+    }
+
+    pub(crate) fn set_now(&mut self, now: SimTime) {
+        self.now = now;
+    }
+
+    /// Emit `pkt` toward the immediate neighbor `to`.
+    pub fn send(&mut self, to: Addr, pkt: Packet) {
+        self.send_delayed(to, pkt, 0);
+    }
+
+    /// Emit `pkt` toward `to` with extra in-component processing delay.
+    pub fn send_delayed(&mut self, to: Addr, pkt: Packet, extra_delay_ns: u64) {
+        self.msgs.push(Msg::Wire { to, pkt, extra_delay_ns });
+    }
+
+    /// Schedule `ev` to fire `delay` ns from now.
+    pub fn after(&mut self, delay: u64, ev: Event) {
+        self.msgs.push(Msg::After { delay, ev });
+    }
+
+    /// Schedule `ev` at absolute time `at`.
+    pub fn at(&mut self, at: SimTime, ev: Event) {
+        self.msgs.push(Msg::At { at, ev });
+    }
+
+    /// Surface an error; the driver fails the run at the next check.
+    pub fn fault(&mut self, err: anyhow::Error) {
+        self.msgs.push(Msg::Fault(err));
+    }
+
+    /// Take the queued messages for pumping (the driver returns the empty
+    /// buffer via [`Bus::put_back`] so the hot path never reallocates).
+    pub(crate) fn take(&mut self) -> Vec<Msg> {
+        std::mem::take(&mut self.msgs)
+    }
+
+    pub(crate) fn put_back(&mut self, mut buf: Vec<Msg>) {
+        debug_assert!(buf.is_empty(), "put_back expects a drained buffer");
+        buf.append(&mut self.msgs);
+        self.msgs = buf;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::packet::{Ip, Tos};
+    use crate::types::{Key, OpCode};
+
+    #[test]
+    fn bus_preserves_emission_order() {
+        let mut bus = Bus::new();
+        bus.set_now(42);
+        assert_eq!(bus.now(), 42);
+        let pkt = Packet::request(
+            Ip::new(10, 1, 0, 1),
+            Ip(0),
+            Tos::RangeData,
+            OpCode::Get,
+            Key(1),
+            Key::MIN,
+            vec![],
+        );
+        bus.send(Addr::Switch(0), pkt.clone());
+        bus.after(5, Event::ClientIssue { client: 0 });
+        bus.at(100, Event::Epoch);
+        bus.fault(anyhow::anyhow!("boom"));
+        let msgs = bus.take();
+        assert_eq!(msgs.len(), 4);
+        assert!(matches!(msgs[0], Msg::Wire { to: Addr::Switch(0), extra_delay_ns: 0, .. }));
+        assert!(matches!(msgs[1], Msg::After { delay: 5, .. }));
+        assert!(matches!(msgs[2], Msg::At { at: 100, .. }));
+        assert!(matches!(msgs[3], Msg::Fault(_)));
+    }
+
+    #[test]
+    fn put_back_keeps_capacity_and_later_messages() {
+        let mut bus = Bus::new();
+        bus.after(1, Event::Epoch);
+        let mut buf = bus.take();
+        let cap = buf.capacity();
+        buf.clear();
+        // A message pushed while the buffer was out must survive.
+        bus.after(2, Event::Epoch);
+        bus.put_back(buf);
+        let msgs = bus.take();
+        assert_eq!(msgs.len(), 1);
+        assert!(matches!(msgs[0], Msg::After { delay: 2, .. }));
+        assert!(msgs.capacity() >= cap);
+    }
+}

@@ -1,0 +1,341 @@
+//! The client-library actor (paper §3): issues requests under the
+//! configured coordination mode's transmit strategy, assembles multi-part
+//! scan replies ([`Coverage`]), verifies reads against the load oracle,
+//! and retries on timeout.
+//!
+//! The three coordination modes are [`TransmitStrategy`] objects — the
+//! client-visible half of each mode (where the first packet goes and who
+//! splits scans); the node-visible half lives in
+//! [`super::node_actor::NodeStrategy`].
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::config::{Config, Coordination, Partitioning};
+use crate::metrics::Metrics;
+use crate::net::packet::{Ip, Packet, Tos};
+use crate::net::topology::{Addr, Topology};
+use crate::partition::{matching_value, Directory};
+use crate::types::{ClientId, Key, OpCode, Reply, Request};
+use crate::util::rng::Rng;
+use crate::workload::Generator;
+
+use super::bus::{Bus, Event};
+use super::proto::{decode_reply, Coverage};
+
+/// What the client actor may see of the world: read-only cluster state
+/// plus the bus it emits messages on.
+pub(crate) struct ClientEnv<'a> {
+    pub cfg: &'a Config,
+    pub topo: &'a Topology,
+    /// The authoritative directory — the "fresh replica" the
+    /// client-driven baseline reads (§8).
+    pub dir: &'a Directory,
+    pub metrics: &'a mut Metrics,
+    pub bus: &'a mut Bus,
+    pub timeout_ns: u64,
+    pub verify_reads: bool,
+    pub verify_failures: &'a mut u64,
+}
+
+/// An in-flight client request.
+#[derive(Clone, Debug)]
+struct Pending {
+    req: Request,
+    issued_at: crate::types::SimTime,
+    coverage: Option<Coverage>,
+    attempt: u32,
+    /// Last value observed (for end-to-end verification).
+    last_reply: Option<Reply>,
+}
+
+/// Per-client state (one instance of the client library of §3).
+pub(crate) struct ClientState {
+    ip: Ip,
+    outstanding: BTreeMap<u64, Pending>,
+    issued: u64,
+    rng: Rng,
+}
+
+/// The client role actor: owns every client's library state plus the
+/// workload generator, and reacts to `ClientIssue` / `Arrive(Client)` /
+/// `Timeout` events.
+pub(crate) struct ClientActor {
+    clients: Vec<ClientState>,
+    gen: Generator,
+    next_tag: u64,
+    strategy: Box<dyn TransmitStrategy>,
+}
+
+impl ClientActor {
+    pub fn new(cfg: &Config, topo: &Topology, gen: Generator, num_nodes: usize) -> ClientActor {
+        let clients = (0..cfg.cluster.clients)
+            .map(|c| ClientState {
+                ip: topo.client_ip(c),
+                outstanding: BTreeMap::new(),
+                issued: 0,
+                rng: Rng::new(cfg.workload.seed ^ ((c as u64 + 1) * 0x9E37)),
+            })
+            .collect();
+        ClientActor {
+            clients,
+            gen,
+            next_tag: 1,
+            strategy: transmit_strategy(cfg.coordination, num_nodes),
+        }
+    }
+
+    pub fn num_clients(&self) -> usize {
+        self.clients.len()
+    }
+
+    /// All clients have issued their quota and drained their outstanding
+    /// requests — the run-completion condition.
+    pub fn all_done(&self, ops_per_client: u64) -> bool {
+        self.clients.iter().all(|c| c.issued >= ops_per_client && c.outstanding.is_empty())
+    }
+
+    /// `(client, outstanding, issued)` rows for runaway diagnostics.
+    pub fn stuck_report(&self) -> Vec<(usize, usize, u64)> {
+        self.clients.iter().enumerate().map(|(i, c)| (i, c.outstanding.len(), c.issued)).collect()
+    }
+
+    /// Expected value for a key (verification oracle): keys were loaded at
+    /// known generator positions.
+    pub fn expected_value(&self, num_keys: u64, key: Key) -> Option<Vec<u8>> {
+        (0..num_keys).find(|&i| self.gen.key_of(i) == key).map(|i| self.gen.value_of(i))
+    }
+
+    /// Requests keep the client's IP in the packet along forwards; this is
+    /// the tag → client-IP fallback for when a node overwrote it.
+    pub fn ip_for_tag(&self, topo: &Topology, tag: u64) -> Ip {
+        for (c, st) in self.clients.iter().enumerate() {
+            if st.outstanding.contains_key(&tag) {
+                return topo.client_ip(c);
+            }
+        }
+        Ip(0)
+    }
+
+    /// A client slot is free: generate and transmit the next request.
+    pub fn on_issue(&mut self, env: &mut ClientEnv<'_>, c: ClientId) {
+        let req = {
+            let st = &mut self.clients[c];
+            if st.issued >= env.cfg.workload.ops_per_client {
+                return;
+            }
+            if st.outstanding.len() >= env.cfg.workload.concurrency {
+                return;
+            }
+            st.issued += 1;
+            self.gen.next(&mut st.rng)
+        };
+        let tag = self.next_tag;
+        self.next_tag += 1;
+        let coverage = (req.op == OpCode::Range).then(|| Coverage::new(req.key, req.end_key));
+        self.clients[c].outstanding.insert(
+            tag,
+            Pending {
+                req: req.clone(),
+                issued_at: env.bus.now(),
+                coverage,
+                attempt: 0,
+                last_reply: None,
+            },
+        );
+        if let Err(e) = self.strategy.transmit(env, &mut self.clients[c], c, tag, &req) {
+            env.bus.fault(e);
+            return;
+        }
+        env.bus.after(env.timeout_ns, Event::Timeout { client: c, tag, attempt: 0 });
+    }
+
+    /// A reply packet arrived: fold it into the pending request (scan
+    /// coverage), complete + verify + record, free the slot.
+    pub fn on_reply(&mut self, env: &mut ClientEnv<'_>, c: ClientId, pkt: Packet) {
+        let now = env.bus.now();
+        let Some(pending) = self.clients[c].outstanding.get_mut(&pkt.tag) else {
+            return; // duplicate / post-timeout reply
+        };
+        let reply = decode_reply(&pkt.payload).ok();
+        let complete = match (&mut pending.coverage, pkt.turbo) {
+            (Some(cov), Some(t)) => {
+                cov.add(t.key, t.end_key);
+                cov.complete()
+            }
+            (Some(_), None) => false, // malformed scan reply
+            (None, _) => true,
+        };
+        pending.last_reply = reply;
+        if !complete {
+            return;
+        }
+        let pending = self.clients[c].outstanding.remove(&pkt.tag).expect("present");
+        if env.verify_reads && pending.req.op == OpCode::Get {
+            let want = self.expected_value(env.cfg.workload.num_keys, pending.req.key);
+            let got = match &pending.last_reply {
+                Some(Reply::Value(v)) => v.clone(),
+                _ => None,
+            };
+            // Only verify keys never overwritten by the workload itself.
+            if env.cfg.workload.write_ratio == 0.0 && got != want {
+                *env.verify_failures += 1;
+            }
+        }
+        env.metrics.record(pending.req.op, now - pending.issued_at, now);
+        env.bus.after(0, Event::ClientIssue { client: c });
+    }
+
+    /// Retransmission check: if this attempt is still the live one,
+    /// re-transmit and arm the next timeout.
+    pub fn on_timeout(&mut self, env: &mut ClientEnv<'_>, c: ClientId, tag: u64, attempt: u32) {
+        let Some(pending) = self.clients[c].outstanding.get_mut(&tag) else {
+            return; // completed
+        };
+        if pending.attempt != attempt {
+            return; // a newer attempt is in flight
+        }
+        pending.attempt += 1; // latency keeps the original issue time
+        let req = pending.req.clone();
+        let next_attempt = pending.attempt;
+        env.metrics.errors += 1;
+        if let Err(e) = self.strategy.transmit(env, &mut self.clients[c], c, tag, &req) {
+            env.bus.fault(e);
+            return;
+        }
+        env.bus.after(env.timeout_ns, Event::Timeout { client: c, tag, attempt: next_attempt });
+    }
+}
+
+// ------------------------------------------------------------ strategies
+
+/// How the client library turns one request into wire packets — the
+/// per-coordination-mode strategy object.
+trait TransmitStrategy {
+    fn transmit(
+        &self,
+        env: &mut ClientEnv<'_>,
+        st: &mut ClientState,
+        c: ClientId,
+        tag: u64,
+        req: &Request,
+    ) -> Result<()>;
+}
+
+fn transmit_strategy(mode: Coordination, num_nodes: usize) -> Box<dyn TransmitStrategy> {
+    match mode {
+        Coordination::InSwitch => Box::new(InSwitchTransmit),
+        Coordination::ClientDriven => Box::new(ClientDrivenTransmit),
+        Coordination::ServerDriven => Box::new(ServerDrivenTransmit { num_nodes }),
+    }
+}
+
+/// TurboKV: emit one unprocessed packet; the switch hierarchy key-routes
+/// it, inserts chain headers, and splits scans (§4).
+struct InSwitchTransmit;
+
+impl TransmitStrategy for InSwitchTransmit {
+    fn transmit(
+        &self,
+        env: &mut ClientEnv<'_>,
+        st: &mut ClientState,
+        c: ClientId,
+        tag: u64,
+        req: &Request,
+    ) -> Result<()> {
+        let part = env.cfg.cluster.partitioning;
+        let edge = env.topo.edge_switch(Addr::Client(c))?;
+        let (tos, end_key) = match part {
+            Partitioning::Range => (Tos::RangeData, req.end_key),
+            Partitioning::Hash => (Tos::HashData, matching_value(part, req.key)),
+        };
+        let mut pkt =
+            Packet::request(st.ip, Ip(0), tos, req.op, req.key, end_key, req.value.clone());
+        pkt.tag = tag;
+        env.bus.send(Addr::Switch(edge), pkt);
+        Ok(())
+    }
+}
+
+/// Ideal baseline: the partition-aware library holds a fresh directory,
+/// addresses head/tail nodes directly, and splits scans itself.
+struct ClientDrivenTransmit;
+
+impl TransmitStrategy for ClientDrivenTransmit {
+    fn transmit(
+        &self,
+        env: &mut ClientEnv<'_>,
+        st: &mut ClientState,
+        c: ClientId,
+        tag: u64,
+        req: &Request,
+    ) -> Result<()> {
+        let part = env.cfg.cluster.partitioning;
+        let edge = env.topo.edge_switch(Addr::Client(c))?;
+        if req.op == OpCode::Range {
+            for (s, e, tail) in env.dir.scan_parts(req.key, req.end_key) {
+                let mut pkt = Packet::request(
+                    st.ip,
+                    env.topo.node_ip(tail),
+                    Tos::Normal,
+                    OpCode::Range,
+                    s,
+                    e,
+                    Vec::new(),
+                );
+                pkt.tag = tag;
+                env.bus.send(Addr::Switch(edge), pkt);
+            }
+        } else {
+            let mv = matching_value(part, req.key);
+            let idx = env.dir.lookup(mv);
+            let target =
+                if req.op.is_update() { env.dir.head(idx) } else { env.dir.tail(idx) };
+            let mut pkt = Packet::request(
+                st.ip,
+                env.topo.node_ip(target),
+                Tos::Normal,
+                req.op,
+                req.key,
+                req.end_key,
+                req.value.clone(),
+            );
+            pkt.tag = tag;
+            env.bus.send(Addr::Switch(edge), pkt);
+        }
+        Ok(())
+    }
+}
+
+/// Generic load balancer: address a uniformly random storage node, which
+/// coordinates server-side (§1).
+struct ServerDrivenTransmit {
+    num_nodes: usize,
+}
+
+impl TransmitStrategy for ServerDrivenTransmit {
+    fn transmit(
+        &self,
+        env: &mut ClientEnv<'_>,
+        st: &mut ClientState,
+        c: ClientId,
+        tag: u64,
+        req: &Request,
+    ) -> Result<()> {
+        let edge = env.topo.edge_switch(Addr::Client(c))?;
+        let n = st.rng.usize_in(0, self.num_nodes);
+        let mut pkt = Packet::request(
+            st.ip,
+            env.topo.node_ip(n),
+            Tos::Normal,
+            req.op,
+            req.key,
+            req.end_key,
+            req.value.clone(),
+        );
+        pkt.tag = tag;
+        env.bus.send(Addr::Switch(edge), pkt);
+        Ok(())
+    }
+}

@@ -1,76 +1,63 @@
-//! The full TurboKV cluster as a discrete-event world: clients, switches,
-//! storage nodes, links and the controller, wired per the paper's testbed
-//! (Fig. 12) and driven by `sim::Engine`.
+//! The full TurboKV cluster as a discrete-event world: role actors wired
+//! per the paper's testbed (Fig. 12) over a typed message bus, driven by
+//! `sim::Engine`.
 //!
-//! One [`Cluster`] runs one workload under one coordination mode (paper §8
-//! comparison):
+//! Module map (the paper's role structure, §3):
 //!
-//! * **in-switch** — TurboKV: clients emit unprocessed TurboKV packets; the
-//!   switch hierarchy key-routes them, inserts chain headers, splits scans.
-//! * **client-driven (ideal)** — clients hold a fresh directory and address
-//!   head/tail nodes directly; storage nodes map their chain successor via
-//!   their local directory on every write hop.
+//! * [`bus`] — typed `Event`/`Msg` bus the actors communicate through.
+//! * [`client`] — `ClientActor`: issue, scan assembly, verify, retry; the
+//!   per-mode [`TransmitStrategy`](client) objects.
+//! * [`switch_actor`] — `SwitchActor`: ingress buffering + pipeline
+//!   passes over `switch::Switch`.
+//! * [`node_actor`] — `NodeActor`: service-time model + the per-mode
+//!   [`NodeStrategy`](node_actor) objects (chain step / direct /
+//!   server-driven coordinator).
+//! * [`controller`] — epoch-driven statistics, migration, chain repair.
+//!
+//! [`Cluster`] itself is dispatch only: it owns the shared world state
+//! (config, topology, directory, switches, nodes, metrics), routes each
+//! event to its actor through an `Addr -> actor` table, and pumps the bus
+//! back into the engine. One `Cluster` runs one workload under one
+//! coordination mode (paper §8 comparison):
+//!
+//! * **in-switch** — TurboKV: clients emit unprocessed TurboKV packets;
+//!   the switch hierarchy key-routes them, inserts chain headers, splits
+//!   scans.
+//! * **client-driven (ideal)** — clients hold a fresh directory and
+//!   address head/tail nodes directly; storage nodes map their chain
+//!   successor via their local directory on every write hop.
 //! * **server-driven** — clients address a random storage node, which
 //!   coordinates: serves if it is the target, forwards otherwise.
 
+pub mod bus;
+mod client;
 pub mod controller;
+mod node_actor;
 pub mod proto;
+mod switch_actor;
 
-use std::collections::BTreeMap;
+#[cfg(test)]
+mod tests;
+
+pub use bus::{Event, Msg};
 
 use crate::config::{Config, Coordination, Partitioning};
 use crate::metrics::Metrics;
-use crate::net::packet::{Ip, Packet, Tos};
+use crate::net::packet::Packet;
 use crate::net::topology::{Addr, Topology};
 use crate::partition::{matching_value, Directory};
-use crate::sim::{Engine, Link, ServiceQueue};
+use crate::sim::{Driver, Engine, Link, ServiceQueue};
 use crate::store::{Engine as StoreEngine, LsmOptions, StorageNode};
 use crate::switch::{DataplaneLookup, RustLookup, Switch};
-use crate::types::{ClientId, Key, NodeId, OpCode, Reply, Request, SimTime, SwitchId};
+use crate::types::{Key, NodeId, SimTime, SwitchId};
 use crate::util::rng::Rng;
 use crate::workload::Generator;
 
+use bus::Bus;
+use client::{ClientActor, ClientEnv};
 use controller::{ControllerState, LoadEstimator, RustEstimator};
-use proto::{decode_reply, encode_reply, Coverage};
-
-/// Simulation events.
-#[derive(Clone, Debug, PartialEq, Eq)]
-pub enum Event {
-    /// A packet reaches a component's ingress.
-    Arrive { at: Addr, pkt: Packet },
-    /// A switch pipeline pass fires over its buffered packets.
-    SwitchPass { sw: SwitchId },
-    /// A storage node finishes servicing a packet.
-    NodeDone { node: NodeId, pkt: Packet },
-    /// A client slot is free to issue its next request.
-    ClientIssue { client: ClientId },
-    /// Retransmission check for an outstanding request.
-    Timeout { client: ClientId, tag: u64, attempt: u32 },
-    /// Controller statistics epoch (§5.1).
-    Epoch,
-    /// Fault injection (§5.2).
-    FailNode { node: NodeId },
-    FailSwitch { sw: SwitchId },
-}
-
-/// An in-flight client request.
-#[derive(Clone, Debug)]
-struct Pending {
-    req: Request,
-    issued_at: SimTime,
-    coverage: Option<Coverage>,
-    attempt: u32,
-    /// Last value observed (for end-to-end verification).
-    last_reply: Option<Reply>,
-}
-
-/// Client-side state (the client library of §3).
-struct ClientState {
-    ip: Ip,
-    outstanding: BTreeMap<u64, Pending>,
-    issued: u64,
-    rng: Rng,
-}
+use node_actor::{node_strategy, NodeActor, NodeEnv};
+use switch_actor::{SwitchActor, SwitchEnv};
 
 /// Run-completion summary beyond `Metrics`.
 #[derive(Clone, Debug, Default)]
@@ -91,25 +78,68 @@ pub struct Cluster {
     /// Authoritative directory (controller copy; also the "fresh replica"
     /// the client/server-driven baselines read).
     pub dir: Directory,
-    clients: Vec<ClientState>,
-    engine: Engine<Event>,
-    lookup: Box<dyn DataplaneLookup>,
-    estimator: Box<dyn LoadEstimator>,
     pub metrics: Metrics,
     pub controller: ControllerState,
-    gen: Generator,
+    client: ClientActor,
+    switch_actor: SwitchActor,
+    node_actor: NodeActor,
+    engine: Engine<Event>,
+    bus: Bus,
+    lookup: Box<dyn DataplaneLookup>,
+    estimator: Box<dyn LoadEstimator>,
     link: Link,
-    switch_pending: Vec<Vec<Packet>>,
-    switch_pass_scheduled: Vec<bool>,
-    switch_q: Vec<ServiceQueue>,
-    node_q: Vec<ServiceQueue>,
-    next_tag: u64,
+    /// First error surfaced on the bus; fails the run.
+    fault: Option<anyhow::Error>,
+    event_cap: u64,
     /// Per-run timeout for retransmission (generous; only failure
     /// experiments hit it).
     pub timeout_ns: u64,
     /// Verify Get replies against expected values (single-writer runs).
     pub verify_reads: bool,
     pub verify_failures: u64,
+}
+
+/// Actor-environment constructors. These must be macros (not methods) so
+/// each dispatch arm borrows only the fields its actor does not own.
+macro_rules! client_env {
+    ($self:ident) => {
+        ClientEnv {
+            cfg: &$self.cfg,
+            topo: &$self.topo,
+            dir: &$self.dir,
+            metrics: &mut $self.metrics,
+            bus: &mut $self.bus,
+            timeout_ns: $self.timeout_ns,
+            verify_reads: $self.verify_reads,
+            verify_failures: &mut $self.verify_failures,
+        }
+    };
+}
+
+macro_rules! switch_env {
+    ($self:ident) => {
+        SwitchEnv {
+            cfg: &$self.cfg,
+            topo: &$self.topo,
+            switches: &mut $self.switches,
+            lookup: $self.lookup.as_mut(),
+            bus: &mut $self.bus,
+        }
+    };
+}
+
+macro_rules! node_env {
+    ($self:ident) => {
+        NodeEnv {
+            cfg: &$self.cfg,
+            topo: &$self.topo,
+            dir: &$self.dir,
+            nodes: &mut $self.nodes,
+            metrics: &mut $self.metrics,
+            clients: &$self.client,
+            bus: &mut $self.bus,
+        }
+    };
 }
 
 impl Cluster {
@@ -159,7 +189,8 @@ impl Cluster {
             assert_eq!(cfg.workload.scan_ratio, 0.0, "hash partitioning cannot serve scans");
         }
         let topo = Topology::build(&cfg.cluster);
-        let dir = Directory::initial(cfg.cluster.num_ranges, cfg.cluster.nodes(), cfg.cluster.replication);
+        let dir =
+            Directory::initial(cfg.cluster.num_ranges, cfg.cluster.nodes(), cfg.cluster.replication);
 
         let mut switches: Vec<Switch> = topo
             .switches
@@ -175,7 +206,7 @@ impl Cluster {
         }
 
         let mut rng = Rng::new(cfg.sim.seed);
-        let nodes: Vec<StorageNode> = (0..cfg.cluster.nodes())
+        let mut nodes: Vec<StorageNode> = (0..cfg.cluster.nodes())
             .map(|n| {
                 let engine = match cfg.cluster.partitioning {
                     Partitioning::Range => StoreEngine::lsm(LsmOptions {
@@ -197,71 +228,51 @@ impl Cluster {
             cfg.cluster.num_ranges,
             cfg.workload.scan_spans,
         );
-
-        let clients = (0..cfg.cluster.clients)
-            .map(|c| ClientState {
-                ip: topo.client_ip(c),
-                outstanding: BTreeMap::new(),
-                issued: 0,
-                rng: Rng::new(cfg.workload.seed ^ ((c as u64 + 1) * 0x9E37)),
-            })
-            .collect();
+        load_phase(&gen, cfg.cluster.partitioning, &dir, &mut nodes);
 
         let link = Link { latency_ns: cfg.sim.link_latency_ns, gbps: cfg.sim.link_gbps };
-        let switch_q = (0..switches.len())
+        let switch_q: Vec<ServiceQueue> = (0..switches.len())
             .map(|s| ServiceQueue::new(cfg.sim.service_jitter * 0.25, rng.fork(s as u64).next_u64()))
             .collect();
-        let node_q = (0..nodes.len())
+        let node_q: Vec<ServiceQueue> = (0..nodes.len())
             .map(|n| ServiceQueue::new(cfg.sim.service_jitter, rng.fork(1000 + n as u64).next_u64()))
             .collect();
 
-        let num_switches = switches.len();
-        let mut cluster = Cluster {
+        let client = ClientActor::new(&cfg, &topo, gen, nodes.len());
+        let switch_actor = SwitchActor::new(switch_q);
+        let node_actor = NodeActor::new(node_q, node_strategy(cfg.coordination));
+        Cluster {
             cfg,
             topo,
             switches,
             nodes,
             dir,
-            clients,
-            engine: Engine::new(),
-            lookup,
-            estimator,
             metrics: Metrics::new(),
             controller: ControllerState::default(),
-            gen,
+            client,
+            switch_actor,
+            node_actor,
+            engine: Engine::new(),
+            bus: Bus::new(),
+            lookup,
+            estimator,
             link,
-            switch_pending: vec![Vec::new(); num_switches],
-            switch_pass_scheduled: vec![false; num_switches],
-            switch_q,
-            node_q,
-            next_tag: 1,
+            fault: None,
+            // Runaway guard; the env override is read once at build time
+            // so a programmatically set cap is never clobbered by run().
+            event_cap: std::env::var("TURBOKV_EVENT_CAP")
+                .ok()
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(500_000_000),
             timeout_ns: 60_000_000_000, // 60 s simulated
             verify_reads: false,
             verify_failures: 0,
-        };
-        cluster.load_phase();
-        cluster
-    }
-
-    /// Bulk-load every workload key onto all replicas of its chain
-    /// (the YCSB load phase, not timed).
-    fn load_phase(&mut self) {
-        let pairs: Vec<(Key, Vec<u8>)> = self.gen.load_keys().collect();
-        for (key, value) in pairs {
-            let mv = matching_value(self.cfg.cluster.partitioning, key);
-            let idx = self.dir.lookup(mv);
-            for &n in self.dir.chain(idx) {
-                self.nodes[n].engine.put(key, value.clone());
-            }
         }
     }
 
     /// Expected value for a key (verification oracle).
     pub fn expected_value(&self, key: Key) -> Option<Vec<u8>> {
-        // Invert key_of: keys were loaded at known positions.
-        (0..self.cfg.workload.num_keys)
-            .find(|&i| self.gen.key_of(i) == key)
-            .map(|i| self.gen.value_of(i))
+        self.client.expected_value(self.cfg.workload.num_keys, key)
     }
 
     /// Inject a node failure at simulated time `at_ns`.
@@ -275,8 +286,11 @@ impl Cluster {
     }
 
     /// Run the workload to completion; returns aggregate run statistics.
-    pub fn run(&mut self) -> RunStats {
-        for c in 0..self.clients.len() {
+    /// A fault surfaced on the bus (mis-wired topology, malformed packet,
+    /// runaway event count) fails the run with that error instead of
+    /// aborting the process.
+    pub fn run(&mut self) -> anyhow::Result<RunStats> {
+        for c in 0..self.client.num_clients() {
             for _ in 0..self.cfg.workload.concurrency {
                 self.engine.schedule(0, Event::ClientIssue { client: c });
             }
@@ -285,684 +299,133 @@ impl Cluster {
             let epoch = self.cfg.controller.epoch_ns;
             self.engine.schedule(epoch, Event::Epoch);
         }
-        let event_cap: u64 = std::env::var("TURBOKV_EVENT_CAP").ok().and_then(|s| s.parse().ok()).unwrap_or(500_000_000); // runaway guard
-        while let Some((_, ev)) = self.engine.pop() {
-            match ev {
-                Event::Arrive { at, pkt } => self.handle_arrive(at, pkt),
-                Event::SwitchPass { sw } => self.handle_switch_pass(sw),
-                Event::NodeDone { node, pkt } => self.handle_node_done(node, pkt),
-                Event::ClientIssue { client } => self.handle_client_issue(client),
-                Event::Timeout { client, tag, attempt } => self.handle_timeout(client, tag, attempt),
-                Event::Epoch => self.handle_epoch(),
-                Event::FailNode { node } => {
-                    self.nodes[node].alive = false;
-                    self.controller.pending_failures.push(node);
-                }
-                Event::FailSwitch { sw } => {
-                    self.switches[sw].alive = false;
-                }
-            }
-            if self.engine.processed() > event_cap {
-                let stuck: Vec<(usize, usize, u64)> = self
-                    .clients
-                    .iter()
-                    .enumerate()
-                    .map(|(i, c)| (i, c.outstanding.len(), c.issued))
-                    .collect();
-                panic!(
-                    "event cap exceeded — runaway simulation at t={} (client [id, outstanding, issued]: {stuck:?})",
-                    self.engine.now()
-                );
-            }
-            if self.done() {
-                break;
-            }
+        // The driver (`self`) owns all domain state; the engine is taken
+        // out for the duration of the run so both sides can be mutable.
+        let mut engine = std::mem::take(&mut self.engine);
+        engine.drive(self);
+        self.engine = engine;
+        if let Some(err) = self.fault.take() {
+            return Err(err);
         }
-        RunStats {
+        Ok(RunStats {
             migrations: self.controller.migrations,
             repairs: self.controller.repairs,
             epochs: self.controller.epochs,
             retries: self.metrics.errors,
             switch_drops: self.switches.iter().map(|s| s.stats.dropped).sum(),
             events: self.engine.processed(),
-        }
-    }
-
-    fn done(&self) -> bool {
-        self.clients.iter().all(|c| {
-            c.issued >= self.cfg.workload.ops_per_client && c.outstanding.is_empty()
         })
     }
 
-    // ---------------------------------------------------------- transport
-
-    /// Send `pkt` from `from` onto its first link (toward `to_neighbor`).
-    fn send(&mut self, pkt: Packet, to_neighbor: Addr) {
-        let delay = self.link.delay(pkt.wire_len());
-        self.engine.schedule(delay, Event::Arrive { at: to_neighbor, pkt });
+    fn done(&self) -> bool {
+        self.client.all_done(self.cfg.workload.ops_per_client)
     }
 
-    fn handle_arrive(&mut self, at: Addr, pkt: Packet) {
+    /// The bus's address table: deliver an arriving packet to the actor
+    /// that owns `at`.
+    fn route(&mut self, at: Addr, pkt: Packet) {
         match at {
-            Addr::Switch(s) => {
-                self.switch_pending[s].push(pkt);
-                if !self.switch_pass_scheduled[s] {
-                    self.switch_pass_scheduled[s] = true;
-                    let done = self.switch_q[s]
-                        .admit(self.engine.now(), self.cfg.sim.switch_pipeline_ns);
-                    self.engine.schedule_at(done, Event::SwitchPass { sw: s });
-                }
-            }
-            Addr::Node(n) => {
-                if !self.nodes[n].alive {
-                    return; // dropped; client timeout will retry
-                }
-                let service = self.node_service_ns(n, &pkt);
-                let done = self.node_q[n].admit(self.engine.now(), service);
-                self.engine.schedule_at(done, Event::NodeDone { node: n, pkt });
-            }
-            Addr::Client(c) => self.handle_client_reply(c, pkt),
+            Addr::Switch(s) => self.switch_actor.on_arrive(switch_env!(self), s, pkt),
+            Addr::Node(n) => self.node_actor.on_arrive(node_env!(self), n, pkt),
+            Addr::Client(c) => self.client.on_reply(&mut client_env!(self), c, pkt),
         }
     }
 
-    fn handle_switch_pass(&mut self, s: SwitchId) {
-        self.switch_pass_scheduled[s] = false;
-        let batch = std::mem::take(&mut self.switch_pending[s]);
-        if batch.is_empty() {
-            return;
-        }
-        let emits = self.switches[s].process_batch(
-            batch,
-            &self.topo,
-            self.lookup.as_mut(),
-            self.cfg.sim.switch_recirc_ns,
-            self.cfg.sim.switch_keyroute_ns,
-        );
-        for e in emits {
-            let delay = e.extra_delay_ns + self.link.delay(e.pkt.wire_len());
-            self.engine.schedule(delay, Event::Arrive { at: e.to, pkt: e.pkt });
-        }
-    }
-
-    // ------------------------------------------------------- storage node
-
-    /// Service time for a packet about to be processed by node `n`
-    /// (classification happens again, with full logic, in
-    /// `handle_node_done`; this only prices the work).
-    fn node_service_ns(&self, n: NodeId, pkt: &Packet) -> u64 {
-        let sim = &self.cfg.sim;
-        let Some(turbo) = pkt.turbo else {
-            return sim.node_read_ns / 4; // stray packet
-        };
-        // Server-driven coordination stop: a node that is NOT the proper
-        // target only does the coordination work (directory lookup +
-        // forward) — it never touches its storage engine (§1).
-        if pkt.ipv4.tos == Tos::Normal
-            && !pkt.chain_hop
-            && self.cfg.coordination == Coordination::ServerDriven
-        {
-            let mv = matching_value(self.cfg.cluster.partitioning, turbo.key);
-            let idx = self.dir.lookup(mv);
-            let is_coordinator_only = match turbo.op {
-                // Scans are always split+fanned out by the coordinator.
-                OpCode::Range => true,
-                op if op.is_update() => self.dir.head(idx) != n,
-                _ => self.dir.tail(idx) != n,
-            };
-            if is_coordinator_only {
-                return sim.node_forward_ns;
-            }
-        }
-        match turbo.op {
-            OpCode::Get => sim.node_read_ns,
-            OpCode::Put | OpCode::Del => sim.node_write_ns,
-            OpCode::Range => sim.node_scan_ns,
-        }
-    }
-
-    fn handle_node_done(&mut self, n: NodeId, pkt: Packet) {
-        let Some(turbo) = pkt.turbo else { return };
-        match pkt.ipv4.tos {
-            // In-switch mode: the chain header drives everything (§4.3).
-            Tos::Processed => self.node_chain_step(n, pkt),
-            // Baselines: the node consults its directory replica.
-            Tos::Normal => match self.cfg.coordination {
-                Coordination::ServerDriven => self.node_server_driven(n, pkt),
-                _ => self.node_direct(n, pkt),
-            },
-            // An unprocessed TurboKV packet reached a node (shouldn't
-            // happen): drop.
-            _ => {
-                let _ = turbo;
-            }
-        }
-    }
-
-    /// In-switch mode: execute one chain-replication step per the chain
-    /// header (Fig. 9). No directory lookups on the node.
-    fn node_chain_step(&mut self, n: NodeId, mut pkt: Packet) {
-        let turbo = pkt.turbo.expect("turbokv pkt");
-        let chain = pkt.chain.clone().expect("processed pkt has chain header");
-        let req = request_of(&turbo, &pkt);
-        if turbo.op.is_update() && chain.ips.len() > 1 {
-            // Head/middle: apply locally, forward to successor — next IP
-            // straight from the chain header (the TurboKV advantage: no
-            // mapping step, §8.1).
-            self.nodes[n].apply(&req);
-            let next_ip = chain.ips[0];
-            pkt.chain.as_mut().unwrap().ips.remove(0);
-            pkt.ipv4.dst = next_ip;
-            pkt.ipv4.src = self.topo.node_ip(n);
-            let tor = self.topo.edge_switch(Addr::Node(n));
-            self.send(pkt, Addr::Switch(tor));
-        } else {
-            // Tail (CLength == 1): apply and reply to the client IP.
-            let reply = self.nodes[n].apply(&req);
-            let client_ip = *chain.ips.last().expect("client ip");
-            self.reply_to_client(n, client_ip, pkt.tag, reply, &turbo);
-        }
-    }
-
-    /// Client-driven (ideal) mode: the client addressed the proper
-    /// head/tail directly; writes walk the chain via directory lookups.
-    fn node_direct(&mut self, n: NodeId, pkt: Packet) {
-        let turbo = pkt.turbo.expect("turbokv pkt");
-        let mv = matching_value(self.cfg.cluster.partitioning, turbo.key);
-        let idx = self.dir.lookup(mv);
-        let req = request_of(&turbo, &pkt);
-        if turbo.op.is_update() {
-            self.nodes[n].apply(&req);
-            match self.dir.successor(idx, n) {
-                Some(succ) => {
-                    // Chain hop requires a directory mapping on the node
-                    // (the cost TurboKV's chain header removes, §8.1).
-                    self.charge_node(n, self.cfg.sim.node_dir_lookup_ns);
-                    let mut fwd = pkt;
-                    // src stays the client's IP (the library embeds it so
-                    // the tail can reply directly); mark as a chain hop so
-                    // server-driven coordinators don't re-coordinate it.
-                    fwd.chain_hop = true;
-                    fwd.ipv4.dst = self.topo.node_ip(succ);
-                    let tor = self.topo.edge_switch(Addr::Node(n));
-                    self.send(fwd, Addr::Switch(tor));
-                }
-                None => {
-                    // Tail: ack the client.
-                    let client_ip = pkt.ipv4.src_of_request(self.client_ip_fallback(pkt.tag));
-                    self.reply_to_client(n, client_ip, pkt.tag, Reply::Ack, &turbo);
-                }
-            }
-        } else {
-            let reply = self.nodes[n].apply(&req);
-            let client_ip = pkt.ipv4.src_of_request(self.client_ip_fallback(pkt.tag));
-            self.reply_to_client(n, client_ip, pkt.tag, reply, &turbo);
-        }
-    }
-
-    /// Server-driven mode: this node may be a random coordinator. If it is
-    /// not the proper target it forwards (the extra step of §1/§8); if it
-    /// is, processing continues as in the direct case.
-    fn node_server_driven(&mut self, n: NodeId, pkt: Packet) {
-        if pkt.chain_hop {
-            // Already past coordination: this is a chain-replication hop
-            // addressed to this node's replication port.
-            return self.node_direct(n, pkt);
-        }
-        let turbo = pkt.turbo.expect("turbokv pkt");
-        let mv = matching_value(self.cfg.cluster.partitioning, turbo.key);
-        let idx = self.dir.lookup(mv);
-        match turbo.op {
-            OpCode::Range => {
-                // The coordinator splits the scan into per-sub-range parts
-                // and fans them out to the tails in parallel; each tail
-                // replies to the client directly. (The coordination work
-                // was priced by node_service_ns.)
-                self.metrics.forwarded += 1;
-                let parts = self.split_range(turbo.key, turbo.end_key);
-                let tor = self.topo.edge_switch(Addr::Node(n));
-                for (s, e, tail) in parts {
-                    let mut part = pkt.clone();
-                    let t = part.turbo.as_mut().unwrap();
-                    t.key = s;
-                    t.end_key = e;
-                    part.ipv4.dst = self.topo.node_ip(tail);
-                    part.chain_hop = true; // past coordination
-                    self.send(part, Addr::Switch(tor));
-                }
-            }
-            op => {
-                let target = if op.is_update() { self.dir.head(idx) } else { self.dir.tail(idx) };
-                if n != target {
-                    // Random coordinator: forward to the right instance
-                    // (§1); the coordination cost was priced at admission.
-                    self.metrics.forwarded += 1;
-                    let mut fwd = pkt;
-                    fwd.chain_hop = true; // target serves, not re-coordinates
-                    fwd.ipv4.dst = self.topo.node_ip(target);
-                    let tor = self.topo.edge_switch(Addr::Node(n));
-                    self.send(fwd, Addr::Switch(tor));
-                } else {
-                    self.node_direct(n, pkt);
-                }
-            }
-        }
-    }
-
-    /// Add extra service time to a node (coordination work).
-    fn charge_node(&mut self, n: NodeId, ns: u64) {
-        self.node_q[n].admit(self.engine.now(), ns);
-    }
-
-    fn reply_to_client(
-        &mut self,
-        from_node: NodeId,
-        client_ip: Ip,
-        tag: u64,
-        reply: Reply,
-        turbo: &crate::net::packet::TurboHeader,
-    ) {
-        let mut pkt = Packet::reply(self.topo.node_ip(from_node), client_ip, encode_reply(&reply));
-        pkt.tag = tag;
-        // Scans carry the covered interval via the turbo echo so the client
-        // can assemble multi-part results.
-        if turbo.op == OpCode::Range {
-            pkt.turbo = Some(*turbo);
-        }
-        let tor = self.topo.edge_switch(Addr::Node(from_node));
-        self.send(pkt, Addr::Switch(tor));
-    }
-
-    fn client_ip_fallback(&self, tag: u64) -> Ip {
-        // Request src IP is preserved along forwards in baseline modes; the
-        // fallback maps tag→client for robustness.
-        for (c, st) in self.clients.iter().enumerate() {
-            if st.outstanding.contains_key(&tag) {
-                return self.topo.client_ip(c);
-            }
-        }
-        Ip(0)
-    }
-
-    // ------------------------------------------------------------- client
-
-    fn handle_client_issue(&mut self, c: ClientId) {
-        if self.clients[c].issued >= self.cfg.workload.ops_per_client {
-            return;
-        }
-        if self.clients[c].outstanding.len() >= self.cfg.workload.concurrency {
-            return;
-        }
-        let req = {
-            let client = &mut self.clients[c];
-            client.issued += 1;
-            self.gen.next(&mut client.rng)
-        };
-        let tag = self.next_tag;
-        self.next_tag += 1;
-        let coverage = (req.op == OpCode::Range).then(|| Coverage::new(req.key, req.end_key));
-        self.clients[c].outstanding.insert(
-            tag,
-            Pending { req: req.clone(), issued_at: self.engine.now(), coverage, attempt: 0, last_reply: None },
-        );
-        self.transmit_request(c, tag, &req);
-        self.engine.schedule(self.timeout_ns, Event::Timeout { client: c, tag, attempt: 0 });
-    }
-
-    /// Build and send the packet(s) for a request under the configured
-    /// coordination mode.
-    fn transmit_request(&mut self, c: ClientId, tag: u64, req: &Request) {
-        let part = self.cfg.cluster.partitioning;
-        let client_ip = self.clients[c].ip;
-        let edge = self.topo.edge_switch(Addr::Client(c));
-        match self.cfg.coordination {
-            Coordination::InSwitch => {
-                let (tos, end_key) = match part {
-                    Partitioning::Range => (Tos::RangeData, req.end_key),
-                    Partitioning::Hash => (Tos::HashData, matching_value(part, req.key)),
-                };
-                let mut pkt =
-                    Packet::request(client_ip, Ip(0), tos, req.op, req.key, end_key, req.value.clone());
-                pkt.tag = tag;
-                self.send(pkt, Addr::Switch(edge));
-            }
-            Coordination::ClientDriven => {
-                if req.op == OpCode::Range {
-                    // The partition-aware library splits the scan itself.
-                    let parts = self.split_range(req.key, req.end_key);
-                    for (s, e, tail) in parts {
-                        let mut pkt = Packet::request(
-                            client_ip,
-                            self.topo.node_ip(tail),
-                            Tos::Normal,
-                            OpCode::Range,
-                            s,
-                            e,
-                            Vec::new(),
-                        );
-                        pkt.tag = tag;
-                        self.send(pkt, Addr::Switch(edge));
-                    }
-                } else {
-                    let mv = matching_value(part, req.key);
-                    let idx = self.dir.lookup(mv);
-                    let target =
-                        if req.op.is_update() { self.dir.head(idx) } else { self.dir.tail(idx) };
-                    let mut pkt = Packet::request(
-                        client_ip,
-                        self.topo.node_ip(target),
-                        Tos::Normal,
-                        req.op,
-                        req.key,
-                        req.end_key,
-                        req.value.clone(),
+    /// Drain the bus into the engine: wire messages get link delay (and a
+    /// debug-build assertion that the packet equals its byte-level wire
+    /// form — encode/decode only ever happens at link boundaries), faults
+    /// stop the run at the next `finished` check.
+    fn pump(&mut self, engine: &mut Engine<Event>) {
+        let mut msgs = self.bus.take();
+        for msg in msgs.drain(..) {
+            match msg {
+                Msg::Wire { to, pkt, extra_delay_ns } => {
+                    // The IPv4 total-length field is 16 bits, so only
+                    // packets that fit it have a faithful wire form; a
+                    // real network would fragment larger ones (huge scan
+                    // replies), which the parsed-packet simulation models
+                    // as a single delivery.
+                    debug_assert!(
+                        pkt.wire_len() - crate::net::packet::ETH_LEN > u16::MAX as usize
+                            || pkt.codec_equivalent(),
+                        "packet diverged from its wire form at a link boundary: {pkt:?}"
                     );
-                    pkt.tag = tag;
-                    self.send(pkt, Addr::Switch(edge));
+                    let delay = extra_delay_ns + self.link.delay(pkt.wire_len());
+                    engine.schedule(delay, Event::Arrive { at: to, pkt });
+                }
+                Msg::After { delay, ev } => engine.schedule(delay, ev),
+                Msg::At { at, ev } => engine.schedule_at(at, ev),
+                Msg::Fault(err) => {
+                    self.fault.get_or_insert(err);
                 }
             }
-            Coordination::ServerDriven => {
-                // Generic load balancer: uniformly random storage node.
-                let n = self.clients[c].rng.usize_in(0, self.nodes.len());
-                let mut pkt = Packet::request(
-                    client_ip,
-                    self.topo.node_ip(n),
-                    Tos::Normal,
-                    req.op,
-                    req.key,
-                    req.end_key,
-                    req.value.clone(),
-                );
-                pkt.tag = tag;
-                self.send(pkt, Addr::Switch(edge));
-            }
         }
+        self.bus.put_back(msgs);
     }
 
-    /// Split `[start, end]` into per-sub-range parts with their tails.
-    fn split_range(&self, start: Key, end: Key) -> Vec<(Key, Key, NodeId)> {
-        let mut parts = Vec::new();
-        let mut cur = start;
-        loop {
-            let idx = self.dir.lookup(cur);
-            let (_, range_end) = self.dir.bounds(idx);
-            let part_end = end.min(range_end);
-            parts.push((cur, part_end, self.dir.tail(idx)));
-            if part_end >= end {
-                break;
-            }
-            cur = part_end.next();
-        }
-        parts
-    }
-
-    fn handle_client_reply(&mut self, c: ClientId, pkt: Packet) {
-        let now = self.engine.now();
-        let Some(pending) = self.clients[c].outstanding.get_mut(&pkt.tag) else {
-            return; // duplicate / post-timeout reply
-        };
-        let reply = decode_reply(&pkt.payload).ok();
-        let complete = match (&mut pending.coverage, pkt.turbo) {
-            (Some(cov), Some(t)) => {
-                cov.add(t.key, t.end_key);
-                cov.complete()
-            }
-            (Some(_), None) => false, // malformed scan reply
-            (None, _) => true,
-        };
-        pending.last_reply = reply;
-        if !complete {
-            return;
-        }
-        let pending = self.clients[c].outstanding.remove(&pkt.tag).expect("present");
-        if self.verify_reads && pending.req.op == OpCode::Get {
-            let want = self.expected_value(pending.req.key);
-            let got = match &pending.last_reply {
-                Some(Reply::Value(v)) => v.clone(),
-                _ => None,
-            };
-            // Only verify keys never overwritten by the workload itself.
-            if self.cfg.workload.write_ratio == 0.0 && got != want {
-                self.verify_failures += 1;
-            }
-        }
-        self.metrics.record(pending.req.op, now - pending.issued_at, now);
-        self.engine.schedule(0, Event::ClientIssue { client: c });
-    }
-
-    fn handle_timeout(&mut self, c: ClientId, tag: u64, attempt: u32) {
-        let Some(pending) = self.clients[c].outstanding.get_mut(&tag) else {
-            return; // completed
-        };
-        if pending.attempt != attempt {
-            return; // a newer attempt is in flight
-        }
-        pending.attempt += 1; // latency keeps the original issue time
-        let req = pending.req.clone();
-        let next_attempt = pending.attempt;
-        self.metrics.errors += 1;
-        self.transmit_request(c, tag, &req);
-        self.engine
-            .schedule(self.timeout_ns, Event::Timeout { client: c, tag, attempt: next_attempt });
-    }
-
-    // --------------------------------------------------------- controller
-
-    fn handle_epoch(&mut self) {
-        controller::run_epoch(self);
-        if !self.done() {
-            self.engine.schedule(self.cfg.controller.epoch_ns, Event::Epoch);
-        }
-    }
-
-    /// Simulated-time accessor (controller code, examples, tests).
+    /// Simulated-time accessor (controller code, examples, tests). During
+    /// a run the engine is temporarily taken out of `self`, so the bus
+    /// clock (set before every dispatch) is the live source; afterwards
+    /// the restored engine holds the final time. Take the max of both.
     pub fn now(&self) -> SimTime {
-        self.engine.now()
+        self.engine.now().max(self.bus.now())
     }
 }
 
-/// Reconstruct a `Request` from the TurboKV header + payload.
-fn request_of(turbo: &crate::net::packet::TurboHeader, pkt: &Packet) -> Request {
-    Request {
-        op: turbo.op,
-        key: turbo.key,
-        end_key: turbo.end_key,
-        value: pkt.payload.clone(),
+impl Driver<Event> for Cluster {
+    /// Dispatch only: wire the event's actor environment, hand the event
+    /// over, pump the bus. All role logic lives in the actor modules.
+    fn dispatch(&mut self, now: SimTime, ev: Event, engine: &mut Engine<Event>) {
+        self.bus.set_now(now);
+        match ev {
+            Event::Arrive { at, pkt } => self.route(at, pkt),
+            Event::SwitchPass { sw } => self.switch_actor.on_pass(switch_env!(self), sw),
+            Event::NodeDone { node, pkt } => self.node_actor.on_done(node_env!(self), node, pkt),
+            Event::ClientIssue { client } => self.client.on_issue(&mut client_env!(self), client),
+            Event::Timeout { client, tag, attempt } => {
+                self.client.on_timeout(&mut client_env!(self), client, tag, attempt)
+            }
+            Event::Epoch => {
+                controller::run_epoch(self);
+                if !self.done() {
+                    self.bus.after(self.cfg.controller.epoch_ns, Event::Epoch);
+                }
+            }
+            Event::FailNode { node } => {
+                self.nodes[node].alive = false;
+                self.controller.pending_failures.push(node);
+            }
+            Event::FailSwitch { sw } => self.switches[sw].alive = false,
+        }
+        self.pump(engine);
+        if engine.processed() > self.event_cap && self.fault.is_none() {
+            self.fault = Some(anyhow::anyhow!(
+                "event cap exceeded — runaway simulation at t={} \
+                 (client [id, outstanding, issued]: {:?})",
+                engine.now(),
+                self.client.stuck_report()
+            ));
+        }
+    }
+
+    fn finished(&self) -> bool {
+        self.fault.is_some() || self.done()
     }
 }
 
-/// Small helper: requests keep the client's IP in `ipv4.src` along node
-/// forwards; fall back to a tag lookup when it was overwritten.
-trait SrcOfRequest {
-    fn src_of_request(&self, fallback: Ip) -> Ip;
-}
-
-impl SrcOfRequest for crate::net::packet::Ipv4Header {
-    fn src_of_request(&self, fallback: Ip) -> Ip {
-        // Client IPs live in 10.1.0.0/16 (topology convention).
-        if self.src.octets()[0] == 10 && self.src.octets()[1] == 1 {
-            self.src
-        } else {
-            fallback
+/// Bulk-load every workload key onto all replicas of its chain (the YCSB
+/// load phase, not timed).
+fn load_phase(
+    gen: &Generator,
+    partitioning: Partitioning,
+    dir: &Directory,
+    nodes: &mut [StorageNode],
+) {
+    for (key, value) in gen.load_keys() {
+        let mv = matching_value(partitioning, key);
+        let idx = dir.lookup(mv);
+        for &n in dir.chain(idx) {
+            nodes[n].engine.put(key, value.clone());
         }
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn small_cfg(coordination: Coordination) -> Config {
-        let mut cfg = Config::default();
-        cfg.coordination = coordination;
-        cfg.workload.num_keys = 2_000;
-        cfg.workload.ops_per_client = 150;
-        cfg.workload.concurrency = 4;
-        cfg
-    }
-
-    #[test]
-    fn in_switch_read_only_completes_and_verifies() {
-        let mut cl = Cluster::build(small_cfg(Coordination::InSwitch));
-        cl.verify_reads = true;
-        let stats = cl.run();
-        assert_eq!(cl.metrics.completed(), 4 * 150);
-        assert_eq!(cl.verify_failures, 0, "all Get replies matched loaded values");
-        assert_eq!(cl.metrics.errors, 0);
-        assert!(stats.events > 0);
-        // Every request was key-routed by switches, none by nodes.
-        assert_eq!(cl.metrics.forwarded, 0);
-        let keyrouted: u64 = cl.switches.iter().map(|s| s.stats.keyrouted).sum();
-        assert!(keyrouted >= 4 * 150, "keyrouted={keyrouted}");
-    }
-
-    #[test]
-    fn client_driven_read_only_completes() {
-        let mut cl = Cluster::build(small_cfg(Coordination::ClientDriven));
-        cl.verify_reads = true;
-        cl.run();
-        assert_eq!(cl.metrics.completed(), 600);
-        assert_eq!(cl.verify_failures, 0);
-        // No switch key-routing in this mode (ToS Normal).
-        let keyrouted: u64 = cl.switches.iter().map(|s| s.stats.keyrouted).sum();
-        assert_eq!(keyrouted, 0);
-    }
-
-    #[test]
-    fn server_driven_forwards_most_requests() {
-        let mut cl = Cluster::build(small_cfg(Coordination::ServerDriven));
-        cl.verify_reads = true;
-        cl.run();
-        assert_eq!(cl.metrics.completed(), 600);
-        assert_eq!(cl.verify_failures, 0);
-        // A random node is the right coordinator only ~1/16 of the time.
-        assert!(cl.metrics.forwarded > 400, "forwarded={}", cl.metrics.forwarded);
-    }
-
-    #[test]
-    fn writes_propagate_through_whole_chain() {
-        for mode in Coordination::ALL {
-            let mut cfg = small_cfg(mode);
-            cfg.workload.write_ratio = 1.0;
-            cfg.workload.ops_per_client = 60;
-            let mut cl = Cluster::build(cfg);
-            cl.run();
-            assert_eq!(cl.metrics.completed(), 240, "mode {mode:?}");
-            // Every write applied r=3 times (plus the load phase's puts).
-            let applied: u64 = cl.nodes.iter().map(|n| n.ops_applied).sum();
-            assert!(applied >= 3 * 240, "mode {mode:?}: applied={applied}");
-        }
-    }
-
-    #[test]
-    fn scans_assemble_across_subranges() {
-        for mode in Coordination::ALL {
-            let mut cfg = small_cfg(mode);
-            cfg.workload.scan_ratio = 1.0;
-            cfg.workload.ops_per_client = 40;
-            cfg.workload.scan_spans = 3;
-            let mut cl = Cluster::build(cfg);
-            cl.run();
-            assert_eq!(cl.metrics.completed(), 160, "mode {mode:?}");
-            assert_eq!(cl.metrics.count_for(OpCode::Range), 160);
-        }
-    }
-
-    #[test]
-    fn hash_partitioning_routes_by_digest() {
-        for mode in Coordination::ALL {
-            let mut cfg = small_cfg(mode);
-            cfg.cluster.partitioning = Partitioning::Hash;
-            cfg.workload.ops_per_client = 80;
-            cfg.workload.write_ratio = 0.2;
-            let mut cl = Cluster::build(cfg);
-            cl.verify_reads = true;
-            cl.run();
-            assert_eq!(cl.metrics.completed(), 320, "mode {mode:?}");
-        }
-    }
-
-    #[test]
-    fn latency_ordering_matches_paper() {
-        // Server-driven must be slowest; TurboKV close to client-driven
-        // (paper §8.1: within ~5% on reads; +26..39% vs server-driven).
-        let mut means = std::collections::BTreeMap::new();
-        for mode in Coordination::ALL {
-            let mut cfg = small_cfg(mode);
-            cfg.workload.ops_per_client = 400;
-            let mut cl = Cluster::build(cfg);
-            cl.run();
-            let (mean, _, _) = cl.metrics.latency_stats_ms(OpCode::Get).unwrap();
-            means.insert(mode.name(), mean);
-        }
-        let turbokv = means["in-switch"];
-        let client = means["client-driven"];
-        let server = means["server-driven"];
-        assert!(server > turbokv, "server {server} vs turbokv {turbokv}");
-        assert!(server > client);
-        assert!(turbokv < server * 0.95, "in-switch should clearly beat server-driven");
-    }
-
-    #[test]
-    fn build_auto_xla_without_feature_or_artifacts_is_clear_error() {
-        let mut cfg = small_cfg(Coordination::InSwitch);
-        cfg.dataplane.mode = crate::config::DataplaneMode::Xla;
-        cfg.dataplane.artifacts_dir = "/nonexistent-artifacts".into();
-        // Without the `pjrt` feature: feature error. With it: the missing
-        // artifacts directory errors. Either way: an error, not a panic.
-        let Err(err) = Cluster::build_auto(cfg) else {
-            panic!("xla mode must fail without pjrt/artifacts")
-        };
-        let msg = format!("{err:#}");
-        assert!(
-            msg.contains("pjrt") || msg.contains("artifacts"),
-            "unhelpful error: {msg}"
-        );
-    }
-
-    #[test]
-    fn deterministic_runs() {
-        let run = || {
-            let mut cl = Cluster::build(small_cfg(Coordination::InSwitch));
-            cl.run();
-            (cl.metrics.completed(), cl.metrics.throughput())
-        };
-        assert_eq!(run(), run());
-    }
-
-    #[test]
-    fn node_failure_repairs_and_completes() {
-        let mut cfg = small_cfg(Coordination::InSwitch);
-        cfg.workload.ops_per_client = 200;
-        cfg.controller.epoch_ns = 200_000_000; // fast detection
-        let mut cl = Cluster::build(cfg);
-        cl.timeout_ns = 2_000_000_000; // 2 s retry for dropped packets
-        cl.schedule_node_failure(3, 50_000_000);
-        let stats = cl.run();
-        assert_eq!(cl.metrics.completed(), 800, "all requests eventually served");
-        assert_eq!(stats.repairs, 24, "24 chains contained node 3");
-        // Every chain is back to full length with live nodes only.
-        cl.dir.check_invariants().unwrap();
-        for idx in 0..cl.dir.len() {
-            let chain = cl.dir.chain(idx);
-            assert_eq!(chain.len(), 3);
-            assert!(!chain.contains(&3));
-        }
-    }
-
-    #[test]
-    fn migration_rebalances_hot_ranges() {
-        let mut cfg = small_cfg(Coordination::InSwitch);
-        cfg.workload.zipf_theta = Some(1.2);
-        cfg.workload.ops_per_client = 600;
-        cfg.controller.migration = true;
-        cfg.controller.epoch_ns = 300_000_000;
-        cfg.controller.overload_factor = 1.3;
-        let mut cl = Cluster::build(cfg);
-        let stats = cl.run();
-        assert!(stats.migrations > 0, "skewed load should trigger migration");
-        assert!(stats.epochs > 1);
-        cl.dir.check_invariants().unwrap();
-        // Data followed the chains: reads still verify.
-        assert_eq!(cl.metrics.completed(), 2400);
     }
 }

@@ -1,0 +1,378 @@
+//! The storage-node actor (paper §3's shim + §4.3's chain step): admission
+//! onto the node's serial server with the service-time model, then one
+//! protocol step per serviced packet.
+//!
+//! The three coordination modes are [`NodeStrategy`] objects — the
+//! node-visible half of each mode. In-switch nodes follow the chain header
+//! blindly (the TurboKV advantage: no mapping step, §8.1); client-driven
+//! nodes walk write chains via their directory replica; server-driven
+//! nodes additionally play random coordinator and forward mis-addressed
+//! requests (§1).
+//!
+//! Malformed packets (missing TurboKV header where one is required,
+//! missing chain header on a processed packet) surface as [`anyhow`]
+//! errors through the bus and fail the run instead of panicking.
+
+use anyhow::{anyhow, Result};
+
+use crate::config::Config;
+use crate::metrics::Metrics;
+use crate::net::packet::{Ip, Ipv4Header, Packet, Tos, TurboHeader, ETHERTYPE_TURBOKV};
+use crate::net::topology::{Addr, Topology};
+use crate::partition::{matching_value, Directory};
+use crate::sim::ServiceQueue;
+use crate::store::StorageNode;
+use crate::types::{NodeId, OpCode, Reply, Request};
+
+use super::bus::{Bus, Event};
+use super::client::ClientActor;
+use super::proto::encode_reply;
+
+/// What the node actor may see of the world. `clients` is a read-only
+/// view used solely for the tag → client-IP fallback (a stand-in for the
+/// request table a real client library keys by port).
+pub(crate) struct NodeEnv<'a> {
+    pub cfg: &'a Config,
+    pub topo: &'a Topology,
+    /// Directory replica the baseline modes consult (§8); in-switch nodes
+    /// never read it on the data path.
+    pub dir: &'a Directory,
+    pub nodes: &'a mut Vec<StorageNode>,
+    pub metrics: &'a mut Metrics,
+    pub clients: &'a ClientActor,
+    pub bus: &'a mut Bus,
+}
+
+/// Per-coordination-mode node behavior: price the work at admission, then
+/// execute the protocol step once serviced.
+pub(crate) trait NodeStrategy {
+    /// Service time for a packet about to be processed by node `n` (full
+    /// logic runs in `on_serviced`; this only prices the work).
+    fn service_ns(&self, env: &NodeEnv<'_>, n: NodeId, pkt: &Packet) -> u64 {
+        let _ = n;
+        engine_service_ns(env, pkt)
+    }
+
+    /// Execute the serviced packet's protocol step. `q` gives access to
+    /// the node service queues for extra coordination charges.
+    fn on_serviced(
+        &self,
+        env: &mut NodeEnv<'_>,
+        q: &mut [ServiceQueue],
+        n: NodeId,
+        pkt: Packet,
+    ) -> Result<()>;
+}
+
+/// The node role actor: owns the per-node serial servers and the
+/// mode-specific strategy.
+pub(crate) struct NodeActor {
+    q: Vec<ServiceQueue>,
+    role: Box<dyn NodeStrategy>,
+}
+
+impl NodeActor {
+    pub fn new(q: Vec<ServiceQueue>, role: Box<dyn NodeStrategy>) -> NodeActor {
+        NodeActor { q, role }
+    }
+
+    /// Admission: price the work and enqueue it on the node's serial
+    /// server; dead nodes drop the packet (client timeout retries).
+    pub fn on_arrive(&mut self, env: NodeEnv<'_>, n: NodeId, pkt: Packet) {
+        if !env.nodes[n].alive {
+            return;
+        }
+        let service = self.role.service_ns(&env, n, &pkt);
+        let done = self.q[n].admit(env.bus.now(), service);
+        env.bus.at(done, Event::NodeDone { node: n, pkt });
+    }
+
+    /// The node finished servicing: run the mode's protocol step.
+    pub fn on_done(&mut self, mut env: NodeEnv<'_>, n: NodeId, pkt: Packet) {
+        if let Err(e) = self.role.on_serviced(&mut env, &mut self.q, n, pkt) {
+            env.bus.fault(e);
+        }
+    }
+}
+
+/// Build the node-side strategy for a coordination mode.
+pub(crate) fn node_strategy(mode: crate::config::Coordination) -> Box<dyn NodeStrategy> {
+    use crate::config::Coordination;
+    match mode {
+        Coordination::InSwitch => Box::new(InSwitchNode),
+        Coordination::ClientDriven => Box::new(ClientDrivenNode),
+        Coordination::ServerDriven => Box::new(ServerDrivenNode),
+    }
+}
+
+/// Storage-engine service pricing shared by all modes.
+fn engine_service_ns(env: &NodeEnv<'_>, pkt: &Packet) -> u64 {
+    let sim = &env.cfg.sim;
+    let Some(turbo) = pkt.turbo else {
+        return sim.node_read_ns / 4; // stray packet
+    };
+    match turbo.op {
+        OpCode::Get => sim.node_read_ns,
+        OpCode::Put | OpCode::Del => sim.node_write_ns,
+        OpCode::Range => sim.node_scan_ns,
+    }
+}
+
+/// TurboKV mode: the chain header drives everything; a baseline-shaped
+/// packet reaching a node is a protocol violation.
+struct InSwitchNode;
+
+impl NodeStrategy for InSwitchNode {
+    fn on_serviced(
+        &self,
+        env: &mut NodeEnv<'_>,
+        _q: &mut [ServiceQueue],
+        n: NodeId,
+        pkt: Packet,
+    ) -> Result<()> {
+        match pkt.ipv4.tos {
+            Tos::Processed => chain_step(env, n, pkt),
+            Tos::Normal if pkt.turbo.is_some() => Err(anyhow!(
+                "protocol violation: baseline (ToS Normal) request reached node {n} \
+                 under in-switch coordination"
+            )),
+            // An unprocessed TurboKV packet or stray reply: drop.
+            _ => Ok(()),
+        }
+    }
+}
+
+/// Client-driven baseline: the client addressed the proper head/tail;
+/// writes walk the chain via directory lookups on the node.
+struct ClientDrivenNode;
+
+impl NodeStrategy for ClientDrivenNode {
+    fn on_serviced(
+        &self,
+        env: &mut NodeEnv<'_>,
+        q: &mut [ServiceQueue],
+        n: NodeId,
+        pkt: Packet,
+    ) -> Result<()> {
+        match pkt.ipv4.tos {
+            Tos::Processed => chain_step(env, n, pkt),
+            Tos::Normal if pkt.turbo.is_some() => direct(env, q, n, pkt),
+            _ => Ok(()),
+        }
+    }
+}
+
+/// Server-driven baseline: this node may be a random coordinator — it
+/// serves if it is the target, forwards otherwise (the extra step of §1).
+struct ServerDrivenNode;
+
+impl NodeStrategy for ServerDrivenNode {
+    fn service_ns(&self, env: &NodeEnv<'_>, n: NodeId, pkt: &Packet) -> u64 {
+        let sim = &env.cfg.sim;
+        let Some(turbo) = pkt.turbo else {
+            return sim.node_read_ns / 4; // stray packet
+        };
+        // Coordination stop: a node that is NOT the proper target only
+        // does the coordination work (directory lookup + forward) — it
+        // never touches its storage engine (§1).
+        if pkt.ipv4.tos == Tos::Normal && !pkt.chain_hop {
+            let mv = matching_value(env.cfg.cluster.partitioning, turbo.key);
+            let idx = env.dir.lookup(mv);
+            let coordinator_only = match turbo.op {
+                // Scans are always split+fanned out by the coordinator.
+                OpCode::Range => true,
+                op if op.is_update() => env.dir.head(idx) != n,
+                _ => env.dir.tail(idx) != n,
+            };
+            if coordinator_only {
+                return sim.node_forward_ns;
+            }
+        }
+        engine_service_ns(env, pkt)
+    }
+
+    fn on_serviced(
+        &self,
+        env: &mut NodeEnv<'_>,
+        q: &mut [ServiceQueue],
+        n: NodeId,
+        pkt: Packet,
+    ) -> Result<()> {
+        match pkt.ipv4.tos {
+            Tos::Processed => chain_step(env, n, pkt),
+            Tos::Normal if pkt.turbo.is_some() => server_driven(env, q, n, pkt),
+            _ => Ok(()),
+        }
+    }
+}
+
+// --------------------------------------------------------- shared steps
+
+/// In-switch mode: execute one chain-replication step per the chain
+/// header (Fig. 9). No directory lookups on the node.
+fn chain_step(env: &mut NodeEnv<'_>, n: NodeId, mut pkt: Packet) -> Result<()> {
+    let turbo = pkt
+        .turbo
+        .ok_or_else(|| anyhow!("malformed packet: chain step without TurboKV header at node {n}"))?;
+    let chain = pkt
+        .chain
+        .clone()
+        .ok_or_else(|| anyhow!("malformed packet: processed packet without chain header at node {n}"))?;
+    let req = request_of(&turbo, &pkt);
+    if turbo.op.is_update() && chain.ips.len() > 1 {
+        // Head/middle: apply locally, forward to successor — next IP
+        // straight from the chain header (the TurboKV advantage: no
+        // mapping step, §8.1).
+        env.nodes[n].apply(&req);
+        let next_ip = chain.ips[0];
+        pkt.chain.as_mut().expect("chain checked above").ips.remove(0);
+        pkt.ipv4.dst = next_ip;
+        pkt.ipv4.src = env.topo.node_ip(n);
+        let tor = env.topo.edge_switch(Addr::Node(n))?;
+        env.bus.send(Addr::Switch(tor), pkt);
+    } else {
+        // Tail (CLength == 1): apply and reply to the client IP.
+        let reply = env.nodes[n].apply(&req);
+        let client_ip = *chain
+            .ips
+            .last()
+            .ok_or_else(|| anyhow!("malformed packet: empty chain header at node {n}"))?;
+        reply_to_client(env, n, client_ip, pkt.tag, reply, &turbo)?;
+    }
+    Ok(())
+}
+
+/// Client-driven (ideal) mode: the client addressed the proper head/tail
+/// directly; writes walk the chain via directory lookups.
+fn direct(env: &mut NodeEnv<'_>, q: &mut [ServiceQueue], n: NodeId, pkt: Packet) -> Result<()> {
+    let turbo = pkt
+        .turbo
+        .ok_or_else(|| anyhow!("malformed packet: data request without TurboKV header at node {n}"))?;
+    let mv = matching_value(env.cfg.cluster.partitioning, turbo.key);
+    let idx = env.dir.lookup(mv);
+    let req = request_of(&turbo, &pkt);
+    if turbo.op.is_update() {
+        env.nodes[n].apply(&req);
+        match env.dir.successor(idx, n) {
+            Some(succ) => {
+                // Chain hop requires a directory mapping on the node (the
+                // cost TurboKV's chain header removes, §8.1).
+                q[n].admit(env.bus.now(), env.cfg.sim.node_dir_lookup_ns);
+                let mut fwd = pkt;
+                // src stays the client's IP (the library embeds it so the
+                // tail can reply directly); mark as a chain hop so
+                // server-driven coordinators don't re-coordinate it.
+                fwd.chain_hop = true;
+                fwd.ipv4.dst = env.topo.node_ip(succ);
+                let tor = env.topo.edge_switch(Addr::Node(n))?;
+                env.bus.send(Addr::Switch(tor), fwd);
+            }
+            None => {
+                // Tail: ack the client.
+                let client_ip =
+                    request_src_ip(&pkt.ipv4, || env.clients.ip_for_tag(env.topo, pkt.tag));
+                reply_to_client(env, n, client_ip, pkt.tag, Reply::Ack, &turbo)?;
+            }
+        }
+    } else {
+        let reply = env.nodes[n].apply(&req);
+        let client_ip = request_src_ip(&pkt.ipv4, || env.clients.ip_for_tag(env.topo, pkt.tag));
+        reply_to_client(env, n, client_ip, pkt.tag, reply, &turbo)?;
+    }
+    Ok(())
+}
+
+/// Server-driven mode: forward if this node is not the proper target
+/// (the coordination cost was priced at admission), else serve directly.
+fn server_driven(
+    env: &mut NodeEnv<'_>,
+    q: &mut [ServiceQueue],
+    n: NodeId,
+    pkt: Packet,
+) -> Result<()> {
+    if pkt.chain_hop {
+        // Already past coordination: this is a chain-replication hop
+        // addressed to this node's replication port.
+        return direct(env, q, n, pkt);
+    }
+    let turbo = pkt
+        .turbo
+        .ok_or_else(|| anyhow!("malformed packet: coordination without TurboKV header at node {n}"))?;
+    let mv = matching_value(env.cfg.cluster.partitioning, turbo.key);
+    let idx = env.dir.lookup(mv);
+    match turbo.op {
+        OpCode::Range => {
+            // The coordinator splits the scan into per-sub-range parts and
+            // fans them out to the tails in parallel; each tail replies to
+            // the client directly.
+            env.metrics.forwarded += 1;
+            let parts = env.dir.scan_parts(turbo.key, turbo.end_key);
+            let tor = env.topo.edge_switch(Addr::Node(n))?;
+            for (s, e, tail) in parts {
+                let mut part = pkt.clone();
+                let t = part.turbo.as_mut().expect("turbo checked above");
+                t.key = s;
+                t.end_key = e;
+                part.ipv4.dst = env.topo.node_ip(tail);
+                part.chain_hop = true; // past coordination
+                env.bus.send(Addr::Switch(tor), part);
+            }
+            Ok(())
+        }
+        op => {
+            let target = if op.is_update() { env.dir.head(idx) } else { env.dir.tail(idx) };
+            if n != target {
+                // Random coordinator: forward to the right instance (§1).
+                env.metrics.forwarded += 1;
+                let mut fwd = pkt;
+                fwd.chain_hop = true; // target serves, not re-coordinates
+                fwd.ipv4.dst = env.topo.node_ip(target);
+                let tor = env.topo.edge_switch(Addr::Node(n))?;
+                env.bus.send(Addr::Switch(tor), fwd);
+                Ok(())
+            } else {
+                direct(env, q, n, pkt)
+            }
+        }
+    }
+}
+
+fn reply_to_client(
+    env: &mut NodeEnv<'_>,
+    from_node: NodeId,
+    client_ip: Ip,
+    tag: u64,
+    reply: Reply,
+    turbo: &TurboHeader,
+) -> Result<()> {
+    let mut pkt = Packet::reply(env.topo.node_ip(from_node), client_ip, encode_reply(&reply));
+    pkt.tag = tag;
+    if turbo.op == OpCode::Range {
+        // Scans echo the covered interval so the client can assemble
+        // multi-part results. The echo is a real TurboKV header, so the
+        // reply keeps the TurboKV ethertype — the wire form must stay
+        // equivalent to the in-memory form at every link boundary.
+        pkt.turbo = Some(*turbo);
+        pkt.eth.ethertype = ETHERTYPE_TURBOKV;
+    }
+    let tor = env.topo.edge_switch(Addr::Node(from_node))?;
+    env.bus.send(Addr::Switch(tor), pkt);
+    Ok(())
+}
+
+/// Reconstruct a `Request` from the TurboKV header + payload.
+fn request_of(turbo: &TurboHeader, pkt: &Packet) -> Request {
+    Request { op: turbo.op, key: turbo.key, end_key: turbo.end_key, value: pkt.payload.clone() }
+}
+
+/// Requests keep the client's IP in `ipv4.src` along node forwards (client
+/// IPs live in 10.1.0.0/16 by topology convention); fall back to a tag
+/// lookup when a node overwrote it.
+fn request_src_ip(hdr: &Ipv4Header, fallback: impl FnOnce() -> Ip) -> Ip {
+    let o = hdr.src.octets();
+    if o[0] == 10 && o[1] == 1 {
+        hdr.src
+    } else {
+        fallback()
+    }
+}

@@ -1,0 +1,70 @@
+//! The switch actor: ingress buffering and pipeline-pass scheduling for
+//! the programmable-switch hierarchy (paper §4).
+//!
+//! Packets arriving during one pipeline busy period are buffered; a single
+//! `SwitchPass` event then runs `Switch::process_batch` — pure packet
+//! transformation with one batched match-action lookup (where the XLA
+//! dataplane plugs in) — and the resulting emits go back onto the bus with
+//! their accumulated in-switch delay. Link delay is added by the driver.
+
+use crate::config::Config;
+use crate::net::packet::Packet;
+use crate::net::topology::Topology;
+use crate::sim::ServiceQueue;
+use crate::switch::{DataplaneLookup, Switch};
+use crate::types::SwitchId;
+
+use super::bus::{Bus, Event};
+
+/// What the switch actor may see of the world.
+pub(crate) struct SwitchEnv<'a> {
+    pub cfg: &'a Config,
+    pub topo: &'a Topology,
+    pub switches: &'a mut Vec<Switch>,
+    pub lookup: &'a mut dyn DataplaneLookup,
+    pub bus: &'a mut Bus,
+}
+
+/// The switch role actor: owns the per-switch ingress buffers and the
+/// pipeline serial servers.
+pub(crate) struct SwitchActor {
+    pending: Vec<Vec<Packet>>,
+    pass_scheduled: Vec<bool>,
+    q: Vec<ServiceQueue>,
+}
+
+impl SwitchActor {
+    pub fn new(q: Vec<ServiceQueue>) -> SwitchActor {
+        let n = q.len();
+        SwitchActor { pending: vec![Vec::new(); n], pass_scheduled: vec![false; n], q }
+    }
+
+    /// Buffer the packet; schedule one pipeline pass per busy period.
+    pub fn on_arrive(&mut self, env: SwitchEnv<'_>, s: SwitchId, pkt: Packet) {
+        self.pending[s].push(pkt);
+        if !self.pass_scheduled[s] {
+            self.pass_scheduled[s] = true;
+            let done = self.q[s].admit(env.bus.now(), env.cfg.sim.switch_pipeline_ns);
+            env.bus.at(done, Event::SwitchPass { sw: s });
+        }
+    }
+
+    /// One pipeline pass over the buffered packets.
+    pub fn on_pass(&mut self, env: SwitchEnv<'_>, s: SwitchId) {
+        self.pass_scheduled[s] = false;
+        let batch = std::mem::take(&mut self.pending[s]);
+        if batch.is_empty() {
+            return;
+        }
+        let emits = env.switches[s].process_batch(
+            batch,
+            env.topo,
+            env.lookup,
+            env.cfg.sim.switch_recirc_ns,
+            env.cfg.sim.switch_keyroute_ns,
+        );
+        for e in emits {
+            env.bus.send_delayed(e.to, e.pkt, e.extra_delay_ns);
+        }
+    }
+}

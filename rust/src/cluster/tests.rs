@@ -1,0 +1,258 @@
+//! Cluster-level tests: the three coordination modes end to end, plus the
+//! bus fault paths (runaway guard, malformed packets).
+
+use super::*;
+use crate::net::packet::Tos;
+use crate::types::OpCode;
+
+fn small_cfg(coordination: Coordination) -> Config {
+    let mut cfg = Config::default();
+    cfg.coordination = coordination;
+    cfg.workload.num_keys = 2_000;
+    cfg.workload.ops_per_client = 150;
+    cfg.workload.concurrency = 4;
+    cfg
+}
+
+#[test]
+fn in_switch_read_only_completes_and_verifies() {
+    let mut cl = Cluster::build(small_cfg(Coordination::InSwitch));
+    cl.verify_reads = true;
+    let stats = cl.run().unwrap();
+    assert_eq!(cl.metrics.completed(), 4 * 150);
+    assert_eq!(cl.verify_failures, 0, "all Get replies matched loaded values");
+    assert_eq!(cl.metrics.errors, 0);
+    assert!(stats.events > 0);
+    // Every request was key-routed by switches, none by nodes.
+    assert_eq!(cl.metrics.forwarded, 0);
+    let keyrouted: u64 = cl.switches.iter().map(|s| s.stats.keyrouted).sum();
+    assert!(keyrouted >= 4 * 150, "keyrouted={keyrouted}");
+}
+
+#[test]
+fn client_driven_read_only_completes() {
+    let mut cl = Cluster::build(small_cfg(Coordination::ClientDriven));
+    cl.verify_reads = true;
+    cl.run().unwrap();
+    assert_eq!(cl.metrics.completed(), 600);
+    assert_eq!(cl.verify_failures, 0);
+    // No switch key-routing in this mode (ToS Normal).
+    let keyrouted: u64 = cl.switches.iter().map(|s| s.stats.keyrouted).sum();
+    assert_eq!(keyrouted, 0);
+}
+
+#[test]
+fn server_driven_forwards_most_requests() {
+    let mut cl = Cluster::build(small_cfg(Coordination::ServerDriven));
+    cl.verify_reads = true;
+    cl.run().unwrap();
+    assert_eq!(cl.metrics.completed(), 600);
+    assert_eq!(cl.verify_failures, 0);
+    // A random node is the right coordinator only ~1/16 of the time.
+    assert!(cl.metrics.forwarded > 400, "forwarded={}", cl.metrics.forwarded);
+}
+
+#[test]
+fn writes_propagate_through_whole_chain() {
+    for mode in Coordination::ALL {
+        let mut cfg = small_cfg(mode);
+        cfg.workload.write_ratio = 1.0;
+        cfg.workload.ops_per_client = 60;
+        let mut cl = Cluster::build(cfg);
+        cl.run().unwrap();
+        assert_eq!(cl.metrics.completed(), 240, "mode {mode:?}");
+        // Every write applied r=3 times (plus the load phase's puts).
+        let applied: u64 = cl.nodes.iter().map(|n| n.ops_applied).sum();
+        assert!(applied >= 3 * 240, "mode {mode:?}: applied={applied}");
+    }
+}
+
+#[test]
+fn scans_assemble_across_subranges() {
+    for mode in Coordination::ALL {
+        let mut cfg = small_cfg(mode);
+        cfg.workload.scan_ratio = 1.0;
+        cfg.workload.ops_per_client = 40;
+        cfg.workload.scan_spans = 3;
+        let mut cl = Cluster::build(cfg);
+        cl.run().unwrap();
+        assert_eq!(cl.metrics.completed(), 160, "mode {mode:?}");
+        assert_eq!(cl.metrics.count_for(OpCode::Range), 160);
+    }
+}
+
+#[test]
+fn hash_partitioning_routes_by_digest() {
+    for mode in Coordination::ALL {
+        let mut cfg = small_cfg(mode);
+        cfg.cluster.partitioning = Partitioning::Hash;
+        cfg.workload.ops_per_client = 80;
+        cfg.workload.write_ratio = 0.2;
+        let mut cl = Cluster::build(cfg);
+        cl.verify_reads = true;
+        cl.run().unwrap();
+        assert_eq!(cl.metrics.completed(), 320, "mode {mode:?}");
+    }
+}
+
+#[test]
+fn latency_ordering_matches_paper() {
+    // Server-driven must be slowest; TurboKV close to client-driven
+    // (paper §8.1: within ~5% on reads; +26..39% vs server-driven).
+    let mut means = std::collections::BTreeMap::new();
+    for mode in Coordination::ALL {
+        let mut cfg = small_cfg(mode);
+        cfg.workload.ops_per_client = 400;
+        let mut cl = Cluster::build(cfg);
+        cl.run().unwrap();
+        let (mean, _, _) = cl.metrics.latency_stats_ms(OpCode::Get).unwrap();
+        means.insert(mode.name(), mean);
+    }
+    let turbokv = means["in-switch"];
+    let client = means["client-driven"];
+    let server = means["server-driven"];
+    assert!(server > turbokv, "server {server} vs turbokv {turbokv}");
+    assert!(server > client);
+    assert!(turbokv < server * 0.95, "in-switch should clearly beat server-driven");
+}
+
+#[test]
+fn build_auto_xla_without_feature_or_artifacts_is_clear_error() {
+    let mut cfg = small_cfg(Coordination::InSwitch);
+    cfg.dataplane.mode = crate::config::DataplaneMode::Xla;
+    cfg.dataplane.artifacts_dir = "/nonexistent-artifacts".into();
+    // Without the `pjrt` feature: feature error. With it: the missing
+    // artifacts directory errors. Either way: an error, not a panic.
+    let Err(err) = Cluster::build_auto(cfg) else {
+        panic!("xla mode must fail without pjrt/artifacts")
+    };
+    let msg = format!("{err:#}");
+    assert!(msg.contains("pjrt") || msg.contains("artifacts"), "unhelpful error: {msg}");
+}
+
+#[test]
+fn deterministic_runs() {
+    // Identical seed + config => identical RunStats and metrics across
+    // repeated runs, in every coordination mode (the refactor-invariance
+    // guarantee: the actor decomposition must not perturb event order).
+    for mode in Coordination::ALL {
+        let run = || {
+            let mut cl = Cluster::build(small_cfg(mode));
+            let stats = cl.run().unwrap();
+            (
+                cl.metrics.completed(),
+                cl.metrics.throughput(),
+                stats.events,
+                stats.epochs,
+                stats.retries,
+            )
+        };
+        assert_eq!(run(), run(), "mode {mode:?}");
+    }
+}
+
+#[test]
+fn node_failure_repairs_and_completes() {
+    let mut cfg = small_cfg(Coordination::InSwitch);
+    cfg.workload.ops_per_client = 200;
+    cfg.controller.epoch_ns = 200_000_000; // fast detection
+    let mut cl = Cluster::build(cfg);
+    cl.timeout_ns = 2_000_000_000; // 2 s retry for dropped packets
+    cl.schedule_node_failure(3, 50_000_000);
+    let stats = cl.run().unwrap();
+    assert_eq!(cl.metrics.completed(), 800, "all requests eventually served");
+    assert_eq!(stats.repairs, 24, "24 chains contained node 3");
+    // Every chain is back to full length with live nodes only.
+    cl.dir.check_invariants().unwrap();
+    for idx in 0..cl.dir.len() {
+        let chain = cl.dir.chain(idx);
+        assert_eq!(chain.len(), 3);
+        assert!(!chain.contains(&3));
+    }
+}
+
+#[test]
+fn migration_rebalances_hot_ranges() {
+    let mut cfg = small_cfg(Coordination::InSwitch);
+    cfg.workload.zipf_theta = Some(1.2);
+    cfg.workload.ops_per_client = 600;
+    cfg.controller.migration = true;
+    cfg.controller.epoch_ns = 300_000_000;
+    cfg.controller.overload_factor = 1.3;
+    let mut cl = Cluster::build(cfg);
+    let stats = cl.run().unwrap();
+    assert!(stats.migrations > 0, "skewed load should trigger migration");
+    assert!(stats.epochs > 1);
+    cl.dir.check_invariants().unwrap();
+    // Data followed the chains: reads still verify.
+    assert_eq!(cl.metrics.completed(), 2400);
+}
+
+#[test]
+fn runaway_guard_fails_run_with_error() {
+    let mut cl = Cluster::build(small_cfg(Coordination::InSwitch));
+    cl.event_cap = 50; // far below what the workload needs
+    let err = cl.run().unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains("event cap exceeded"), "{msg}");
+    assert!(msg.contains("outstanding"), "diagnostics included: {msg}");
+}
+
+#[test]
+fn malformed_processed_packet_fails_run() {
+    // A Processed packet without its chain header is a payload-shape
+    // violation: the node actor surfaces it through the bus and the run
+    // fails with a diagnosable error instead of panicking.
+    let mut cfg = small_cfg(Coordination::InSwitch);
+    cfg.workload.ops_per_client = 5;
+    let mut cl = Cluster::build(cfg);
+    let mut pkt = Packet::request(
+        cl.topo.client_ip(0),
+        cl.topo.node_ip(0),
+        Tos::Processed,
+        OpCode::Put,
+        Key(1),
+        Key::MIN,
+        vec![1, 2, 3],
+    );
+    pkt.chain = None; // the violation
+    cl.engine.schedule(0, Event::Arrive { at: Addr::Node(0), pkt });
+    let err = cl.run().unwrap_err();
+    assert!(format!("{err:#}").contains("chain header"), "{err:#}");
+}
+
+#[test]
+fn baseline_packet_in_switch_mode_fails_run() {
+    // A baseline-shaped (ToS Normal) data request reaching a node under
+    // in-switch coordination is a protocol violation, not a silent branch.
+    let mut cfg = small_cfg(Coordination::InSwitch);
+    cfg.workload.ops_per_client = 5;
+    let mut cl = Cluster::build(cfg);
+    let mut pkt = Packet::request(
+        cl.topo.client_ip(0),
+        cl.topo.node_ip(2),
+        Tos::Normal,
+        OpCode::Get,
+        Key(7),
+        Key::MIN,
+        vec![],
+    );
+    pkt.tag = 9999;
+    cl.engine.schedule(0, Event::Arrive { at: Addr::Node(2), pkt });
+    let err = cl.run().unwrap_err();
+    assert!(format!("{err:#}").contains("protocol violation"), "{err:#}");
+}
+
+#[test]
+fn write_only_in_switch_run_has_no_errors() {
+    // Sanity for the by-value packet flow: every put's chain header is
+    // consumed hop by hop and ends at the client — zero retries, every
+    // write applied to all three replicas.
+    let mut cfg = small_cfg(Coordination::InSwitch);
+    cfg.workload.write_ratio = 1.0;
+    cfg.workload.ops_per_client = 30;
+    let mut cl = Cluster::build(cfg);
+    cl.run().unwrap();
+    assert_eq!(cl.metrics.errors, 0);
+    assert_eq!(cl.metrics.completed(), 120);
+}

@@ -3,6 +3,21 @@
 
 use std::time::Instant;
 
+/// `TURBOKV_BENCH_SCALE` as a factor, or `default` when unset/unparsable
+/// — the single parser every bench target shares. Figure/ablation
+/// benches pass 0.25 (quick regeneration; 1.0 = full figure fidelity);
+/// micro benches pass 1.0 and scale only their repetition counts, since
+/// reported per-iteration times are unaffected by the rep count.
+pub fn env_scale_or(default: f64) -> f64 {
+    std::env::var("TURBOKV_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// Scale a repetition count by [`env_scale_or`]`(1.0)`, keeping at least
+/// 2 reps (the CI bench-smoke lever).
+pub fn scaled_reps(full: usize) -> usize {
+    ((full as f64 * env_scale_or(1.0)) as usize).max(2)
+}
+
 /// One measured benchmark: warmup, then `reps` timed runs; reports
 /// min/mean/max in a criterion-like line.
 pub struct Bench {

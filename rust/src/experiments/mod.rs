@@ -29,7 +29,7 @@ impl RunResult {
 pub fn run_once(cfg: Config) -> RunResult {
     let mode = cfg.coordination;
     let mut cl = Cluster::build_auto(cfg).expect("cluster build");
-    let stats = cl.run();
+    let stats = cl.run().expect("run failed");
     RunResult { mode, metrics: cl.metrics.clone(), stats }
 }
 
@@ -184,7 +184,7 @@ pub fn ablation_migration(scale: Scale) -> String {
         cfg.controller.overload_factor = 1.3;
         let mode = cfg.coordination;
         let mut cl = Cluster::build_auto(cfg).expect("cluster build");
-        let stats = cl.run();
+        let stats = cl.run().expect("run failed");
         let mut res = RunResult { mode, metrics: cl.metrics.clone(), stats };
         let splits = cl.controller.splits;
         let p99 = res.metrics.latency_stats_ms(OpCode::Get).map(|(_, _, p)| p).unwrap_or(0.0);
@@ -260,7 +260,7 @@ pub fn failure_experiment(scale: Scale) -> String {
     let mut cl = Cluster::build(cfg);
     cl.timeout_ns = 2_000_000_000;
     cl.schedule_node_failure(5, 1_000_000_000);
-    let stats = cl.run();
+    let stats = cl.run().expect("run failed");
     let mut out = String::from("Failure experiment F1: node 5 fails at t=1s (in-switch)\n");
     let _ = writeln!(
         out,

@@ -61,7 +61,7 @@ fn cmd_run(args: &Args) -> Result<()> {
     );
     let mut cl = Cluster::build_auto(cfg)?;
     cl.verify_reads = verify;
-    let stats = cl.run();
+    let stats = cl.run()?;
     println!("{}", cl.metrics.summary());
     println!(
         "events={} epochs={} migrations={} repairs={} verify_failures={}",

@@ -283,6 +283,26 @@ impl Packet {
     pub fn is_turbokv(&self) -> bool {
         self.eth.ethertype == ETHERTYPE_TURBOKV
     }
+
+    /// True iff this packet survives a byte-level `encode` → `decode`
+    /// round trip, ignoring the simulation-only fields (`tag`,
+    /// `chain_hop`) that are documented as not on the wire.
+    ///
+    /// Packets move through the cluster's message bus *by value* — there
+    /// is no re-encode between co-located hops — so the cluster driver
+    /// asserts this at every link boundary in debug builds: the in-memory
+    /// form and the wire form are never allowed to diverge. A packet that
+    /// carries a TurboKV header must therefore also carry the TurboKV
+    /// ethertype (otherwise `decode` would fold the header into the
+    /// payload).
+    pub fn codec_equivalent(&self) -> bool {
+        let Ok(mut decoded) = Packet::decode(&self.encode()) else {
+            return false;
+        };
+        decoded.tag = self.tag;
+        decoded.chain_hop = self.chain_hop;
+        decoded == *self
+    }
 }
 
 #[cfg(test)]
@@ -352,6 +372,34 @@ mod tests {
         let mut bytes = sample_request().encode();
         bytes.truncate(ETH_LEN + IPV4_LEN + 5); // cut into TurboKV header
         assert!(Packet::decode(&bytes).is_err());
+    }
+
+    #[test]
+    fn codec_equivalence_at_link_boundaries() {
+        // A request, a processed packet with chain header, and a plain
+        // reply are all wire-equivalent to their in-memory form.
+        let mut pkt = sample_request();
+        pkt.tag = 77; // sim-only, ignored by the check
+        pkt.chain_hop = true;
+        assert!(pkt.codec_equivalent());
+        pkt.ipv4.tos = Tos::Processed;
+        pkt.chain = Some(ChainHeader { ips: vec![Ip::new(10, 0, 0, 1), Ip::new(10, 1, 0, 1)] });
+        assert!(pkt.codec_equivalent());
+        let reply = Packet::reply(Ip::new(10, 0, 0, 1), Ip::new(10, 1, 0, 1), b"r".to_vec());
+        assert!(reply.codec_equivalent());
+    }
+
+    #[test]
+    fn scan_reply_turbo_echo_needs_turbokv_ethertype() {
+        // A reply echoing the TurboKV header (scan coverage) is only
+        // wire-equivalent if it keeps the TurboKV ethertype — with plain
+        // IPv4 the decoder would treat the header bytes as payload.
+        let mut reply = Packet::reply(Ip::new(10, 0, 0, 1), Ip::new(10, 1, 0, 1), b"p".to_vec());
+        reply.turbo =
+            Some(TurboHeader { op: OpCode::Range, key: Key(5), end_key: Key(9) });
+        assert!(!reply.codec_equivalent(), "IPv4 ethertype hides the echoed header");
+        reply.eth.ethertype = ETHERTYPE_TURBOKV;
+        assert!(reply.codec_equivalent());
     }
 
     #[test]

@@ -177,11 +177,13 @@ impl Topology {
         self.ip_to_addr.get(&ip).copied()
     }
 
-    /// First-hop switch of an endpoint.
-    pub fn edge_switch(&self, endpoint: Addr) -> SwitchId {
+    /// First-hop switch of an endpoint. A mis-wired topology (an endpoint
+    /// with no attached switch) is an error the caller surfaces — it fails
+    /// the run instead of aborting the process.
+    pub fn edge_switch(&self, endpoint: Addr) -> anyhow::Result<SwitchId> {
         match self.adj.get(&endpoint).and_then(|v| v.first()) {
-            Some(Addr::Switch(s)) => *s,
-            _ => panic!("endpoint {endpoint:?} not attached to a switch"),
+            Some(Addr::Switch(s)) => Ok(*s),
+            _ => anyhow::bail!("mis-wired topology: endpoint {endpoint:?} not attached to a switch"),
         }
     }
 
@@ -190,32 +192,33 @@ impl Topology {
         self.next_hop[sw].get(&dest).copied()
     }
 
-    /// Full path between two endpoints (inclusive of both).
-    pub fn path(&self, from: Addr, to: Addr) -> Vec<Addr> {
+    /// Full path between two endpoints (inclusive of both). Errors on
+    /// unroutable pairs and routing loops rather than panicking.
+    pub fn path(&self, from: Addr, to: Addr) -> anyhow::Result<Vec<Addr>> {
         if from == to {
-            return vec![from];
+            return Ok(vec![from]);
         }
         let mut path = vec![from];
-        let mut cur = Addr::Switch(self.edge_switch(from));
+        let mut cur = Addr::Switch(self.edge_switch(from)?);
         path.push(cur);
         let mut guard = 0;
         while cur != to {
             let Addr::Switch(sw) = cur else { break };
             let hop = self
                 .next_hop(sw, to)
-                .unwrap_or_else(|| panic!("no route from {cur:?} to {to:?}"));
+                .ok_or_else(|| anyhow::anyhow!("no route from {cur:?} to {to:?}"))?;
             path.push(hop);
             cur = hop;
             guard += 1;
-            assert!(guard < 64, "routing loop from {from:?} to {to:?}");
+            anyhow::ensure!(guard < 64, "routing loop from {from:?} to {to:?}");
         }
-        path
+        Ok(path)
     }
 
     /// Number of switch hops between endpoints (the latency driver the
     /// in-switch coordination reduces, §2.2).
-    pub fn hops(&self, from: Addr, to: Addr) -> usize {
-        self.path(from, to).iter().filter(|a| matches!(a, Addr::Switch(_))).count()
+    pub fn hops(&self, from: Addr, to: Addr) -> anyhow::Result<usize> {
+        Ok(self.path(from, to)?.iter().filter(|a| matches!(a, Addr::Switch(_))).count())
     }
 
     /// The ToR switch of a rack.
@@ -258,19 +261,19 @@ mod tests {
     #[test]
     fn client_to_node_path_goes_through_hierarchy() {
         let t = paper_topology();
-        let path = t.path(Addr::Client(0), Addr::Node(0));
+        let path = t.path(Addr::Client(0), Addr::Node(0)).unwrap();
         // client -> edge -> core -> agg0 -> tor0 -> node0
         assert_eq!(path.len(), 6);
         assert_eq!(path[0], Addr::Client(0));
         assert_eq!(*path.last().unwrap(), Addr::Node(0));
-        assert_eq!(t.hops(Addr::Client(0), Addr::Node(0)), 4);
+        assert_eq!(t.hops(Addr::Client(0), Addr::Node(0)).unwrap(), 4);
     }
 
     #[test]
     fn same_rack_nodes_one_switch_hop() {
         let t = paper_topology();
-        assert_eq!(t.hops(Addr::Node(0), Addr::Node(1)), 1);
-        let path = t.path(Addr::Node(0), Addr::Node(3));
+        assert_eq!(t.hops(Addr::Node(0), Addr::Node(1)).unwrap(), 1);
+        let path = t.path(Addr::Node(0), Addr::Node(3)).unwrap();
         assert_eq!(path, vec![Addr::Node(0), Addr::Switch(0), Addr::Node(3)]);
     }
 
@@ -278,9 +281,21 @@ mod tests {
     fn cross_rack_paths_use_agg_or_core() {
         let t = paper_topology();
         // Racks 0 and 1 share agg0: node -> tor0 -> agg -> tor1 -> node.
-        assert_eq!(t.hops(Addr::Node(0), Addr::Node(4)), 3);
+        assert_eq!(t.hops(Addr::Node(0), Addr::Node(4)).unwrap(), 3);
         // Racks 0 and 3 cross the core: 5 switch hops.
-        assert_eq!(t.hops(Addr::Node(0), Addr::Node(12)), 5);
+        assert_eq!(t.hops(Addr::Node(0), Addr::Node(12)).unwrap(), 5);
+    }
+
+    #[test]
+    fn unattached_endpoint_is_error_not_panic() {
+        let t = paper_topology();
+        // Node 99 / client 99 exist in no rack: routing to or from them
+        // must surface a routable error.
+        let err = t.edge_switch(Addr::Node(99)).unwrap_err();
+        assert!(format!("{err:#}").contains("mis-wired"), "{err:#}");
+        assert!(t.path(Addr::Client(99), Addr::Node(0)).is_err());
+        assert!(t.path(Addr::Client(0), Addr::Node(99)).is_err());
+        assert!(t.hops(Addr::Node(0), Addr::Node(99)).is_err());
     }
 
     #[test]
@@ -292,7 +307,7 @@ mod tests {
             .collect();
         for &a in &eps {
             for &b in &eps {
-                let path = t.path(a, b);
+                let path = t.path(a, b).unwrap();
                 assert_eq!(path[0], a);
                 assert_eq!(*path.last().unwrap(), b);
                 // No repeated elements (loop freedom).
@@ -337,7 +352,7 @@ mod tests {
         let t = Topology::build(&cfg);
         // 1 ToR + 1 AGG + core + edge.
         assert_eq!(t.switches.len(), 4);
-        assert_eq!(t.hops(Addr::Client(0), Addr::Node(3)), 4);
+        assert_eq!(t.hops(Addr::Client(0), Addr::Node(3)).unwrap(), 4);
     }
 
     #[test]
@@ -346,6 +361,6 @@ mod tests {
         let t = Topology::build(&cfg);
         assert_eq!(t.num_nodes, 64);
         assert_eq!(t.switches.len(), 8 + 4 + 1 + 1);
-        assert_eq!(t.hops(Addr::Node(0), Addr::Node(63)), 5);
+        assert_eq!(t.hops(Addr::Node(0), Addr::Node(63)).unwrap(), 5);
     }
 }

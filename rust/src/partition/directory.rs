@@ -123,6 +123,28 @@ impl Directory {
         idx + 1
     }
 
+    /// Split `[start, end]` (inclusive) into per-sub-range parts, each with
+    /// its serving tail node — the scan decomposition every coordinator
+    /// performs (paper §4.3): the switch via clone+recirculate, the
+    /// client-driven library locally, the server-driven coordinator node on
+    /// its directory replica.
+    pub fn scan_parts(&self, start: Key, end: Key) -> Vec<(Key, Key, NodeId)> {
+        debug_assert!(start <= end);
+        let mut parts = Vec::new();
+        let mut cur = start;
+        loop {
+            let idx = self.lookup(cur);
+            let (_, range_end) = self.bounds(idx);
+            let part_end = end.min(range_end);
+            parts.push((cur, part_end, self.tail(idx)));
+            if part_end >= end {
+                break;
+            }
+            cur = part_end.next();
+        }
+        parts
+    }
+
     /// All range indexes that `node` participates in.
     pub fn ranges_of_node(&self, node: NodeId) -> Vec<usize> {
         (0..self.ranges.len())
@@ -203,6 +225,32 @@ mod tests {
 
     fn paper_dir() -> Directory {
         Directory::initial(128, 16, 3)
+    }
+
+    #[test]
+    fn scan_parts_cover_interval_contiguously() {
+        let d = paper_dir();
+        // Span from inside range 1 to inside range 4.
+        let (s1, e1) = d.bounds(1);
+        let (s4, e4) = d.bounds(4);
+        let start = Key(s1.0 + (e1.0 - s1.0) / 2);
+        let end = Key(s4.0 + (e4.0 - s4.0) / 2);
+        let parts = d.scan_parts(start, end);
+        assert_eq!(parts.len(), 4, "ranges 1..=4");
+        assert_eq!(parts[0].0, start);
+        assert_eq!(parts.last().unwrap().1, end);
+        for w in parts.windows(2) {
+            assert_eq!(w[0].1.next(), w[1].0, "contiguous, non-overlapping");
+        }
+        for &(s, _, tail) in &parts {
+            assert_eq!(tail, d.tail(d.lookup(s)));
+        }
+        // A span inside one sub-range is a single part.
+        assert_eq!(d.scan_parts(s1, Key(s1.0 + 10)), vec![(s1, Key(s1.0 + 10), d.tail(1))]);
+        // The full key span touches every sub-range, including Key::MAX.
+        let all = d.scan_parts(Key::MIN, Key::MAX);
+        assert_eq!(all.len(), d.len());
+        assert_eq!(all.last().unwrap().1, Key::MAX);
     }
 
     #[test]

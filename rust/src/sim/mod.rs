@@ -85,6 +85,58 @@ impl<E: Eq> Engine<E> {
         self.processed += 1;
         Some((entry.time, entry.payload))
     }
+
+    /// Firing time of the next pending event, without popping it.
+    pub fn peek_time(&self) -> Option<SimTime> {
+        self.heap.peek().map(|Reverse(e)| e.time)
+    }
+
+    /// Pop the next event only if it fires exactly at `t` — the batched
+    /// continuation used by [`Engine::drive`] to drain all events sharing
+    /// one timestamp without re-entering the outer scheduling loop.
+    pub fn pop_at(&mut self, t: SimTime) -> Option<E> {
+        if self.peek_time() != Some(t) {
+            return None;
+        }
+        self.pop().map(|(_, e)| e)
+    }
+
+    /// Run `driver` to completion: pop events in `(time, seq)` order and
+    /// dispatch each one, until the queue drains or the driver reports it
+    /// is finished. Events sharing a timestamp drain through the
+    /// [`Engine::pop_at`] fast path; dispatch order is exactly what a
+    /// plain pop loop would produce (determinism), and `finished` is
+    /// consulted after every event, so a driver can stop mid-batch.
+    pub fn drive<D: Driver<E>>(&mut self, driver: &mut D) {
+        'run: while let Some((now, first)) = self.pop() {
+            let mut ev = first;
+            loop {
+                driver.dispatch(now, ev, self);
+                if driver.finished() {
+                    break 'run;
+                }
+                match self.pop_at(now) {
+                    Some(next) => ev = next,
+                    None => continue 'run,
+                }
+            }
+        }
+    }
+}
+
+/// A simulation driver: the dispatch half of a discrete-event world. The
+/// engine owns time and ordering; the driver owns all domain state and
+/// handles one event at a time, scheduling follow-ups through the engine
+/// reference it is handed (`cluster::Cluster` is the canonical impl).
+pub trait Driver<E: Eq> {
+    /// Handle one event that fired at `now`.
+    fn dispatch(&mut self, now: SimTime, ev: E, engine: &mut Engine<E>);
+
+    /// Checked after every dispatched event; returning `true` stops
+    /// [`Engine::drive`] immediately (even mid-batch).
+    fn finished(&self) -> bool {
+        false
+    }
 }
 
 /// A serial server: requests are admitted in arrival order; each holds the
@@ -199,6 +251,70 @@ mod tests {
             }
         }
         assert_eq!(count, 100);
+    }
+
+    #[test]
+    fn pop_at_only_matches_exact_time() {
+        let mut eng: Engine<u32> = Engine::new();
+        eng.schedule(10, 1);
+        eng.schedule(10, 2);
+        eng.schedule(20, 3);
+        let (t, first) = eng.pop().unwrap();
+        assert_eq!((t, first), (10, 1));
+        assert_eq!(eng.pop_at(10), Some(2));
+        assert_eq!(eng.pop_at(10), None, "next event is at t=20");
+        assert_eq!(eng.peek_time(), Some(20));
+    }
+
+    /// A driver that records the order events were dispatched in and
+    /// reschedules a follow-up at the same timestamp for some of them.
+    struct RecordingDriver {
+        seen: Vec<(SimTime, u32)>,
+        stop_after: Option<usize>,
+    }
+
+    impl Driver<u32> for RecordingDriver {
+        fn dispatch(&mut self, now: SimTime, ev: u32, engine: &mut Engine<u32>) {
+            self.seen.push((now, ev));
+            if ev == 1 {
+                // Same-timestamp follow-up: must run within this batch,
+                // after the already-queued ties (seq order).
+                engine.schedule(0, 100);
+            }
+        }
+
+        fn finished(&self) -> bool {
+            self.stop_after.map(|n| self.seen.len() >= n).unwrap_or(false)
+        }
+    }
+
+    #[test]
+    fn drive_matches_single_pop_order() {
+        // The batched drive must produce exactly the order a plain
+        // pop-loop would: (time, seq), including same-time reschedules.
+        let mut eng: Engine<u32> = Engine::new();
+        eng.schedule(5, 1);
+        eng.schedule(5, 2);
+        eng.schedule(9, 3);
+        let mut d = RecordingDriver { seen: Vec::new(), stop_after: None };
+        eng.drive(&mut d);
+        assert_eq!(d.seen, vec![(5, 1), (5, 2), (5, 100), (9, 3)]);
+        assert_eq!(eng.processed(), 4);
+    }
+
+    #[test]
+    fn drive_stops_mid_batch_when_finished() {
+        let mut eng: Engine<u32> = Engine::new();
+        for i in 0..6 {
+            eng.schedule(7, i + 10);
+        }
+        let mut d = RecordingDriver { seen: Vec::new(), stop_after: Some(2) };
+        eng.drive(&mut d);
+        assert_eq!(d.seen.len(), 2);
+        // Exactly the dispatched events were popped — nothing drained
+        // behind the driver's back.
+        assert_eq!(eng.processed(), 2);
+        assert_eq!(eng.pending(), 4);
     }
 
     #[test]

@@ -251,6 +251,67 @@ mod tests {
     }
 
     #[test]
+    fn quantile_edge_cases() {
+        // Empty histogram: every quantile is 0.
+        let empty = Histogram::new();
+        for q in [0.0, 0.5, 1.0] {
+            assert_eq!(empty.quantile(q), 0);
+        }
+
+        // Single sample: every quantile returns exactly that sample
+        // (bucket midpoints clamp to [min, max]).
+        let mut single = Histogram::new();
+        single.record(42);
+        for q in [0.0, 0.25, 0.5, 1.0] {
+            assert_eq!(single.quantile(q), 42, "q={q}");
+        }
+
+        // q = 0.0 resolves to the minimum, q = 1.0 to the maximum, for
+        // exactly-representable small values.
+        let mut h = Histogram::new();
+        for v in [3u64, 8, 15, 21, 30] {
+            h.record(v);
+        }
+        assert_eq!(h.quantile(0.0), 3);
+        assert_eq!(h.quantile(1.0), 30);
+
+        // Out-of-range q clamps instead of panicking or indexing wild.
+        assert_eq!(h.quantile(-0.5), 3);
+        assert_eq!(h.quantile(2.0), 30);
+    }
+
+    #[test]
+    fn quantile_bucket_boundary_values_are_exact() {
+        // 31 is the last linear value; 32 starts the first log bucket with
+        // 1-wide sub-buckets; 64 starts the next major. All three are
+        // exactly representable and must round-trip through quantile.
+        let mut h = Histogram::new();
+        for v in [31u64, 32, 33, 63, 64] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.quantile(0.2), 31);
+        assert_eq!(h.quantile(0.4), 32);
+        assert_eq!(h.quantile(0.6), 33);
+        assert_eq!(h.quantile(0.8), 63);
+        assert_eq!(h.quantile(1.0), 64);
+        assert_eq!(h.min(), 31);
+        assert_eq!(h.max(), 64);
+    }
+
+    #[test]
+    fn sampleset_quantile_edge_cases() {
+        let mut empty = SampleSet::new();
+        assert_eq!(empty.quantile(0.0), 0);
+        assert_eq!(empty.quantile(1.0), 0);
+        let mut single = SampleSet::new();
+        single.record(7);
+        for q in [0.0, 0.5, 1.0, -1.0, 2.0] {
+            assert_eq!(single.quantile(q), 7, "q={q}");
+        }
+    }
+
+    #[test]
     fn sampleset_exact_quantiles() {
         let mut s = SampleSet::new();
         for v in 1..=100u64 {

@@ -41,7 +41,7 @@ fn replicas_converge_in_switch_mode() {
     let mut cfg = base();
     cfg.coordination = Coordination::InSwitch;
     let mut cl = Cluster::build(cfg);
-    cl.run();
+    cl.run().unwrap();
     assert_replicas_converged(&mut cl);
 }
 
@@ -50,7 +50,7 @@ fn replicas_converge_client_driven() {
     let mut cfg = base();
     cfg.coordination = Coordination::ClientDriven;
     let mut cl = Cluster::build(cfg);
-    cl.run();
+    cl.run().unwrap();
     assert_replicas_converged(&mut cl);
 }
 
@@ -59,7 +59,7 @@ fn replicas_converge_server_driven() {
     let mut cfg = base();
     cfg.coordination = Coordination::ServerDriven;
     let mut cl = Cluster::build(cfg);
-    cl.run();
+    cl.run().unwrap();
     assert_replicas_converged(&mut cl);
 }
 
@@ -72,7 +72,7 @@ fn replicas_converge_after_migration() {
     cfg.controller.epoch_ns = 800_000_000; // enough samples per epoch
     cfg.controller.overload_factor = 1.3;
     let mut cl = Cluster::build(cfg);
-    let stats = cl.run();
+    let stats = cl.run().unwrap();
     assert!(stats.migrations > 0, "expected migrations under heavy skew");
     assert_replicas_converged(&mut cl);
 }

@@ -23,7 +23,7 @@ fn mixed_workload_all_modes_complete_and_verify() {
         cfg.workload.scan_ratio = 0.15;
         cfg.workload.zipf_theta = Some(0.95);
         let mut cl = Cluster::build(cfg);
-        let stats = cl.run();
+        let stats = cl.run().unwrap();
         assert_eq!(cl.metrics.completed(), 1_000, "mode {mode:?}");
         assert_eq!(cl.metrics.errors, 0, "mode {mode:?}");
         assert_eq!(stats.switch_drops, 0, "mode {mode:?}");
@@ -50,7 +50,7 @@ fn xla_dataplane_run_matches_rust_dataplane_results() {
         cfg.workload.zipf_theta = Some(1.2);
         let mut cl = Cluster::build_auto(cfg).unwrap();
         cl.verify_reads = true;
-        cl.run();
+        cl.run().unwrap();
         assert_eq!(cl.verify_failures, 0);
         // The DES is deterministic and both engines compute identical
         // routing, so throughput must match exactly.
@@ -70,7 +70,7 @@ fn hash_partitioning_end_to_end() {
         cfg.workload.write_ratio = 0.3;
         let mut cl = Cluster::build(cfg);
         cl.verify_reads = true;
-        cl.run();
+        cl.run().unwrap();
         assert_eq!(cl.metrics.completed(), 1_000, "mode {mode:?}");
     }
 }
@@ -85,7 +85,7 @@ fn paper_headline_ordering_throughput() {
         cfg.workload.ops_per_client = 800;
         cfg.workload.zipf_theta = Some(0.99);
         let mut cl = Cluster::build(cfg);
-        cl.run();
+        cl.run().unwrap();
         results.insert(mode.name(), cl.metrics.throughput());
     }
     let (t, c, s) = (
@@ -108,7 +108,7 @@ fn scan_results_are_correct_and_sorted() {
     cfg.workload.scan_ratio = 1.0;
     cfg.workload.scan_spans = 3;
     let mut cl = Cluster::build(cfg);
-    cl.run();
+    cl.run().unwrap();
     assert_eq!(cl.metrics.count_for(OpCode::Range), 60);
     // The switch split multi-range scans (recirculations happened).
     let recirc: u64 = cl.switches.iter().map(|s| s.stats.recirculated).sum();
@@ -124,7 +124,7 @@ fn larger_cluster_smoke() {
     cfg.cluster.num_ranges = 256;
     cfg.workload.ops_per_client = 120;
     let mut cl = Cluster::build(cfg);
-    let stats = cl.run();
+    let stats = cl.run().unwrap();
     assert_eq!(cl.metrics.completed(), 8 * 120);
     assert_eq!(stats.switch_drops, 0);
 }

@@ -18,7 +18,7 @@ fn single_node_failure_fully_repairs() {
     let mut cl = Cluster::build(base());
     cl.timeout_ns = 1_500_000_000;
     cl.schedule_node_failure(7, 500_000_000);
-    let stats = cl.run();
+    let stats = cl.run().unwrap();
     assert_eq!(cl.metrics.completed(), 1_600);
     assert_eq!(stats.repairs, 24, "node 7 was in 24 chains");
     cl.dir.check_invariants().unwrap();
@@ -46,7 +46,7 @@ fn r_minus_one_simultaneous_failures_survive() {
     cl.timeout_ns = 1_500_000_000;
     cl.schedule_node_failure(0, 400_000_000);
     cl.schedule_node_failure(1, 450_000_000);
-    let stats = cl.run();
+    let stats = cl.run().unwrap();
     assert_eq!(cl.metrics.completed(), 1_600, "all requests served despite 2 failures");
     assert!(stats.repairs >= 40, "repairs={}", stats.repairs);
     for idx in 0..cl.dir.len() {
@@ -65,7 +65,7 @@ fn switch_failure_fails_over_the_rack() {
     // ToR of rack 2 dies: nodes 8..12 become unreachable (§5.2).
     let tor2 = cl.topo.tor_of_rack(2);
     cl.schedule_switch_failure(tor2, 600_000_000);
-    let stats = cl.run();
+    let stats = cl.run().unwrap();
     assert_eq!(cl.metrics.completed(), 2_000);
     assert!(stats.repairs > 0);
     for idx in 0..cl.dir.len() {
@@ -81,7 +81,7 @@ fn failures_then_recovery_metrics_are_sane() {
     let mut cl = Cluster::build(base());
     cl.timeout_ns = 1_000_000_000;
     cl.schedule_node_failure(5, 300_000_000);
-    let stats = cl.run();
+    let stats = cl.run().unwrap();
     // Retried requests show up as errors but still complete.
     assert_eq!(cl.metrics.completed(), 1_600);
     assert_eq!(stats.retries, cl.metrics.errors);

@@ -21,7 +21,7 @@ fn skewed_cfg() -> Config {
 fn migrations_move_data_and_update_every_switch() {
     let mut cl = Cluster::build(skewed_cfg());
     let before = cl.dir.clone();
-    let stats = cl.run();
+    let stats = cl.run().unwrap();
     assert!(stats.migrations > 0);
     assert!(cl.dir.version > before.version);
     // Every switch's table mirrors the directory after migration pushes.
@@ -66,7 +66,7 @@ fn statistics_reports_reflect_traffic() {
     let mut cfg = skewed_cfg();
     cfg.controller.migration = false; // observe stats without rebalancing
     let mut cl = Cluster::build(cfg);
-    cl.run();
+    cl.run().unwrap();
     // Counters were collected at least once and show skew.
     assert!(cl.controller.epochs > 0);
     let total: u64 = cl.controller.last_read.iter().sum::<u64>()
@@ -84,7 +84,7 @@ fn hot_range_splitting_divides_and_stays_consistent() {
     cfg.workload.ops_per_client = 1_500;
     cfg.controller.epoch_ns = 800_000_000;
     let mut cl = Cluster::build(cfg);
-    cl.run();
+    cl.run().unwrap();
     assert!(cl.controller.splits > 0, "zipf-1.2 must divide hot sub-ranges");
     assert!(cl.dir.len() > 128, "directory grew by the splits");
     cl.dir.check_invariants().unwrap();
@@ -107,14 +107,14 @@ fn uniform_workload_triggers_no_migration() {
     let mut cfg = skewed_cfg();
     cfg.workload.zipf_theta = None;
     let mut cl = Cluster::build(cfg);
-    let stats = cl.run();
+    let stats = cl.run().unwrap();
     assert_eq!(stats.migrations, 0, "balanced load must not migrate");
 }
 
 #[test]
 fn tor_counters_drain_each_epoch() {
     let mut cl = Cluster::build(skewed_cfg());
-    cl.run();
+    cl.run().unwrap();
     for sw in &cl.switches {
         if matches!(sw.role, SwitchRole::Tor { .. }) {
             // After the final epoch the counters were reset; only requests
