@@ -135,7 +135,7 @@ mod tests {
             OpCode::Get,
             Key(1),
             Key::MIN,
-            vec![],
+            Vec::<u8>::new(),
         );
         bus.send(Addr::Switch(0), pkt.clone());
         bus.after(5, Event::ClientIssue { client: 0 });

@@ -14,7 +14,7 @@ use anyhow::Result;
 
 use crate::config::{Config, Coordination, Partitioning};
 use crate::metrics::Metrics;
-use crate::net::packet::{Ip, Packet, Tos};
+use crate::net::packet::{Ip, Packet, Payload, Tos};
 use crate::net::topology::{Addr, Topology};
 use crate::partition::{matching_value, Directory};
 use crate::types::{ClientId, Key, OpCode, Reply, Request};
@@ -251,7 +251,7 @@ impl TransmitStrategy for InSwitchTransmit {
             Partitioning::Hash => (Tos::HashData, matching_value(part, req.key)),
         };
         let mut pkt =
-            Packet::request(st.ip, Ip(0), tos, req.op, req.key, end_key, req.value.clone());
+            Packet::request(st.ip, Ip(0), tos, req.op, req.key, end_key, req.value.as_slice());
         pkt.tag = tag;
         env.bus.send(Addr::Switch(edge), pkt);
         Ok(())
@@ -282,7 +282,7 @@ impl TransmitStrategy for ClientDrivenTransmit {
                     OpCode::Range,
                     s,
                     e,
-                    Vec::new(),
+                    Payload::new(),
                 );
                 pkt.tag = tag;
                 env.bus.send(Addr::Switch(edge), pkt);
@@ -299,7 +299,7 @@ impl TransmitStrategy for ClientDrivenTransmit {
                 req.op,
                 req.key,
                 req.end_key,
-                req.value.clone(),
+                req.value.as_slice(),
             );
             pkt.tag = tag;
             env.bus.send(Addr::Switch(edge), pkt);
@@ -332,7 +332,7 @@ impl TransmitStrategy for ServerDrivenTransmit {
             req.op,
             req.key,
             req.end_key,
-            req.value.clone(),
+            req.value.as_slice(),
         );
         pkt.tag = tag;
         env.bus.send(Addr::Switch(edge), pkt);

@@ -59,8 +59,9 @@ use controller::{ControllerState, LoadEstimator, RustEstimator};
 use node_actor::{node_strategy, NodeActor, NodeEnv};
 use switch_actor::{SwitchActor, SwitchEnv};
 
-/// Run-completion summary beyond `Metrics`.
-#[derive(Clone, Debug, Default)]
+/// Run-completion summary beyond `Metrics`. `PartialEq` is derived so the
+/// determinism tests can compare whole runs field-by-field.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct RunStats {
     pub migrations: u64,
     pub repairs: u64,

@@ -360,9 +360,12 @@ fn reply_to_client(
     Ok(())
 }
 
-/// Reconstruct a `Request` from the TurboKV header + payload.
+/// Reconstruct a `Request` from the TurboKV header + payload. This is the
+/// copy-on-write point of the shared-payload scheme (DESIGN.md §2c): the
+/// shim materializes one owned copy at the packet → store-API boundary,
+/// after every forward/split/recirculation hop shared the buffer for free.
 fn request_of(turbo: &TurboHeader, pkt: &Packet) -> Request {
-    Request { op: turbo.op, key: turbo.key, end_key: turbo.end_key, value: pkt.payload.clone() }
+    Request { op: turbo.op, key: turbo.key, end_key: turbo.end_key, value: pkt.payload.to_vec() }
 }
 
 /// Requests keep the client's IP in `ipv4.src` along node forwards (client

@@ -49,20 +49,23 @@ impl SwitchActor {
         }
     }
 
-    /// One pipeline pass over the buffered packets.
+    /// One pipeline pass over the buffered packets. The ingress buffer is
+    /// drained in place and handed back, so its capacity is reused across
+    /// busy periods (no per-pass allocation).
     pub fn on_pass(&mut self, env: SwitchEnv<'_>, s: SwitchId) {
         self.pass_scheduled[s] = false;
-        let batch = std::mem::take(&mut self.pending[s]);
-        if batch.is_empty() {
+        if self.pending[s].is_empty() {
             return;
         }
+        let mut batch = std::mem::take(&mut self.pending[s]);
         let emits = env.switches[s].process_batch(
-            batch,
+            &mut batch,
             env.topo,
             env.lookup,
             env.cfg.sim.switch_recirc_ns,
             env.cfg.sim.switch_keyroute_ns,
         );
+        self.pending[s] = batch; // drained; keeps its capacity
         for e in emits {
             env.bus.send_delayed(e.to, e.pkt, e.extra_delay_ns);
         }

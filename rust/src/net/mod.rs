@@ -4,5 +4,5 @@
 pub mod packet;
 pub mod topology;
 
-pub use packet::{ChainHeader, Ip, Packet, Tos, TurboHeader};
+pub use packet::{ChainHeader, Ip, IpList, Packet, Payload, Tos, TurboHeader};
 pub use topology::{Addr, SwitchRole, Topology};

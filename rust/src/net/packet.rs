@@ -11,7 +11,9 @@
 //! switch pipeline's parser stage (switch/pipeline.rs) consumes these
 //! headers exactly as a P4 parser state machine would.
 
-use anyhow::{bail, Context, Result};
+use std::rc::Rc;
+
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::types::{Key, OpCode};
 
@@ -37,13 +39,23 @@ pub enum Tos {
 }
 
 impl Tos {
-    pub fn from_u8(v: u8) -> Tos {
+    /// Strict parse: `None` for bytes outside the TurboKV ToS set. The
+    /// packet decoder uses this for TurboKV-ethertype packets, where an
+    /// unknown ToS is wire corruption, not ordinary traffic.
+    pub fn try_from_u8(v: u8) -> Option<Tos> {
         match v {
-            0x10 => Tos::RangeData,
-            0x20 => Tos::HashData,
-            0x30 => Tos::Processed,
-            _ => Tos::Normal,
+            0x10 => Some(Tos::RangeData),
+            0x20 => Some(Tos::HashData),
+            0x30 => Some(Tos::Processed),
+            0x00 => Some(Tos::Normal),
+            _ => None,
         }
+    }
+
+    /// Lenient parse for ordinary IPv4 traffic, whose ToS the simulator
+    /// does not model: any unknown byte folds to [`Tos::Normal`].
+    pub fn from_u8(v: u8) -> Tos {
+        Tos::try_from_u8(v).unwrap_or(Tos::Normal)
     }
 }
 
@@ -105,12 +117,218 @@ pub struct TurboHeader {
 
 pub const TURBO_LEN: usize = 1 + 16 + 16;
 
+/// Shared, immutable payload bytes. Cloning is O(1) in payload size — the
+/// bytes live behind one reference-counted buffer, so the broadcast /
+/// recirculation / scan-split points that clone whole packets never copy
+/// values. The buffer is immutable for its whole life: every "mutation"
+/// site constructs a fresh `Payload` (copy-on-write), so a clone can never
+/// observe a buffer that later changes.
+#[derive(Clone, Default)]
+pub struct Payload(Option<Rc<[u8]>>);
+
+impl Payload {
+    /// The empty payload (no backing allocation at all).
+    pub fn new() -> Payload {
+        Payload(None)
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        self.0.as_deref().unwrap_or(&[])
+    }
+
+    pub fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.as_slice().is_empty()
+    }
+
+    /// Materialize an owned copy (the copy-on-write point: the store shim
+    /// copies once at the packet → API-call boundary).
+    pub fn to_vec(&self) -> Vec<u8> {
+        self.as_slice().to_vec()
+    }
+
+    /// Do the two payloads share one backing buffer? (Aliasing oracle for
+    /// the sharing-semantics tests; empty payloads trivially share.)
+    pub fn shares_buffer(&self, other: &Payload) -> bool {
+        match (&self.0, &other.0) {
+            (Some(a), Some(b)) => Rc::ptr_eq(a, b),
+            (None, None) => true,
+            _ => false,
+        }
+    }
+}
+
+impl std::ops::Deref for Payload {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl From<Vec<u8>> for Payload {
+    fn from(v: Vec<u8>) -> Payload {
+        if v.is_empty() {
+            Payload(None)
+        } else {
+            Payload(Some(v.into()))
+        }
+    }
+}
+
+impl From<&[u8]> for Payload {
+    fn from(v: &[u8]) -> Payload {
+        if v.is_empty() {
+            Payload(None)
+        } else {
+            Payload(Some(v.into()))
+        }
+    }
+}
+
+impl PartialEq for Payload {
+    fn eq(&self, other: &Payload) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for Payload {}
+
+impl std::fmt::Debug for Payload {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Payload({} bytes)", self.len())
+    }
+}
+
+/// Inline capacity of [`IpList`]: chains carry at most replication-factor
+/// IPs plus the client IP, so 4 slots cover the default r=3 config with
+/// zero heap allocations.
+pub const INLINE_IPS: usize = 4;
+
+/// A small-vector of IPs: up to [`INLINE_IPS`] entries stored inline (so
+/// cloning a chain header is a flat memcpy), spilling to a heap `Vec` only
+/// for longer chains.
+#[derive(Clone)]
+enum IpRepr {
+    Inline { buf: [Ip; INLINE_IPS], len: u8 },
+    Heap(Vec<Ip>),
+}
+
+#[derive(Clone)]
+pub struct IpList(IpRepr);
+
+impl IpList {
+    pub fn new() -> IpList {
+        IpList(IpRepr::Inline { buf: [Ip(0); INLINE_IPS], len: 0 })
+    }
+
+    pub fn push(&mut self, ip: Ip) {
+        match &mut self.0 {
+            IpRepr::Inline { buf, len } => {
+                if (*len as usize) < INLINE_IPS {
+                    buf[*len as usize] = ip;
+                    *len += 1;
+                } else {
+                    let mut v = buf.to_vec();
+                    v.push(ip);
+                    self.0 = IpRepr::Heap(v);
+                }
+            }
+            IpRepr::Heap(v) => v.push(ip),
+        }
+    }
+
+    /// Remove and return the entry at `idx`, shifting the rest down
+    /// (`Vec::remove` semantics — the chain-step hop pops the head).
+    pub fn remove(&mut self, idx: usize) -> Ip {
+        match &mut self.0 {
+            IpRepr::Inline { buf, len } => {
+                let n = *len as usize;
+                assert!(idx < n, "IpList::remove index {idx} out of bounds (len {n})");
+                let out = buf[idx];
+                buf.copy_within(idx + 1..n, idx);
+                *len -= 1;
+                out
+            }
+            IpRepr::Heap(v) => v.remove(idx),
+        }
+    }
+
+    pub fn as_slice(&self) -> &[Ip] {
+        match &self.0 {
+            IpRepr::Inline { buf, len } => &buf[..*len as usize],
+            IpRepr::Heap(v) => v,
+        }
+    }
+
+    /// Has this list spilled to the heap? (False for every chain the
+    /// default replication factor produces.)
+    pub fn spilled(&self) -> bool {
+        matches!(self.0, IpRepr::Heap(_))
+    }
+}
+
+impl Default for IpList {
+    fn default() -> IpList {
+        IpList::new()
+    }
+}
+
+impl std::ops::Deref for IpList {
+    type Target = [Ip];
+    fn deref(&self) -> &[Ip] {
+        self.as_slice()
+    }
+}
+
+impl From<Vec<Ip>> for IpList {
+    fn from(v: Vec<Ip>) -> IpList {
+        if v.len() <= INLINE_IPS {
+            v.into_iter().collect()
+        } else {
+            IpList(IpRepr::Heap(v))
+        }
+    }
+}
+
+impl FromIterator<Ip> for IpList {
+    fn from_iter<I: IntoIterator<Item = Ip>>(iter: I) -> IpList {
+        let mut list = IpList::new();
+        for ip in iter {
+            list.push(ip);
+        }
+        list
+    }
+}
+
+impl PartialEq for IpList {
+    fn eq(&self, other: &IpList) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for IpList {}
+
+impl PartialEq<Vec<Ip>> for IpList {
+    fn eq(&self, other: &Vec<Ip>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl std::fmt::Debug for IpList {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.as_slice().fmt(f)
+    }
+}
+
 /// Chain header (Fig. 8(c)): CLength + node IPs head→tail + client IP last.
 #[derive(Clone, Debug, PartialEq, Eq, Default)]
 pub struct ChainHeader {
     /// IPs remaining on the chain path, ending with the client IP.
     /// `CLength` on the wire is `ips.len()`.
-    pub ips: Vec<Ip>,
+    pub ips: IpList,
 }
 
 impl ChainHeader {
@@ -129,7 +347,8 @@ pub struct Packet {
     /// Present only after switch processing (ToS == Processed).
     pub chain: Option<ChainHeader>,
     /// Application payload (Put value on requests; result on replies).
-    pub payload: Vec<u8>,
+    /// Shared + immutable: cloning the packet is O(1) in payload size.
+    pub payload: Payload,
     /// Simulation-side request-correlation id. Stands in for the client
     /// library's request table (keyed by client port + key in a real
     /// deployment); NOT part of the wire format — `encode`/`decode` ignore
@@ -144,26 +363,34 @@ pub struct Packet {
 
 impl Packet {
     /// A fresh client request packet (Fig. 8(a)).
-    pub fn request(src: Ip, dst: Ip, tos: Tos, op: OpCode, key: Key, end_key: Key, payload: Vec<u8>) -> Packet {
+    pub fn request(
+        src: Ip,
+        dst: Ip,
+        tos: Tos,
+        op: OpCode,
+        key: Key,
+        end_key: Key,
+        payload: impl Into<Payload>,
+    ) -> Packet {
         Packet {
             eth: EthHeader { dst: [0; 6], src: [0; 6], ethertype: ETHERTYPE_TURBOKV },
             ipv4: Ipv4Header { tos, src, dst },
             turbo: Some(TurboHeader { op, key, end_key }),
             chain: None,
-            payload,
+            payload: payload.into(),
             tag: 0,
             chain_hop: false,
         }
     }
 
     /// A standard-IP reply packet (Fig. 8(b)).
-    pub fn reply(src: Ip, dst: Ip, payload: Vec<u8>) -> Packet {
+    pub fn reply(src: Ip, dst: Ip, payload: impl Into<Payload>) -> Packet {
         Packet {
             eth: EthHeader { dst: [0; 6], src: [0; 6], ethertype: ETHERTYPE_IPV4 },
             ipv4: Ipv4Header { tos: Tos::Normal, src, dst },
             turbo: None,
             chain: None,
-            payload,
+            payload: payload.into(),
             tag: 0,
             chain_hop: false,
         }
@@ -200,7 +427,7 @@ impl Packet {
         }
         if let Some(c) = &self.chain {
             out.push(c.ips.len() as u8);
-            for ip in &c.ips {
+            for ip in c.ips.as_slice() {
                 out.extend_from_slice(&ip.0.to_be_bytes());
             }
         }
@@ -224,7 +451,16 @@ impl Packet {
         if ip[0] != 0x45 {
             bail!("unsupported IPv4 version/IHL {:#x}", ip[0]);
         }
-        let tos = Tos::from_u8(ip[1]);
+        // TurboKV packets carry protocol meaning in the ToS byte, so an
+        // unknown value is wire corruption and must not silently fold to
+        // Normal (that would break encode/decode round-trip symmetry);
+        // ordinary IPv4 ToS is not modeled and parses leniently.
+        let tos = if ethertype == ETHERTYPE_TURBOKV {
+            Tos::try_from_u8(ip[1])
+                .ok_or_else(|| anyhow!("unknown ToS {:#04x} on a TurboKV packet", ip[1]))?
+        } else {
+            Tos::from_u8(ip[1])
+        };
         let total_len = u16::from_be_bytes([ip[2], ip[3]]) as usize;
         if total_len + ETH_LEN > bytes.len() {
             bail!("truncated packet: header claims {total_len} bytes");
@@ -256,13 +492,12 @@ impl Packet {
             if rest.len() < 1 + 4 * n {
                 bail!("truncated chain header: CLength={n}");
             }
-            let mut ips = Vec::with_capacity(n);
-            for i in 0..n {
-                let o = 1 + 4 * i;
-                ips.push(Ip(u32::from_be_bytes([
-                    rest[o], rest[o + 1], rest[o + 2], rest[o + 3],
-                ])));
-            }
+            let ips: IpList = (0..n)
+                .map(|i| {
+                    let o = 1 + 4 * i;
+                    Ip(u32::from_be_bytes([rest[o], rest[o + 1], rest[o + 2], rest[o + 3]]))
+                })
+                .collect();
             rest = &rest[1 + 4 * n..];
             Some(ChainHeader { ips })
         } else {
@@ -274,7 +509,7 @@ impl Packet {
             ipv4: Ipv4Header { tos, src: src_ip, dst: dst_ip },
             turbo,
             chain,
-            payload: rest.to_vec(),
+            payload: Payload::from(rest),
             tag: 0,
             chain_hop: false,
         })
@@ -336,7 +571,7 @@ mod tests {
         let mut pkt = sample_request();
         pkt.ipv4.tos = Tos::Processed;
         pkt.chain = Some(ChainHeader {
-            ips: vec![Ip::new(10, 0, 0, 1), Ip::new(10, 0, 1, 2), Ip::new(10, 1, 0, 1)],
+            ips: vec![Ip::new(10, 0, 0, 1), Ip::new(10, 0, 1, 2), Ip::new(10, 1, 0, 1)].into(),
         });
         let decoded = Packet::decode(&pkt.encode()).unwrap();
         assert_eq!(pkt, decoded);
@@ -350,7 +585,7 @@ mod tests {
         let decoded = Packet::decode(&pkt.encode()).unwrap();
         assert_eq!(decoded.turbo, None);
         assert_eq!(decoded.chain, None);
-        assert_eq!(decoded.payload, b"value");
+        assert_eq!(decoded.payload.as_slice(), b"value");
     }
 
     #[test]
@@ -358,7 +593,7 @@ mod tests {
         let mut pkt = sample_request();
         assert_eq!(pkt.encode().len(), pkt.wire_len());
         pkt.ipv4.tos = Tos::Processed;
-        pkt.chain = Some(ChainHeader { ips: vec![Ip::new(1, 2, 3, 4); 4] });
+        pkt.chain = Some(ChainHeader { ips: vec![Ip::new(1, 2, 3, 4); 4].into() });
         assert_eq!(pkt.encode().len(), pkt.wire_len());
     }
 
@@ -383,7 +618,8 @@ mod tests {
         pkt.chain_hop = true;
         assert!(pkt.codec_equivalent());
         pkt.ipv4.tos = Tos::Processed;
-        pkt.chain = Some(ChainHeader { ips: vec![Ip::new(10, 0, 0, 1), Ip::new(10, 1, 0, 1)] });
+        pkt.chain =
+            Some(ChainHeader { ips: vec![Ip::new(10, 0, 0, 1), Ip::new(10, 1, 0, 1)].into() });
         assert!(pkt.codec_equivalent());
         let reply = Packet::reply(Ip::new(10, 0, 0, 1), Ip::new(10, 1, 0, 1), b"r".to_vec());
         assert!(reply.codec_equivalent());
@@ -403,6 +639,104 @@ mod tests {
     }
 
     #[test]
+    fn decode_rejects_unknown_tos_on_turbokv_packets() {
+        // Regression: decode used to fold any unknown ToS byte to Normal,
+        // silently breaking round-trip symmetry for corrupt wire bytes.
+        let mut bytes = sample_request().encode();
+        bytes[ETH_LEN + 1] = 0x40; // not in {0x00, 0x10, 0x20, 0x30}
+        let err = Packet::decode(&bytes).unwrap_err();
+        assert!(format!("{err:#}").contains("unknown ToS"), "{err:#}");
+
+        // Ordinary IPv4 traffic's ToS is not modeled: lenient parse.
+        let mut bytes = Packet::reply(Ip::new(10, 0, 0, 1), Ip::new(10, 1, 0, 1), b"r".to_vec())
+            .encode();
+        bytes[ETH_LEN + 1] = 0x40;
+        let decoded = Packet::decode(&bytes).unwrap();
+        assert_eq!(decoded.ipv4.tos, Tos::Normal);
+    }
+
+    #[test]
+    fn clone_is_o1_and_shares_payload() {
+        let pkt = sample_request();
+        let clone = pkt.clone();
+        assert!(clone.payload.shares_buffer(&pkt.payload), "payload buffer is shared");
+        assert_eq!(clone.encode(), pkt.encode());
+    }
+
+    #[test]
+    fn inline_chain_stays_off_heap_until_five_ips() {
+        let mut ips = IpList::new();
+        for i in 0..4u8 {
+            ips.push(Ip::new(10, 0, 0, i));
+            assert!(!ips.spilled(), "r=3 chains (+client) must stay inline");
+        }
+        assert_eq!(ips.len(), 4);
+        ips.push(Ip::new(10, 0, 0, 9));
+        assert!(ips.spilled());
+        assert_eq!(ips.len(), 5);
+        assert_eq!(ips[4], Ip::new(10, 0, 0, 9));
+    }
+
+    #[test]
+    fn iplist_remove_matches_vec_semantics() {
+        let mut inline: IpList = (0..4).map(Ip).collect();
+        let mut spilled: IpList = (0..6).map(Ip).collect();
+        assert!(!inline.spilled() && spilled.spilled());
+        assert_eq!(inline.remove(0), Ip(0));
+        assert_eq!(inline.as_slice(), &[Ip(1), Ip(2), Ip(3)]);
+        assert_eq!(inline.remove(2), Ip(3));
+        assert_eq!(inline.as_slice(), &[Ip(1), Ip(2)]);
+        assert_eq!(spilled.remove(0), Ip(0));
+        assert_eq!(*spilled.last().unwrap(), Ip(5));
+        assert_eq!(spilled.len(), 5);
+    }
+
+    /// Property (sharing semantics): a cloned packet always encodes
+    /// byte-identically to its source, and mutating the clone the way the
+    /// hot paths do — clipping the turbo range like the scan splitter,
+    /// popping a chain hop like the chain step, replacing the payload like
+    /// the reply path — never changes the source's wire bytes.
+    #[test]
+    fn prop_clone_encodes_identically_and_never_aliases_mutation() {
+        let strat = FnStrategy(|rng: &mut Rng| {
+            let mut pkt = Packet::request(
+                Ip(rng.next_u32()),
+                Ip(rng.next_u32()),
+                Tos::Processed,
+                OpCode::from_u8(rng.gen_range(4) as u8).unwrap(),
+                Key(rng.next_u128()),
+                Key(rng.next_u128()),
+                (0..rng.gen_range(256)).map(|_| rng.next_u32() as u8).collect::<Vec<u8>>(),
+            );
+            let n = rng.gen_range(6) as usize + 1;
+            pkt.chain = Some(ChainHeader { ips: (0..n).map(|_| Ip(rng.next_u32())).collect() });
+            pkt
+        });
+        forall("packet-clone-sharing", 0xC10E, 128, &strat, |pkt| {
+            let before = pkt.encode();
+            let mut clone = pkt.clone();
+            if !clone.payload.shares_buffer(&pkt.payload) {
+                return Err("clone must share the payload buffer".into());
+            }
+            if clone.encode() != before {
+                return Err("clone encoded differently from source".into());
+            }
+            // Mutate the clone the way recirculation / chain hops /
+            // replies do.
+            clone.turbo.as_mut().unwrap().end_key = Key(0);
+            let chain = clone.chain.as_mut().unwrap();
+            if chain.ips.len() > 1 {
+                chain.ips.remove(0);
+            }
+            clone.payload = Payload::from(b"mutated".as_slice());
+            if pkt.encode() != before {
+                return Err("mutating a clone changed the source's wire bytes".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn prop_roundtrip_random_packets() {
         let strat = FnStrategy(|rng: &mut Rng| {
             let op = OpCode::from_u8(rng.gen_range(4) as u8).unwrap();
@@ -418,7 +752,7 @@ mod tests {
                 op,
                 Key(rng.next_u128()),
                 Key(rng.next_u128()),
-                (0..rng.gen_range(200)).map(|_| rng.next_u32() as u8).collect(),
+                (0..rng.gen_range(200)).map(|_| rng.next_u32() as u8).collect::<Vec<u8>>(),
             );
             if tos == Tos::Processed {
                 let n = rng.gen_range(6) as usize + 1;

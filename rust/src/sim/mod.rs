@@ -5,6 +5,12 @@
 //! same seed is bit-identical. Components model serial service with
 //! [`ServiceQueue`] (an M/D/1-ish busy-until server with optional
 //! exponential jitter) and links add propagation + transmission delay.
+//!
+//! The event queue is slab-indexed (DESIGN.md §2c): payloads live in a
+//! free-listed slab and the binary heap holds only `Copy` `(time, seq,
+//! slot)` entries, so every sift moves a fixed 24 bytes no matter how
+//! large the payload type is. Freed slots are recycled, so the slab never
+//! grows past the peak number of simultaneously pending events.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
@@ -12,21 +18,25 @@ use std::collections::BinaryHeap;
 use crate::types::SimTime;
 use crate::util::rng::Rng;
 
-/// One scheduled event carrying a payload `E`.
-#[derive(Clone, Debug, PartialEq, Eq)]
-struct Entry<E> {
+/// One heap entry: the `(time, seq)` total order plus the slab slot
+/// holding the payload. `Copy` and at most 24 bytes — the compile-time
+/// assertion below is the hot-path size budget.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct HeapEntry {
     time: SimTime,
     seq: u64,
-    payload: E,
+    slot: u32,
 }
 
-impl<E: Eq> Ord for Entry<E> {
+const _: () = assert!(std::mem::size_of::<HeapEntry>() <= 24, "heap entry over budget");
+
+impl Ord for HeapEntry {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
         (self.time, self.seq).cmp(&(other.time, other.seq))
     }
 }
 
-impl<E: Eq> PartialOrd for Entry<E> {
+impl PartialOrd for HeapEntry {
     fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
         Some(self.cmp(other))
     }
@@ -34,22 +44,34 @@ impl<E: Eq> PartialOrd for Entry<E> {
 
 /// Event queue + simulated clock.
 #[derive(Debug)]
-pub struct Engine<E: Eq> {
-    heap: BinaryHeap<Reverse<Entry<E>>>,
+pub struct Engine<E> {
+    heap: BinaryHeap<Reverse<HeapEntry>>,
+    /// Payload storage indexed by [`HeapEntry::slot`]; `None` marks a free
+    /// slot awaiting reuse through `free`.
+    slab: Vec<Option<E>>,
+    /// Freed slot indexes, reused LIFO.
+    free: Vec<u32>,
     now: SimTime,
     seq: u64,
     processed: u64,
 }
 
-impl<E: Eq> Default for Engine<E> {
+impl<E> Default for Engine<E> {
     fn default() -> Self {
         Self::new()
     }
 }
 
-impl<E: Eq> Engine<E> {
+impl<E> Engine<E> {
     pub fn new() -> Self {
-        Engine { heap: BinaryHeap::new(), now: 0, seq: 0, processed: 0 }
+        Engine {
+            heap: BinaryHeap::new(),
+            slab: Vec::new(),
+            free: Vec::new(),
+            now: 0,
+            seq: 0,
+            processed: 0,
+        }
     }
 
     pub fn now(&self) -> SimTime {
@@ -65,25 +87,54 @@ impl<E: Eq> Engine<E> {
         self.heap.len()
     }
 
+    /// Number of payload slots the slab has ever grown to — the peak
+    /// simultaneous pending count (free-list reuse keeps it there).
+    pub fn slab_slots(&self) -> usize {
+        self.slab.len()
+    }
+
     /// Schedule `payload` to fire `delay` ns from now.
     pub fn schedule(&mut self, delay: u64, payload: E) {
         self.schedule_at(self.now.saturating_add(delay), payload);
     }
 
-    /// Schedule at an absolute time (>= now).
+    /// Schedule at an absolute time. A `time` in the past is **clamped to
+    /// `now`** — identically in debug and release builds: the event joins
+    /// the current timestamp's batch and fires after every event already
+    /// queued at `now` (its sequence number is newer). Callers that need a
+    /// past timestamp to be an error should compare against
+    /// [`Engine::now`] before scheduling.
     pub fn schedule_at(&mut self, time: SimTime, payload: E) {
-        debug_assert!(time >= self.now, "scheduling into the past");
-        let entry = Entry { time: time.max(self.now), seq: self.seq, payload };
+        let slot = self.claim_slot(payload);
+        let entry = HeapEntry { time: time.max(self.now), seq: self.seq, slot };
         self.seq += 1;
         self.heap.push(Reverse(entry));
+    }
+
+    /// Store a payload in the slab, reusing a freed slot when one exists.
+    fn claim_slot(&mut self, payload: E) -> u32 {
+        match self.free.pop() {
+            Some(slot) => {
+                debug_assert!(self.slab[slot as usize].is_none(), "free slot occupied");
+                self.slab[slot as usize] = Some(payload);
+                slot
+            }
+            None => {
+                assert!(self.slab.len() < u32::MAX as usize, "event slab overflow");
+                self.slab.push(Some(payload));
+                (self.slab.len() - 1) as u32
+            }
+        }
     }
 
     /// Pop the next event, advancing the clock.
     pub fn pop(&mut self) -> Option<(SimTime, E)> {
         let Reverse(entry) = self.heap.pop()?;
+        let payload = self.slab[entry.slot as usize].take().expect("scheduled slot occupied");
+        self.free.push(entry.slot);
         self.now = entry.time;
         self.processed += 1;
-        Some((entry.time, entry.payload))
+        Some((entry.time, payload))
     }
 
     /// Firing time of the next pending event, without popping it.
@@ -128,7 +179,7 @@ impl<E: Eq> Engine<E> {
 /// engine owns time and ordering; the driver owns all domain state and
 /// handles one event at a time, scheduling follow-ups through the engine
 /// reference it is handed (`cluster::Cluster` is the canonical impl).
-pub trait Driver<E: Eq> {
+pub trait Driver<E> {
     /// Handle one event that fired at `now`.
     fn dispatch(&mut self, now: SimTime, ev: E, engine: &mut Engine<E>);
 
@@ -251,6 +302,59 @@ mod tests {
             }
         }
         assert_eq!(count, 100);
+    }
+
+    #[test]
+    fn slab_slots_are_reused_not_grown() {
+        // A long run with bounded concurrency must not grow the slab past
+        // the peak pending count: freed slots are recycled.
+        let mut eng: Engine<Vec<u8>> = Engine::new();
+        for i in 0..8u64 {
+            eng.schedule(i, vec![i as u8; 64]);
+        }
+        let mut popped = 0u64;
+        while let Some((_, v)) = eng.pop() {
+            popped += 1;
+            if popped < 10_000 {
+                eng.schedule(u64::from(v[0]) % 13 + 1, v);
+            }
+        }
+        assert_eq!(popped, 10_000 + 7);
+        assert!(eng.slab_slots() <= 8, "slab grew to {} slots", eng.slab_slots());
+    }
+
+    #[test]
+    fn schedule_at_future_time_is_exact() {
+        // The ordinary (non-clamped) path: absolute times >= now fire at
+        // exactly that time.
+        let mut eng: Engine<u32> = Engine::new();
+        eng.schedule(10, 1);
+        assert_eq!(eng.pop(), Some((10, 1)));
+        eng.schedule_at(25, 2);
+        assert_eq!(eng.pop(), Some((25, 2)));
+        assert_eq!(eng.now(), 25);
+    }
+
+    #[test]
+    fn schedule_at_past_time_clamps_to_now() {
+        // The documented clamping path — identical in debug and release
+        // builds: a past timestamp joins the current batch at `now`,
+        // ordered after events already queued there (newer seq).
+        let mut eng: Engine<u32> = Engine::new();
+        eng.schedule(10, 1);
+        eng.schedule(10, 2);
+        assert_eq!(eng.pop(), Some((10, 1)));
+        eng.schedule_at(3, 99); // in the past: clamped to t=10
+        assert_eq!(eng.pop(), Some((10, 2)), "already-queued tie first");
+        assert_eq!(eng.pop(), Some((10, 99)), "clamped event fires at now");
+        assert_eq!(eng.now(), 10, "clock never moves backwards");
+    }
+
+    #[test]
+    fn heap_entry_is_small_and_copy() {
+        fn assert_copy<T: Copy>() {}
+        assert_copy::<HeapEntry>();
+        assert!(std::mem::size_of::<HeapEntry>() <= 24);
     }
 
     #[test]

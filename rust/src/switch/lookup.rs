@@ -29,7 +29,10 @@ pub trait DataplaneLookup {
     ) -> Vec<usize>;
 }
 
-/// Reference engine: per-key binary search on u128 boundaries.
+/// Reference engine: per-key binary search on u128 boundaries. The whole
+/// batch searches the table's dense SoA `starts` array — the same flat
+/// layout the XLA kernel consumes — so the match path never strides over
+/// `Record` structs.
 #[derive(Debug, Default, Clone)]
 pub struct RustLookup;
 

@@ -8,7 +8,7 @@
 //! engine plugs in), and returns the packets to emit with the neighbor to
 //! send each to. The cluster's event loop adds link and pipeline delays.
 
-use crate::net::packet::{ChainHeader, Ip, Packet, Tos};
+use crate::net::packet::{ChainHeader, IpList, Packet, Tos};
 use crate::net::topology::{Addr, SwitchRole, Topology};
 use crate::types::{Key, OpCode, SwitchId};
 
@@ -44,6 +44,22 @@ pub struct SwitchStats {
     pub lookups: u64,
 }
 
+/// Per-pass scratch buffers, hoisted onto the switch so steady-state
+/// passes allocate nothing: each buffer is cleared (keeping capacity)
+/// rather than rebuilt (DESIGN.md §2c).
+#[derive(Default)]
+struct PassScratch {
+    /// Work items: (packet, accumulated extra delay). Recirculated clones
+    /// are pushed back with increased delay.
+    work: Vec<(Packet, u64)>,
+    /// The key-routed subset of the current pass.
+    fresh: Vec<(Packet, u64)>,
+    /// Matching values for the batched lookup, parallel to `fresh`.
+    mvs: Vec<Key>,
+    /// Write flags for the batched lookup, parallel to `fresh`.
+    writes: Vec<bool>,
+}
+
 /// A programmable switch.
 pub struct Switch {
     pub id: SwitchId,
@@ -53,6 +69,7 @@ pub struct Switch {
     pub stats: SwitchStats,
     /// Cleared by the switch-failure experiment (§5.2).
     pub alive: bool,
+    scratch: PassScratch,
 }
 
 impl Switch {
@@ -64,6 +81,7 @@ impl Switch {
             registers: RegisterArrays::new(),
             stats: SwitchStats::default(),
             alive: true,
+            scratch: PassScratch::default(),
         }
     }
 
@@ -71,14 +89,15 @@ impl Switch {
         matches!(self.role, SwitchRole::Tor { .. })
     }
 
-    /// Process a batch of packets arriving in one pipeline pass.
+    /// Process a batch of packets arriving in one pipeline pass. The
+    /// batch vector is drained (its capacity is the caller's to reuse).
     ///
     /// `recirc_ns` is the extra delay of one clone+recirculate pass;
     /// `keyroute_ns` the extra per-packet cost of the key-based routing
     /// action over plain L2/L3 forwarding.
     pub fn process_batch(
         &mut self,
-        pkts: Vec<Packet>,
+        pkts: &mut Vec<Packet>,
         topo: &Topology,
         lookup: &mut dyn DataplaneLookup,
         recirc_ns: u64,
@@ -86,45 +105,53 @@ impl Switch {
     ) -> Vec<Emit> {
         if !self.alive {
             self.stats.dropped += pkts.len() as u64;
+            pkts.clear();
             return Vec::new();
         }
         let mut out = Vec::with_capacity(pkts.len());
-        // Work items: (packet, accumulated extra delay). Recirculated
-        // clones are pushed back with increased delay.
-        let mut work: Vec<(Packet, u64)> = pkts.into_iter().map(|p| (p, 0)).collect();
+        // The scratch buffers live on the switch between passes; take them
+        // out so `self` stays borrowable while we iterate them.
+        let mut scratch = std::mem::take(&mut self.scratch);
+        scratch.work.extend(pkts.drain(..).map(|p| (p, 0)));
 
-        while !work.is_empty() {
+        while !scratch.work.is_empty() {
             // Parser stage: split this pass into key-routed TurboKV packets
             // and standard L2/L3 traffic.
-            let mut fresh: Vec<(Packet, u64)> = Vec::new();
-            for (pkt, delay) in work.drain(..) {
+            scratch.fresh.clear();
+            for (pkt, delay) in scratch.work.drain(..) {
                 let needs_keyrouting = pkt.is_turbokv()
                     && matches!(pkt.ipv4.tos, Tos::RangeData | Tos::HashData)
                     && !self.table.is_empty();
                 if needs_keyrouting {
-                    fresh.push((pkt, delay));
+                    scratch.fresh.push((pkt, delay));
                 } else {
                     self.forward_ipv4(pkt, delay, topo, &mut out);
                 }
             }
-            if fresh.is_empty() {
+            if scratch.fresh.is_empty() {
                 break;
             }
 
             // Ingress match-action: ONE batched lookup over the pass
             // (where the XLA dataplane artifact runs).
-            let mvs: Vec<Key> = fresh.iter().map(|(p, _)| matching_value(p)).collect();
-            let writes: Vec<bool> = fresh
-                .iter()
-                .map(|(p, _)| p.turbo.expect("turbokv pkt").op.is_update())
-                .collect();
-            let idxs = lookup.lookup_batch(&self.table, &mut self.registers, &mvs, &writes);
+            scratch.mvs.clear();
+            scratch.writes.clear();
+            for (p, _) in &scratch.fresh {
+                scratch.mvs.push(matching_value(p));
+                scratch.writes.push(p.turbo.expect("turbokv pkt").op.is_update());
+            }
+            let idxs = lookup.lookup_batch(
+                &self.table,
+                &mut self.registers,
+                &scratch.mvs,
+                &scratch.writes,
+            );
             self.stats.lookup_batches += 1;
-            self.stats.lookups += mvs.len() as u64;
+            self.stats.lookups += scratch.mvs.len() as u64;
 
             // Egress: range splitting (Alg. 1) may recirculate clones,
             // which re-enter the next pass with added delay.
-            for ((mut pkt, delay), idx) in fresh.into_iter().zip(idxs) {
+            for ((mut pkt, delay), idx) in scratch.fresh.drain(..).zip(idxs) {
                 self.stats.keyrouted += 1;
                 let delay = delay + keyroute_ns;
                 let turbo = pkt.turbo.expect("turbokv pkt");
@@ -133,10 +160,12 @@ impl Switch {
                     && pkt.ipv4.tos == Tos::RangeData
                     && turbo.end_key > range_end
                 {
-                    // pkt_cir covers the rest of the requested range.
+                    // pkt_cir covers the rest of the requested range; the
+                    // clone shares the payload buffer (O(1)), only its
+                    // turbo header diverges.
                     let mut cir = pkt.clone();
                     cir.turbo.as_mut().unwrap().key = range_end.next();
-                    work.push((cir, delay + recirc_ns));
+                    scratch.work.push((cir, delay + recirc_ns));
                     self.stats.recirculated += 1;
                     // pkt_out is clipped to the matched sub-range.
                     pkt.turbo.as_mut().unwrap().end_key = range_end;
@@ -144,6 +173,7 @@ impl Switch {
                 self.route_matched(pkt, delay, idx, topo, &mut out);
             }
         }
+        self.scratch = scratch;
         out
     }
 
@@ -157,7 +187,10 @@ impl Switch {
         out: &mut Vec<Emit>,
     ) {
         let op = pkt.turbo.expect("turbokv pkt").op;
-        let action = self.table.action(idx).clone();
+        // Borrowed, not cloned: every later `self` access in this function
+        // touches a different field (`registers`, `stats`), so the action
+        // can stay a reference — no per-packet heap allocation.
+        let action = self.table.action(idx);
         // Reads are served by the tail, updates enter at the head (§4.3).
         let target_reg = if op.is_update() { action.head() } else { action.tail() };
         let target_node = target_reg as usize;
@@ -170,7 +203,9 @@ impl Switch {
             let client_ip = pkt.ipv4.src;
             pkt.ipv4.dst = self.registers.node_ip(target_reg);
             pkt.ipv4.tos = Tos::Processed;
-            let mut ips: Vec<Ip> = Vec::new();
+            // Chain + client fit the header's inline slots (no heap) for
+            // the default replication factor.
+            let mut ips = IpList::new();
             if op.is_update() {
                 // Remaining chain after the head, then the client.
                 for &reg in &action.chain[1..] {
@@ -219,7 +254,7 @@ fn matching_value(pkt: &Packet) -> Key {
 mod tests {
     use super::*;
     use crate::config::ClusterConfig;
-    use crate::net::packet::ETHERTYPE_IPV4;
+    use crate::net::packet::{Ip, ETHERTYPE_IPV4};
     use crate::partition::Directory;
     use crate::switch::lookup::RustLookup;
 
@@ -245,7 +280,15 @@ mod tests {
     }
 
     fn get_pkt(topo: &Topology, key: Key) -> Packet {
-        Packet::request(topo.client_ip(0), Ip(0), Tos::RangeData, OpCode::Get, key, Key::MIN, vec![])
+        Packet::request(
+            topo.client_ip(0),
+            Ip(0),
+            Tos::RangeData,
+            OpCode::Get,
+            key,
+            Key::MIN,
+            Vec::<u8>::new(),
+        )
     }
 
     #[test]
@@ -255,7 +298,7 @@ mod tests {
         let idx = (0..dir.len()).find(|&i| dir.tail(i) < 4).unwrap();
         let (start, _) = dir.bounds(idx);
         let emits =
-            tor0.process_batch(vec![get_pkt(&topo, start)], &topo, &mut RustLookup, 0, 0);
+            tor0.process_batch(&mut vec![get_pkt(&topo, start)], &topo, &mut RustLookup, 0, 0);
         assert_eq!(emits.len(), 1);
         let e = &emits[0];
         let tail = dir.tail(idx);
@@ -279,9 +322,9 @@ mod tests {
             OpCode::Put,
             start,
             Key::MIN,
-            vec![9; 128],
+            vec![9u8; 128],
         );
-        let emits = tor0.process_batch(vec![pkt], &topo, &mut RustLookup, 0, 0);
+        let emits = tor0.process_batch(&mut vec![pkt], &topo, &mut RustLookup, 0, 0);
         let e = &emits[0];
         let chain = dir.chain(idx);
         assert_eq!(e.to, Addr::Node(chain[0]));
@@ -297,7 +340,8 @@ mod tests {
     fn edge_switch_forwards_toward_target_without_chain() {
         let (topo, dir, _, mut edge) = setup();
         let (start, _) = dir.bounds(0);
-        let emits = edge.process_batch(vec![get_pkt(&topo, start)], &topo, &mut RustLookup, 0, 0);
+        let emits =
+            edge.process_batch(&mut vec![get_pkt(&topo, start)], &topo, &mut RustLookup, 0, 0);
         assert_eq!(emits.len(), 1);
         let e = &emits[0];
         assert_eq!(e.pkt.ipv4.tos, Tos::RangeData, "still unprocessed");
@@ -312,8 +356,8 @@ mod tests {
         let mut pkt = get_pkt(&topo, Key::MIN);
         pkt.ipv4.tos = Tos::Processed;
         pkt.ipv4.dst = topo.node_ip(2);
-        pkt.chain = Some(ChainHeader { ips: vec![topo.client_ip(0)] });
-        let emits = tor0.process_batch(vec![pkt], &topo, &mut RustLookup, 0, 0);
+        pkt.chain = Some(ChainHeader { ips: vec![topo.client_ip(0)].into() });
+        let emits = tor0.process_batch(&mut vec![pkt], &topo, &mut RustLookup, 0, 0);
         assert_eq!(emits.len(), 1);
         assert_eq!(emits[0].to, Addr::Node(2));
         assert_eq!(tor0.stats.ipv4_forwarded, 1);
@@ -325,7 +369,7 @@ mod tests {
         let (topo, _, mut tor0, _) = setup();
         let mut reply = Packet::reply(topo.node_ip(0), topo.client_ip(0), b"v".to_vec());
         reply.eth.ethertype = ETHERTYPE_IPV4;
-        let emits = tor0.process_batch(vec![reply], &topo, &mut RustLookup, 0, 0);
+        let emits = tor0.process_batch(&mut vec![reply], &topo, &mut RustLookup, 0, 0);
         assert_eq!(emits.len(), 1);
         // ToR forwards up toward the client edge.
         assert!(matches!(emits[0].to, Addr::Switch(_)));
@@ -339,9 +383,9 @@ mod tests {
         let (s2, e2) = dir.bounds(2);
         let mid2 = Key(s2.0 + (e2.0 - s2.0) / 2);
         let pkt = Packet::request(
-            topo.client_ip(0), Ip(0), Tos::RangeData, OpCode::Range, s0, mid2, vec![],
+            topo.client_ip(0), Ip(0), Tos::RangeData, OpCode::Range, s0, mid2, Vec::<u8>::new(),
         );
-        let emits = edge.process_batch(vec![pkt], &topo, &mut RustLookup, 500, 0);
+        let emits = edge.process_batch(&mut vec![pkt], &topo, &mut RustLookup, 500, 0);
         assert_eq!(emits.len(), 3, "one packet per spanned sub-range");
         assert_eq!(edge.stats.recirculated, 2);
         // Clipped bounds per packet, recirculated ones carry extra delay.
@@ -364,10 +408,68 @@ mod tests {
     }
 
     #[test]
+    fn range_split_shares_payload_without_aliasing_mutations() {
+        // The scan-split/recirculation path clones packets per sub-range:
+        // every split packet must share the original payload buffer (the
+        // O(1)-clone guarantee) while their diverging turbo headers and
+        // chain headers stay private — no split part may observe another
+        // part's mutation.
+        let (topo, dir, _, mut edge) = setup();
+        let (s0, _) = dir.bounds(0);
+        let (s2, e2) = dir.bounds(2);
+        let pkt = Packet::request(
+            topo.client_ip(0),
+            Ip(0),
+            Tos::RangeData,
+            OpCode::Range,
+            s0,
+            Key(s2.0 + (e2.0 - s2.0) / 2),
+            vec![0xAB_u8; 64],
+        );
+        let original = pkt.clone();
+        let wire_before = original.encode();
+        let emits = edge.process_batch(&mut vec![pkt], &topo, &mut RustLookup, 500, 0);
+        assert_eq!(emits.len(), 3);
+        let mut seen = std::collections::BTreeSet::new();
+        for e in &emits {
+            assert!(
+                e.pkt.payload.shares_buffer(&original.payload),
+                "split part must share the source payload buffer"
+            );
+            assert_eq!(e.pkt.payload.as_slice(), original.payload.as_slice());
+            // Headers diverged privately: each part covers a distinct
+            // sub-interval.
+            let t = e.pkt.turbo.unwrap();
+            assert!(seen.insert((t.key, t.end_key)), "parts must not alias header state");
+        }
+        // The clone the caller kept is untouched by the splits' header
+        // mutations: its wire bytes are exactly what they were.
+        assert_eq!(original.encode(), wire_before);
+        assert_eq!(original.turbo.unwrap().key, s0);
+    }
+
+    #[test]
+    fn scratch_buffers_survive_reuse_across_passes() {
+        // Two passes through the same switch must behave identically —
+        // the hoisted scratch buffers are cleared, not stale.
+        let (topo, dir, mut tor0, _) = setup();
+        let (start, _) = dir.bounds(0);
+        for round in 0..3 {
+            let emits =
+                tor0.process_batch(&mut vec![get_pkt(&topo, start)], &topo, &mut RustLookup, 0, 0);
+            assert_eq!(emits.len(), 1, "round {round}");
+        }
+        assert_eq!(tor0.stats.keyrouted, 3);
+        assert_eq!(tor0.stats.lookup_batches, 3);
+        assert_eq!(tor0.stats.lookups, 3);
+    }
+
+    #[test]
     fn dead_switch_drops_everything() {
         let (topo, _, mut tor0, _) = setup();
         tor0.alive = false;
-        let emits = tor0.process_batch(vec![get_pkt(&topo, Key::MIN)], &topo, &mut RustLookup, 0, 0);
+        let emits =
+            tor0.process_batch(&mut vec![get_pkt(&topo, Key::MIN)], &topo, &mut RustLookup, 0, 0);
         assert!(emits.is_empty());
         assert_eq!(tor0.stats.dropped, 1);
     }
@@ -380,7 +482,7 @@ mod tests {
         let pkt = Packet::request(
             topo.client_ip(0), Ip(0), Tos::HashData, OpCode::Get, Key::MIN, last_start, vec![],
         );
-        let emits = tor0.process_batch(vec![pkt], &topo, &mut RustLookup, 0, 0);
+        let emits = tor0.process_batch(&mut vec![pkt], &topo, &mut RustLookup, 0, 0);
         assert_eq!(emits.len(), 1);
         let expected_tail = dir.tail(dir.len() - 1);
         // Routed by the hashedKey, not the raw key.
@@ -393,12 +495,12 @@ mod tests {
         let (topo, dir, mut tor0, _) = setup();
         let (s0, _) = dir.bounds(0);
         let (s1, _) = dir.bounds(1);
-        let pkts = vec![
+        let mut pkts = vec![
             get_pkt(&topo, s0),
             get_pkt(&topo, s0),
-            Packet::request(topo.client_ip(0), Ip(0), Tos::RangeData, OpCode::Put, s1, Key::MIN, vec![1]),
+            Packet::request(topo.client_ip(0), Ip(0), Tos::RangeData, OpCode::Put, s1, Key::MIN, vec![1u8]),
         ];
-        tor0.process_batch(pkts, &topo, &mut RustLookup, 0, 0);
+        tor0.process_batch(&mut pkts, &topo, &mut RustLookup, 0, 0);
         let (read, write) = tor0.registers.counters();
         assert_eq!(read[0], 2);
         assert_eq!(write[1], 1);

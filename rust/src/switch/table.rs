@@ -43,9 +43,19 @@ pub struct Record {
 }
 
 /// The match-action table.
+///
+/// Storage is hybrid AoS/SoA (DESIGN.md §2c): the control plane reads and
+/// writes [`Record`]s, but the sub-range starts are mirrored into a dense
+/// `starts: Vec<Key>` so the match path binary-searches a flat key array —
+/// one cache line holds 4 boundaries — instead of striding over whole
+/// records. The two views are updated together by every control-plane
+/// mutation; `debug_assert_soa_sync` pins them.
 #[derive(Clone, Debug, Default)]
 pub struct MatchActionTable {
     records: Vec<Record>,
+    /// SoA mirror of `records[i].start` — the only array the match path
+    /// touches.
+    starts: Vec<Key>,
 }
 
 impl MatchActionTable {
@@ -67,6 +77,16 @@ impl MatchActionTable {
                 },
             })
             .collect();
+        self.starts = self.records.iter().map(|r| r.start).collect();
+        self.debug_assert_soa_sync();
+    }
+
+    fn debug_assert_soa_sync(&self) {
+        debug_assert!(
+            self.starts.len() == self.records.len()
+                && self.starts.iter().zip(&self.records).all(|(&s, r)| s == r.start),
+            "SoA starts diverged from records"
+        );
     }
 
     pub fn len(&self) -> usize {
@@ -81,17 +101,24 @@ impl MatchActionTable {
         &self.records
     }
 
+    /// The dense sub-range-start array the match path searches (SoA view).
+    pub fn starts(&self) -> &[Key] {
+        &self.starts
+    }
+
     /// Range match: index of the record whose sub-range contains `mv`.
+    /// Reads only the dense `starts` array — no `Record` is touched on
+    /// the match path.
     pub fn lookup(&self, mv: Key) -> usize {
-        debug_assert!(!self.records.is_empty());
-        self.records.partition_point(|r| r.start <= mv) - 1
+        debug_assert!(!self.starts.is_empty());
+        self.starts.partition_point(|&s| s <= mv) - 1
     }
 
     /// `[start, end]` bounds of record `idx` (inclusive end).
     pub fn bounds(&self, idx: usize) -> (Key, Key) {
-        let start = self.records[idx].start;
-        let end = match self.records.get(idx + 1) {
-            Some(next) => Key(next.start.0 - 1),
+        let start = self.starts[idx];
+        let end = match self.starts.get(idx + 1) {
+            Some(next) => Key(next.0 - 1),
             None => Key::MAX,
         };
         (start, end)
@@ -120,15 +147,17 @@ impl MatchActionTable {
         assert!(start < at && at <= end, "split point outside record");
         crate::util::validate_chain(&upper_chain);
         self.records.insert(idx + 1, Record { start: at, action: ChainAction { chain: upper_chain } });
+        self.starts.insert(idx + 1, at);
+        self.debug_assert_soa_sync();
         idx + 1
     }
 
     /// Sub-range starts as 32-bit prefixes for the XLA dataplane (None if
     /// any start is not 2^96-aligned).
     pub fn starts_prefix32(&self) -> Option<Vec<u32>> {
-        self.records
+        self.starts
             .iter()
-            .map(|r| r.start.is_prefix_aligned().then(|| r.start.prefix32()))
+            .map(|s| s.is_prefix_aligned().then(|| s.prefix32()))
             .collect()
     }
 
@@ -234,6 +263,30 @@ mod tests {
         assert_eq!(t.bounds(ni), (Key::MAX, Key::MAX));
         assert_eq!(t.lookup(Key::MAX), ni);
         assert_eq!(t.lookup(Key(u128::MAX - 1)), last);
+    }
+
+    #[test]
+    fn soa_starts_mirror_records_through_mutations() {
+        let mut t = table();
+        let mirror = |t: &MatchActionTable| -> Vec<Key> {
+            t.records().iter().map(|r| r.start).collect()
+        };
+        assert_eq!(t.starts(), mirror(&t).as_slice());
+        let (s, e) = t.bounds(4);
+        t.split(4, Key(s.0 / 2 + e.0 / 2), vec![1, 2]);
+        assert_eq!(t.starts(), mirror(&t).as_slice());
+        t.set_chain(0, vec![5, 6]);
+        assert_eq!(t.starts(), mirror(&t).as_slice());
+        let dir = Directory::initial(32, 8, 2);
+        t.install_from_directory(&dir);
+        assert_eq!(t.starts().len(), 32);
+        assert_eq!(t.starts(), mirror(&t).as_slice());
+        // The match path agrees with a record-striding reference lookup.
+        for i in 0..t.len() {
+            let (start, end) = t.bounds(i);
+            assert_eq!(t.lookup(start), i);
+            assert_eq!(t.lookup(end), i);
+        }
     }
 
     #[test]

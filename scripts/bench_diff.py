@@ -1,0 +1,118 @@
+#!/usr/bin/env python3
+"""Compare two BENCH_*.json files and flag hot-path regressions.
+
+Usage:
+    scripts/bench_diff.py BASE.json NEW.json [--threshold 0.05]
+
+Exit status:
+    0 — no regression (or nothing comparable: either file unrecorded)
+    1 — at least one watched bench regressed by more than the threshold
+    2 — usage / schema error
+
+A bench "regresses" when its mean_ns grows by more than the threshold
+relative to the base recording. Only the watched hot paths gate:
+`switch/pipeline/*` and `sim/engine/100k-events*` — the paths the ROADMAP
+north-star ("as fast as the hardware allows") and ISSUE 3's acceptance
+criteria name. Everything else is reported informationally.
+"""
+
+import argparse
+import json
+import sys
+
+WATCH_PREFIXES = ("switch/pipeline/", "sim/engine/100k-events")
+
+
+def load(path):
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"bench_diff: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+
+
+def flatten(doc):
+    """{bench_name: mean_ns} over every target in the `benches` section."""
+    out = {}
+    for target, benches in doc.get("benches", {}).items():
+        if not isinstance(benches, dict):
+            continue
+        for name, rec in benches.items():
+            mean = rec.get("mean_ns") if isinstance(rec, dict) else None
+            out[name] = mean
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("base", help="baseline BENCH_*.json")
+    ap.add_argument("new", help="candidate BENCH_*.json")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.05,
+        help="relative mean_ns growth that counts as a regression (default 0.05)",
+    )
+    args = ap.parse_args()
+
+    base_doc, new_doc = load(args.base), load(args.new)
+    for label, doc, path in (("base", base_doc, args.base), ("new", new_doc, args.new)):
+        if doc.get("status") == "unrecorded":
+            print(f"bench_diff: {label} file {path} is status=unrecorded; nothing to compare")
+            return 0
+
+    base, new = flatten(base_doc), flatten(new_doc)
+    regressions = []
+    incomparable_watched = []
+    rows = []
+    for name in sorted(set(base) | set(new)):
+        b, n = base.get(name), new.get(name)
+        watched = name.startswith(WATCH_PREFIXES)
+        if b is None or n is None or b <= 0:
+            rows.append((name, b, n, None, watched, False))
+            # A watched bench that the *base* recorded but the candidate
+            # lost (or left null) would pass the gate vacuously — flag it.
+            # A bench new in the candidate has no baseline yet: fine.
+            if watched and name in base:
+                incomparable_watched.append(name)
+            continue
+        delta = (n - b) / b
+        regressed = watched and delta > args.threshold
+        rows.append((name, b, n, delta, watched, regressed))
+        if regressed:
+            regressions.append((name, delta))
+
+    for name, b, n, delta, watched, regressed in rows:
+        mark = "WATCH" if watched else "     "
+        if delta is None:
+            print(f"  {mark}  {name:<44} base={b} new={n} (not comparable)")
+        else:
+            flag = "  << REGRESSION" if regressed else ""
+            print(f"  {mark}  {name:<44} {b:>12.0f} -> {n:>12.0f} ns  ({delta:+.1%}){flag}")
+
+    failed = False
+    if incomparable_watched:
+        # Both files claim recorded numbers, yet a gating bench has no
+        # comparable pair (renamed, or mean_ns left null): that would let
+        # the regression gate pass vacuously, so treat it as a failure.
+        print(
+            "bench_diff: watched bench(es) missing a comparable recording: "
+            + ", ".join(incomparable_watched)
+        )
+        failed = True
+    if regressions:
+        worst = max(regressions, key=lambda r: r[1])
+        print(
+            f"bench_diff: {len(regressions)} watched bench(es) regressed "
+            f"> {args.threshold:.0%} (worst: {worst[0]} at {worst[1]:+.1%})"
+        )
+        failed = True
+    if failed:
+        return 1
+    print("bench_diff: no watched regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
