@@ -102,9 +102,10 @@ impl ClientActor {
     }
 
     /// Expected value for a key (verification oracle): keys were loaded at
-    /// known generator positions.
-    pub fn expected_value(&self, num_keys: u64, key: Key) -> Option<Vec<u8>> {
-        (0..num_keys).find(|&i| self.gen.key_of(i) == key).map(|i| self.gen.value_of(i))
+    /// known generator positions, recovered in O(1) via the generator's
+    /// stride inverse.
+    pub fn expected_value(&self, key: Key) -> Option<Vec<u8>> {
+        self.gen.expected_value(key)
     }
 
     /// Requests keep the client's IP in the packet along forwards; this is
@@ -173,7 +174,7 @@ impl ClientActor {
         }
         let pending = self.clients[c].outstanding.remove(&pkt.tag).expect("present");
         if env.verify_reads && pending.req.op == OpCode::Get {
-            let want = self.expected_value(env.cfg.workload.num_keys, pending.req.key);
+            let want = self.expected_value(pending.req.key);
             let got = match &pending.last_reply {
                 Some(Reply::Value(v)) => v.clone(),
                 _ => None,

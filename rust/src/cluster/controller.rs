@@ -62,6 +62,78 @@ impl LoadEstimator for RustEstimator {
     }
 }
 
+/// One data copy required by a chain repair: the new tail `dst` must
+/// receive the sub-range's pairs from the surviving replica `src`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CopyPlan {
+    pub src: NodeId,
+    pub dst: NodeId,
+}
+
+/// The repair decision for one affected sub-range — pure planning, shared
+/// by the simulator's epoch handler and the deployment runtime's real
+/// controller loop (deploy::harness). The caller applies it: perform the
+/// data copy, install `new_chain` in the directory, push it to the
+/// switches.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RangeRepairPlan {
+    pub new_chain: Vec<NodeId>,
+    pub copy: Option<CopyPlan>,
+}
+
+/// Plan the §5.2 repair of sub-range `idx` after `failed` died: drop the
+/// failed node from the chain, append the least-loaded live replacement
+/// (if any node outside the chain survives), and name the surviving
+/// replica the replacement must copy from. `alive[n]` is the controller's
+/// current liveness view.
+pub fn plan_range_repair(
+    dir: &crate::partition::Directory,
+    alive: &[bool],
+    idx: usize,
+    failed: NodeId,
+) -> RangeRepairPlan {
+    let chain = dir.chain(idx).to_vec();
+    let replacement = least_loaded_replacement(dir, alive, &chain, failed);
+    let repair = repair_chain(&chain, failed, replacement);
+    let copy = repair.needs_copy.and_then(|dst| {
+        repair
+            .new_chain
+            .iter()
+            .copied()
+            .find(|&n| n != dst && alive[n])
+            .map(|src| CopyPlan { src, dst })
+    });
+    RangeRepairPlan { new_chain: repair.new_chain, copy }
+}
+
+fn least_loaded_replacement(
+    dir: &crate::partition::Directory,
+    alive: &[bool],
+    chain: &[NodeId],
+    failed: NodeId,
+) -> Option<NodeId> {
+    (0..alive.len())
+        .filter(|&n| alive[n] && n != failed && !chain.contains(&n))
+        .min_by_key(|&n| dir.ranges_of_node(n).len())
+}
+
+/// Run the load estimate over per-range counters for the current chain
+/// layout (§5.1) — the one place the estimator's input tensors are built,
+/// shared by the simulator epoch and the deployment controller.
+pub fn estimate_loads(
+    est: &mut dyn LoadEstimator,
+    dir: &crate::partition::Directory,
+    read: &[u64],
+    write: &[u64],
+    num_nodes: usize,
+    write_cost: f32,
+) -> Vec<f32> {
+    let (tail, member) = dir.onehot(num_nodes);
+    let read_f: Vec<f32> = read.iter().map(|&v| v as f32).collect();
+    let write_f: Vec<f32> = write.iter().map(|&v| v as f32).collect();
+    est.estimate(&read_f, &write_f, &tail, &member, num_nodes, write_cost)
+}
+
 /// Controller bookkeeping.
 #[derive(Debug, Default)]
 pub struct ControllerState {
@@ -138,14 +210,11 @@ pub fn run_epoch(cl: &mut Cluster) {
         split_hot_ranges(cl, &mut read, &mut write);
     }
     let num_nodes = cl.nodes.len();
-    let (tail, member) = cl.dir.onehot(num_nodes);
-    let read_f: Vec<f32> = read.iter().map(|&v| v as f32).collect();
-    let write_f: Vec<f32> = write.iter().map(|&v| v as f32).collect();
-    let load = cl.estimator.estimate(
-        &read_f,
-        &write_f,
-        &tail,
-        &member,
+    let load = estimate_loads(
+        cl.estimator.as_mut(),
+        &cl.dir,
+        &read,
+        &write,
         num_nodes,
         cl.cfg.controller.write_cost as f32,
     );
@@ -222,14 +291,11 @@ fn split_hot_ranges(cl: &mut Cluster, read: &mut Vec<u64>, write: &mut Vec<u64>)
 /// Per-node load shares, hottest first, recomputed from current chains.
 fn load_ranked(cl: &mut Cluster, read: &[u64], write: &[u64]) -> Vec<(NodeId, f32)> {
     let num_nodes = cl.nodes.len();
-    let (tail, member) = cl.dir.onehot(num_nodes);
-    let read_f: Vec<f32> = read.iter().map(|&v| v as f32).collect();
-    let write_f: Vec<f32> = write.iter().map(|&v| v as f32).collect();
-    let load = cl.estimator.estimate(
-        &read_f,
-        &write_f,
-        &tail,
-        &member,
+    let load = estimate_loads(
+        cl.estimator.as_mut(),
+        &cl.dir,
+        read,
+        write,
         num_nodes,
         cl.cfg.controller.write_cost as f32,
     );
@@ -293,41 +359,23 @@ fn migrate_one(cl: &mut Cluster, hot_node: NodeId, read: &[u64], write: &[u64]) 
 
 /// §5.2 storage-node failure: remove the node from every chain, then
 /// restore the replication factor by appending replacements at chain tails
-/// and copying the sub-range data from a surviving replica.
+/// and copying the sub-range data from a surviving replica. The per-range
+/// decision is the shared [`plan_range_repair`]; this applies each plan
+/// against the simulated world (direct extract/ingest calls), while the
+/// deployment controller applies the same plans over control sockets.
 fn repair_node_failure(cl: &mut Cluster, failed: NodeId) {
-    let affected = cl.dir.ranges_of_node(failed);
-    for idx in affected {
-        let chain = cl.dir.chain(idx).to_vec();
-        // Pick the live node with the fewest ranges as replacement.
-        let replacement = least_loaded_replacement(cl, &chain, failed);
-        let repair = repair_chain(&chain, failed, replacement);
-        // Copy data from a surviving replica to the new tail.
-        if let Some(new_node) = repair.needs_copy {
-            let source = repair
-                .new_chain
-                .iter()
-                .copied()
-                .find(|&n| n != new_node && cl.nodes[n].alive);
-            if let Some(src) = source {
-                let (start, end) = cl.dir.bounds(idx);
-                let pairs = cl.nodes[src].extract_range(start, end);
-                cl.nodes[new_node].ingest(pairs);
-            }
+    let alive: Vec<bool> = cl.nodes.iter().map(|n| n.alive).collect();
+    for idx in cl.dir.ranges_of_node(failed) {
+        let plan = plan_range_repair(&cl.dir, &alive, idx, failed);
+        if let Some(copy) = plan.copy {
+            let (start, end) = cl.dir.bounds(idx);
+            let pairs = cl.nodes[copy.src].extract_range(start, end);
+            cl.nodes[copy.dst].ingest(pairs);
         }
-        cl.dir.set_chain(idx, repair.new_chain.clone());
-        push_chain_update(cl, idx, &repair.new_chain);
+        cl.dir.set_chain(idx, plan.new_chain.clone());
+        push_chain_update(cl, idx, &plan.new_chain);
         cl.controller.repairs += 1;
     }
-}
-
-fn least_loaded_replacement(
-    cl: &Cluster,
-    chain: &[NodeId],
-    failed: NodeId,
-) -> Option<NodeId> {
-    (0..cl.nodes.len())
-        .filter(|&n| cl.nodes[n].alive && n != failed && !chain.contains(&n))
-        .min_by_key(|&n| cl.dir.ranges_of_node(n).len())
 }
 
 /// Control plane push: update record `idx`'s chain in every switch table.
@@ -335,5 +383,56 @@ fn push_chain_update(cl: &mut Cluster, idx: usize, chain: &[NodeId]) {
     let regs: Vec<u16> = chain.iter().map(|&n| n as u16).collect();
     for sw in &mut cl.switches {
         sw.table.set_chain(idx, regs.clone());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::Directory;
+
+    #[test]
+    fn repair_plan_appends_replacement_and_names_copy_source() {
+        // 4 nodes, r=3: killing a chain member leaves exactly one node
+        // outside the chain as the replacement, which must receive a copy
+        // from a surviving member.
+        let dir = Directory::initial(8, 4, 3);
+        let alive = vec![true, false, true, true];
+        let idx = dir.ranges_of_node(1)[0];
+        let chain = dir.chain(idx).to_vec();
+        let plan = plan_range_repair(&dir, &alive, idx, 1);
+        assert_eq!(plan.new_chain.len(), 3, "replication factor restored");
+        assert!(!plan.new_chain.contains(&1), "failed node dropped");
+        let copy = plan.copy.expect("new tail needs the sub-range's data");
+        assert_eq!(Some(&copy.dst), plan.new_chain.last(), "copy lands on the new tail");
+        assert!(chain.contains(&copy.src) && copy.src != 1, "copy from a surviving replica");
+    }
+
+    #[test]
+    fn repair_plan_shortens_chain_when_no_spare_node_exists() {
+        // 3 nodes, r=3: every live node is already in every chain, so the
+        // repair can only shorten — no replacement, no copy.
+        let dir = Directory::initial(6, 3, 3);
+        let alive = vec![true, false, true];
+        let plan = plan_range_repair(&dir, &alive, 0, 1);
+        assert_eq!(plan.new_chain.len(), 2);
+        assert!(!plan.new_chain.contains(&1));
+        assert_eq!(plan.copy, None);
+    }
+
+    #[test]
+    fn estimate_loads_matches_reference_math() {
+        // Uniform counters over Directory::initial(4, 4, 2): every node
+        // tails one range and belongs to two, so read load is uniform and
+        // write load is uniform — total = reads + write_cost * 2 * writes.
+        let dir = Directory::initial(4, 4, 2);
+        let read = vec![10u64; 4];
+        let write = vec![2u64; 4];
+        let mut est = RustEstimator;
+        let load = estimate_loads(&mut est, &dir, &read, &write, 4, 3.0);
+        assert_eq!(load.len(), 4);
+        for &l in &load {
+            assert!((l - (10.0 + 3.0 * 2.0 * 2.0)).abs() < 1e-6, "load={l}");
+        }
     }
 }

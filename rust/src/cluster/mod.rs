@@ -32,7 +32,7 @@
 pub mod bus;
 mod client;
 pub mod controller;
-mod node_actor;
+pub(crate) mod node_actor;
 pub mod proto;
 mod switch_actor;
 
@@ -273,7 +273,7 @@ impl Cluster {
 
     /// Expected value for a key (verification oracle).
     pub fn expected_value(&self, key: Key) -> Option<Vec<u8>> {
-        self.client.expected_value(self.cfg.workload.num_keys, key)
+        self.client.expected_value(key)
     }
 
     /// Inject a node failure at simulated time `at_ns`.

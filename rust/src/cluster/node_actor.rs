@@ -208,9 +208,19 @@ impl NodeStrategy for ServerDrivenNode {
 
 // --------------------------------------------------------- shared steps
 
-/// In-switch mode: execute one chain-replication step per the chain
-/// header (Fig. 9). No directory lookups on the node.
-fn chain_step(env: &mut NodeEnv<'_>, n: NodeId, mut pkt: Packet) -> Result<()> {
+/// Execute one chain-replication step (Fig. 9) against the local store
+/// and return the packet to put back on the wire: the forward hop toward
+/// the chain successor (head/middle of an update), or the tail's reply to
+/// the client IP. This is the node-side protocol core shared by the
+/// simulator's node actor and the deployment runtime's `serve-node`
+/// process (`deploy::node_server`) — both worlds differ only in how the
+/// returned packet reaches its destination.
+pub(crate) fn chain_step_packet(
+    node: &mut StorageNode,
+    node_ip: Ip,
+    mut pkt: Packet,
+) -> Result<Packet> {
+    let n = node.id;
     let turbo = pkt
         .turbo
         .ok_or_else(|| anyhow!("malformed packet: chain step without TurboKV header at node {n}"))?;
@@ -223,22 +233,49 @@ fn chain_step(env: &mut NodeEnv<'_>, n: NodeId, mut pkt: Packet) -> Result<()> {
         // Head/middle: apply locally, forward to successor — next IP
         // straight from the chain header (the TurboKV advantage: no
         // mapping step, §8.1).
-        env.nodes[n].apply(&req);
+        node.apply(&req);
         let next_ip = chain.ips[0];
         pkt.chain.as_mut().expect("chain checked above").ips.remove(0);
         pkt.ipv4.dst = next_ip;
-        pkt.ipv4.src = env.topo.node_ip(n);
-        let tor = env.topo.edge_switch(Addr::Node(n))?;
-        env.bus.send(Addr::Switch(tor), pkt);
+        pkt.ipv4.src = node_ip;
+        Ok(pkt)
     } else {
         // Tail (CLength == 1): apply and reply to the client IP.
-        let reply = env.nodes[n].apply(&req);
+        let reply = node.apply(&req);
         let client_ip = *chain
             .ips
             .last()
             .ok_or_else(|| anyhow!("malformed packet: empty chain header at node {n}"))?;
-        reply_to_client(env, n, client_ip, pkt.tag, reply, &turbo)?;
+        Ok(build_reply_packet(node_ip, client_ip, pkt.tag, &reply, &turbo))
     }
+}
+
+/// The tail's reply packet (Fig. 8(b)): standard IP with the encoded
+/// reply as payload; scans echo the covered interval (a real TurboKV
+/// header, so the reply keeps the TurboKV ethertype — the wire form must
+/// stay equivalent to the in-memory form at every link boundary).
+pub(crate) fn build_reply_packet(
+    from_ip: Ip,
+    client_ip: Ip,
+    tag: u64,
+    reply: &Reply,
+    turbo: &TurboHeader,
+) -> Packet {
+    let mut pkt = Packet::reply(from_ip, client_ip, encode_reply(reply));
+    pkt.tag = tag;
+    if turbo.op == OpCode::Range {
+        pkt.turbo = Some(*turbo);
+        pkt.eth.ethertype = ETHERTYPE_TURBOKV;
+    }
+    pkt
+}
+
+/// In-switch mode: execute one chain-replication step per the chain
+/// header (Fig. 9). No directory lookups on the node.
+fn chain_step(env: &mut NodeEnv<'_>, n: NodeId, pkt: Packet) -> Result<()> {
+    let out = chain_step_packet(&mut env.nodes[n], env.topo.node_ip(n), pkt)?;
+    let tor = env.topo.edge_switch(Addr::Node(n))?;
+    env.bus.send(Addr::Switch(tor), out);
     Ok(())
 }
 
@@ -345,16 +382,7 @@ fn reply_to_client(
     reply: Reply,
     turbo: &TurboHeader,
 ) -> Result<()> {
-    let mut pkt = Packet::reply(env.topo.node_ip(from_node), client_ip, encode_reply(&reply));
-    pkt.tag = tag;
-    if turbo.op == OpCode::Range {
-        // Scans echo the covered interval so the client can assemble
-        // multi-part results. The echo is a real TurboKV header, so the
-        // reply keeps the TurboKV ethertype — the wire form must stay
-        // equivalent to the in-memory form at every link boundary.
-        pkt.turbo = Some(*turbo);
-        pkt.eth.ethertype = ETHERTYPE_TURBOKV;
-    }
+    let pkt = build_reply_packet(env.topo.node_ip(from_node), client_ip, tag, &reply, turbo);
     let tor = env.topo.edge_switch(Addr::Node(from_node))?;
     env.bus.send(Addr::Switch(tor), pkt);
     Ok(())

@@ -227,6 +227,44 @@ impl Default for ControllerConfig {
     }
 }
 
+/// The real-socket deployment runtime (`serve-node` / `serve-switch` /
+/// `drive` / `harness` subcommands): loopback/LAN addressing, controller
+/// epoch cadence, client retransmission, and the induced-failure knobs
+/// the CI smoke test uses.
+#[derive(Clone, Debug)]
+pub struct DeployConfig {
+    /// Numeric IP every listener binds / every peer dials.
+    pub host: String,
+    /// First port of the deterministic port map (switch at `base`,
+    /// `base+1`; node n at `base+10+2n`, `+11+2n`; client c at
+    /// `base+200+c`).
+    pub base_port: u16,
+    /// Controller statistics/repair epoch (wall-clock ms).
+    pub epoch_ms: u64,
+    /// Client retransmission timeout per attempt (wall-clock ms).
+    pub timeout_ms: u64,
+    /// Attempts before the driver abandons an operation.
+    pub max_retries: u32,
+    /// Node the harness kills mid-run; negative = no induced failure.
+    pub kill_node: i64,
+    /// Switch-observed operations before the kill fires.
+    pub kill_after_ops: u64,
+}
+
+impl Default for DeployConfig {
+    fn default() -> Self {
+        DeployConfig {
+            host: "127.0.0.1".into(),
+            base_port: 7600,
+            epoch_ms: 250,
+            timeout_ms: 1_000,
+            max_retries: 80,
+            kill_node: -1,
+            kill_after_ops: 0,
+        }
+    }
+}
+
 /// Dataplane lookup engine selection.
 #[derive(Clone, Debug)]
 pub struct DataplaneConfig {
@@ -249,6 +287,7 @@ pub struct Config {
     pub workload: WorkloadConfig,
     pub controller: ControllerConfig,
     pub dataplane: DataplaneConfig,
+    pub deploy: DeployConfig,
     pub coordination: Coordination,
 }
 
@@ -331,6 +370,16 @@ impl Config {
             int
         );
         ovr!(doc, "controller.split_hot", self.controller.split_hot, bool);
+
+        if let Some(v) = doc.get("deploy.host") {
+            self.deploy.host = v.as_str().context("deploy.host must be a string")?.to_string();
+        }
+        ovr!(doc, "deploy.base_port", self.deploy.base_port, int);
+        ovr!(doc, "deploy.epoch_ms", self.deploy.epoch_ms, int);
+        ovr!(doc, "deploy.timeout_ms", self.deploy.timeout_ms, int);
+        ovr!(doc, "deploy.max_retries", self.deploy.max_retries, int);
+        ovr!(doc, "deploy.kill_node", self.deploy.kill_node, int);
+        ovr!(doc, "deploy.kill_after_ops", self.deploy.kill_after_ops, int);
 
         if let Some(v) = doc.get("dataplane.mode") {
             self.dataplane.mode = match v.as_str().context("dataplane.mode must be a string")? {
@@ -433,6 +482,34 @@ mod tests {
         assert!(Config::from_str("[workload]\nwrite_ratio = 0.9\nscan_ratio = 0.2").is_err());
         assert!(Config::from_str("coordination = \"bogus\"").is_err());
         assert!(Config::from_str("[dataplane]\nmode = \"gpu\"").is_err());
+    }
+
+    #[test]
+    fn deploy_section_overrides_apply() {
+        let cfg = Config::from_str(
+            r#"
+            [deploy]
+            host = "10.0.0.5"
+            base_port = 9000
+            epoch_ms = 100
+            timeout_ms = 500
+            max_retries = 12
+            kill_node = 1
+            kill_after_ops = 4000
+        "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.deploy.host, "10.0.0.5");
+        assert_eq!(cfg.deploy.base_port, 9000);
+        assert_eq!(cfg.deploy.epoch_ms, 100);
+        assert_eq!(cfg.deploy.timeout_ms, 500);
+        assert_eq!(cfg.deploy.max_retries, 12);
+        assert_eq!(cfg.deploy.kill_node, 1);
+        assert_eq!(cfg.deploy.kill_after_ops, 4000);
+        // Defaults hold when the section is absent.
+        let cfg = Config::default();
+        assert_eq!(cfg.deploy.base_port, 7600);
+        assert_eq!(cfg.deploy.kill_node, -1);
     }
 
     #[test]

@@ -1,0 +1,268 @@
+//! Control-plane protocol between the deployment controller and the
+//! serve-node / serve-switch processes.
+//!
+//! The paper separates the data plane (TurboKV packets) from the
+//! controller's out-of-band authority (§3/§5: statistics collection,
+//! directory updates, migration requests). In the deployment runtime that
+//! authority travels over a dedicated control TCP port per process, framed
+//! by `deploy::transport` and encoded with the same uvarint primitives the
+//! storage blobs use. One frame = one request; the server answers with one
+//! reply frame on the same connection.
+
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::store::blob::{get_bytes, get_uvarint, put_bytes, put_uvarint};
+use crate::types::{Key, Value};
+
+use super::transport::{read_frame_deadline, write_frame, FrameReader};
+
+/// A controller → server request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CtrlMsg {
+    /// Liveness probe (the controller's failure detector).
+    Ping,
+    /// Stop serving and exit cleanly.
+    Shutdown,
+    /// Collect and reset the switch's per-range read/write counters
+    /// (§5.1 statistics epoch).
+    DrainCounters,
+    /// Install a new chain for record `idx` (§5.2 repair push).
+    SetChain { idx: u32, chain: Vec<u16> },
+    /// Copy out all pairs in `[start, end]` (repair data copy, source
+    /// side).
+    ExtractRange { start: Key, end: Key },
+    /// Bulk-load pairs (repair data copy, destination side).
+    IngestRange { pairs: Vec<(Key, Value)> },
+}
+
+/// A server → controller reply.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CtrlReply {
+    Ok,
+    Counters { read: Vec<u64>, write: Vec<u64> },
+    Pairs(Vec<(Key, Value)>),
+    Err(String),
+}
+
+fn put_key(out: &mut Vec<u8>, k: Key) {
+    out.extend_from_slice(&k.to_bytes());
+}
+
+fn get_key(data: &[u8], pos: &mut usize) -> Result<Key> {
+    if *pos + 16 > data.len() {
+        bail!("truncated key at offset {pos}");
+    }
+    let mut b = [0u8; 16];
+    b.copy_from_slice(&data[*pos..*pos + 16]);
+    *pos += 16;
+    Ok(Key::from_bytes(b))
+}
+
+fn put_pairs(out: &mut Vec<u8>, pairs: &[(Key, Value)]) {
+    put_uvarint(out, pairs.len() as u64);
+    for (k, v) in pairs {
+        put_key(out, *k);
+        put_bytes(out, v);
+    }
+}
+
+fn get_pairs(data: &[u8], pos: &mut usize) -> Result<Vec<(Key, Value)>> {
+    let n = get_uvarint(data, pos)? as usize;
+    let mut pairs = Vec::with_capacity(n.min(1 << 20));
+    for _ in 0..n {
+        let k = get_key(data, pos)?;
+        let v = get_bytes(data, pos)?.to_vec();
+        pairs.push((k, v));
+    }
+    Ok(pairs)
+}
+
+impl CtrlMsg {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            CtrlMsg::Ping => out.push(1),
+            CtrlMsg::Shutdown => out.push(2),
+            CtrlMsg::DrainCounters => out.push(3),
+            CtrlMsg::SetChain { idx, chain } => {
+                out.push(4);
+                put_uvarint(&mut out, *idx as u64);
+                put_uvarint(&mut out, chain.len() as u64);
+                for &reg in chain {
+                    put_uvarint(&mut out, reg as u64);
+                }
+            }
+            CtrlMsg::ExtractRange { start, end } => {
+                out.push(5);
+                put_key(&mut out, *start);
+                put_key(&mut out, *end);
+            }
+            CtrlMsg::IngestRange { pairs } => {
+                out.push(6);
+                put_pairs(&mut out, pairs);
+            }
+        }
+        out
+    }
+
+    pub fn decode(data: &[u8]) -> Result<CtrlMsg> {
+        let tag = *data.first().context("empty control message")?;
+        let mut pos = 1usize;
+        Ok(match tag {
+            1 => CtrlMsg::Ping,
+            2 => CtrlMsg::Shutdown,
+            3 => CtrlMsg::DrainCounters,
+            4 => {
+                let idx = get_uvarint(data, &mut pos)? as u32;
+                let n = get_uvarint(data, &mut pos)? as usize;
+                let mut chain = Vec::with_capacity(n.min(64));
+                for _ in 0..n {
+                    chain.push(get_uvarint(data, &mut pos)? as u16);
+                }
+                CtrlMsg::SetChain { idx, chain }
+            }
+            5 => {
+                let start = get_key(data, &mut pos)?;
+                let end = get_key(data, &mut pos)?;
+                CtrlMsg::ExtractRange { start, end }
+            }
+            6 => CtrlMsg::IngestRange { pairs: get_pairs(data, &mut pos)? },
+            other => bail!("bad control message tag {other}"),
+        })
+    }
+}
+
+impl CtrlReply {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        match self {
+            CtrlReply::Ok => out.push(1),
+            CtrlReply::Counters { read, write } => {
+                out.push(2);
+                put_uvarint(&mut out, read.len() as u64);
+                for &v in read {
+                    put_uvarint(&mut out, v);
+                }
+                // Lengths always match today (one counter pair per table
+                // record), but the codec carries both so an unequal pair
+                // can never silently shear the frame.
+                put_uvarint(&mut out, write.len() as u64);
+                for &v in write {
+                    put_uvarint(&mut out, v);
+                }
+            }
+            CtrlReply::Pairs(pairs) => {
+                out.push(3);
+                put_pairs(&mut out, pairs);
+            }
+            CtrlReply::Err(msg) => {
+                out.push(4);
+                put_bytes(&mut out, msg.as_bytes());
+            }
+        }
+        out
+    }
+
+    pub fn decode(data: &[u8]) -> Result<CtrlReply> {
+        let tag = *data.first().context("empty control reply")?;
+        let mut pos = 1usize;
+        Ok(match tag {
+            1 => CtrlReply::Ok,
+            2 => {
+                let n = get_uvarint(data, &mut pos)? as usize;
+                let mut read = Vec::with_capacity(n.min(1 << 20));
+                for _ in 0..n {
+                    read.push(get_uvarint(data, &mut pos)?);
+                }
+                let m = get_uvarint(data, &mut pos)? as usize;
+                let mut write = Vec::with_capacity(m.min(1 << 20));
+                for _ in 0..m {
+                    write.push(get_uvarint(data, &mut pos)?);
+                }
+                CtrlReply::Counters { read, write }
+            }
+            3 => CtrlReply::Pairs(get_pairs(data, &mut pos)?),
+            4 => CtrlReply::Err(String::from_utf8_lossy(get_bytes(data, &mut pos)?).into_owned()),
+            other => bail!("bad control reply tag {other}"),
+        })
+    }
+}
+
+/// One synchronous control round trip: connect, send, await the reply.
+/// `timeout` bounds the connect and the whole response wait; a
+/// [`CtrlReply::Err`] from the server is surfaced as an error.
+pub fn ctrl_call(addr: SocketAddr, msg: &CtrlMsg, timeout: Duration) -> Result<CtrlReply> {
+    let mut stream = TcpStream::connect_timeout(&addr, timeout)
+        .with_context(|| format!("connecting control socket {addr}"))?;
+    stream.set_nodelay(true).ok();
+    // Short socket timeout + overall deadline: the reader polls, so a
+    // slow-but-alive peer gets the full window.
+    stream.set_read_timeout(Some(Duration::from_millis(50))).ok();
+    write_frame(&mut stream, &msg.encode())
+        .with_context(|| format!("sending control message to {addr}"))?;
+    let deadline = Instant::now() + timeout;
+    let frame = read_frame_deadline(&mut stream, &mut FrameReader::new(), deadline)
+        .with_context(|| format!("awaiting control reply from {addr}"))?
+        .ok_or_else(|| anyhow!("control peer {addr} closed before replying"))?;
+    match CtrlReply::decode(&frame)? {
+        CtrlReply::Err(e) => bail!("control peer {addr} rejected {msg:?}: {e}"),
+        reply => Ok(reply),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn control_messages_roundtrip() {
+        let msgs = vec![
+            CtrlMsg::Ping,
+            CtrlMsg::Shutdown,
+            CtrlMsg::DrainCounters,
+            CtrlMsg::SetChain { idx: 17, chain: vec![2, 0, 1] },
+            CtrlMsg::SetChain { idx: 0, chain: vec![] },
+            CtrlMsg::ExtractRange { start: Key(5 << 96), end: Key::MAX },
+            CtrlMsg::IngestRange { pairs: vec![] },
+            CtrlMsg::IngestRange {
+                pairs: vec![(Key(1), b"a".to_vec()), (Key(2), vec![0xAB; 128])],
+            },
+        ];
+        for m in msgs {
+            assert_eq!(CtrlMsg::decode(&m.encode()).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn control_replies_roundtrip() {
+        let replies = vec![
+            CtrlReply::Ok,
+            CtrlReply::Counters { read: vec![0, 7, u64::MAX], write: vec![1, 2, 3] },
+            CtrlReply::Counters { read: vec![], write: vec![] },
+            CtrlReply::Counters { read: vec![5], write: vec![] },
+            CtrlReply::Pairs(vec![(Key::MIN, vec![]), (Key(9), b"v".to_vec())]),
+            CtrlReply::Err("no such record".into()),
+        ];
+        for r in replies {
+            assert_eq!(CtrlReply::decode(&r.encode()).unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn decode_rejects_garbage() {
+        assert!(CtrlMsg::decode(&[]).is_err());
+        assert!(CtrlMsg::decode(&[99]).is_err());
+        assert!(CtrlReply::decode(&[0]).is_err());
+        // Truncated ExtractRange: one key instead of two.
+        let mut bytes = CtrlMsg::ExtractRange { start: Key(1), end: Key(2) }.encode();
+        bytes.truncate(1 + 16);
+        assert!(CtrlMsg::decode(&bytes).is_err());
+        // Truncated pair list.
+        let mut bytes = CtrlMsg::IngestRange { pairs: vec![(Key(1), vec![9; 40])] }.encode();
+        bytes.truncate(bytes.len() - 10);
+        assert!(CtrlMsg::decode(&bytes).is_err());
+    }
+}

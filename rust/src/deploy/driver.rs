@@ -1,0 +1,399 @@
+//! `drive`: the client library + workload generator against a deployed
+//! cluster, with 100% value verification.
+//!
+//! Each configured client runs on its own thread as a closed loop
+//! (one outstanding request), exactly the simulator's in-switch transmit
+//! strategy on real sockets: emit one unprocessed TurboKV packet to the
+//! switch, let the hierarchy key-route it, await the reply on the
+//! client's own listener (tails reply straight to the client IP, which
+//! the netmap resolves to that listener). Correlation needs no
+//! simulation-side tag: one outstanding request per client, scan replies
+//! carry their covered interval in the echoed TurboKV header
+//! (`cluster::proto::Coverage` assembles them), and every reply value is
+//! checked against the workload's deterministic oracle — a stale
+//! duplicate either matches the oracle anyway or is retried away.
+//!
+//! Timeout + retransmission mirror the simulator's client actor: an
+//! unanswered request is re-sent (the switch re-routes it, which is how a
+//! repaired chain picks the traffic back up after a node kill).
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::cluster::proto::{decode_reply, Coverage};
+use crate::config::{Config, Partitioning};
+use crate::metrics::Metrics;
+use crate::net::packet::{Ip, Packet, Tos};
+use crate::net::topology::Topology;
+use crate::partition::matching_value;
+use crate::types::{ClientId, OpCode, Reply, Request};
+use crate::util::rng::Rng;
+use crate::workload::Generator;
+
+use super::transport::write_frame;
+use super::{spawn_accept_loop, Netmap};
+
+/// Aggregate outcome of one `drive` run — the deployment's `RunStats`.
+#[derive(Debug, Default)]
+pub struct DriveReport {
+    /// Measured-phase operations completed.
+    pub ops: u64,
+    /// Load-phase puts completed (not in `metrics`).
+    pub load_ops: u64,
+    /// Retransmissions across both phases.
+    pub retries: u64,
+    /// Operations abandoned after `deploy.max_retries` attempts.
+    pub gave_up: u64,
+    /// Completed operations whose value failed oracle verification.
+    pub verify_failures: u64,
+    pub metrics: Metrics,
+}
+
+impl DriveReport {
+    /// Did every operation complete with a verified value?
+    pub fn clean(&self) -> bool {
+        self.gave_up == 0 && self.verify_failures == 0
+    }
+
+    /// The simulator-shaped closing line.
+    pub fn summary_line(&self) -> String {
+        format!(
+            "deploy: ops={} load_ops={} retries={} gave_up={} verify_failures={}",
+            self.ops, self.load_ops, self.retries, self.gave_up, self.verify_failures
+        )
+    }
+}
+
+struct ClientOutcome {
+    metrics: Metrics,
+    ops: u64,
+    load_ops: u64,
+    retries: u64,
+    gave_up: u64,
+    verify_failures: u64,
+}
+
+/// Run the workload against the cluster reachable through `net`. The
+/// caller provides one pre-bound reply listener per client (the process
+/// mode binds the netmap's ports; the test harness binds ephemeral ones).
+pub fn run(cfg: &Config, net: &Netmap, listeners: Vec<TcpListener>) -> Result<DriveReport> {
+    anyhow::ensure!(
+        listeners.len() == cfg.cluster.clients,
+        "need one reply listener per client ({} != {})",
+        listeners.len(),
+        cfg.cluster.clients
+    );
+    let topo = Topology::build(&cfg.cluster);
+    let gen = Arc::new(Generator::new(
+        cfg.workload.num_keys,
+        cfg.workload.value_size,
+        cfg.workload.write_ratio,
+        cfg.workload.scan_ratio,
+        cfg.workload.zipf_theta,
+        cfg.cluster.num_ranges,
+        cfg.workload.scan_spans,
+    ));
+    let stop = Arc::new(AtomicBool::new(false));
+    let epoch = Instant::now();
+    // All clients must finish loading before any client issues measured
+    // ops — a fast client's Get for a key a slow client has not loaded
+    // yet would read a true (but verification-failing) None.
+    let loaded = Arc::new(Barrier::new(cfg.cluster.clients));
+
+    let mut acceptors = Vec::new();
+    let mut workers = Vec::new();
+    for (c, listener) in listeners.into_iter().enumerate() {
+        let (tx, rx) = mpsc::channel::<Packet>();
+        acceptors.push(spawn_reply_listener(c, listener, stop.clone(), tx));
+        let cfg = cfg.clone();
+        let gen = gen.clone();
+        let loaded = loaded.clone();
+        let switch_addr = net.switch_data;
+        let client_ip = topo.client_ip(c);
+        workers.push(
+            std::thread::Builder::new()
+                .name(format!("drive-client{c}"))
+                .spawn(move || {
+                    client_worker(&cfg, c, client_ip, switch_addr, &gen, rx, epoch, &loaded)
+                })
+                .expect("spawn drive client"),
+        );
+    }
+
+    let mut report = DriveReport::default();
+    let mut worker_err = None;
+    for w in workers {
+        match w.join() {
+            Ok(Ok(out)) => {
+                report.ops += out.ops;
+                report.load_ops += out.load_ops;
+                report.retries += out.retries;
+                report.gave_up += out.gave_up;
+                report.verify_failures += out.verify_failures;
+                report.metrics.merge(&out.metrics);
+            }
+            Ok(Err(e)) => worker_err = Some(e),
+            Err(_) => worker_err = Some(anyhow::anyhow!("drive client thread panicked")),
+        }
+    }
+    stop.store(true, Ordering::SeqCst);
+    for a in acceptors {
+        a.join().ok();
+    }
+    match worker_err {
+        Some(e) => Err(e),
+        None => Ok(report),
+    }
+}
+
+/// Accept loop feeding decoded reply packets into the client's channel.
+fn spawn_reply_listener(
+    c: ClientId,
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    tx: Sender<Packet>,
+) -> std::thread::JoinHandle<()> {
+    let stop_for_conns = stop.clone();
+    spawn_accept_loop(
+        format!("drive-replies{c}"),
+        listener,
+        stop,
+        Arc::new(move |stream: TcpStream| {
+            let tx = tx.clone();
+            super::serve_frames(stream, &stop_for_conns, move |_out, frame| {
+                match Packet::decode(&frame) {
+                    // A closed receiver means the run is over; stop reading.
+                    Ok(pkt) => tx.send(pkt).is_ok(),
+                    Err(_) => true, // undecodable reply: drop, keep serving
+                }
+            });
+        }),
+    )
+}
+
+fn client_worker(
+    cfg: &Config,
+    c: ClientId,
+    client_ip: Ip,
+    switch_addr: std::net::SocketAddr,
+    gen: &Generator,
+    rx: Receiver<Packet>,
+    epoch: Instant,
+    loaded: &Barrier,
+) -> Result<ClientOutcome> {
+    let switch = connect_retry(switch_addr, Duration::from_secs(10))
+        .with_context(|| format!("client {c}: connecting to the switch data port"));
+    let switch = match switch {
+        Ok(s) => s,
+        Err(e) => {
+            // Never strand the sibling clients at the load barrier.
+            loaded.wait();
+            return Err(e);
+        }
+    };
+    let mut ctx = ClientCtx {
+        cfg,
+        gen,
+        client_ip,
+        switch_addr,
+        switch,
+        rx,
+        epoch,
+        out: ClientOutcome {
+            metrics: Metrics::new(),
+            ops: 0,
+            load_ops: 0,
+            retries: 0,
+            gave_up: 0,
+            verify_failures: 0,
+        },
+    };
+
+    // Load phase (the YCSB load, over the wire): client c loads every
+    // key index congruent to c, as ordinary chain writes.
+    let clients = cfg.cluster.clients as u64;
+    for i in (c as u64..cfg.workload.num_keys).step_by(clients as usize) {
+        let req = Request::put(gen.key_of(i), gen.value_of(i));
+        if ctx.issue_and_wait(&req) {
+            ctx.out.load_ops += 1;
+        }
+    }
+
+    // Every key must be resident before any measured Get/scan verifies
+    // against the oracle.
+    loaded.wait();
+
+    // Measured phase: the simulator's per-client rng fork, same seed math.
+    let mut rng = Rng::new(cfg.workload.seed ^ ((c as u64 + 1) * 0x9E37));
+    for _ in 0..cfg.workload.ops_per_client {
+        let req = gen.next(&mut rng);
+        let t0 = Instant::now();
+        if ctx.issue_and_wait(&req) {
+            ctx.out.ops += 1;
+            let now_ns = ctx.epoch.elapsed().as_nanos() as u64;
+            ctx.out.metrics.record(req.op, t0.elapsed().as_nanos() as u64, now_ns);
+        }
+    }
+    Ok(ctx.out)
+}
+
+struct ClientCtx<'a> {
+    cfg: &'a Config,
+    gen: &'a Generator,
+    client_ip: Ip,
+    switch_addr: std::net::SocketAddr,
+    switch: TcpStream,
+    rx: Receiver<Packet>,
+    epoch: Instant,
+    out: ClientOutcome,
+}
+
+enum Check {
+    Complete,
+    Partial,
+    Mismatch,
+    Ignored,
+}
+
+impl ClientCtx<'_> {
+    /// Issue `req` and wait for its verified completion, retransmitting on
+    /// timeout. Returns true when the op completed (even if verification
+    /// failed — that is tallied separately); false only when abandoned.
+    fn issue_and_wait(&mut self, req: &Request) -> bool {
+        // Anything still buffered belongs to a previous op; a fresh op
+        // starts from a quiet channel.
+        while self.rx.try_recv().is_ok() {}
+        let mut coverage = (req.op == OpCode::Range).then(|| Coverage::new(req.key, req.end_key));
+        let timeout = Duration::from_millis(self.cfg.deploy.timeout_ms);
+        let mut mismatched = false;
+        for attempt in 0..=self.cfg.deploy.max_retries {
+            if attempt > 0 {
+                self.out.retries += 1;
+            }
+            if !self.send_request(req) {
+                continue; // switch unreachable this attempt; retry covers it
+            }
+            let deadline = Instant::now() + timeout;
+            loop {
+                let remaining = deadline.saturating_duration_since(Instant::now());
+                if remaining.is_zero() {
+                    break; // attempt timed out → retransmit
+                }
+                match self.rx.recv_timeout(remaining) {
+                    Ok(pkt) => match self.check_reply(req, &pkt, &mut coverage) {
+                        Check::Complete => return true,
+                        Check::Partial | Check::Ignored => continue,
+                        Check::Mismatch => {
+                            // Could be a stale duplicate of an abandoned
+                            // attempt; one clean re-read decides.
+                            if mismatched {
+                                self.out.verify_failures += 1;
+                                return true;
+                            }
+                            mismatched = true;
+                            break;
+                        }
+                    },
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => return false,
+                }
+            }
+        }
+        self.out.gave_up += 1;
+        false
+    }
+
+    /// The in-switch transmit strategy on a real socket: one unprocessed
+    /// TurboKV packet toward the switch; reconnect once on a dead stream.
+    fn send_request(&mut self, req: &Request) -> bool {
+        let part = self.cfg.cluster.partitioning;
+        let (tos, end_key) = match part {
+            Partitioning::Range => (Tos::RangeData, req.end_key),
+            Partitioning::Hash => (Tos::HashData, matching_value(part, req.key)),
+        };
+        let pkt = Packet::request(
+            self.client_ip,
+            Ip(0),
+            tos,
+            req.op,
+            req.key,
+            end_key,
+            req.value.as_slice(),
+        );
+        let bytes = pkt.encode();
+        if write_frame(&mut self.switch, &bytes).is_ok() {
+            return true;
+        }
+        match connect_retry(self.switch_addr, Duration::from_secs(2)) {
+            Ok(stream) => {
+                self.switch = stream;
+                write_frame(&mut self.switch, &bytes).is_ok()
+            }
+            Err(_) => false,
+        }
+    }
+
+    fn check_reply(
+        &mut self,
+        req: &Request,
+        pkt: &Packet,
+        coverage: &mut Option<Coverage>,
+    ) -> Check {
+        let Ok(reply) = decode_reply(&pkt.payload) else {
+            return Check::Ignored;
+        };
+        match (req.op, reply) {
+            (OpCode::Get, Reply::Value(got)) => {
+                if got == self.gen.expected_value(req.key) {
+                    Check::Complete
+                } else {
+                    Check::Mismatch
+                }
+            }
+            (OpCode::Put | OpCode::Del, Reply::Ack) => Check::Complete,
+            (OpCode::Range, Reply::Pairs(pairs)) => {
+                let Some(echo) = pkt.turbo else {
+                    return Check::Ignored; // malformed scan reply
+                };
+                for (k, v) in &pairs {
+                    if self.gen.expected_value(*k).as_deref() != Some(v.as_slice()) {
+                        return Check::Mismatch;
+                    }
+                }
+                let cov = coverage.as_mut().expect("scan op has coverage");
+                cov.add(echo.key, echo.end_key);
+                if cov.complete() {
+                    Check::Complete
+                } else {
+                    Check::Partial
+                }
+            }
+            _ => Check::Ignored, // stale reply shape from a previous op
+        }
+    }
+}
+
+/// Connect with retries until `total` elapses (servers may still be
+/// binding when the driver starts).
+fn connect_retry(addr: std::net::SocketAddr, total: Duration) -> Result<TcpStream> {
+    let deadline = Instant::now() + total;
+    loop {
+        match TcpStream::connect_timeout(&addr, Duration::from_millis(500)) {
+            Ok(stream) => {
+                stream.set_nodelay(true).ok();
+                return Ok(stream);
+            }
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(e).with_context(|| format!("connecting {addr}"));
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}

@@ -1,0 +1,497 @@
+//! Boot the whole loopback topology and run the controller's epoch loop.
+//!
+//! Two launch modes share every protocol path:
+//!
+//! * **Thread mode** (`run_threads`) — every role in this process on its
+//!   own threads, listeners on ephemeral ports. This is what the
+//!   integration tests drive; an induced "node kill" is a control-plane
+//!   `Shutdown` (the process stays up, the node's threads and state go
+//!   away).
+//! * **Process mode** (`run_processes`) — `serve-switch`, one
+//!   `serve-node` per node, and `drive` as child processes of this
+//!   binary, on the `[deploy]` base-port map. This is the CI
+//!   `loopback-smoke` job; an induced kill is a real `SIGKILL`.
+//!
+//! The controller loop is the paper's §5 epoch: drain the switch's
+//! per-range counters, estimate per-node load (the shared
+//! `cluster::controller::estimate_loads` core), detect failures by
+//! control-plane ping, and repair chains with the shared
+//! `plan_range_repair` — extract/ingest the sub-range between survivors,
+//! then push the new chain into the switch's match-action table.
+
+use std::net::{TcpListener, TcpStream};
+use std::process::{Child, Command, Stdio};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::cluster::controller::{estimate_loads, plan_range_repair, RustEstimator};
+use crate::config::Config;
+use crate::partition::Directory;
+use crate::types::NodeId;
+
+use super::control::{ctrl_call, CtrlMsg, CtrlReply};
+use super::driver::DriveReport;
+use super::{
+    driver, node_server, switch_server, validate_deploy, Netmap, ServerHandle,
+    ServerStatsSnapshot,
+};
+
+/// What the controller observed over one run.
+#[derive(Debug, Default)]
+pub struct ControllerReport {
+    pub epochs: u64,
+    pub repairs: u64,
+    /// Total read+write counter mass drained from the switch.
+    pub total_ops: u64,
+    pub killed: Option<NodeId>,
+    /// Last per-node load estimate (observability).
+    pub last_load: Vec<f32>,
+}
+
+/// Everything a completed loopback run produced.
+#[derive(Debug)]
+pub struct LoopbackReport {
+    pub drive: DriveReport,
+    pub controller: ControllerReport,
+    /// Switch + node server counters summed at shutdown (thread mode
+    /// only; the process mode's counters live in the children).
+    pub servers: ServerStatsSnapshot,
+}
+
+impl LoopbackReport {
+    /// The CI gate: every op completed and verified, and — when a kill
+    /// was induced — the controller actually detected it and repaired
+    /// chains.
+    pub fn gate(&self, cfg: &Config) -> Result<()> {
+        let expected = cfg.cluster.clients as u64 * cfg.workload.ops_per_client;
+        if self.drive.ops != expected {
+            bail!(
+                "drive completed {}/{expected} measured ops ({})",
+                self.drive.ops,
+                self.drive.summary_line()
+            );
+        }
+        if !self.drive.clean() {
+            bail!("verification failed: {}", self.drive.summary_line());
+        }
+        if cfg.deploy.kill_node >= 0 {
+            if self.controller.killed.is_none() {
+                bail!(
+                    "kill_node={} was configured but never triggered \
+                     (kill_after_ops={} vs observed {}); raise ops or lower the threshold",
+                    cfg.deploy.kill_node,
+                    cfg.deploy.kill_after_ops,
+                    self.controller.total_ops
+                );
+            }
+            if self.controller.repairs == 0 {
+                bail!("node {} was killed but no chain was repaired", cfg.deploy.kill_node);
+            }
+        }
+        Ok(())
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "{} | controller: epochs={} repairs={} killed={:?} observed_ops={} | \
+             servers: bad_frames={} dropped={} send_failures={}",
+            self.drive.summary_line(),
+            self.controller.epochs,
+            self.controller.repairs,
+            self.controller.killed,
+            self.controller.total_ops,
+            self.servers.bad_frames,
+            self.servers.dropped,
+            self.servers.send_failures
+        )
+    }
+}
+
+/// The node child processes, shared between the harness (teardown) and
+/// the controller's killer (induced failure takes the victim out).
+type NodeChildren = Arc<Mutex<Vec<Option<Child>>>>;
+
+/// How the harness executes the induced node failure.
+enum Killer {
+    /// Thread mode: control-plane shutdown of the victim's server.
+    Ctrl,
+    /// Process mode: SIGKILL the victim's child process.
+    Proc(NodeChildren),
+}
+
+impl Killer {
+    fn kill(&self, net: &Netmap, n: NodeId, timeout: Duration) {
+        match self {
+            Killer::Ctrl => {
+                ctrl_call(net.node_ctrl[n], &CtrlMsg::Shutdown, timeout).ok();
+            }
+            Killer::Proc(children) => {
+                let mut children = children.lock().expect("children poisoned");
+                if let Some(mut child) = children.get_mut(n).and_then(Option::take) {
+                    child.kill().ok();
+                    child.wait().ok();
+                }
+            }
+        }
+    }
+}
+
+/// The controller's epoch loop; returns when `stop` is set.
+fn controller_loop(
+    cfg: &Config,
+    net: &Netmap,
+    stop: &AtomicBool,
+    killer: &Killer,
+) -> ControllerReport {
+    let nodes = cfg.cluster.nodes();
+    let epoch = Duration::from_millis(cfg.deploy.epoch_ms.max(50));
+    let ctrl_timeout = Duration::from_millis(cfg.deploy.timeout_ms.max(200));
+    let copy_timeout = ctrl_timeout * 10;
+    let mut dir = Directory::initial(cfg.cluster.num_ranges, nodes, cfg.cluster.replication);
+    let mut alive = vec![true; nodes];
+    let mut est = RustEstimator;
+    let mut report = ControllerReport::default();
+    let mut pending_kill = (cfg.deploy.kill_node >= 0
+        && (cfg.deploy.kill_node as usize) < nodes)
+        .then_some(cfg.deploy.kill_node as usize);
+
+    while !stop.load(Ordering::SeqCst) {
+        sleep_poll(epoch, stop);
+        if stop.load(Ordering::SeqCst) {
+            break;
+        }
+        report.epochs += 1;
+
+        // §5.1: collect + reset the switch's per-range statistics, feed
+        // the shared load estimator.
+        if let Ok(CtrlReply::Counters { read, write }) =
+            ctrl_call(net.switch_ctrl, &CtrlMsg::DrainCounters, ctrl_timeout)
+        {
+            let mass: u64 = read.iter().sum::<u64>() + write.iter().sum::<u64>();
+            report.total_ops += mass;
+            if mass > 0 {
+                report.last_load = estimate_loads(
+                    &mut est,
+                    &dir,
+                    &read,
+                    &write,
+                    nodes,
+                    cfg.controller.write_cost as f32,
+                );
+                eprintln!(
+                    "[controller] epoch={} ops={} (+{mass}) load={:?}",
+                    report.epochs, report.total_ops, report.last_load
+                );
+            }
+        }
+
+        // Induced failure: once the switch has observed enough traffic,
+        // take the victim down for real.
+        if let Some(victim) = pending_kill {
+            if report.total_ops >= cfg.deploy.kill_after_ops {
+                eprintln!(
+                    "[controller] killing node {victim} after {} observed ops",
+                    report.total_ops
+                );
+                killer.kill(net, victim, ctrl_timeout);
+                report.killed = Some(victim);
+                pending_kill = None;
+            }
+        }
+
+        // §5.2: failure detection by control-plane ping, then chain
+        // repair through the shared planner.
+        for failed in 0..nodes {
+            if !alive[failed]
+                || ctrl_call(net.node_ctrl[failed], &CtrlMsg::Ping, ctrl_timeout).is_ok()
+            {
+                continue;
+            }
+            alive[failed] = false;
+            repair_node(cfg, net, &mut dir, &alive, failed, &mut report, copy_timeout);
+        }
+    }
+    report
+}
+
+/// Apply the shared repair plans for every chain the failed node served:
+/// copy the sub-range between survivors where a replacement joined, then
+/// push each new chain into the switch's match-action table.
+fn repair_node(
+    cfg: &Config,
+    net: &Netmap,
+    dir: &mut Directory,
+    alive: &[bool],
+    failed: NodeId,
+    report: &mut ControllerReport,
+    copy_timeout: Duration,
+) {
+    let affected = dir.ranges_of_node(failed);
+    let total = affected.len();
+    for idx in affected {
+        let plan = plan_range_repair(dir, alive, idx, failed);
+        if let Some(copy) = plan.copy {
+            let (start, end) = dir.bounds(idx);
+            if let Ok(CtrlReply::Pairs(pairs)) = ctrl_call(
+                net.node_ctrl[copy.src],
+                &CtrlMsg::ExtractRange { start, end },
+                copy_timeout,
+            ) {
+                ctrl_call(
+                    net.node_ctrl[copy.dst],
+                    &CtrlMsg::IngestRange { pairs },
+                    copy_timeout,
+                )
+                .ok();
+            }
+        }
+        dir.set_chain(idx, plan.new_chain.clone());
+        let chain: Vec<u16> = plan.new_chain.iter().map(|&n| n as u16).collect();
+        ctrl_call(
+            net.switch_ctrl,
+            &CtrlMsg::SetChain { idx: idx as u32, chain },
+            copy_timeout,
+        )
+        .ok();
+        report.repairs += 1;
+    }
+    eprintln!("[controller] node {failed} failed: repaired {total} chains");
+}
+
+fn sleep_poll(total: Duration, stop: &AtomicBool) {
+    let deadline = Instant::now() + total;
+    while Instant::now() < deadline && !stop.load(Ordering::SeqCst) {
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+/// Thread mode: the whole topology in this process. Used by the
+/// integration tests; returns the combined report (callers apply
+/// [`LoopbackReport::gate`]).
+pub fn run_threads(cfg: &Config) -> Result<LoopbackReport> {
+    validate_deploy(cfg)?;
+    let host: std::net::IpAddr = cfg.deploy.host.parse().context("deploy.host")?;
+    let bind = || -> Result<TcpListener> {
+        TcpListener::bind((host, 0)).context("binding an ephemeral listener")
+    };
+
+    let sw_data = bind()?;
+    let sw_ctrl = bind()?;
+    let nodes = cfg.cluster.nodes();
+    let node_listeners: Vec<(TcpListener, TcpListener)> =
+        (0..nodes).map(|_| Ok((bind()?, bind()?))).collect::<Result<_>>()?;
+    let client_listeners: Vec<TcpListener> =
+        (0..cfg.cluster.clients).map(|_| bind()).collect::<Result<_>>()?;
+
+    let net = Netmap {
+        switch_data: sw_data.local_addr()?,
+        switch_ctrl: sw_ctrl.local_addr()?,
+        node_data: node_listeners
+            .iter()
+            .map(|(d, _)| d.local_addr())
+            .collect::<std::io::Result<_>>()?,
+        node_ctrl: node_listeners
+            .iter()
+            .map(|(_, c)| c.local_addr())
+            .collect::<std::io::Result<_>>()?,
+        client_data: client_listeners
+            .iter()
+            .map(|l| l.local_addr())
+            .collect::<std::io::Result<_>>()?,
+    };
+
+    let switch_handle = switch_server::spawn(cfg, net.clone(), sw_data, sw_ctrl)?;
+    let mut node_handles: Vec<ServerHandle> = Vec::with_capacity(nodes);
+    for (n, (data, ctrl)) in node_listeners.into_iter().enumerate() {
+        node_handles.push(node_server::spawn(cfg, n, net.clone(), data, ctrl)?);
+    }
+
+    let ctl_stop = Arc::new(AtomicBool::new(false));
+    let controller = {
+        let cfg = cfg.clone();
+        let net = net.clone();
+        let stop = ctl_stop.clone();
+        std::thread::Builder::new()
+            .name("controller".into())
+            .spawn(move || controller_loop(&cfg, &net, &stop, &Killer::Ctrl))
+            .expect("spawn controller")
+    };
+
+    let drive = driver::run(cfg, &net, client_listeners);
+
+    ctl_stop.store(true, Ordering::SeqCst);
+    let controller = controller.join().unwrap_or_default();
+    let mut servers = switch_handle.shutdown();
+    for h in node_handles {
+        servers.absorb(h.shutdown());
+    }
+    Ok(LoopbackReport { drive: drive?, controller, servers })
+}
+
+/// Process mode: spawn serve-switch / serve-node / drive as children of
+/// this binary (the CI smoke job). `passthrough` is the flag set every
+/// child must agree on (config file + dotted overrides).
+pub fn run_processes(cfg: &Config, passthrough: &[String]) -> Result<LoopbackReport> {
+    let net = Netmap::from_config(cfg)?;
+    let exe = std::env::current_exe().context("locating the turbokv binary")?;
+    let spawn_child = |args: &[String]| -> Result<Child> {
+        Command::new(&exe)
+            .args(args)
+            .stdout(Stdio::inherit())
+            .stderr(Stdio::inherit())
+            .spawn()
+            .with_context(|| format!("spawning `turbokv {}`", args.join(" ")))
+    };
+
+    let nodes = cfg.cluster.nodes();
+    // Children live outside the run closure so the teardown below reaps
+    // whatever was spawned, even when a later spawn/readiness step fails.
+    let mut switch_child: Option<Child> = None;
+    let node_children: NodeChildren = Arc::new(Mutex::new(Vec::new()));
+
+    let result = (|| -> Result<LoopbackReport> {
+        switch_child = Some(spawn_child(&with_args(passthrough, &["serve-switch".into()]))?);
+        {
+            let mut children = node_children.lock().expect("children poisoned");
+            for n in 0..nodes {
+                children.push(Some(spawn_child(&with_args(
+                    passthrough,
+                    &["serve-node".into(), format!("--node={n}")],
+                ))?));
+            }
+        }
+        wait_ready(&net, nodes, Duration::from_secs(20))?;
+
+        let ctl_stop = Arc::new(AtomicBool::new(false));
+        let controller = {
+            let cfg = cfg.clone();
+            let net = net.clone();
+            let stop = ctl_stop.clone();
+            let killer = Killer::Proc(node_children.clone());
+            std::thread::Builder::new()
+                .name("controller".into())
+                .spawn(move || controller_loop(&cfg, &net, &stop, &killer))
+                .expect("spawn controller")
+        };
+
+        // Pipe stdout so the drive child's own `deploy: ...` summary line
+        // can be parsed back into a real report (stderr streams through
+        // for live progress); echo it afterwards so nothing is hidden.
+        let out = Command::new(&exe)
+            .args(with_args(passthrough, &["drive".into()]))
+            .stderr(Stdio::inherit())
+            .output()
+            .context("running `turbokv drive`")?;
+        let stdout = String::from_utf8_lossy(&out.stdout);
+        print!("{stdout}");
+
+        ctl_stop.store(true, Ordering::SeqCst);
+        let controller = controller.join().unwrap_or_default();
+        if !out.status.success() {
+            bail!("drive exited with {}; controller: {controller:?}", out.status);
+        }
+        let drive = parse_drive_summary(&stdout).ok_or_else(|| {
+            anyhow::anyhow!("drive exited 0 but printed no parsable `deploy:` summary line")
+        })?;
+        Ok(LoopbackReport { drive, controller, servers: ServerStatsSnapshot::default() })
+    })();
+
+    // Teardown regardless of outcome: graceful control-plane shutdown,
+    // then make sure no child outlives the harness.
+    let ctrl_timeout = Duration::from_millis(cfg.deploy.timeout_ms.max(200));
+    ctrl_call(net.switch_ctrl, &CtrlMsg::Shutdown, ctrl_timeout).ok();
+    for n in 0..nodes {
+        ctrl_call(net.node_ctrl[n], &CtrlMsg::Shutdown, ctrl_timeout).ok();
+    }
+    if let Some(mut c) = switch_child {
+        reap(&mut c);
+    }
+    for child in node_children.lock().expect("children poisoned").iter_mut() {
+        if let Some(mut c) = child.take() {
+            reap(&mut c);
+        }
+    }
+    result
+}
+
+fn with_args(passthrough: &[String], head: &[String]) -> Vec<String> {
+    let mut out = head.to_vec();
+    out.extend_from_slice(passthrough);
+    out
+}
+
+/// Recover the drive child's [`DriveReport`] counters from its
+/// `deploy: ops=... load_ops=...` summary line (the `metrics` histograms
+/// stay with the child — it already printed them above).
+fn parse_drive_summary(stdout: &str) -> Option<DriveReport> {
+    let line = stdout.lines().find(|l| l.starts_with("deploy: "))?;
+    let mut report = DriveReport::default();
+    for token in line.trim_start_matches("deploy: ").split_whitespace() {
+        let (key, value) = token.split_once('=')?;
+        let value: u64 = value.parse().ok()?;
+        match key {
+            "ops" => report.ops = value,
+            "load_ops" => report.load_ops = value,
+            "retries" => report.retries = value,
+            "gave_up" => report.gave_up = value,
+            "verify_failures" => report.verify_failures = value,
+            _ => {}
+        }
+    }
+    Some(report)
+}
+
+/// Wait until the switch and every node answer control pings.
+fn wait_ready(net: &Netmap, nodes: usize, total: Duration) -> Result<()> {
+    let deadline = Instant::now() + total;
+    let probe = Duration::from_millis(300);
+    let mut targets: Vec<std::net::SocketAddr> = vec![net.switch_ctrl];
+    targets.extend(net.node_ctrl.iter().take(nodes).copied());
+    for addr in targets {
+        loop {
+            if ctrl_call(addr, &CtrlMsg::Ping, probe).is_ok() {
+                break;
+            }
+            if Instant::now() >= deadline {
+                bail!("server at {addr} never became ready");
+            }
+            std::thread::sleep(Duration::from_millis(100));
+        }
+    }
+    Ok(())
+}
+
+/// Wait briefly for a child to exit, then force-kill it.
+fn reap(child: &mut Child) {
+    for _ in 0..40 {
+        match child.try_wait() {
+            Ok(Some(_)) => return,
+            Ok(None) => std::thread::sleep(Duration::from_millis(50)),
+            Err(_) => break,
+        }
+    }
+    child.kill().ok();
+    child.wait().ok();
+}
+
+/// Preflight for process mode: nothing may already be serving on the
+/// base-port map (a stale deployment would silently absorb our traffic).
+pub fn ports_free(net: &Netmap) -> Result<()> {
+    for addr in [net.switch_data, net.switch_ctrl]
+        .into_iter()
+        .chain(net.node_data.iter().copied())
+        .chain(net.node_ctrl.iter().copied())
+        .chain(net.client_data.iter().copied())
+    {
+        if TcpStream::connect_timeout(&addr, Duration::from_millis(100)).is_ok() {
+            bail!(
+                "port {addr} is already serving — another deployment is live; \
+                 change deploy.base_port"
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,435 @@
+//! The deployment runtime: the paper's architecture as communicating
+//! processes over real loopback/LAN TCP sockets (§6–§8's testbed shape),
+//! using the **unchanged** `net::packet` wire format.
+//!
+//! Module map:
+//!
+//! * [`transport`] — length-prefixed framed transport (blocking
+//!   `std::net`, one thread per connection, no new dependencies).
+//! * [`control`] — controller ⇄ server control-plane codec (counters,
+//!   chain updates, repair copies, liveness, shutdown).
+//! * [`node_server`] — `serve-node`: `store::StorageNode` behind the
+//!   shared chain-replication step (`cluster::node_actor`).
+//! * [`switch_server`] — `serve-switch`: `switch::Switch` (match-action
+//!   table + registers + counter-drain endpoint) as a userspace forwarder.
+//! * [`driver`] — `drive`: `workload::Generator` against the cluster with
+//!   100% value verification, printing the simulator's report shapes.
+//! * [`harness`] — boots the whole topology in-process-per-thread (tests)
+//!   or as child processes (CI), plus the controller epoch loop.
+//!
+//! What is shared with the simulator and what diverges is documented in
+//! DESIGN.md §2d: the byte codec, the chain-step protocol core, the
+//! controller's repair/estimation planning, and the workload oracle are
+//! the same code; time, delivery order, and loss are the operating
+//! system's.
+//!
+//! Addressing: packets keep carrying the topology's *simulated* IPs
+//! (`10.0.rack.host`, `10.1.0.client`) — they are the wire-format
+//! identity. Every process builds the same `Topology` from the same
+//! config, so an IP resolves to an endpoint index, and [`Netmap`] maps
+//! that index to the real TCP listener.
+
+pub mod control;
+pub mod driver;
+pub mod harness;
+pub mod node_server;
+pub mod switch_server;
+pub mod transport;
+
+use std::collections::HashMap;
+use std::io;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{Config, Coordination};
+use crate::net::packet::Ip;
+use crate::net::topology::{Addr, Topology};
+
+use transport::{FrameEvent, FrameReader};
+
+/// Read-timeout used by connection threads so they can observe shutdown.
+pub(crate) const POLL_READ_TIMEOUT: Duration = Duration::from_millis(100);
+/// Accept-poll interval for listener threads.
+pub(crate) const ACCEPT_POLL: Duration = Duration::from_millis(20);
+/// Outbound connect timeout for data-plane sends.
+pub(crate) const CONNECT_TIMEOUT: Duration = Duration::from_millis(1_000);
+/// Outbound write timeout: a peer that stops reading long enough to fill
+/// its socket buffer counts as dead (the stream is evicted).
+pub(crate) const WRITE_TIMEOUT: Duration = Duration::from_millis(2_000);
+
+/// Reject configs the single-soft-switch loopback deployment cannot run.
+pub fn validate_deploy(cfg: &Config) -> Result<()> {
+    if cfg.coordination != Coordination::InSwitch {
+        bail!(
+            "the deployment runtime serves in-switch coordination only \
+             (got {}); the baselines exist in the simulator",
+            cfg.coordination.name()
+        );
+    }
+    if cfg.cluster.partitioning == crate::config::Partitioning::Hash
+        && cfg.workload.scan_ratio > 0.0
+    {
+        bail!("hash partitioning cannot serve scans; set --workload.scan_ratio=0");
+    }
+    if cfg.cluster.racks != 1 {
+        bail!(
+            "the loopback deployment runs one soft ToR switch, so all nodes \
+             must share one rack: set --cluster.racks=1 \
+             (got racks={})",
+            cfg.cluster.racks
+        );
+    }
+    if cfg.deploy.base_port < 1024 {
+        bail!("deploy.base_port {} is in the privileged range", cfg.deploy.base_port);
+    }
+    let nodes = cfg.cluster.nodes();
+    if nodes > 90 {
+        bail!("loopback port map supports at most 90 nodes (got {nodes})");
+    }
+    let top =
+        cfg.deploy.base_port as u32 + CLIENT_PORT_OFFSET as u32 + cfg.cluster.clients as u32;
+    if top > u16::MAX as u32 {
+        bail!(
+            "deploy.base_port {} leaves no room for {} client ports",
+            cfg.deploy.base_port,
+            cfg.cluster.clients
+        );
+    }
+    Ok(())
+}
+
+const NODE_PORT_OFFSET: u16 = 10;
+const CLIENT_PORT_OFFSET: u16 = 200;
+
+/// Real socket addresses of every process in the deployment, derived
+/// either from the `[deploy]` base-port scheme (child processes agree on
+/// it independently) or from actually-bound ephemeral listeners (the
+/// in-process test harness).
+#[derive(Clone, Debug)]
+pub struct Netmap {
+    pub switch_data: SocketAddr,
+    pub switch_ctrl: SocketAddr,
+    pub node_data: Vec<SocketAddr>,
+    pub node_ctrl: Vec<SocketAddr>,
+    pub client_data: Vec<SocketAddr>,
+}
+
+impl Netmap {
+    /// The deterministic port layout every process derives from config:
+    /// switch at `base`/`base+1`, node `n` at `base+10+2n`/`base+11+2n`,
+    /// client `c` at `base+200+c`.
+    pub fn from_config(cfg: &Config) -> Result<Netmap> {
+        validate_deploy(cfg)?;
+        let host: std::net::IpAddr = cfg
+            .deploy
+            .host
+            .parse()
+            .with_context(|| format!("deploy.host {:?} must be a numeric IP", cfg.deploy.host))?;
+        let base = cfg.deploy.base_port;
+        let at = |port: u16| SocketAddr::new(host, port);
+        Ok(Netmap {
+            switch_data: at(base),
+            switch_ctrl: at(base + 1),
+            node_data: (0..cfg.cluster.nodes())
+                .map(|n| at(base + NODE_PORT_OFFSET + 2 * n as u16))
+                .collect(),
+            node_ctrl: (0..cfg.cluster.nodes())
+                .map(|n| at(base + NODE_PORT_OFFSET + 2 * n as u16 + 1))
+                .collect(),
+            client_data: (0..cfg.cluster.clients)
+                .map(|c| at(base + CLIENT_PORT_OFFSET + c as u16))
+                .collect(),
+        })
+    }
+
+    /// Resolve a wire-format endpoint IP (node or client identity from the
+    /// shared topology) to its real data-plane socket.
+    pub fn endpoint_addr(&self, topo: &Topology, ip: Ip) -> Option<SocketAddr> {
+        match topo.addr_of_ip(ip)? {
+            Addr::Node(n) => self.node_data.get(n).copied(),
+            Addr::Client(c) => self.client_data.get(c).copied(),
+            Addr::Switch(_) => None,
+        }
+    }
+}
+
+/// Cached outbound connections, one per destination. Writes serialize
+/// per destination (frames to one peer never interleave) without a
+/// global write lock: the map mutex is held only for lookups/inserts, so
+/// a dead or stalled peer slows *its* packets, not the whole data plane.
+/// A failed send evicts the cached stream (the next send reconnects);
+/// the caller decides whether the drop matters — the data plane drops
+/// like a switch would, the control plane surfaces it.
+pub struct PeerPool {
+    conns: Mutex<HashMap<SocketAddr, Arc<Mutex<TcpStream>>>>,
+}
+
+impl Default for PeerPool {
+    fn default() -> Self {
+        PeerPool::new()
+    }
+}
+
+impl PeerPool {
+    pub fn new() -> PeerPool {
+        PeerPool { conns: Mutex::new(HashMap::new()) }
+    }
+
+    /// Send one frame to `addr`, connecting (and caching) on first use.
+    pub fn send(&self, addr: SocketAddr, frame: &[u8]) -> io::Result<()> {
+        let cached = self.conns.lock().expect("peer pool poisoned").get(&addr).cloned();
+        let stream = match cached {
+            Some(s) => s,
+            None => {
+                // Connect without holding the map lock; if another sender
+                // raced us here, the first insert wins and the loser's
+                // socket just drops.
+                let s = TcpStream::connect_timeout(&addr, CONNECT_TIMEOUT)?;
+                s.set_nodelay(true).ok();
+                s.set_write_timeout(Some(WRITE_TIMEOUT)).ok();
+                let fresh = Arc::new(Mutex::new(s));
+                self.conns
+                    .lock()
+                    .expect("peer pool poisoned")
+                    .entry(addr)
+                    .or_insert(fresh)
+                    .clone()
+            }
+        };
+        let res = {
+            let mut s = stream.lock().expect("peer stream poisoned");
+            transport::write_frame(&mut *s, frame)
+        };
+        if res.is_err() {
+            // A timed-out partial write also lands here: the stream's
+            // framing is unrecoverable, so evict and reconnect next send.
+            self.conns.lock().expect("peer pool poisoned").remove(&addr);
+        }
+        res
+    }
+
+    /// Drop every cached connection (shutdown hygiene).
+    pub fn clear(&self) {
+        self.conns.lock().expect("peer pool poisoned").clear();
+    }
+}
+
+/// Observability counters every deploy server keeps, readable through
+/// [`ServerHandle::stats`] — the harness folds them into its report and
+/// the loopback tests assert on them.
+#[derive(Default)]
+pub struct ServerStats {
+    /// Frames that failed `Packet::decode` (garbage ethertype/ToS/...)
+    /// or a protocol step that rejected a decoded packet.
+    pub bad_frames: std::sync::atomic::AtomicU64,
+    /// Well-formed packets this server had no protocol step or route for.
+    pub dropped: std::sync::atomic::AtomicU64,
+    /// Outgoing packets whose destination send failed (peer dead).
+    pub send_failures: std::sync::atomic::AtomicU64,
+}
+
+/// A plain copy of [`ServerStats`] at one instant.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServerStatsSnapshot {
+    pub bad_frames: u64,
+    pub dropped: u64,
+    pub send_failures: u64,
+}
+
+impl ServerStats {
+    pub fn snapshot(&self) -> ServerStatsSnapshot {
+        ServerStatsSnapshot {
+            bad_frames: self.bad_frames.load(Ordering::Relaxed),
+            dropped: self.dropped.load(Ordering::Relaxed),
+            send_failures: self.send_failures.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl ServerStatsSnapshot {
+    /// Fold another server's counters into this aggregate.
+    pub fn absorb(&mut self, other: ServerStatsSnapshot) {
+        self.bad_frames += other.bad_frames;
+        self.dropped += other.dropped;
+        self.send_failures += other.send_failures;
+    }
+}
+
+/// A running server (or listener set): its stop flag, its counters, and
+/// the threads to join. Dropping without [`ServerHandle::shutdown`] leaks
+/// threads, so the harness always shuts down explicitly.
+pub struct ServerHandle {
+    stop: Arc<AtomicBool>,
+    stats: Arc<ServerStats>,
+    threads: Vec<JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn new(
+        stop: Arc<AtomicBool>,
+        stats: Arc<ServerStats>,
+        threads: Vec<JoinHandle<()>>,
+    ) -> ServerHandle {
+        ServerHandle { stop, stats, threads }
+    }
+
+    /// The shared stop flag (a control-plane `Shutdown` sets the same
+    /// flag, so `wait` returns either way).
+    pub fn stop_flag(&self) -> Arc<AtomicBool> {
+        self.stop.clone()
+    }
+
+    /// Current counter values (live; the server keeps counting).
+    pub fn stats(&self) -> ServerStatsSnapshot {
+        self.stats.snapshot()
+    }
+
+    /// Request stop and join every thread.
+    pub fn shutdown(self) -> ServerStatsSnapshot {
+        self.stop.store(true, Ordering::SeqCst);
+        self.wait()
+    }
+
+    /// Join every thread (returns once the server stopped — via
+    /// [`ServerHandle::shutdown`] or a control-plane `Shutdown`).
+    pub fn wait(self) -> ServerStatsSnapshot {
+        for t in self.threads {
+            t.join().ok();
+        }
+        self.stats.snapshot()
+    }
+}
+
+/// Accept loop: polls a nonblocking listener until `stop`, handing each
+/// connection (switched back to blocking with a short read timeout) to a
+/// `handler` thread. Joins its connection threads before returning, so a
+/// server's shutdown is complete when its accept threads are joined.
+pub(crate) fn spawn_accept_loop(
+    name: String,
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    handler: Arc<dyn Fn(TcpStream) + Send + Sync>,
+) -> JoinHandle<()> {
+    std::thread::Builder::new()
+        .name(name.clone())
+        .spawn(move || {
+            if listener.set_nonblocking(true).is_err() {
+                return;
+            }
+            let mut conns: Vec<JoinHandle<()>> = Vec::new();
+            while !stop.load(Ordering::SeqCst) {
+                // Long-lived servers see endless short control
+                // connections; shed finished handles instead of hoarding
+                // them until shutdown.
+                conns.retain(|t| !t.is_finished());
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        stream.set_nonblocking(false).ok();
+                        stream.set_read_timeout(Some(POLL_READ_TIMEOUT)).ok();
+                        stream.set_nodelay(true).ok();
+                        let h = handler.clone();
+                        if let Ok(t) = std::thread::Builder::new()
+                            .name(format!("{name}-conn"))
+                            .spawn(move || h(stream))
+                        {
+                            conns.push(t);
+                        }
+                    }
+                    Err(e) if transport::is_would_block(&e) => {
+                        std::thread::sleep(ACCEPT_POLL);
+                    }
+                    Err(_) => break,
+                }
+            }
+            for t in conns {
+                t.join().ok();
+            }
+        })
+        .expect("spawn accept loop")
+}
+
+/// Per-connection frame loop: deliver each complete frame to `on_frame`
+/// (which may write replies back through the same stream) until EOF,
+/// error, stop, or `on_frame` returns `false`.
+pub(crate) fn serve_frames(
+    stream: TcpStream,
+    stop: &AtomicBool,
+    mut on_frame: impl FnMut(&TcpStream, Vec<u8>) -> bool,
+) {
+    let mut reader = FrameReader::new();
+    let mut src = &stream;
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return;
+        }
+        match reader.poll(&mut src) {
+            Ok(FrameEvent::Frame(frame)) => {
+                if !on_frame(&stream, frame) {
+                    return;
+                }
+            }
+            Ok(FrameEvent::Pending) => continue,
+            Ok(FrameEvent::Eof) | Err(_) => return,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+
+    fn deploy_cfg() -> Config {
+        let mut cfg = Config::default();
+        cfg.cluster.racks = 1;
+        cfg.cluster.nodes_per_rack = 3;
+        cfg.cluster.clients = 3;
+        cfg
+    }
+
+    #[test]
+    fn netmap_ports_are_disjoint_and_resolvable() {
+        let cfg = deploy_cfg();
+        let net = Netmap::from_config(&cfg).unwrap();
+        let mut ports: Vec<u16> = vec![net.switch_data.port(), net.switch_ctrl.port()];
+        ports.extend(net.node_data.iter().map(|a| a.port()));
+        ports.extend(net.node_ctrl.iter().map(|a| a.port()));
+        ports.extend(net.client_data.iter().map(|a| a.port()));
+        let mut dedup = ports.clone();
+        dedup.sort_unstable();
+        dedup.dedup();
+        assert_eq!(dedup.len(), ports.len(), "{ports:?}");
+
+        let topo = Topology::build(&cfg.cluster);
+        assert_eq!(net.endpoint_addr(&topo, topo.node_ip(2)), Some(net.node_data[2]));
+        assert_eq!(net.endpoint_addr(&topo, topo.client_ip(0)), Some(net.client_data[0]));
+        assert_eq!(net.endpoint_addr(&topo, Ip::new(9, 9, 9, 9)), None);
+    }
+
+    #[test]
+    fn deploy_validation_rejects_misfits() {
+        let mut cfg = deploy_cfg();
+        cfg.cluster.racks = 4;
+        cfg.cluster.nodes_per_rack = 4;
+        assert!(validate_deploy(&cfg).is_err(), "multi-rack needs the simulator");
+
+        let mut cfg = deploy_cfg();
+        cfg.coordination = Coordination::ClientDriven;
+        assert!(validate_deploy(&cfg).is_err());
+
+        let mut cfg = deploy_cfg();
+        cfg.deploy.base_port = 80;
+        assert!(validate_deploy(&cfg).is_err());
+
+        let mut cfg = deploy_cfg();
+        cfg.deploy.host = "localhost".into(); // numeric IPs only
+        assert!(Netmap::from_config(&cfg).is_err());
+
+        assert!(validate_deploy(&deploy_cfg()).is_ok());
+    }
+}

@@ -1,0 +1,165 @@
+//! `serve-node`: one storage node as a real process (or harness thread).
+//!
+//! The data port speaks the unchanged packet wire format: every frame is
+//! one `Packet`, and processed (chain-headered) packets run the exact
+//! chain-replication step the simulator's node actor runs
+//! (`cluster::node_actor::chain_step_packet`) — apply locally, then either
+//! forward to the successor IP popped off the chain header or reply to
+//! the client IP at the header's end. The control port serves the
+//! controller: liveness pings, repair data copies (extract/ingest), and
+//! clean shutdown.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::cluster::node_actor::chain_step_packet;
+use crate::config::{Config, Partitioning};
+use crate::net::packet::{Packet, Tos};
+use crate::net::topology::Topology;
+use crate::store::{Engine as StoreEngine, LsmOptions, StorageNode};
+use crate::types::NodeId;
+
+use super::control::{CtrlMsg, CtrlReply};
+use super::transport::write_frame;
+use super::{serve_frames, spawn_accept_loop, Netmap, PeerPool, ServerHandle, ServerStats};
+
+struct NodeShared {
+    node: Mutex<StorageNode>,
+    topo: Topology,
+    net: Netmap,
+    pool: PeerPool,
+    stop: Arc<AtomicBool>,
+    stats: Arc<ServerStats>,
+}
+
+/// The storage engine the simulator's `Cluster::build` would give this
+/// node — same seeds, so both worlds run identical LSM shapes.
+pub fn build_store(cfg: &Config, node_id: NodeId) -> StorageNode {
+    let engine = match cfg.cluster.partitioning {
+        Partitioning::Range => StoreEngine::lsm(LsmOptions {
+            seed: cfg.sim.seed ^ node_id as u64,
+            ..Default::default()
+        }),
+        Partitioning::Hash => StoreEngine::hash(1024),
+    };
+    StorageNode::new(node_id, engine)
+}
+
+/// Spawn the node's data + control accept loops on the given pre-bound
+/// listeners. Returns once the threads are running; the handle's `wait`
+/// blocks until a control-plane `Shutdown` (or `shutdown()` is called).
+pub fn spawn(
+    cfg: &Config,
+    node_id: NodeId,
+    net: Netmap,
+    data_listener: TcpListener,
+    ctrl_listener: TcpListener,
+) -> Result<ServerHandle> {
+    let stop = Arc::new(AtomicBool::new(false));
+    let stats = Arc::new(ServerStats::default());
+    let shared = Arc::new(NodeShared {
+        node: Mutex::new(build_store(cfg, node_id)),
+        topo: Topology::build(&cfg.cluster),
+        net,
+        pool: PeerPool::new(),
+        stop: stop.clone(),
+        stats: stats.clone(),
+    });
+
+    let data = {
+        let shared = shared.clone();
+        let stop = stop.clone();
+        spawn_accept_loop(
+            format!("node{node_id}-data"),
+            data_listener,
+            stop.clone(),
+            Arc::new(move |stream: TcpStream| {
+                let shared = shared.clone();
+                serve_frames(stream, &stop, move |_out, frame| {
+                    handle_data_frame(&shared, &frame);
+                    true
+                });
+            }),
+        )
+    };
+    let ctrl = {
+        let shared = shared.clone();
+        let stop = stop.clone();
+        spawn_accept_loop(
+            format!("node{node_id}-ctrl"),
+            ctrl_listener,
+            stop.clone(),
+            Arc::new(move |stream: TcpStream| {
+                let shared = shared.clone();
+                serve_frames(stream, &stop, move |out, frame| {
+                    handle_ctrl_frame(&shared, out, &frame)
+                });
+            }),
+        )
+    };
+    Ok(ServerHandle::new(stop, stats, vec![data, ctrl]))
+}
+
+fn handle_data_frame(shared: &NodeShared, frame: &[u8]) {
+    let pkt = match Packet::decode(frame) {
+        Ok(pkt) => pkt,
+        Err(_) => {
+            shared.stats.bad_frames.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+    };
+    // Same admission rules as the simulator's in-switch node strategy: a
+    // chain-headered packet runs the protocol step; anything else is a
+    // stray and drops (a baseline-shaped request cannot reach a deployed
+    // node — there is no directory replica here to serve it with).
+    if pkt.ipv4.tos != Tos::Processed || pkt.turbo.is_none() {
+        shared.stats.dropped.fetch_add(1, Ordering::Relaxed);
+        return;
+    }
+    let out = {
+        let mut node = shared.node.lock().expect("node poisoned");
+        let node_ip = shared.topo.node_ip(node.id);
+        match chain_step_packet(&mut node, node_ip, pkt) {
+            Ok(out) => out,
+            Err(_) => {
+                shared.stats.bad_frames.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        }
+    };
+    match shared.net.endpoint_addr(&shared.topo, out.ipv4.dst) {
+        Some(addr) => {
+            if shared.pool.send(addr, &out.encode()).is_err() {
+                shared.stats.send_failures.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        None => {
+            shared.stats.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+fn handle_ctrl_frame(shared: &NodeShared, out: &TcpStream, frame: &[u8]) -> bool {
+    let (reply, keep_going) = match CtrlMsg::decode(frame) {
+        Ok(CtrlMsg::Ping) => (CtrlReply::Ok, true),
+        Ok(CtrlMsg::Shutdown) => {
+            shared.stop.store(true, Ordering::SeqCst);
+            (CtrlReply::Ok, false)
+        }
+        Ok(CtrlMsg::ExtractRange { start, end }) => {
+            let mut node = shared.node.lock().expect("node poisoned");
+            (CtrlReply::Pairs(node.extract_range(start, end)), true)
+        }
+        Ok(CtrlMsg::IngestRange { pairs }) => {
+            shared.node.lock().expect("node poisoned").ingest(pairs);
+            (CtrlReply::Ok, true)
+        }
+        Ok(other) => (CtrlReply::Err(format!("storage nodes do not serve {other:?}")), true),
+        Err(e) => (CtrlReply::Err(format!("undecodable control message: {e:#}")), true),
+    };
+    let sent = write_frame(&mut &*out, &reply.encode()).is_ok();
+    keep_going && sent
+}

@@ -1,0 +1,202 @@
+//! `serve-switch`: the programmable switch as a userspace forwarder.
+//!
+//! Embeds the simulator's `switch::Switch` — the same match-action table,
+//! register arrays, counter state, and `process_batch` pipeline (parser →
+//! batched lookup → chain-header insertion → scan split via
+//! clone+recirculate) — behind a TCP data port. Each arriving frame is one
+//! packet; the pipeline's emits are resolved to real sockets and
+//! forwarded. The control port is the §5 control plane: counter drains,
+//! chain updates, liveness, shutdown.
+//!
+//! The loopback deployment runs a single soft ToR with every node
+//! attached (cluster.racks = 1), so key-routed packets always take the
+//! full coordinator path (chain header inserted). Emits the simulator
+//! would hand to the next switch in a hierarchy (replies toward the
+//! client edge) are resolved to their final endpoint by destination IP —
+//! the one-switch topology collapses the hierarchy.
+
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
+
+use crate::config::Config;
+use crate::net::packet::Packet;
+use crate::net::topology::{Addr, SwitchRole, Topology};
+use crate::partition::Directory;
+use crate::switch::{RustLookup, Switch};
+use crate::util::chain_violation;
+
+use super::control::{CtrlMsg, CtrlReply};
+use super::transport::write_frame;
+use super::{serve_frames, spawn_accept_loop, Netmap, PeerPool, ServerHandle, ServerStats};
+
+struct SwitchShared {
+    /// The switch plus its lookup engine, guarded together: counters and
+    /// table mutate under one lock, exactly like the single-threaded
+    /// pipeline they model.
+    core: Mutex<(Switch, RustLookup)>,
+    topo: Topology,
+    net: Netmap,
+    pool: PeerPool,
+    stop: Arc<AtomicBool>,
+    stats: Arc<ServerStats>,
+}
+
+/// Build the soft ToR exactly as `Cluster::build` provisions switches:
+/// table from the initial directory, counter slots per record, node IP
+/// registers from the topology.
+pub fn build_switch(cfg: &Config, topo: &Topology) -> Switch {
+    let dir = Directory::initial(
+        cfg.cluster.num_ranges,
+        cfg.cluster.nodes(),
+        cfg.cluster.replication,
+    );
+    let mut sw = Switch::new(topo.tor_of_rack(0), SwitchRole::Tor { rack: 0 });
+    sw.table.install_from_directory(&dir);
+    sw.registers.resize_counters(dir.len());
+    for n in 0..cfg.cluster.nodes() {
+        sw.registers.set_node(n as u16, topo.node_ip(n), n as u16);
+    }
+    sw
+}
+
+/// Spawn the switch's data + control accept loops on pre-bound listeners.
+pub fn spawn(
+    cfg: &Config,
+    net: Netmap,
+    data_listener: TcpListener,
+    ctrl_listener: TcpListener,
+) -> Result<ServerHandle> {
+    let topo = Topology::build(&cfg.cluster);
+    let sw = build_switch(cfg, &topo);
+    let stop = Arc::new(AtomicBool::new(false));
+    let stats = Arc::new(ServerStats::default());
+    let shared = Arc::new(SwitchShared {
+        core: Mutex::new((sw, RustLookup)),
+        topo,
+        net,
+        pool: PeerPool::new(),
+        stop: stop.clone(),
+        stats: stats.clone(),
+    });
+
+    let data = {
+        let shared = shared.clone();
+        let stop = stop.clone();
+        spawn_accept_loop(
+            "switch-data".to_string(),
+            data_listener,
+            stop.clone(),
+            Arc::new(move |stream: TcpStream| {
+                let shared = shared.clone();
+                serve_frames(stream, &stop, move |_out, frame| {
+                    handle_data_frame(&shared, &frame);
+                    true
+                });
+            }),
+        )
+    };
+    let ctrl = {
+        let shared = shared.clone();
+        let stop = stop.clone();
+        spawn_accept_loop(
+            "switch-ctrl".to_string(),
+            ctrl_listener,
+            stop.clone(),
+            Arc::new(move |stream: TcpStream| {
+                let shared = shared.clone();
+                serve_frames(stream, &stop, move |out, frame| {
+                    handle_ctrl_frame(&shared, out, &frame)
+                });
+            }),
+        )
+    };
+    Ok(ServerHandle::new(stop, stats, vec![data, ctrl]))
+}
+
+fn handle_data_frame(shared: &SwitchShared, frame: &[u8]) {
+    let pkt = match Packet::decode(frame) {
+        Ok(pkt) => pkt,
+        Err(_) => {
+            shared.stats.bad_frames.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+    };
+    // One pipeline pass per frame; resolve emits under the lock (pure
+    // lookups), send after releasing it so a slow/dead peer never stalls
+    // the pipeline for other connections.
+    let mut sends: Vec<(std::net::SocketAddr, Vec<u8>)> = Vec::new();
+    {
+        let mut core = shared.core.lock().expect("switch poisoned");
+        let (sw, lookup) = &mut *core;
+        let mut batch = vec![pkt];
+        let emits = sw.process_batch(&mut batch, &shared.topo, lookup, 0, 0);
+        for e in emits {
+            match emit_addr(&shared.topo, &shared.net, e.to, &e.pkt) {
+                Some(addr) => sends.push((addr, e.pkt.encode())),
+                None => sw.stats.dropped += 1,
+            }
+        }
+    }
+    for (addr, bytes) in sends {
+        if shared.pool.send(addr, &bytes).is_err() {
+            // A dead endpoint behaves like a dropped packet on a real
+            // switch port; the client's timeout retry covers it and the
+            // controller's repair redirects the route.
+            shared.stats.send_failures.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Resolve a pipeline emit to a real socket. Direct endpoint emits map
+/// straight through the netmap; emits toward another switch of the
+/// simulated hierarchy (which has no process here) resolve to the
+/// packet's final destination IP instead.
+fn emit_addr(
+    topo: &Topology,
+    net: &Netmap,
+    to: Addr,
+    pkt: &Packet,
+) -> Option<std::net::SocketAddr> {
+    match to {
+        Addr::Node(n) => net.node_data.get(n).copied(),
+        Addr::Client(c) => net.client_data.get(c).copied(),
+        Addr::Switch(_) => net.endpoint_addr(topo, pkt.ipv4.dst),
+    }
+}
+
+fn handle_ctrl_frame(shared: &SwitchShared, out: &TcpStream, frame: &[u8]) -> bool {
+    let (reply, keep_going) = match CtrlMsg::decode(frame) {
+        Ok(CtrlMsg::Ping) => (CtrlReply::Ok, true),
+        Ok(CtrlMsg::Shutdown) => {
+            shared.stop.store(true, Ordering::SeqCst);
+            (CtrlReply::Ok, false)
+        }
+        Ok(CtrlMsg::DrainCounters) => {
+            let mut core = shared.core.lock().expect("switch poisoned");
+            let (read, write) = core.0.registers.drain_counters();
+            (CtrlReply::Counters { read, write }, true)
+        }
+        Ok(CtrlMsg::SetChain { idx, chain }) => {
+            let mut core = shared.core.lock().expect("switch poisoned");
+            let sw = &mut core.0;
+            let reply = if idx as usize >= sw.table.len() {
+                CtrlReply::Err(format!("record {idx} out of range ({} records)", sw.table.len()))
+            } else if let Some(violation) = chain_violation(&chain) {
+                CtrlReply::Err(format!("invalid chain {chain:?}: {violation}"))
+            } else if chain.iter().any(|&r| (r as usize) >= sw.registers.num_nodes()) {
+                CtrlReply::Err(format!("chain {chain:?} names an unknown node register"))
+            } else {
+                sw.table.set_chain(idx as usize, chain);
+                CtrlReply::Ok
+            };
+            (reply, true)
+        }
+        Ok(other) => (CtrlReply::Err(format!("switches do not serve {other:?}")), true),
+        Err(e) => (CtrlReply::Err(format!("undecodable control message: {e:#}")), true),
+    };
+    let sent = write_frame(&mut &*out, &reply.encode()).is_ok();
+    keep_going && sent
+}

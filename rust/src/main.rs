@@ -2,11 +2,16 @@
 //!
 //! Subcommands:
 //!   run                 run one workload under the configured coordination
-//!                       mode and print the metrics summary
+//!                       mode and print the metrics summary (simulator)
 //!   exp <name>          regenerate a paper table/figure (fig13a fig13b
 //!                       fig13c fig14 fig15 ablation_* failure); writes the
 //!                       report (and CDF CSVs for fig14/15) under --out
 //!   smoke               verify the PJRT runtime + AOT artifacts
+//!   serve-node          run one storage node over real TCP sockets
+//!   serve-switch        run the soft switch over real TCP sockets
+//!   drive               run the workload driver against a live cluster
+//!   harness             boot switch + nodes + driver + controller
+//!                       (child processes; --threads for in-process)
 //!   help                this text
 //!
 //! Config: defaults reproduce the paper's testbed; override with
@@ -18,6 +23,7 @@ use anyhow::{bail, Context, Result};
 
 use turbokv::cluster::Cluster;
 use turbokv::config::Args;
+use turbokv::deploy::{self, harness, Netmap};
 use turbokv::experiments::{self, Scale};
 
 fn main() -> Result<()> {
@@ -26,6 +32,10 @@ fn main() -> Result<()> {
         Some("run") => cmd_run(&args),
         Some("exp") => cmd_exp(&args),
         Some("smoke") => cmd_smoke(&args),
+        Some("serve-node") => cmd_serve_node(&args),
+        Some("serve-switch") => cmd_serve_switch(&args),
+        Some("drive") => cmd_drive(&args),
+        Some("harness") => cmd_harness(&args),
         Some("help") | None => {
             print!("{}", HELP);
             Ok(())
@@ -36,7 +46,7 @@ fn main() -> Result<()> {
 
 const HELP: &str = "\
 turbokv — in-switch coordination for distributed key-value stores
-usage: turbokv <run|exp|smoke|help> [options]
+usage: turbokv <run|exp|smoke|serve-node|serve-switch|drive|harness|help>
 
   turbokv run [--coordination=in-switch|client-driven|server-driven]
               [--config cfg.toml] [--workload.write_ratio=0.3]
@@ -45,6 +55,14 @@ usage: turbokv <run|exp|smoke|help> [options]
                ablation_chain|ablation_multirack|failure|all>
               [--scale=1.0] [--out=results]
   turbokv smoke [--dataplane.artifacts_dir=artifacts]
+
+Real-socket deployment (one soft switch, --cluster.racks=1):
+  turbokv serve-switch [--deploy.base_port=7600] [--cluster.nodes_per_rack=3]
+  turbokv serve-node --node=0 [--deploy.base_port=7600] ...
+  turbokv drive [--workload.ops_per_client=1700] [--deploy.timeout_ms=1000]
+  turbokv harness [--threads] [--deploy.kill_node=1 --deploy.kill_after_ops=3500]
+All processes must share the same config flags; the chain headers carry the
+topology's simulated IPs, the [deploy] port map carries the bytes.
 ";
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -124,4 +142,102 @@ fn cmd_smoke(args: &Args) -> Result<()> {
         bail!("smoke check failed (see report above)");
     }
     Ok(())
+}
+
+fn cmd_serve_node(args: &Args) -> Result<()> {
+    let cfg = args.to_config()?;
+    let node: usize = args
+        .get("node")
+        .context("serve-node requires --node=<index>")?
+        .parse()
+        .context("--node must be an index")?;
+    if node >= cfg.cluster.nodes() {
+        bail!("--node={node} out of range (cluster has {} nodes)", cfg.cluster.nodes());
+    }
+    let net = Netmap::from_config(&cfg)?;
+    let data = std::net::TcpListener::bind(net.node_data[node])
+        .with_context(|| format!("binding node {node} data port {}", net.node_data[node]))?;
+    let ctrl = std::net::TcpListener::bind(net.node_ctrl[node])
+        .with_context(|| format!("binding node {node} ctrl port {}", net.node_ctrl[node]))?;
+    eprintln!(
+        "serve-node {node}: data={} ctrl={} (shutdown via control port)",
+        net.node_data[node], net.node_ctrl[node]
+    );
+    let stats = deploy::node_server::spawn(&cfg, node, net, data, ctrl)?.wait();
+    eprintln!("serve-node {node} exiting: {stats:?}");
+    Ok(())
+}
+
+fn cmd_serve_switch(args: &Args) -> Result<()> {
+    let cfg = args.to_config()?;
+    let net = Netmap::from_config(&cfg)?;
+    let data = std::net::TcpListener::bind(net.switch_data)
+        .with_context(|| format!("binding switch data port {}", net.switch_data))?;
+    let ctrl = std::net::TcpListener::bind(net.switch_ctrl)
+        .with_context(|| format!("binding switch ctrl port {}", net.switch_ctrl))?;
+    eprintln!(
+        "serve-switch: data={} ctrl={} ({} records, {} nodes)",
+        net.switch_data,
+        net.switch_ctrl,
+        cfg.cluster.num_ranges,
+        cfg.cluster.nodes()
+    );
+    let stats = deploy::switch_server::spawn(&cfg, net, data, ctrl)?.wait();
+    eprintln!("serve-switch exiting: {stats:?}");
+    Ok(())
+}
+
+fn cmd_drive(args: &Args) -> Result<()> {
+    let cfg = args.to_config()?;
+    let net = Netmap::from_config(&cfg)?;
+    let listeners: Vec<std::net::TcpListener> = net
+        .client_data
+        .iter()
+        .map(|&addr| {
+            std::net::TcpListener::bind(addr)
+                .with_context(|| format!("binding client reply port {addr}"))
+        })
+        .collect::<Result<_>>()?;
+    let mut report = deploy::driver::run(&cfg, &net, listeners)?;
+    println!("{}", report.metrics.summary());
+    println!("{}", report.summary_line());
+    let expected = cfg.cluster.clients as u64 * cfg.workload.ops_per_client;
+    if report.ops != expected {
+        bail!("drive completed {}/{expected} measured ops", report.ops);
+    }
+    if !report.clean() {
+        bail!("verification failed: {}", report.summary_line());
+    }
+    Ok(())
+}
+
+fn cmd_harness(args: &Args) -> Result<()> {
+    let cfg = args.to_config()?;
+    let report = if args.has("threads") {
+        harness::run_threads(&cfg)?
+    } else {
+        let net = Netmap::from_config(&cfg)?;
+        harness::ports_free(&net)?;
+        harness::run_processes(&cfg, &config_passthrough(args))?
+    };
+    println!("{}", report.summary());
+    report.gate(&cfg)?;
+    println!("harness: gate passed");
+    Ok(())
+}
+
+/// The config-bearing flags (`--config`, dotted keys, `--coordination`)
+/// every harness child must receive verbatim, so all processes derive the
+/// same topology, netmap, and workload.
+fn config_passthrough(args: &Args) -> Vec<String> {
+    let mut out = Vec::new();
+    if let Some(path) = args.get("config") {
+        out.push(format!("--config={path}"));
+    }
+    for (k, v) in &args.options {
+        if k.contains('.') || k == "coordination" {
+            out.push(format!("--{k}={v}"));
+        }
+    }
+    out
 }

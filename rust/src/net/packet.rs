@@ -11,7 +11,7 @@
 //! switch pipeline's parser stage (switch/pipeline.rs) consumes these
 //! headers exactly as a P4 parser state machine would.
 
-use std::rc::Rc;
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -122,9 +122,12 @@ pub const TURBO_LEN: usize = 1 + 16 + 16;
 /// recirculation / scan-split points that clone whole packets never copy
 /// values. The buffer is immutable for its whole life: every "mutation"
 /// site constructs a fresh `Payload` (copy-on-write), so a clone can never
-/// observe a buffer that later changes.
+/// observe a buffer that later changes. The count is atomic (`Arc`, not
+/// `Rc`) so packets are `Send` — the deployment runtime moves them
+/// between connection threads; the uncontended atomic bump is noise next
+/// to the byte copy it replaces.
 #[derive(Clone, Default)]
-pub struct Payload(Option<Rc<[u8]>>);
+pub struct Payload(Option<Arc<[u8]>>);
 
 impl Payload {
     /// The empty payload (no backing allocation at all).
@@ -154,7 +157,7 @@ impl Payload {
     /// the sharing-semantics tests; empty payloads trivially share.)
     pub fn shares_buffer(&self, other: &Payload) -> bool {
         match (&self.0, &other.0) {
-            (Some(a), Some(b)) => Rc::ptr_eq(a, b),
+            (Some(a), Some(b)) => Arc::ptr_eq(a, b),
             (None, None) => true,
             _ => false,
         }

@@ -56,6 +56,24 @@ impl Generator {
         Key(step * i as u128 + step / 2)
     }
 
+    /// Inverse of [`Generator::key_of`]: the loaded index whose key is
+    /// exactly `key`, or `None` for keys the load phase never produced.
+    /// O(1) — keys sit at the centers of equal `u128::MAX / num_keys`
+    /// strides, so the index is the stride number.
+    pub fn index_of(&self, key: Key) -> Option<u64> {
+        let step = u128::MAX / self.num_keys as u128;
+        let i = (key.0 / step) as u64;
+        (i < self.num_keys && self.key_of(i) == key).then_some(i)
+    }
+
+    /// Expected stored value for `key` — the end-to-end verification
+    /// oracle. Valid whenever every write is a workload `Put` (those
+    /// rewrite exactly [`Generator::value_of`] content), which holds for
+    /// the simulator's verified runs and the deployment driver.
+    pub fn expected_value(&self, key: Key) -> Option<Vec<u8>> {
+        self.index_of(key).map(|i| self.value_of(i))
+    }
+
     /// Deterministic expected value content for key `i` (verification).
     pub fn value_of(&self, i: u64) -> Vec<u8> {
         let mut v = vec![0u8; self.value_size];
@@ -173,6 +191,19 @@ mod tests {
             let spans = (req.end_key.0 - req.key.0) / g.range_width;
             assert!((1..=4).contains(&spans), "spans={spans}");
         }
+    }
+
+    #[test]
+    fn index_of_inverts_key_of_and_rejects_strangers() {
+        let g = gen(0.0, 0.0, None);
+        for i in [0u64, 1, 7, 499, 999] {
+            assert_eq!(g.index_of(g.key_of(i)), Some(i));
+            assert_eq!(g.expected_value(g.key_of(i)), Some(g.value_of(i)));
+        }
+        // Off-center keys were never loaded.
+        assert_eq!(g.index_of(Key(g.key_of(3).0 + 1)), None);
+        assert_eq!(g.index_of(Key::MIN), None);
+        assert_eq!(g.expected_value(Key::MAX), None);
     }
 
     #[test]

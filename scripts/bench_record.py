@@ -1,0 +1,111 @@
+#!/usr/bin/env python3
+"""Convert `cargo bench` report output into the BENCH_*.json schema.
+
+The bench targets are plain reports (criterion is unavailable offline —
+DESIGN.md §3); each line looks like
+
+    switch/pipeline/batch64     time: [1.1ms 1.2ms 1.4ms]  ±0.1ms  thrpt: 52000 elem/s
+
+This script parses those lines into the schema `scripts/bench_diff.py`
+consumes, so CI can record a candidate file (uploaded as a workflow
+artifact) and diff it against the committed baseline on every run.
+
+Usage:
+    scripts/bench_record.py --out BENCH_pr4.json \
+        --target micro_switch=/tmp/bench_micro_switch.txt \
+        --target micro_store=/tmp/bench_micro_store.txt \
+        [--note "CI smoke at 5% scale"]
+
+Exit status: 0 on success, 2 on usage/parse errors (a target file that
+yields zero bench lines is an error — silence must not masquerade as a
+recording).
+"""
+
+import argparse
+import json
+import re
+import sys
+
+LINE = re.compile(
+    r"^\s*(?P<name>\S+)\s+time:\s*\[(?P<min>\S+)\s+(?P<mean>\S+)\s+(?P<max>\S+)\]"
+    r"\s*±(?P<std>\S+)(?:\s+thrpt:\s*(?P<thrpt>[\d.]+)\s*elem/s)?\s*$"
+)
+
+UNITS = {"ns": 1.0, "us": 1e3, "ms": 1e6, "s": 1e9}
+
+
+def parse_duration_ns(text):
+    m = re.fullmatch(r"([\d.]+)(ns|us|ms|s)", text)
+    if not m:
+        raise ValueError(f"unparsable duration {text!r}")
+    return float(m.group(1)) * UNITS[m.group(2)]
+
+
+def parse_report(path):
+    benches = {}
+    try:
+        with open(path) as f:
+            lines = f.readlines()
+    except OSError as e:
+        print(f"bench_record: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+    for line in lines:
+        m = LINE.match(line)
+        if not m:
+            continue
+        try:
+            mean_ns = parse_duration_ns(m.group("mean"))
+        except ValueError as e:
+            print(f"bench_record: {path}: {e}", file=sys.stderr)
+            sys.exit(2)
+        thrpt = m.group("thrpt")
+        benches[m.group("name")] = {
+            "mean_ns": mean_ns,
+            "elems_per_s": float(thrpt) if thrpt else None,
+        }
+    if not benches:
+        print(f"bench_record: no bench lines found in {path}", file=sys.stderr)
+        sys.exit(2)
+    return benches
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", required=True, help="output BENCH_*.json path")
+    ap.add_argument(
+        "--target",
+        action="append",
+        required=True,
+        metavar="NAME=REPORT",
+        help="bench target name and its captured stdout (repeatable)",
+    )
+    ap.add_argument("--note", default="", help="free-form provenance note")
+    args = ap.parse_args()
+
+    benches = {}
+    for spec in args.target:
+        if "=" not in spec:
+            print(f"bench_record: --target wants NAME=REPORT, got {spec!r}", file=sys.stderr)
+            sys.exit(2)
+        name, path = spec.split("=", 1)
+        benches[name] = parse_report(path)
+
+    doc = {
+        "description": "Recorded by scripts/bench_record.py from cargo bench output.",
+        "regenerate": "cd rust && cargo bench --bench "
+        + " --bench ".join(sorted(benches)),
+        "compare": "python3 scripts/bench_diff.py <BASE>.json <THIS>.json",
+        "status": "recorded",
+        "status_note": args.note,
+        "benches": benches,
+    }
+    with open(args.out, "w") as f:
+        json.dump(doc, f, indent=2)
+        f.write("\n")
+    total = sum(len(b) for b in benches.values())
+    print(f"bench_record: wrote {total} bench entries to {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
