@@ -1,138 +1,28 @@
-//! The TurboKV controller (paper §5): periodic query-statistics collection
-//! from the switches' register arrays, load estimation, greedy hot-range
-//! migration, and failure handling with chain repair.
+//! The simulator-side controller executor (paper §5): periodic
+//! query-statistics collection from the switches' register arrays, then
+//! one pure [`crate::control::plan_epoch`] call, then direct application
+//! of the planned [`ControlOp`]s against the simulated world.
 //!
 //! The controller is an *application* controller, separate from the SDN
-//! controller (§3); here it is a set of epoch-driven routines over the
-//! cluster state, mutating the authoritative directory and pushing table
-//! updates to every switch through the "control plane" (direct calls).
+//! controller (§3). All §5 decision logic — failure repair, load
+//! estimation, the >4-sigma noise guard, greedy hot-range migration,
+//! prefix-aligned hot splits — lives in `crate::control`; this module
+//! only builds the [`ClusterView`] from the simulated world and applies
+//! the resulting ops (extract/ingest on nodes, table/register mutation on
+//! switches, directory updates). The deployment runtime
+//! (`deploy::harness`) applies the *same* plans over control sockets.
 
-use crate::chain::repair_chain;
+use crate::control::{plan_epoch, ClusterView, ControlOp, Intent};
 use crate::net::topology::SwitchRole;
 use crate::types::NodeId;
 
 use super::Cluster;
 
-/// Node-load estimation engine. The rust fallback mirrors the XLA
-/// `loadbalance.hlo.txt` artifact; `runtime::xla_lookup::XlaEstimator` runs
-/// the artifact itself.
-pub trait LoadEstimator {
-    fn name(&self) -> &'static str;
-
-    /// `read`/`write`: per-range counters; `tail`/`member`: one-hot
-    /// `[ranges x nodes]` row-major chain incidence. Returns per-node load.
-    fn estimate(
-        &mut self,
-        read: &[f32],
-        write: &[f32],
-        tail: &[f32],
-        member: &[f32],
-        num_nodes: usize,
-        write_cost: f32,
-    ) -> Vec<f32>;
-}
-
-/// Reference estimator: the same math as kernels/load_matmul.py.
-#[derive(Debug, Default)]
-pub struct RustEstimator;
-
-impl LoadEstimator for RustEstimator {
-    fn name(&self) -> &'static str {
-        "rust"
-    }
-
-    fn estimate(
-        &mut self,
-        read: &[f32],
-        write: &[f32],
-        tail: &[f32],
-        member: &[f32],
-        num_nodes: usize,
-        write_cost: f32,
-    ) -> Vec<f32> {
-        let n = read.len();
-        let mut load = vec![0.0f32; num_nodes];
-        for i in 0..n {
-            for s in 0..num_nodes {
-                load[s] += read[i] * tail[i * num_nodes + s]
-                    + write_cost * write[i] * member[i * num_nodes + s];
-            }
-        }
-        load
-    }
-}
-
-/// One data copy required by a chain repair: the new tail `dst` must
-/// receive the sub-range's pairs from the surviving replica `src`.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct CopyPlan {
-    pub src: NodeId,
-    pub dst: NodeId,
-}
-
-/// The repair decision for one affected sub-range — pure planning, shared
-/// by the simulator's epoch handler and the deployment runtime's real
-/// controller loop (deploy::harness). The caller applies it: perform the
-/// data copy, install `new_chain` in the directory, push it to the
-/// switches.
-#[derive(Clone, Debug, PartialEq, Eq)]
-pub struct RangeRepairPlan {
-    pub new_chain: Vec<NodeId>,
-    pub copy: Option<CopyPlan>,
-}
-
-/// Plan the §5.2 repair of sub-range `idx` after `failed` died: drop the
-/// failed node from the chain, append the least-loaded live replacement
-/// (if any node outside the chain survives), and name the surviving
-/// replica the replacement must copy from. `alive[n]` is the controller's
-/// current liveness view.
-pub fn plan_range_repair(
-    dir: &crate::partition::Directory,
-    alive: &[bool],
-    idx: usize,
-    failed: NodeId,
-) -> RangeRepairPlan {
-    let chain = dir.chain(idx).to_vec();
-    let replacement = least_loaded_replacement(dir, alive, &chain, failed);
-    let repair = repair_chain(&chain, failed, replacement);
-    let copy = repair.needs_copy.and_then(|dst| {
-        repair
-            .new_chain
-            .iter()
-            .copied()
-            .find(|&n| n != dst && alive[n])
-            .map(|src| CopyPlan { src, dst })
-    });
-    RangeRepairPlan { new_chain: repair.new_chain, copy }
-}
-
-fn least_loaded_replacement(
-    dir: &crate::partition::Directory,
-    alive: &[bool],
-    chain: &[NodeId],
-    failed: NodeId,
-) -> Option<NodeId> {
-    (0..alive.len())
-        .filter(|&n| alive[n] && n != failed && !chain.contains(&n))
-        .min_by_key(|&n| dir.ranges_of_node(n).len())
-}
-
-/// Run the load estimate over per-range counters for the current chain
-/// layout (§5.1) — the one place the estimator's input tensors are built,
-/// shared by the simulator epoch and the deployment controller.
-pub fn estimate_loads(
-    est: &mut dyn LoadEstimator,
-    dir: &crate::partition::Directory,
-    read: &[u64],
-    write: &[u64],
-    num_nodes: usize,
-    write_cost: f32,
-) -> Vec<f32> {
-    let (tail, member) = dir.onehot(num_nodes);
-    let read_f: Vec<f32> = read.iter().map(|&v| v as f32).collect();
-    let write_f: Vec<f32> = write.iter().map(|&v| v as f32).collect();
-    est.estimate(&read_f, &write_f, &tail, &member, num_nodes, write_cost)
-}
+// Re-exported so existing callers (and the XLA estimator) keep one stable
+// path to the decision core.
+pub use crate::control::{
+    estimate_loads, plan_range_repair, CopyPlan, LoadEstimator, RangeRepairPlan, RustEstimator,
+};
 
 /// Controller bookkeeping.
 #[derive(Debug, Default)]
@@ -151,16 +41,14 @@ pub struct ControllerState {
     pub last_load: Vec<f32>,
 }
 
-/// One controller epoch: collect + reset switch counters, repair failures,
-/// then (if enabled) migrate hot sub-ranges off over-utilized nodes.
+/// One controller epoch: collect + reset switch counters, build the
+/// planner's view, then apply the plan against the simulated world.
 pub fn run_epoch(cl: &mut Cluster) {
     cl.controller.epochs += 1;
 
     // --- §5.1: collect per-range statistics from the ToR switches.
     let records = cl.dir.len();
-    #[allow(unused_mut)]
     let mut read = vec![0u64; records];
-    #[allow(unused_mut)]
     let mut write = vec![0u64; records];
     for sw in &mut cl.switches {
         if !matches!(sw.role, SwitchRole::Tor { .. }) {
@@ -181,11 +69,12 @@ pub fn run_epoch(cl: &mut Cluster) {
     cl.controller.last_read = read.clone();
     cl.controller.last_write = write.clone();
 
-    // --- §5.2: failure handling first (repairs trump balancing).
-    let failures = std::mem::take(&mut cl.controller.pending_failures);
-    for node in failures {
-        repair_node_failure(cl, node);
-    }
+    // --- The controller's liveness view, *before* this epoch's
+    // switch-failure fallout is marked: the planner marks each failure
+    // dead at its own turn, so a node whose rack switch died later in the
+    // list can still replace one that failed earlier (§5.2 interleaving).
+    let alive: Vec<bool> = cl.nodes.iter().map(|n| n.alive).collect();
+    let mut failures = std::mem::take(&mut cl.controller.pending_failures);
     // Dead switches: their rack's nodes are unreachable (§5.2).
     let dead_switch_nodes: Vec<NodeId> = cl
         .switches
@@ -194,245 +83,63 @@ pub fn run_epoch(cl: &mut Cluster) {
         .flat_map(|s| cl.topo.nodes_of_tor(s.id))
         .filter(|&n| cl.nodes[n].alive)
         .collect();
-    for node in dead_switch_nodes {
-        cl.nodes[node].alive = false;
-        repair_node_failure(cl, node);
+    for &n in &dead_switch_nodes {
+        cl.nodes[n].alive = false;
     }
+    failures.extend(dead_switch_nodes);
 
-    // --- §5.1: load balancing by data migration.
-    if !cl.cfg.controller.migration {
-        return;
-    }
-    // Optional §4.1.1/§5.1 sub-range division: very hot records are split
-    // at a prefix-aligned midpoint first, so migration can move "a subset
-    // of the hot data in a sub-range" instead of the whole record.
-    if cl.cfg.controller.split_hot {
-        split_hot_ranges(cl, &mut read, &mut write);
-    }
-    let num_nodes = cl.nodes.len();
-    let load = estimate_loads(
-        cl.estimator.as_mut(),
-        &cl.dir,
-        &read,
-        &write,
-        num_nodes,
-        cl.cfg.controller.write_cost as f32,
-    );
-    cl.controller.last_load = load.clone();
-    let total: f32 = load.iter().sum();
-    if total <= 0.0 {
-        return;
-    }
-    // A node is over-utilized when its load share exceeds both the
-    // configured factor AND the uniform share by >4 sigma of the epoch's
-    // multinomial sampling noise — small epochs must not migrate on noise.
-    let samples: u64 = read.iter().sum::<u64>() + write.iter().sum::<u64>();
-    let uniform_share = 1.0f32 / num_nodes as f32;
-    let sigma = (uniform_share * (1.0 - uniform_share) / (samples.max(1) as f32)).sqrt();
-    let threshold =
-        (cl.cfg.controller.overload_factor as f32 * uniform_share).max(uniform_share + 4.0 * sigma);
-
-    for _ in 0..cl.cfg.controller.max_migrations_per_epoch {
-        // Greedy: most-loaded live node above threshold.
-        let Some((hot_node, _)) = load_ranked(cl, &read, &write)
-            .into_iter()
-            .find(|&(n, share)| cl.nodes[n].alive && share > threshold)
-        else {
-            break;
-        };
-        if !migrate_one(cl, hot_node, &read, &write) {
-            break;
-        }
-    }
-}
-
-/// §4.1.1/§5.1 sub-range division: split any record whose hit count is
-/// > 8x the per-record mean at a prefix-aligned midpoint. Both halves keep
-/// the original chain (no data moves — migration may then move one half);
-/// counters are halved across the split; every switch's table and counter
-/// registers are updated through the control plane.
-fn split_hot_ranges(cl: &mut Cluster, read: &mut Vec<u64>, write: &mut Vec<u64>) {
-    let total: u64 = read.iter().sum::<u64>() + write.iter().sum::<u64>();
-    if total == 0 {
-        return;
-    }
-    let mut i = 0;
-    while i < cl.dir.len() {
-        let mean = (total / cl.dir.len() as u64).max(1);
-        let weight = read[i] + write[i];
-        let (start, end) = cl.dir.bounds(i);
-        // Midpoint in 32-bit-prefix space, kept 2^96-aligned so the XLA
-        // dataplane's prefix matching stays exact.
-        let lo = start.prefix32();
-        let hi = end.prefix32();
-        let splittable = start.is_prefix_aligned() && hi > lo + 1;
-        if weight > 8 * mean && splittable {
-            let mid = crate::types::Key::from_prefix32(lo + (hi - lo) / 2 + 1);
-            debug_assert!(mid > start && mid <= end);
-            let chain = cl.dir.chain(i).to_vec();
-            cl.dir.split(i, mid, chain.clone());
-            for sw in &mut cl.switches {
-                sw.table.split(i, mid, chain.iter().map(|&n| n as u16).collect());
-                sw.registers.insert_counter_slot(i + 1);
-            }
-            // Halve the observed counters across the two halves.
-            read.insert(i + 1, read[i] / 2);
-            read[i] -= read[i + 1];
-            write.insert(i + 1, write[i] / 2);
-            write[i] -= write[i + 1];
-            cl.controller.splits += 1;
-            // The still-hot halves get re-examined next epoch with fresh
-            // counters.
-        }
-        i += 1;
-    }
-}
-
-/// Per-node load shares, hottest first, recomputed from current chains.
-fn load_ranked(cl: &mut Cluster, read: &[u64], write: &[u64]) -> Vec<(NodeId, f32)> {
-    let num_nodes = cl.nodes.len();
-    let load = estimate_loads(
-        cl.estimator.as_mut(),
-        &cl.dir,
+    let view = ClusterView {
+        dir: cl.dir.clone(),
         read,
         write,
-        num_nodes,
-        cl.cfg.controller.write_cost as f32,
-    );
-    let total: f32 = load.iter().sum::<f32>().max(1e-9);
-    let mut ranked: Vec<(NodeId, f32)> = load
-        .iter()
-        .enumerate()
-        .map(|(n, &l)| (n, l / total))
-        .collect();
-    ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
-    ranked
-}
-
-/// Migrate the hottest sub-range served by `hot_node` to the least-utilized
-/// node (greedy selection, §5.1). Returns false if no migration applies.
-fn migrate_one(cl: &mut Cluster, hot_node: NodeId, read: &[u64], write: &[u64]) -> bool {
-    // Hottest range where hot_node is the tail (reads) or any member.
-    let mut candidate: Option<(usize, u64)> = None;
-    for idx in cl.dir.ranges_of_node(hot_node) {
-        let weight = if cl.dir.tail(idx) == hot_node {
-            read[idx] + write[idx]
-        } else {
-            write[idx]
-        };
-        if weight > candidate.map(|(_, w)| w).unwrap_or(0) {
-            candidate = Some((idx, weight));
-        }
-    }
-    let Some((idx, weight)) = candidate else { return false };
-    if weight == 0 {
-        return false;
-    }
-    // Least-utilized live node not already in the chain.
-    let ranked = load_ranked(cl, read, write);
-    let chain = cl.dir.chain(idx).to_vec();
-    let Some(&(target, _)) = ranked
-        .iter()
-        .rev()
-        .find(|&&(n, _)| cl.nodes[n].alive && !chain.contains(&n))
-    else {
-        return false;
+        alive,
+        failures,
+        knobs: cl.cfg.controller.clone(),
     };
-
-    // Physically move the sub-range's data (extract → ingest → delete old
-    // copy, §5.1).
-    let (start, end) = cl.dir.bounds(idx);
-    let pairs = cl.nodes[hot_node].extract_range(start, end);
-    cl.nodes[target].ingest(pairs);
-    cl.nodes[hot_node].delete_range(start, end);
-
-    // Reconfigure the chain: target takes hot_node's position.
-    let new_chain: Vec<NodeId> = chain
-        .iter()
-        .map(|&n| if n == hot_node { target } else { n })
-        .collect();
-    cl.dir.set_chain(idx, new_chain.clone());
-    push_chain_update(cl, idx, &new_chain);
-    cl.controller.migrations += 1;
-    true
-}
-
-/// §5.2 storage-node failure: remove the node from every chain, then
-/// restore the replication factor by appending replacements at chain tails
-/// and copying the sub-range data from a surviving replica. The per-range
-/// decision is the shared [`plan_range_repair`]; this applies each plan
-/// against the simulated world (direct extract/ingest calls), while the
-/// deployment controller applies the same plans over control sockets.
-fn repair_node_failure(cl: &mut Cluster, failed: NodeId) {
-    let alive: Vec<bool> = cl.nodes.iter().map(|n| n.alive).collect();
-    for idx in cl.dir.ranges_of_node(failed) {
-        let plan = plan_range_repair(&cl.dir, &alive, idx, failed);
-        if let Some(copy) = plan.copy {
-            let (start, end) = cl.dir.bounds(idx);
-            let pairs = cl.nodes[copy.src].extract_range(start, end);
-            cl.nodes[copy.dst].ingest(pairs);
+    let plan = plan_epoch(view, cl.estimator.as_mut());
+    if let Some(load) = &plan.load {
+        cl.controller.last_load = load.clone();
+    }
+    for action in &plan.actions {
+        for op in &action.ops {
+            apply_op(cl, op);
         }
-        cl.dir.set_chain(idx, plan.new_chain.clone());
-        push_chain_update(cl, idx, &plan.new_chain);
-        cl.controller.repairs += 1;
-    }
-}
-
-/// Control plane push: update record `idx`'s chain in every switch table.
-fn push_chain_update(cl: &mut Cluster, idx: usize, chain: &[NodeId]) {
-    let regs: Vec<u16> = chain.iter().map(|&n| n as u16).collect();
-    for sw in &mut cl.switches {
-        sw.table.set_chain(idx, regs.clone());
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::partition::Directory;
-
-    #[test]
-    fn repair_plan_appends_replacement_and_names_copy_source() {
-        // 4 nodes, r=3: killing a chain member leaves exactly one node
-        // outside the chain as the replacement, which must receive a copy
-        // from a surviving member.
-        let dir = Directory::initial(8, 4, 3);
-        let alive = vec![true, false, true, true];
-        let idx = dir.ranges_of_node(1)[0];
-        let chain = dir.chain(idx).to_vec();
-        let plan = plan_range_repair(&dir, &alive, idx, 1);
-        assert_eq!(plan.new_chain.len(), 3, "replication factor restored");
-        assert!(!plan.new_chain.contains(&1), "failed node dropped");
-        let copy = plan.copy.expect("new tail needs the sub-range's data");
-        assert_eq!(Some(&copy.dst), plan.new_chain.last(), "copy lands on the new tail");
-        assert!(chain.contains(&copy.src) && copy.src != 1, "copy from a surviving replica");
-    }
-
-    #[test]
-    fn repair_plan_shortens_chain_when_no_spare_node_exists() {
-        // 3 nodes, r=3: every live node is already in every chain, so the
-        // repair can only shorten — no replacement, no copy.
-        let dir = Directory::initial(6, 3, 3);
-        let alive = vec![true, false, true];
-        let plan = plan_range_repair(&dir, &alive, 0, 1);
-        assert_eq!(plan.new_chain.len(), 2);
-        assert!(!plan.new_chain.contains(&1));
-        assert_eq!(plan.copy, None);
-    }
-
-    #[test]
-    fn estimate_loads_matches_reference_math() {
-        // Uniform counters over Directory::initial(4, 4, 2): every node
-        // tails one range and belongs to two, so read load is uniform and
-        // write load is uniform — total = reads + write_cost * 2 * writes.
-        let dir = Directory::initial(4, 4, 2);
-        let read = vec![10u64; 4];
-        let write = vec![2u64; 4];
-        let mut est = RustEstimator;
-        let load = estimate_loads(&mut est, &dir, &read, &write, 4, 3.0);
-        assert_eq!(load.len(), 4);
-        for &l in &load {
-            assert!((l - (10.0 + 3.0 * 2.0 * 2.0)).abs() < 1e-6, "load={l}");
+        match action.intent {
+            Intent::Repair { .. } => cl.controller.repairs += 1,
+            Intent::Migrate { .. } => cl.controller.migrations += 1,
+            Intent::Split { .. } => cl.controller.splits += 1,
+            Intent::Observe => {}
         }
+    }
+}
+
+/// Apply one planned op to the simulated world: data moves are direct
+/// extract/ingest/delete calls on the storage nodes, routing updates hit
+/// the authoritative directory and every switch's match-action table
+/// through the "control plane" (direct calls).
+fn apply_op(cl: &mut Cluster, op: &ControlOp) {
+    match op {
+        ControlOp::CopyRange { from, to, span: (start, end) } => {
+            let pairs = cl.nodes[*from].extract_range(*start, *end);
+            cl.nodes[*to].ingest(pairs);
+        }
+        ControlOp::DeleteRange { node, span: (start, end) } => {
+            cl.nodes[*node].delete_range(*start, *end);
+        }
+        ControlOp::SetChain { idx, chain } => {
+            cl.dir.set_chain(*idx, chain.clone());
+            let regs: Vec<u16> = chain.iter().map(|&n| n as u16).collect();
+            for sw in &mut cl.switches {
+                sw.table.set_chain(*idx, regs.clone());
+            }
+        }
+        ControlOp::SplitRecord { idx, at, chain } => {
+            cl.dir.split(*idx, *at, chain.clone());
+            for sw in &mut cl.switches {
+                sw.table.split(*idx, *at, chain.iter().map(|&n| n as u16).collect());
+                sw.registers.insert_counter_slot(*idx + 1);
+            }
+        }
+        ControlOp::Nothing { .. } => {}
     }
 }

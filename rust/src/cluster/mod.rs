@@ -185,10 +185,9 @@ impl Cluster {
         lookup: Box<dyn DataplaneLookup>,
         estimator: Box<dyn LoadEstimator>,
     ) -> Cluster {
+        // Knob validation (including hash-partitioning/scan compatibility
+        // and the controller's planner knobs) is centralized there.
         cfg.validate().expect("invalid config");
-        if cfg.cluster.partitioning == Partitioning::Hash {
-            assert_eq!(cfg.workload.scan_ratio, 0.0, "hash partitioning cannot serve scans");
-        }
         let topo = Topology::build(&cfg.cluster);
         let dir =
             Directory::initial(cfg.cluster.num_ranges, cfg.cluster.nodes(), cfg.cluster.replication);

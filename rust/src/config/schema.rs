@@ -249,6 +249,9 @@ pub struct DeployConfig {
     pub kill_node: i64,
     /// Switch-observed operations before the kill fires.
     pub kill_after_ops: u64,
+    /// Harness gate: fail the run unless the controller applied at least
+    /// this many live migrations (the CI skewed-workload variant sets 1).
+    pub expect_migrations: u64,
 }
 
 impl Default for DeployConfig {
@@ -261,6 +264,7 @@ impl Default for DeployConfig {
             max_retries: 80,
             kill_node: -1,
             kill_after_ops: 0,
+            expect_migrations: 0,
         }
     }
 }
@@ -380,6 +384,7 @@ impl Config {
         ovr!(doc, "deploy.max_retries", self.deploy.max_retries, int);
         ovr!(doc, "deploy.kill_node", self.deploy.kill_node, int);
         ovr!(doc, "deploy.kill_after_ops", self.deploy.kill_after_ops, int);
+        ovr!(doc, "deploy.expect_migrations", self.deploy.expect_migrations, int);
 
         if let Some(v) = doc.get("dataplane.mode") {
             self.dataplane.mode = match v.as_str().context("dataplane.mode must be a string")? {
@@ -430,6 +435,41 @@ impl Config {
         }
         if self.workload.concurrency == 0 {
             bail!("concurrency must be positive");
+        }
+        if self.cluster.partitioning == Partitioning::Hash && self.workload.scan_ratio > 0.0 {
+            bail!("hash partitioning cannot serve scans; set workload.scan_ratio = 0");
+        }
+        // The planner's `[controller]` knobs — validated once here for
+        // every executor (simulator and deployment read the same struct).
+        let c = &self.controller;
+        if c.epoch_ns == 0 {
+            bail!("controller.epoch_ns must be positive");
+        }
+        if !c.overload_factor.is_finite() || c.overload_factor < 1.0 {
+            bail!(
+                "controller.overload_factor {} must be a finite number ≥ 1 \
+                 (it multiplies the uniform load share 1/num_nodes)",
+                c.overload_factor
+            );
+        }
+        if !c.write_cost.is_finite() || c.write_cost < 0.0 {
+            bail!("controller.write_cost {} must be a finite number ≥ 0", c.write_cost);
+        }
+        if c.max_migrations_per_epoch == 0 {
+            bail!("controller.max_migrations_per_epoch must be ≥ 1");
+        }
+        // These floors replace the old silent `.max()` clamps in the
+        // harness: a sub-50ms epoch spins the control plane, and a
+        // sub-200ms control timeout makes the ping failure detector
+        // declare healthy-but-busy nodes dead.
+        if self.deploy.epoch_ms < 50 {
+            bail!("deploy.epoch_ms {} must be ≥ 50 (ms)", self.deploy.epoch_ms);
+        }
+        if self.deploy.timeout_ms < 200 {
+            bail!("deploy.timeout_ms {} must be ≥ 200 (ms)", self.deploy.timeout_ms);
+        }
+        if self.deploy.max_retries == 0 {
+            bail!("deploy.max_retries must be ≥ 1");
         }
         Ok(())
     }
@@ -485,6 +525,35 @@ mod tests {
     }
 
     #[test]
+    fn controller_and_deploy_knobs_validated_centrally() {
+        // The planner knobs are validated once, in Config::validate, for
+        // both executors — with actionable messages.
+        let err = Config::from_str("[controller]\noverload_factor = 0.5").unwrap_err();
+        assert!(format!("{err:#}").contains("overload_factor"), "{err:#}");
+        let err = Config::from_str("[controller]\nwrite_cost = -1.0").unwrap_err();
+        assert!(format!("{err:#}").contains("write_cost"), "{err:#}");
+        assert!(Config::from_str("[controller]\nepoch_ns = 0").is_err());
+        assert!(Config::from_str("[controller]\nmax_migrations_per_epoch = 0").is_err());
+        // The floors that replaced the harness's silent `.max()` clamps:
+        // sub-threshold values are now loud errors.
+        assert!(Config::from_str("[deploy]\nepoch_ms = 0").is_err());
+        assert!(Config::from_str("[deploy]\nepoch_ms = 10").is_err());
+        assert!(Config::from_str("[deploy]\ntimeout_ms = 0").is_err());
+        assert!(Config::from_str("[deploy]\ntimeout_ms = 100").is_err());
+        assert!(Config::from_str("[deploy]\nepoch_ms = 50\ntimeout_ms = 200").is_ok());
+        assert!(Config::from_str("[deploy]\nmax_retries = 0").is_err());
+        // Hash partitioning + scans is rejected here, not ad hoc in the
+        // cluster builder and the deployment validator.
+        let err = Config::from_str(
+            "[cluster]\npartitioning = \"hash\"\n[workload]\nscan_ratio = 0.1",
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("scan"), "{err:#}");
+        // Boundary values stay legal.
+        assert!(Config::from_str("[controller]\noverload_factor = 1.0\nwrite_cost = 0.0").is_ok());
+    }
+
+    #[test]
     fn deploy_section_overrides_apply() {
         let cfg = Config::from_str(
             r#"
@@ -496,6 +565,7 @@ mod tests {
             max_retries = 12
             kill_node = 1
             kill_after_ops = 4000
+            expect_migrations = 2
         "#,
         )
         .unwrap();
@@ -506,10 +576,12 @@ mod tests {
         assert_eq!(cfg.deploy.max_retries, 12);
         assert_eq!(cfg.deploy.kill_node, 1);
         assert_eq!(cfg.deploy.kill_after_ops, 4000);
+        assert_eq!(cfg.deploy.expect_migrations, 2);
         // Defaults hold when the section is absent.
         let cfg = Config::default();
         assert_eq!(cfg.deploy.base_port, 7600);
         assert_eq!(cfg.deploy.kill_node, -1);
+        assert_eq!(cfg.deploy.expect_migrations, 0);
     }
 
     #[test]

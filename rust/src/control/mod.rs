@@ -1,0 +1,42 @@
+//! The control-plane decision core (paper §5): one pure, deterministic
+//! planner shared by every executor.
+//!
+//! TurboKV's controller makes three kinds of decisions — failure repair
+//! (§5.2), statistics-driven hot-range migration (§5.1), and hot-range
+//! division (§4.1.1/§5.1). Before this module existed those decisions were
+//! interleaved with their *application* inside the simulator's epoch
+//! handler, and the real-socket deployment carried a parallel, repair-only
+//! reimplementation that could never migrate. Now the split is explicit:
+//!
+//! * [`view::ClusterView`] — everything the controller is allowed to see:
+//!   a directory snapshot, the per-range read/write counters drained from
+//!   the switch registers this epoch, its liveness view, and the
+//!   `[controller]` config knobs.
+//! * [`planner::plan_epoch`] — consumes a view (plus a
+//!   [`LoadEstimator`]) and emits a [`Plan`] of typed [`ControlOp`]s:
+//!   `SetChain`, `SplitRecord`, `CopyRange`, `DeleteRange`, and explicit
+//!   no-ops with reasons. The planner never touches a socket, a node, or
+//!   a switch — it is a pure function of the view, so the same view
+//!   always yields the same plan (the property tests pin this).
+//! * **Executors** apply the ops: `cluster::controller::run_epoch` maps
+//!   them onto the simulated world (direct extract/ingest calls, switch
+//!   tables mutated in place), and `deploy::harness`'s epoch loop maps
+//!   the *same* ops onto the TCP control codec
+//!   (`ExtractRange`/`IngestRange`/`SetChain`/`SplitRecord`), which is
+//!   what gives the deployment live data migration and hot-range
+//!   splitting.
+//!
+//! The planner's decision sequence is a faithful extraction of the
+//! original simulator epoch (repairs first, then optional hot splits,
+//! then greedy migration off >4-sigma over-utilized nodes), preserved
+//! bit-for-bit so same-seed simulator runs produce identical `RunStats`.
+
+pub mod estimator;
+pub mod ops;
+pub mod planner;
+pub mod view;
+
+pub use estimator::{estimate_loads, LoadEstimator, RustEstimator};
+pub use ops::{ControlOp, Intent, NothingReason, Plan, PlanAction};
+pub use planner::{plan_epoch, plan_range_repair, CopyPlan, RangeRepairPlan};
+pub use view::ClusterView;

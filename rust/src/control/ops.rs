@@ -1,0 +1,181 @@
+//! Typed control-plane operations and the epoch plan that carries them.
+//!
+//! A [`ControlOp`] is one primitive the control plane can ask the world
+//! to perform; a [`PlanAction`] groups the ops of one *decision* (one
+//! repaired range, one migration, one split) under its [`Intent`] so an
+//! executor can apply — or abort — a decision as a unit; a [`Plan`] is
+//! one epoch's ordered list of actions. Ops are pure data: applying them
+//! is the executor's business (direct calls in the simulator, control
+//! sockets in the deployment).
+
+use crate::partition::Directory;
+use crate::types::{Key, NodeId};
+
+/// One primitive control-plane operation. Range indexes refer to the
+/// directory state produced by applying all *earlier* ops of the same
+/// plan in order (the planner evolves its working directory exactly that
+/// way while planning).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ControlOp {
+    /// Copy every pair in `span` (inclusive bounds) from one node to
+    /// another (repair restore, §5.2; migration data move, §5.1).
+    CopyRange { from: NodeId, to: NodeId, span: (Key, Key) },
+    /// Drop `span`'s pairs from a node — "after the sub-range's data is
+    /// migrated ... the old copy is removed" (§5.1).
+    DeleteRange { node: NodeId, span: (Key, Key) },
+    /// Install a new replica chain for range `idx` in the directory and
+    /// every switch table.
+    SetChain { idx: usize, chain: Vec<NodeId> },
+    /// Split range `idx` at `at`; the new upper record keeps `chain`.
+    /// Executors must also insert a counter slot at `idx + 1` in every
+    /// switch's register arrays.
+    SplitRecord { idx: usize, at: Key, chain: Vec<NodeId> },
+    /// Deliberate inaction, with the reason (observability: an empty
+    /// epoch is a decision too).
+    Nothing { reason: NothingReason },
+}
+
+impl ControlOp {
+    /// Apply this op's directory-visible effect (data-movement ops have
+    /// none). Executors use this to keep their authoritative directory in
+    /// lock-step with the switch tables; tests use it to check that a
+    /// plan preserves the key-space partition.
+    pub fn apply_to_directory(&self, dir: &mut Directory) {
+        match self {
+            ControlOp::SetChain { idx, chain } => dir.set_chain(*idx, chain.clone()),
+            ControlOp::SplitRecord { idx, at, chain } => {
+                dir.split(*idx, *at, chain.clone());
+            }
+            ControlOp::CopyRange { .. }
+            | ControlOp::DeleteRange { .. }
+            | ControlOp::Nothing { .. } => {}
+        }
+    }
+
+    /// Does this op change any state when applied?
+    pub fn is_effectful(&self) -> bool {
+        !matches!(self, ControlOp::Nothing { .. })
+    }
+}
+
+/// Why the planner deliberately did nothing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NothingReason {
+    /// `controller.migration` is off; only repairs are ever planned.
+    MigrationDisabled,
+    /// No counter mass this epoch — nothing to balance on.
+    NoTraffic,
+    /// No live node's load share clears the overload threshold (which
+    /// includes the >4-sigma sampling-noise guard).
+    NoOverload,
+    /// The over-utilized node serves no range with observed traffic.
+    NoHotRange,
+    /// Every live node already belongs to the hot range's chain.
+    NoMigrationTarget,
+}
+
+/// What one action is *for* — the decision level above its ops.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Intent {
+    /// §5.2: re-form range `idx`'s chain after `failed` died.
+    Repair { failed: NodeId, idx: usize },
+    /// §4.1.1/§5.1: divide hot range `idx`.
+    Split { idx: usize },
+    /// §5.1: move range `idx` off over-utilized `from` onto `to`.
+    Migrate { idx: usize, from: NodeId, to: NodeId },
+    /// Nothing to do (the ops carry the reason).
+    Observe,
+}
+
+/// One decision and the ops that implement it. Executors apply the ops in
+/// order; an executor that cannot complete an action (a dead control
+/// socket mid-migration) skips or aborts at action granularity, never
+/// half-applies a single decision's routing update.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PlanAction {
+    pub intent: Intent,
+    pub ops: Vec<ControlOp>,
+}
+
+/// One epoch's plan: ordered actions plus the load estimate they were
+/// based on.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Plan {
+    pub actions: Vec<PlanAction>,
+    /// The per-node load estimate computed this epoch; `None` when the
+    /// balancing phase was skipped entirely (migration disabled).
+    pub load: Option<Vec<f32>>,
+}
+
+impl Plan {
+    pub fn ops(&self) -> impl Iterator<Item = &ControlOp> {
+        self.actions.iter().flat_map(|a| a.ops.iter())
+    }
+
+    /// Does the plan change any state at all?
+    pub fn has_effects(&self) -> bool {
+        self.ops().any(ControlOp::is_effectful)
+    }
+
+    fn count(&self, f: impl Fn(&Intent) -> bool) -> u64 {
+        self.actions.iter().filter(|a| f(&a.intent)).count() as u64
+    }
+
+    pub fn repairs(&self) -> u64 {
+        self.count(|i| matches!(i, Intent::Repair { .. }))
+    }
+
+    pub fn migrations(&self) -> u64 {
+        self.count(|i| matches!(i, Intent::Migrate { .. }))
+    }
+
+    pub fn splits(&self) -> u64 {
+        self.count(|i| matches!(i, Intent::Split { .. }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_counts_by_intent() {
+        let plan = Plan {
+            actions: vec![
+                PlanAction { intent: Intent::Repair { failed: 1, idx: 0 }, ops: vec![] },
+                PlanAction { intent: Intent::Repair { failed: 1, idx: 3 }, ops: vec![] },
+                PlanAction {
+                    intent: Intent::Migrate { idx: 2, from: 0, to: 3 },
+                    ops: vec![],
+                },
+                PlanAction {
+                    intent: Intent::Observe,
+                    ops: vec![ControlOp::Nothing { reason: NothingReason::NoOverload }],
+                },
+            ],
+            load: None,
+        };
+        assert_eq!(plan.repairs(), 2);
+        assert_eq!(plan.migrations(), 1);
+        assert_eq!(plan.splits(), 0);
+        assert!(!plan.has_effects(), "only data-free actions listed ops");
+    }
+
+    #[test]
+    fn apply_to_directory_covers_routing_ops_only() {
+        let mut dir = Directory::initial(4, 4, 2);
+        let (start, end) = dir.bounds(1);
+        let mid = Key(start.0 / 2 + end.0 / 2 + 1);
+        ControlOp::SplitRecord { idx: 1, at: mid, chain: vec![2, 3] }.apply_to_directory(&mut dir);
+        assert_eq!(dir.len(), 5);
+        assert_eq!(dir.chain(2), &[2, 3]);
+        ControlOp::SetChain { idx: 0, chain: vec![1, 2] }.apply_to_directory(&mut dir);
+        assert_eq!(dir.chain(0), &[1, 2]);
+        let before = dir.clone();
+        ControlOp::CopyRange { from: 0, to: 1, span: (start, end) }.apply_to_directory(&mut dir);
+        ControlOp::DeleteRange { node: 0, span: (start, end) }.apply_to_directory(&mut dir);
+        ControlOp::Nothing { reason: NothingReason::NoTraffic }.apply_to_directory(&mut dir);
+        assert_eq!(dir, before, "data ops leave the directory untouched");
+        dir.check_invariants().unwrap();
+    }
+}

@@ -1,0 +1,373 @@
+//! The epoch planner: the full §5 decision loop as a pure function of a
+//! [`ClusterView`].
+//!
+//! Decision order is the original simulator epoch's, preserved exactly so
+//! same-seed simulator runs stay bit-identical (`tests/golden_stats.rs`):
+//!
+//! 1. **Repairs** (§5.2), one action per affected range, in failure
+//!    detection order — repairs trump balancing.
+//! 2. **Hot splits** (§4.1.1/§5.1, when `split_hot`): records hotter than
+//!    8x the per-record mean divide at a prefix-aligned midpoint.
+//! 3. **Migration** (§5.1, when `migration`): greedy — while some live
+//!    node's load share exceeds both `overload_factor / num_nodes` and
+//!    the uniform share by >4 sigma of the epoch's sampling noise, move
+//!    its hottest sub-range to the least-utilized node outside the chain.
+//!
+//! The planner mutates its own working copies of the directory and the
+//! counters as it plans, so every decision sees its predecessors exactly
+//! the way the executor will after applying the ops in order.
+
+use crate::chain::repair_chain;
+use crate::config::ControllerConfig;
+use crate::partition::Directory;
+use crate::types::{Key, NodeId};
+
+use super::estimator::{estimate_loads, LoadEstimator};
+use super::ops::{ControlOp, Intent, NothingReason, Plan, PlanAction};
+use super::view::ClusterView;
+
+/// One data copy required by a chain repair: the new tail `dst` must
+/// receive the sub-range's pairs from the surviving replica `src`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct CopyPlan {
+    pub src: NodeId,
+    pub dst: NodeId,
+}
+
+/// The repair decision for one affected sub-range — pure planning, also
+/// usable on its own (the deployment tests exercise it directly). The
+/// caller applies it: perform the data copy, install `new_chain` in the
+/// directory, push it to the switches.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RangeRepairPlan {
+    pub new_chain: Vec<NodeId>,
+    pub copy: Option<CopyPlan>,
+}
+
+/// Plan the §5.2 repair of sub-range `idx` after `failed` died: drop the
+/// failed node from the chain, append the least-loaded live replacement
+/// (if any node outside the chain survives), and name the surviving
+/// replica the replacement must copy from. `alive[n]` is the controller's
+/// current liveness view.
+pub fn plan_range_repair(
+    dir: &Directory,
+    alive: &[bool],
+    idx: usize,
+    failed: NodeId,
+) -> RangeRepairPlan {
+    let chain = dir.chain(idx).to_vec();
+    let replacement = least_loaded_replacement(dir, alive, &chain, failed);
+    let repair = repair_chain(&chain, failed, replacement);
+    let copy = repair.needs_copy.and_then(|dst| {
+        repair
+            .new_chain
+            .iter()
+            .copied()
+            .find(|&n| n != dst && alive[n])
+            .map(|src| CopyPlan { src, dst })
+    });
+    RangeRepairPlan { new_chain: repair.new_chain, copy }
+}
+
+fn least_loaded_replacement(
+    dir: &Directory,
+    alive: &[bool],
+    chain: &[NodeId],
+    failed: NodeId,
+) -> Option<NodeId> {
+    (0..alive.len())
+        .filter(|&n| alive[n] && n != failed && !chain.contains(&n))
+        .min_by_key(|&n| dir.ranges_of_node(n).len())
+}
+
+/// Plan one controller epoch over `view`. Deterministic: the same view
+/// (and a deterministic estimator) always produces the same plan.
+pub fn plan_epoch(view: ClusterView, est: &mut dyn LoadEstimator) -> Plan {
+    let ClusterView { dir, read, write, alive, failures, knobs } = view;
+    let mut p = Planner { dir, read, write, alive, knobs, est, actions: Vec::new() };
+    for failed in failures {
+        // Marked dead at its turn: a node that fails later in the list is
+        // still a valid replacement for one that failed earlier.
+        p.alive[failed] = false;
+        p.plan_repairs(failed);
+    }
+    let load = p.plan_balancing();
+    Plan { actions: p.actions, load }
+}
+
+struct Planner<'a> {
+    dir: Directory,
+    read: Vec<u64>,
+    write: Vec<u64>,
+    alive: Vec<bool>,
+    knobs: ControllerConfig,
+    est: &'a mut dyn LoadEstimator,
+    actions: Vec<PlanAction>,
+}
+
+impl Planner<'_> {
+    fn note(&mut self, reason: NothingReason) {
+        self.actions.push(PlanAction {
+            intent: Intent::Observe,
+            ops: vec![ControlOp::Nothing { reason }],
+        });
+    }
+
+    /// §5.2: one repair action per range the failed node served.
+    fn plan_repairs(&mut self, failed: NodeId) {
+        for idx in self.dir.ranges_of_node(failed) {
+            let plan = plan_range_repair(&self.dir, &self.alive, idx, failed);
+            let mut ops = Vec::with_capacity(2);
+            if let Some(copy) = plan.copy {
+                let (start, end) = self.dir.bounds(idx);
+                ops.push(ControlOp::CopyRange {
+                    from: copy.src,
+                    to: copy.dst,
+                    span: (start, end),
+                });
+            }
+            self.dir.set_chain(idx, plan.new_chain.clone());
+            ops.push(ControlOp::SetChain { idx, chain: plan.new_chain });
+            self.actions.push(PlanAction { intent: Intent::Repair { failed, idx }, ops });
+        }
+    }
+
+    /// §5.1 load balancing; returns the load estimate it was based on
+    /// (`None` when migration is disabled and no estimate was computed).
+    fn plan_balancing(&mut self) -> Option<Vec<f32>> {
+        if !self.knobs.migration {
+            self.note(NothingReason::MigrationDisabled);
+            return None;
+        }
+        // Optional §4.1.1/§5.1 sub-range division: very hot records are
+        // split at a prefix-aligned midpoint first, so migration can move
+        // "a subset of the hot data in a sub-range" instead of the whole
+        // record.
+        if self.knobs.split_hot {
+            self.plan_splits();
+        }
+        let num_nodes = self.alive.len();
+        let load = estimate_loads(
+            self.est,
+            &self.dir,
+            &self.read,
+            &self.write,
+            num_nodes,
+            self.knobs.write_cost as f32,
+        );
+        let total: f32 = load.iter().sum();
+        if total <= 0.0 {
+            self.note(NothingReason::NoTraffic);
+            return Some(load);
+        }
+        // A node is over-utilized when its load share exceeds both the
+        // configured factor AND the uniform share by >4 sigma of the
+        // epoch's multinomial sampling noise — small epochs must not
+        // migrate on noise.
+        let samples: u64 = self.read.iter().sum::<u64>() + self.write.iter().sum::<u64>();
+        let uniform_share = 1.0f32 / num_nodes as f32;
+        let sigma = (uniform_share * (1.0 - uniform_share) / (samples.max(1) as f32)).sqrt();
+        let threshold = (self.knobs.overload_factor as f32 * uniform_share)
+            .max(uniform_share + 4.0 * sigma);
+
+        for _ in 0..self.knobs.max_migrations_per_epoch {
+            // Greedy: most-loaded live node above threshold.
+            let hot = self
+                .load_ranked()
+                .into_iter()
+                .find(|&(n, share)| self.alive[n] && share > threshold);
+            let Some((hot_node, _)) = hot else {
+                self.note(NothingReason::NoOverload);
+                break;
+            };
+            if !self.plan_migrate_one(hot_node) {
+                break;
+            }
+        }
+        Some(load)
+    }
+
+    /// §4.1.1/§5.1 sub-range division: split any record whose hit count
+    /// is > 8x the per-record mean at a prefix-aligned midpoint. Both
+    /// halves keep the original chain (no data moves — migration may then
+    /// move one half); counters are halved across the split.
+    fn plan_splits(&mut self) {
+        let total: u64 = self.read.iter().sum::<u64>() + self.write.iter().sum::<u64>();
+        if total == 0 {
+            return;
+        }
+        let mut i = 0;
+        while i < self.dir.len() {
+            let mean = (total / self.dir.len() as u64).max(1);
+            let weight = self.read[i] + self.write[i];
+            let (start, end) = self.dir.bounds(i);
+            // Midpoint in 32-bit-prefix space, kept 2^96-aligned so the
+            // XLA dataplane's prefix matching stays exact.
+            let lo = start.prefix32();
+            let hi = end.prefix32();
+            let splittable = start.is_prefix_aligned() && hi > lo + 1;
+            if weight > 8 * mean && splittable {
+                let mid = Key::from_prefix32(lo + (hi - lo) / 2 + 1);
+                debug_assert!(mid > start && mid <= end);
+                let chain = self.dir.chain(i).to_vec();
+                self.dir.split(i, mid, chain.clone());
+                // Halve the observed counters across the two halves.
+                self.read.insert(i + 1, self.read[i] / 2);
+                self.read[i] -= self.read[i + 1];
+                self.write.insert(i + 1, self.write[i] / 2);
+                self.write[i] -= self.write[i + 1];
+                self.actions.push(PlanAction {
+                    intent: Intent::Split { idx: i },
+                    ops: vec![ControlOp::SplitRecord { idx: i, at: mid, chain }],
+                });
+                // The still-hot halves get re-examined next epoch with
+                // fresh counters.
+            }
+            i += 1;
+        }
+    }
+
+    /// Per-node load shares, hottest first, recomputed from current
+    /// chains.
+    fn load_ranked(&mut self) -> Vec<(NodeId, f32)> {
+        let num_nodes = self.alive.len();
+        let load = estimate_loads(
+            self.est,
+            &self.dir,
+            &self.read,
+            &self.write,
+            num_nodes,
+            self.knobs.write_cost as f32,
+        );
+        let total: f32 = load.iter().sum::<f32>().max(1e-9);
+        let mut ranked: Vec<(NodeId, f32)> =
+            load.iter().enumerate().map(|(n, &l)| (n, l / total)).collect();
+        ranked.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        ranked
+    }
+
+    /// Migrate the hottest sub-range served by `hot_node` to the
+    /// least-utilized node (greedy selection, §5.1). Returns false if no
+    /// migration applies.
+    fn plan_migrate_one(&mut self, hot_node: NodeId) -> bool {
+        // Hottest range where hot_node is the tail (reads) or any member.
+        let mut candidate: Option<(usize, u64)> = None;
+        for idx in self.dir.ranges_of_node(hot_node) {
+            let weight = if self.dir.tail(idx) == hot_node {
+                self.read[idx] + self.write[idx]
+            } else {
+                self.write[idx]
+            };
+            if weight > candidate.map(|(_, w)| w).unwrap_or(0) {
+                candidate = Some((idx, weight));
+            }
+        }
+        let Some((idx, weight)) = candidate else {
+            self.note(NothingReason::NoHotRange);
+            return false;
+        };
+        if weight == 0 {
+            self.note(NothingReason::NoHotRange);
+            return false;
+        }
+        // Least-utilized live node not already in the chain.
+        let ranked = self.load_ranked();
+        let chain = self.dir.chain(idx).to_vec();
+        let Some(&(target, _)) = ranked
+            .iter()
+            .rev()
+            .find(|&&(n, _)| self.alive[n] && !chain.contains(&n))
+        else {
+            self.note(NothingReason::NoMigrationTarget);
+            return false;
+        };
+
+        // Physically move the sub-range's data (extract → ingest → delete
+        // old copy, §5.1), then reconfigure the chain: target takes
+        // hot_node's position.
+        let (start, end) = self.dir.bounds(idx);
+        let new_chain: Vec<NodeId> = chain
+            .iter()
+            .map(|&n| if n == hot_node { target } else { n })
+            .collect();
+        self.dir.set_chain(idx, new_chain.clone());
+        self.actions.push(PlanAction {
+            intent: Intent::Migrate { idx, from: hot_node, to: target },
+            ops: vec![
+                ControlOp::CopyRange { from: hot_node, to: target, span: (start, end) },
+                ControlOp::DeleteRange { node: hot_node, span: (start, end) },
+                ControlOp::SetChain { idx, chain: new_chain },
+            ],
+        });
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn repair_plan_appends_replacement_and_names_copy_source() {
+        // 4 nodes, r=3: killing a chain member leaves exactly one node
+        // outside the chain as the replacement, which must receive a copy
+        // from a surviving member.
+        let dir = Directory::initial(8, 4, 3);
+        let alive = vec![true, false, true, true];
+        let idx = dir.ranges_of_node(1)[0];
+        let chain = dir.chain(idx).to_vec();
+        let plan = plan_range_repair(&dir, &alive, idx, 1);
+        assert_eq!(plan.new_chain.len(), 3, "replication factor restored");
+        assert!(!plan.new_chain.contains(&1), "failed node dropped");
+        let copy = plan.copy.expect("new tail needs the sub-range's data");
+        assert_eq!(Some(&copy.dst), plan.new_chain.last(), "copy lands on the new tail");
+        assert!(chain.contains(&copy.src) && copy.src != 1, "copy from a surviving replica");
+    }
+
+    #[test]
+    fn repair_plan_shortens_chain_when_no_spare_node_exists() {
+        // 3 nodes, r=3: every live node is already in every chain, so the
+        // repair can only shorten — no replacement, no copy.
+        let dir = Directory::initial(6, 3, 3);
+        let alive = vec![true, false, true];
+        let plan = plan_range_repair(&dir, &alive, 0, 1);
+        assert_eq!(plan.new_chain.len(), 2);
+        assert!(!plan.new_chain.contains(&1));
+        assert_eq!(plan.copy, None);
+    }
+
+    #[test]
+    fn later_failure_still_serves_as_earlier_replacement() {
+        // Nodes 1 and 3 fail in the same epoch, in that order. When node
+        // 1's ranges are repaired, node 3 has not been marked dead yet, so
+        // it may be chosen as a replacement — exactly the original epoch
+        // handler's interleaving. The repair of node 3's ranges then runs
+        // with node 3 dead and must undo nothing.
+        use crate::control::estimator::RustEstimator;
+        let dir = Directory::initial(8, 5, 3);
+        let view = ClusterView {
+            dir: dir.clone(),
+            read: vec![0; 8],
+            write: vec![0; 8],
+            // Node 1 already marked (its failure event preceded the
+            // epoch); node 3 still alive until its turn.
+            alive: vec![true, false, true, true, true],
+            failures: vec![1, 3],
+            knobs: ControllerConfig::default(),
+        };
+        let plan = plan_epoch(view, &mut RustEstimator);
+        // Every planned chain must exclude node 1; chains planned after
+        // node 3's turn must exclude node 3 too. Verify the end state by
+        // replaying the plan onto the directory.
+        let mut replay = dir;
+        for op in plan.ops() {
+            op.apply_to_directory(&mut replay);
+        }
+        for i in 0..replay.len() {
+            assert!(!replay.chain(i).contains(&1), "range {i} kept failed node 1");
+            assert!(!replay.chain(i).contains(&3), "range {i} kept failed node 3");
+        }
+        replay.check_invariants().unwrap();
+        assert!(plan.repairs() > 0);
+    }
+}

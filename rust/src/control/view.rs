@@ -1,0 +1,34 @@
+//! The controller's input: a pure snapshot of everything §5's decision
+//! loop is allowed to observe.
+
+use crate::config::ControllerConfig;
+use crate::partition::Directory;
+use crate::types::NodeId;
+
+/// One epoch's worth of controller-visible cluster state. Building a view
+/// is the executor's job (the simulator reads its world structs, the
+/// deployment controller drains counters and pings over TCP); planning on
+/// it is [`plan_epoch`](crate::control::plan_epoch)'s job.
+#[derive(Clone, Debug)]
+pub struct ClusterView {
+    /// Snapshot of the authoritative directory. The planner mutates its
+    /// own copy as it plans, so later decisions see earlier ones exactly
+    /// the way the executor will after applying the ops in order.
+    pub dir: Directory,
+    /// Per-range read counters drained from the coordinator switches this
+    /// epoch (`dir.len()` entries).
+    pub read: Vec<u64>,
+    /// Per-range update counters, same shape as `read`.
+    pub write: Vec<u64>,
+    /// Liveness as the controller currently believes it, with this
+    /// epoch's `failures` *not yet all marked dead*: the planner marks
+    /// each failure dead at its turn, so a node that died later in the
+    /// list is still a valid repair replacement for one that died earlier
+    /// (matching the original epoch handler's interleaving).
+    pub alive: Vec<bool>,
+    /// Nodes newly observed dead this epoch, in detection order.
+    pub failures: Vec<NodeId>,
+    /// The `[controller]` config section — the single knob set both the
+    /// simulator and the deployment read.
+    pub knobs: ControllerConfig,
+}

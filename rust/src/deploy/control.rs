@@ -18,24 +18,40 @@ use crate::store::blob::{get_bytes, get_uvarint, put_bytes, put_uvarint};
 use crate::types::{Key, Value};
 
 use super::transport::{read_frame_deadline, write_frame, FrameReader};
+use super::ServerStatsSnapshot;
 
 /// A controller → server request.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum CtrlMsg {
     /// Liveness probe (the controller's failure detector).
     Ping,
-    /// Stop serving and exit cleanly.
+    /// Stop serving and exit cleanly. The reply carries the server's
+    /// final observability counters ([`CtrlReply::Stats`]), so the
+    /// process-mode harness can fold child-process stats into its report.
     Shutdown,
     /// Collect and reset the switch's per-range read/write counters
     /// (§5.1 statistics epoch).
     DrainCounters,
-    /// Install a new chain for record `idx` (§5.2 repair push).
+    /// Install a new chain for record `idx` (§5.1 migration / §5.2
+    /// repair push).
     SetChain { idx: u32, chain: Vec<u16> },
-    /// Copy out all pairs in `[start, end]` (repair data copy, source
-    /// side).
+    /// Split record `idx` at `at`; the new upper record keeps `chain`
+    /// (§4.1.1/§5.1 hot-range division push; the switch also inserts a
+    /// counter slot at `idx + 1`).
+    SplitRecord { idx: u32, at: Key, chain: Vec<u16> },
+    /// Copy out all pairs in `[start, end]` (repair/migration data copy,
+    /// source side).
     ExtractRange { start: Key, end: Key },
-    /// Bulk-load pairs (repair data copy, destination side).
+    /// Bulk-load pairs (repair/migration data copy, destination side).
     IngestRange { pairs: Vec<(Key, Value)> },
+    /// Drop `[start, end]`'s pairs (§5.1: the migrated sub-range's old
+    /// copy is removed).
+    DeleteRange { start: Key, end: Key },
+    /// Switch only: while frozen, drop fresh requests whose matching
+    /// value falls in `[start, end]` — the migration window's write
+    /// barrier. Clients see a lost packet and retransmit after the
+    /// reconfiguration, exactly like a real switch mid-update.
+    SetFreeze { start: Key, end: Key, frozen: bool },
 }
 
 /// A server → controller reply.
@@ -45,6 +61,8 @@ pub enum CtrlReply {
     Counters { read: Vec<u64>, write: Vec<u64> },
     Pairs(Vec<(Key, Value)>),
     Err(String),
+    /// Final observability counters, sent in response to `Shutdown`.
+    Stats(ServerStatsSnapshot),
 }
 
 fn put_key(out: &mut Vec<u8>, k: Key) {
@@ -104,6 +122,26 @@ impl CtrlMsg {
                 out.push(6);
                 put_pairs(&mut out, pairs);
             }
+            CtrlMsg::SplitRecord { idx, at, chain } => {
+                out.push(7);
+                put_uvarint(&mut out, *idx as u64);
+                put_key(&mut out, *at);
+                put_uvarint(&mut out, chain.len() as u64);
+                for &reg in chain {
+                    put_uvarint(&mut out, reg as u64);
+                }
+            }
+            CtrlMsg::DeleteRange { start, end } => {
+                out.push(8);
+                put_key(&mut out, *start);
+                put_key(&mut out, *end);
+            }
+            CtrlMsg::SetFreeze { start, end, frozen } => {
+                out.push(9);
+                put_key(&mut out, *start);
+                put_key(&mut out, *end);
+                out.push(u8::from(*frozen));
+            }
         }
         out
     }
@@ -130,6 +168,31 @@ impl CtrlMsg {
                 CtrlMsg::ExtractRange { start, end }
             }
             6 => CtrlMsg::IngestRange { pairs: get_pairs(data, &mut pos)? },
+            7 => {
+                let idx = get_uvarint(data, &mut pos)? as u32;
+                let at = get_key(data, &mut pos)?;
+                let n = get_uvarint(data, &mut pos)? as usize;
+                let mut chain = Vec::with_capacity(n.min(64));
+                for _ in 0..n {
+                    chain.push(get_uvarint(data, &mut pos)? as u16);
+                }
+                CtrlMsg::SplitRecord { idx, at, chain }
+            }
+            8 => {
+                let start = get_key(data, &mut pos)?;
+                let end = get_key(data, &mut pos)?;
+                CtrlMsg::DeleteRange { start, end }
+            }
+            9 => {
+                let start = get_key(data, &mut pos)?;
+                let end = get_key(data, &mut pos)?;
+                let frozen = match data.get(pos).copied() {
+                    Some(0) => false,
+                    Some(1) => true,
+                    _ => bail!("truncated or malformed freeze flag"),
+                };
+                CtrlMsg::SetFreeze { start, end, frozen }
+            }
             other => bail!("bad control message tag {other}"),
         })
     }
@@ -162,6 +225,12 @@ impl CtrlReply {
                 out.push(4);
                 put_bytes(&mut out, msg.as_bytes());
             }
+            CtrlReply::Stats(s) => {
+                out.push(5);
+                put_uvarint(&mut out, s.bad_frames);
+                put_uvarint(&mut out, s.dropped);
+                put_uvarint(&mut out, s.send_failures);
+            }
         }
         out
     }
@@ -186,6 +255,11 @@ impl CtrlReply {
             }
             3 => CtrlReply::Pairs(get_pairs(data, &mut pos)?),
             4 => CtrlReply::Err(String::from_utf8_lossy(get_bytes(data, &mut pos)?).into_owned()),
+            5 => CtrlReply::Stats(ServerStatsSnapshot {
+                bad_frames: get_uvarint(data, &mut pos)?,
+                dropped: get_uvarint(data, &mut pos)?,
+                send_failures: get_uvarint(data, &mut pos)?,
+            }),
             other => bail!("bad control reply tag {other}"),
         })
     }
@@ -230,6 +304,11 @@ mod tests {
             CtrlMsg::IngestRange {
                 pairs: vec![(Key(1), b"a".to_vec()), (Key(2), vec![0xAB; 128])],
             },
+            CtrlMsg::SplitRecord { idx: 9, at: Key(7 << 96), chain: vec![1, 2, 3] },
+            CtrlMsg::SplitRecord { idx: 0, at: Key::MAX, chain: vec![] },
+            CtrlMsg::DeleteRange { start: Key(3), end: Key(9 << 100) },
+            CtrlMsg::SetFreeze { start: Key(1), end: Key(2), frozen: true },
+            CtrlMsg::SetFreeze { start: Key::MIN, end: Key::MAX, frozen: false },
         ];
         for m in msgs {
             assert_eq!(CtrlMsg::decode(&m.encode()).unwrap(), m);
@@ -245,6 +324,11 @@ mod tests {
             CtrlReply::Counters { read: vec![5], write: vec![] },
             CtrlReply::Pairs(vec![(Key::MIN, vec![]), (Key(9), b"v".to_vec())]),
             CtrlReply::Err("no such record".into()),
+            CtrlReply::Stats(ServerStatsSnapshot {
+                bad_frames: 3,
+                dropped: u64::MAX,
+                send_failures: 0,
+            }),
         ];
         for r in replies {
             assert_eq!(CtrlReply::decode(&r.encode()).unwrap(), r);
@@ -263,6 +347,16 @@ mod tests {
         // Truncated pair list.
         let mut bytes = CtrlMsg::IngestRange { pairs: vec![(Key(1), vec![9; 40])] }.encode();
         bytes.truncate(bytes.len() - 10);
+        assert!(CtrlMsg::decode(&bytes).is_err());
+        // Truncated freeze flag.
+        let mut bytes =
+            CtrlMsg::SetFreeze { start: Key(1), end: Key(2), frozen: true }.encode();
+        bytes.truncate(bytes.len() - 1);
+        assert!(CtrlMsg::decode(&bytes).is_err());
+        // Truncated split chain.
+        let mut bytes =
+            CtrlMsg::SplitRecord { idx: 1, at: Key(5), chain: vec![700, 800] }.encode();
+        bytes.truncate(bytes.len() - 1);
         assert!(CtrlMsg::decode(&bytes).is_err());
     }
 }

@@ -12,12 +12,15 @@
 //!   binary, on the `[deploy]` base-port map. This is the CI
 //!   `loopback-smoke` job; an induced kill is a real `SIGKILL`.
 //!
-//! The controller loop is the paper's §5 epoch: drain the switch's
-//! per-range counters, estimate per-node load (the shared
-//! `cluster::controller::estimate_loads` core), detect failures by
-//! control-plane ping, and repair chains with the shared
-//! `plan_range_repair` — extract/ingest the sub-range between survivors,
-//! then push the new chain into the switch's match-action table.
+//! The controller loop is the paper's full §5 epoch, planned by the
+//! shared decision core (`control::plan_epoch`) and applied over TCP:
+//! drain the switch's per-range counters, detect failures by
+//! control-plane ping, then map the planner's `ControlOp`s onto the
+//! control codec — `ExtractRange`/`IngestRange` for repair and migration
+//! data copies, `SetChain` for chain rewrites, `SplitRecord` for hot
+//! divisions, `DeleteRange` to drop a migrated range's old copy, and a
+//! `SetFreeze` write barrier around each live migration so no
+//! acknowledged write can slip between the copy and the routing update.
 
 use std::net::{TcpListener, TcpStream};
 use std::process::{Child, Command, Stdio};
@@ -27,10 +30,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use crate::cluster::controller::{estimate_loads, plan_range_repair, RustEstimator};
 use crate::config::Config;
+use crate::control::{plan_epoch, ClusterView, ControlOp, Intent, PlanAction, RustEstimator};
 use crate::partition::Directory;
-use crate::types::NodeId;
+use crate::types::{Key, NodeId, Value};
 
 use super::control::{ctrl_call, CtrlMsg, CtrlReply};
 use super::driver::DriveReport;
@@ -44,6 +47,10 @@ use super::{
 pub struct ControllerReport {
     pub epochs: u64,
     pub repairs: u64,
+    /// §5.1 hot-range migrations actually applied (copy + chain rewrite).
+    pub migrations: u64,
+    /// §4.1.1/§5.1 hot-range divisions installed in the switch table.
+    pub splits: u64,
     /// Total read+write counter mass drained from the switch.
     pub total_ops: u64,
     pub killed: Option<NodeId>,
@@ -56,15 +63,18 @@ pub struct ControllerReport {
 pub struct LoopbackReport {
     pub drive: DriveReport,
     pub controller: ControllerReport,
-    /// Switch + node server counters summed at shutdown (thread mode
-    /// only; the process mode's counters live in the children).
+    /// Switch + node server counters summed at shutdown. Thread mode
+    /// reads them in-process; process mode collects each child's final
+    /// snapshot over the control channel at shutdown (a SIGKILLed child's
+    /// counters are lost with it).
     pub servers: ServerStatsSnapshot,
 }
 
 impl LoopbackReport {
-    /// The CI gate: every op completed and verified, and — when a kill
-    /// was induced — the controller actually detected it and repaired
-    /// chains.
+    /// The CI gate: every op completed and verified; when a kill was
+    /// induced the controller actually detected it and repaired chains;
+    /// and when migrations were demanded (`deploy.expect_migrations`) the
+    /// planner actually drove that many through the control plane.
     pub fn gate(&self, cfg: &Config) -> Result<()> {
         let expected = cfg.cluster.clients as u64 * cfg.workload.ops_per_client;
         if self.drive.ops != expected {
@@ -91,16 +101,30 @@ impl LoopbackReport {
                 bail!("node {} was killed but no chain was repaired", cfg.deploy.kill_node);
             }
         }
+        if self.controller.migrations < cfg.deploy.expect_migrations {
+            bail!(
+                "deploy.expect_migrations={} but only {} migrations were applied \
+                 (epochs={} splits={} observed_ops={}); raise ops or epoch length \
+                 so the load estimate clears the noise guard",
+                cfg.deploy.expect_migrations,
+                self.controller.migrations,
+                self.controller.epochs,
+                self.controller.splits,
+                self.controller.total_ops
+            );
+        }
         Ok(())
     }
 
     pub fn summary(&self) -> String {
         format!(
-            "{} | controller: epochs={} repairs={} killed={:?} observed_ops={} | \
-             servers: bad_frames={} dropped={} send_failures={}",
+            "{} | controller: epochs={} repairs={} migrations={} splits={} killed={:?} \
+             observed_ops={} | servers: bad_frames={} dropped={} send_failures={}",
             self.drive.summary_line(),
             self.controller.epochs,
             self.controller.repairs,
+            self.controller.migrations,
+            self.controller.splits,
             self.controller.killed,
             self.controller.total_ops,
             self.servers.bad_frames,
@@ -139,7 +163,412 @@ impl Killer {
     }
 }
 
-/// The controller's epoch loop; returns when `stop` is set.
+/// The deployment-side plan executor: owns the controller's authoritative
+/// directory mirror and liveness view, and maps planned `ControlOp`s onto
+/// the TCP control codec.
+struct TcpController<'a> {
+    cfg: &'a Config,
+    net: &'a Netmap,
+    dir: Directory,
+    alive: Vec<bool>,
+    est: RustEstimator,
+    report: ControllerReport,
+    ctrl_timeout: Duration,
+    copy_timeout: Duration,
+    /// Frozen spans whose thaw call failed; retried at every epoch start
+    /// until the switch confirms, so a lost thaw reply can never
+    /// blackhole a key span for the rest of the run.
+    pending_thaws: Vec<(Key, Key)>,
+    /// Counters drained out-of-band by [`TcpController::switch_records`]
+    /// probes, carried into the next epoch's drain so probe traffic is
+    /// never erased from the load estimate.
+    carry: Option<(Vec<u64>, Vec<u64>)>,
+}
+
+impl TcpController<'_> {
+    /// §5.1: collect + reset the switch's per-range statistics. Returns
+    /// zeroed counters when the switch is unreachable or its table has
+    /// diverged in length (repair-only planning then proceeds).
+    fn drain_counters(&mut self) -> (Vec<u64>, Vec<u64>, u64) {
+        let drained = ctrl_call(self.net.switch_ctrl, &CtrlMsg::DrainCounters, self.ctrl_timeout);
+        if let Ok(CtrlReply::Counters { mut read, mut write }) = drained {
+            if read.len() == self.dir.len() && write.len() == self.dir.len() {
+                // Fold back anything a probe drained since the last epoch
+                // (positional when shapes agree; a shape change across a
+                // probe is possible only via an interleaved split, whose
+                // mass still counts).
+                if let Some((cr, cw)) = self.carry.take() {
+                    if cr.len() == read.len() {
+                        for (acc, v) in read.iter_mut().zip(&cr) {
+                            *acc += v;
+                        }
+                        for (acc, v) in write.iter_mut().zip(&cw) {
+                            *acc += v;
+                        }
+                    } else {
+                        let lost: u64 = cr.iter().sum::<u64>() + cw.iter().sum::<u64>();
+                        self.report.total_ops += lost;
+                    }
+                }
+                let mass: u64 = read.iter().sum::<u64>() + write.iter().sum::<u64>();
+                return (read, write, mass);
+            }
+            // The drained mass still counts toward the observed-ops
+            // total (the induced-kill threshold and gate diagnostics
+            // depend on it) even though its per-range shape is unusable.
+            self.report.total_ops += read.iter().sum::<u64>() + write.iter().sum::<u64>();
+            eprintln!(
+                "[controller] counter shape {}/{} diverged from directory ({} records); \
+                 skipping balancing this epoch",
+                read.len(),
+                write.len(),
+                self.dir.len()
+            );
+        }
+        (vec![0; self.dir.len()], vec![0; self.dir.len()], 0)
+    }
+
+    /// §5.2 failure detection by control-plane ping; returns nodes newly
+    /// observed dead this epoch (their `alive` slots are left for the
+    /// planner to flip, matching the shared interleaving semantics).
+    fn detect_failures(&self) -> Vec<NodeId> {
+        let mut failures = Vec::new();
+        for n in 0..self.alive.len() {
+            if self.alive[n]
+                && ctrl_call(self.net.node_ctrl[n], &CtrlMsg::Ping, self.ctrl_timeout).is_err()
+            {
+                failures.push(n);
+            }
+        }
+        failures
+    }
+
+    /// Unfreeze a span, with failure bookkeeping: an undelivered thaw is
+    /// retried next epoch rather than dropped.
+    fn thaw(&mut self, start: Key, end: Key) {
+        let msg = CtrlMsg::SetFreeze { start, end, frozen: false };
+        if ctrl_call(self.net.switch_ctrl, &msg, self.ctrl_timeout).is_err() {
+            self.pending_thaws.push((start, end));
+        }
+    }
+
+    /// One controller epoch: drain, detect, plan, apply.
+    fn epoch(&mut self) {
+        self.report.epochs += 1;
+        // No migration is in flight between epochs, so any span still
+        // frozen is leftover from a lost thaw reply — clear it first.
+        let stale = std::mem::take(&mut self.pending_thaws);
+        for (s, e) in stale {
+            self.thaw(s, e);
+        }
+        let (read, write, mass) = self.drain_counters();
+        self.report.total_ops += mass;
+        let failures = self.detect_failures();
+        for &f in &failures {
+            eprintln!("[controller] node {f} stopped answering pings");
+        }
+
+        let view = ClusterView {
+            dir: self.dir.clone(),
+            read,
+            write,
+            alive: self.alive.clone(),
+            failures: failures.clone(),
+            knobs: self.cfg.controller.clone(),
+        };
+        for &f in &failures {
+            self.alive[f] = false;
+        }
+        let plan = plan_epoch(view, &mut self.est);
+        if mass > 0 {
+            if let Some(load) = &plan.load {
+                self.report.last_load = load.clone();
+                eprintln!(
+                    "[controller] epoch={} ops={} (+{mass}) load={load:?}",
+                    self.report.epochs, self.report.total_ops
+                );
+            }
+        }
+        for action in &plan.actions {
+            if !self.apply_action(action) {
+                // Directory/table divergence risk: abandon the rest of
+                // this epoch's plan; the next epoch replans from the
+                // consistent state both sides still agree on.
+                eprintln!("[controller] abandoning remainder of epoch plan");
+                break;
+            }
+        }
+    }
+
+    /// Apply one planned action over the control plane. Returns false
+    /// when the remaining plan must be abandoned (an index-shifting op
+    /// failed at the switch).
+    fn apply_action(&mut self, action: &PlanAction) -> bool {
+        match action.intent {
+            Intent::Observe => true,
+            Intent::Repair { failed, idx } => {
+                self.apply_repair(action);
+                eprintln!("[controller] repaired range {idx} after node {failed} failure");
+                true
+            }
+            Intent::Split { .. } => self.apply_split(action),
+            Intent::Migrate { idx, from, to } => {
+                if self.apply_migrate(action) {
+                    self.report.migrations += 1;
+                    eprintln!("[controller] migrated range {idx}: node {from} -> node {to}");
+                    true
+                } else {
+                    // Later same-epoch migrations were planned assuming
+                    // this one's data move happened (the planner's working
+                    // state chains them); applying them against the real,
+                    // unmoved world would route a range to nodes that
+                    // never received its data. Abandon and replan.
+                    eprintln!("[controller] migration of range {idx} aborted; replanning");
+                    false
+                }
+            }
+        }
+    }
+
+    /// §5.2 repair: best-effort data copy between survivors, then the
+    /// chain rewrite. The rewrite is unconditional — the failed node must
+    /// stop being routed to even if the copy could not complete.
+    fn apply_repair(&mut self, action: &PlanAction) {
+        for op in &action.ops {
+            match op {
+                ControlOp::CopyRange { from, to, span: (start, end) } => {
+                    if let Some(pairs) = self.extract(*from, *start, *end) {
+                        self.ingest(*to, pairs);
+                    }
+                }
+                ControlOp::SetChain { idx, chain } => self.set_chain(*idx, chain),
+                _ => {}
+            }
+        }
+        self.report.repairs += 1;
+    }
+
+    /// §4.1.1/§5.1 hot division: the switch installs the split first;
+    /// only a confirmed install mutates the local directory (an
+    /// unconfirmed one would shift every later record index out of sync).
+    fn apply_split(&mut self, action: &PlanAction) -> bool {
+        let Some(ControlOp::SplitRecord { idx, at, chain }) = action.ops.first() else {
+            return true;
+        };
+        let regs: Vec<u16> = chain.iter().map(|&n| n as u16).collect();
+        let msg = CtrlMsg::SplitRecord { idx: *idx as u32, at: *at, chain: regs };
+        match ctrl_call(self.net.switch_ctrl, &msg, self.ctrl_timeout) {
+            Ok(_) => {
+                self.dir.split(*idx, *at, chain.clone());
+                self.report.splits += 1;
+                eprintln!("[controller] split hot range {idx} at {at:?}");
+                true
+            }
+            Err(e) => {
+                // A lost *reply* is ambiguous: the switch may have
+                // installed the record anyway, and a silent one-record
+                // offset would misroute every later index-addressed op.
+                // The switch's table length (counter array size) settles
+                // it.
+                eprintln!("[controller] split of range {idx} failed at the switch: {e:#}");
+                // Probe twice with a settle delay: the timed-out install
+                // may still be sitting in the switch's control queue, and
+                // deciding "not installed" while it lands would leave the
+                // mirror permanently one record behind.
+                let mut records = self.switch_records();
+                if records == Some(self.dir.len()) {
+                    std::thread::sleep(Duration::from_millis(100));
+                    records = self.switch_records();
+                }
+                match records {
+                    Some(n) if n == self.dir.len() + 1 => {
+                        eprintln!("[controller] switch did install the split; mirroring");
+                        self.dir.split(*idx, *at, chain.clone());
+                        self.report.splits += 1;
+                        true
+                    }
+                    // Not installed (or unreachable): either way the rest
+                    // of this epoch's plan was computed against post-split
+                    // indexes, so it must be abandoned — the next epoch
+                    // replans from the still-consistent pre-split state.
+                    _ => false,
+                }
+            }
+        }
+    }
+
+    /// The switch's current record count, read from the shape of a
+    /// counter drain. The drained per-range counters are stashed in
+    /// `carry` and folded into the next epoch's drain, so the probe
+    /// erases nothing from the load estimate.
+    fn switch_records(&mut self) -> Option<usize> {
+        match ctrl_call(self.net.switch_ctrl, &CtrlMsg::DrainCounters, self.ctrl_timeout) {
+            Ok(CtrlReply::Counters { mut read, mut write }) => {
+                let records = read.len();
+                match self.carry.take() {
+                    Some((cr, cw)) if cr.len() == records => {
+                        for (acc, v) in read.iter_mut().zip(&cr) {
+                            *acc += v;
+                        }
+                        for (acc, v) in write.iter_mut().zip(&cw) {
+                            *acc += v;
+                        }
+                    }
+                    Some((cr, cw)) => {
+                        // A shape change between probes: the old window's
+                        // positional info is gone, but its mass still
+                        // counts toward the observed-ops total.
+                        self.report.total_ops +=
+                            cr.iter().sum::<u64>() + cw.iter().sum::<u64>();
+                    }
+                    None => {}
+                }
+                self.carry = Some((read, write));
+                Some(records)
+            }
+            _ => None,
+        }
+    }
+
+    /// §5.1 live migration, made safe against concurrent writes:
+    ///
+    /// 1. freeze the span at the switch (fresh requests drop; clients
+    ///    retransmit after the window),
+    /// 2. extract from the source until the snapshot holds still for a
+    ///    100 ms observed-quiet window — in-flight chain writes that
+    ///    passed the switch before the freeze have then settled with
+    ///    overwhelming likelihood (see [`TcpController::stable_extract`]),
+    /// 3. ingest into the target,
+    /// 4. rewrite the chain (switch first, then the local mirror),
+    /// 5. thaw,
+    /// 6. drop the old copy (best-effort; the vacated node is no longer
+    ///    routed to either way).
+    ///
+    /// Any failure before step 4 thaws and skips — the worst leftover is
+    /// a harmless extra copy on the target, and the next epoch replans
+    /// from the unchanged routing state.
+    fn apply_migrate(&mut self, action: &PlanAction) -> bool {
+        let (mut copy, mut delete, mut set) = (None, None, None);
+        for op in &action.ops {
+            match op {
+                ControlOp::CopyRange { from, to, span } => copy = Some((*from, *to, *span)),
+                ControlOp::DeleteRange { node, span } => delete = Some((*node, *span)),
+                ControlOp::SetChain { idx, chain } => set = Some((*idx, chain.clone())),
+                _ => {}
+            }
+        }
+        let (Some((from, to, (start, end))), Some((idx, chain))) = (copy, set) else {
+            return false;
+        };
+
+        // A freeze whose reply was lost may still be active at the
+        // switch, so every exit path thaws (and `thaw` keeps retrying
+        // across epochs until the switch confirms).
+        let on = CtrlMsg::SetFreeze { start, end, frozen: true };
+        if ctrl_call(self.net.switch_ctrl, &on, self.ctrl_timeout).is_err() {
+            self.thaw(start, end);
+            return false;
+        }
+        let pairs = match self.stable_extract(from, start, end) {
+            Some(pairs) => pairs,
+            None => {
+                self.thaw(start, end);
+                return false;
+            }
+        };
+        if !self.ingest(to, pairs) {
+            self.thaw(start, end);
+            return false;
+        }
+        // The routing update must land *confirmed* at the switch before
+        // anything else changes. SetChain is idempotent, so a lost reply
+        // is simply retried — the retry converges the ambiguity (switch
+        // applied it: re-apply is a no-op; switch missed it: the retry
+        // installs it) instead of letting the mirror and the table
+        // silently disagree about which chain owns acknowledged writes.
+        if !self.push_chain(idx, &chain) {
+            self.thaw(start, end);
+            return false;
+        }
+        self.dir.set_chain(idx, chain);
+        self.thaw(start, end);
+        if let Some((node, (ds, de))) = delete {
+            let del = CtrlMsg::DeleteRange { start: ds, end: de };
+            ctrl_call(self.net.node_ctrl[node], &del, self.copy_timeout).ok();
+        }
+        true
+    }
+
+    /// Extract `[start, end]` from `node` until the snapshot has been
+    /// demonstrably quiet for two consecutive 50 ms checks. With the span
+    /// frozen at the switch, the only traffic that can still mutate the
+    /// source is writes already past the switch — a ≤r-hop chain whose
+    /// hops are loopback sends plus a mutex'd store apply — so a write
+    /// surviving a 100 ms observed-quiet window is vanishingly unlikely
+    /// (this is a strong heuristic, not a proof: a pathologically starved
+    /// chain hop could still slip one through, which is why the driver
+    /// also tolerates a bounded burst of stale replies).
+    fn stable_extract(&self, node: NodeId, start: Key, end: Key) -> Option<Vec<(Key, Value)>> {
+        let mut pairs = self.extract(node, start, end)?;
+        let mut quiet = 0;
+        for _ in 0..30 {
+            std::thread::sleep(Duration::from_millis(50));
+            let again = self.extract(node, start, end)?;
+            if again == pairs {
+                quiet += 1;
+                if quiet >= 2 {
+                    return Some(pairs);
+                }
+            } else {
+                quiet = 0;
+                pairs = again;
+            }
+        }
+        eprintln!("[controller] range [{start:?}, {end:?}] never quiesced; aborting migration");
+        None
+    }
+
+    fn extract(&self, node: NodeId, start: Key, end: Key) -> Option<Vec<(Key, Value)>> {
+        let msg = CtrlMsg::ExtractRange { start, end };
+        match ctrl_call(self.net.node_ctrl[node], &msg, self.copy_timeout) {
+            Ok(CtrlReply::Pairs(pairs)) => Some(pairs),
+            _ => None,
+        }
+    }
+
+    fn ingest(&self, node: NodeId, pairs: Vec<(Key, Value)>) -> bool {
+        let msg = CtrlMsg::IngestRange { pairs };
+        ctrl_call(self.net.node_ctrl[node], &msg, self.copy_timeout).is_ok()
+    }
+
+    fn set_chain(&mut self, idx: usize, chain: &[NodeId]) {
+        self.dir.set_chain(idx, chain.to_vec());
+        self.push_chain(idx, chain);
+    }
+
+    /// Push a chain rewrite to the switch with bounded idempotent
+    /// retries (a lost reply re-sends; installing the same chain twice
+    /// is a no-op). Returns whether the switch confirmed.
+    fn push_chain(&mut self, idx: usize, chain: &[NodeId]) -> bool {
+        let regs: Vec<u16> = chain.iter().map(|&n| n as u16).collect();
+        let msg = CtrlMsg::SetChain { idx: idx as u32, chain: regs };
+        for attempt in 0..5 {
+            if attempt > 0 {
+                std::thread::sleep(Duration::from_millis(50));
+            }
+            if ctrl_call(self.net.switch_ctrl, &msg, self.copy_timeout).is_ok() {
+                return true;
+            }
+        }
+        eprintln!("[controller] SetChain for range {idx} never confirmed by the switch");
+        false
+    }
+}
+
+/// The controller's epoch loop; returns when `stop` is set — after one
+/// final sweep epoch, so traffic that arrived between the last timed
+/// epoch and shutdown still gets drained and planned on (short skewed
+/// runs must not end with their counters unread).
 fn controller_loop(
     cfg: &Config,
     net: &Netmap,
@@ -147,118 +576,46 @@ fn controller_loop(
     killer: &Killer,
 ) -> ControllerReport {
     let nodes = cfg.cluster.nodes();
-    let epoch = Duration::from_millis(cfg.deploy.epoch_ms.max(50));
-    let ctrl_timeout = Duration::from_millis(cfg.deploy.timeout_ms.max(200));
-    let copy_timeout = ctrl_timeout * 10;
-    let mut dir = Directory::initial(cfg.cluster.num_ranges, nodes, cfg.cluster.replication);
-    let mut alive = vec![true; nodes];
-    let mut est = RustEstimator;
-    let mut report = ControllerReport::default();
+    let epoch = Duration::from_millis(cfg.deploy.epoch_ms);
+    let ctrl_timeout = Duration::from_millis(cfg.deploy.timeout_ms);
+    let mut ctl = TcpController {
+        cfg,
+        net,
+        dir: Directory::initial(cfg.cluster.num_ranges, nodes, cfg.cluster.replication),
+        alive: vec![true; nodes],
+        est: RustEstimator,
+        report: ControllerReport::default(),
+        ctrl_timeout,
+        copy_timeout: ctrl_timeout * 10,
+        pending_thaws: Vec::new(),
+        carry: None,
+    };
     let mut pending_kill = (cfg.deploy.kill_node >= 0
         && (cfg.deploy.kill_node as usize) < nodes)
         .then_some(cfg.deploy.kill_node as usize);
 
-    while !stop.load(Ordering::SeqCst) {
+    let mut final_sweep = false;
+    while !final_sweep {
         sleep_poll(epoch, stop);
-        if stop.load(Ordering::SeqCst) {
-            break;
-        }
-        report.epochs += 1;
-
-        // §5.1: collect + reset the switch's per-range statistics, feed
-        // the shared load estimator.
-        if let Ok(CtrlReply::Counters { read, write }) =
-            ctrl_call(net.switch_ctrl, &CtrlMsg::DrainCounters, ctrl_timeout)
-        {
-            let mass: u64 = read.iter().sum::<u64>() + write.iter().sum::<u64>();
-            report.total_ops += mass;
-            if mass > 0 {
-                report.last_load = estimate_loads(
-                    &mut est,
-                    &dir,
-                    &read,
-                    &write,
-                    nodes,
-                    cfg.controller.write_cost as f32,
-                );
-                eprintln!(
-                    "[controller] epoch={} ops={} (+{mass}) load={:?}",
-                    report.epochs, report.total_ops, report.last_load
-                );
-            }
-        }
+        final_sweep = stop.load(Ordering::SeqCst);
+        ctl.epoch();
 
         // Induced failure: once the switch has observed enough traffic,
-        // take the victim down for real.
-        if let Some(victim) = pending_kill {
-            if report.total_ops >= cfg.deploy.kill_after_ops {
+        // take the victim down for real. Skipped on the final sweep —
+        // there is no later epoch left to detect and repair it.
+        if let (Some(victim), false) = (pending_kill, final_sweep) {
+            if ctl.report.total_ops >= cfg.deploy.kill_after_ops {
                 eprintln!(
                     "[controller] killing node {victim} after {} observed ops",
-                    report.total_ops
+                    ctl.report.total_ops
                 );
                 killer.kill(net, victim, ctrl_timeout);
-                report.killed = Some(victim);
+                ctl.report.killed = Some(victim);
                 pending_kill = None;
             }
         }
-
-        // §5.2: failure detection by control-plane ping, then chain
-        // repair through the shared planner.
-        for failed in 0..nodes {
-            if !alive[failed]
-                || ctrl_call(net.node_ctrl[failed], &CtrlMsg::Ping, ctrl_timeout).is_ok()
-            {
-                continue;
-            }
-            alive[failed] = false;
-            repair_node(cfg, net, &mut dir, &alive, failed, &mut report, copy_timeout);
-        }
     }
-    report
-}
-
-/// Apply the shared repair plans for every chain the failed node served:
-/// copy the sub-range between survivors where a replacement joined, then
-/// push each new chain into the switch's match-action table.
-fn repair_node(
-    cfg: &Config,
-    net: &Netmap,
-    dir: &mut Directory,
-    alive: &[bool],
-    failed: NodeId,
-    report: &mut ControllerReport,
-    copy_timeout: Duration,
-) {
-    let affected = dir.ranges_of_node(failed);
-    let total = affected.len();
-    for idx in affected {
-        let plan = plan_range_repair(dir, alive, idx, failed);
-        if let Some(copy) = plan.copy {
-            let (start, end) = dir.bounds(idx);
-            if let Ok(CtrlReply::Pairs(pairs)) = ctrl_call(
-                net.node_ctrl[copy.src],
-                &CtrlMsg::ExtractRange { start, end },
-                copy_timeout,
-            ) {
-                ctrl_call(
-                    net.node_ctrl[copy.dst],
-                    &CtrlMsg::IngestRange { pairs },
-                    copy_timeout,
-                )
-                .ok();
-            }
-        }
-        dir.set_chain(idx, plan.new_chain.clone());
-        let chain: Vec<u16> = plan.new_chain.iter().map(|&n| n as u16).collect();
-        ctrl_call(
-            net.switch_ctrl,
-            &CtrlMsg::SetChain { idx: idx as u32, chain },
-            copy_timeout,
-        )
-        .ok();
-        report.repairs += 1;
-    }
-    eprintln!("[controller] node {failed} failed: repaired {total} chains");
+    ctl.report
 }
 
 fn sleep_poll(total: Duration, stop: &AtomicBool) {
@@ -399,12 +756,18 @@ pub fn run_processes(cfg: &Config, passthrough: &[String]) -> Result<LoopbackRep
         Ok(LoopbackReport { drive, controller, servers: ServerStatsSnapshot::default() })
     })();
 
-    // Teardown regardless of outcome: graceful control-plane shutdown,
-    // then make sure no child outlives the harness.
-    let ctrl_timeout = Duration::from_millis(cfg.deploy.timeout_ms.max(200));
-    ctrl_call(net.switch_ctrl, &CtrlMsg::Shutdown, ctrl_timeout).ok();
-    for n in 0..nodes {
-        ctrl_call(net.node_ctrl[n], &CtrlMsg::Shutdown, ctrl_timeout).ok();
+    // Teardown regardless of outcome: graceful control-plane shutdown —
+    // each live child answers with its final stats snapshot, which is the
+    // only way the counters survive the process boundary — then make sure
+    // no child outlives the harness.
+    let ctrl_timeout = Duration::from_millis(cfg.deploy.timeout_ms);
+    let mut servers = ServerStatsSnapshot::default();
+    let mut targets = vec![net.switch_ctrl];
+    targets.extend(net.node_ctrl.iter().take(nodes).copied());
+    for addr in targets {
+        if let Ok(CtrlReply::Stats(s)) = ctrl_call(addr, &CtrlMsg::Shutdown, ctrl_timeout) {
+            servers.absorb(s);
+        }
     }
     if let Some(mut c) = switch_child {
         reap(&mut c);
@@ -414,7 +777,10 @@ pub fn run_processes(cfg: &Config, passthrough: &[String]) -> Result<LoopbackRep
             reap(&mut c);
         }
     }
-    result
+    result.map(|mut report| {
+        report.servers = servers;
+        report
+    })
 }
 
 fn with_args(passthrough: &[String], head: &[String]) -> Vec<String> {

@@ -19,9 +19,11 @@
 //!
 //! What is shared with the simulator and what diverges is documented in
 //! DESIGN.md §2d: the byte codec, the chain-step protocol core, the
-//! controller's repair/estimation planning, and the workload oracle are
-//! the same code; time, delivery order, and loss are the operating
-//! system's.
+//! controller's *entire* §5 decision loop (`control::plan_epoch` — repair,
+//! load estimation, hot splits, migration), and the workload oracle are
+//! the same code; only the op transport differs (control sockets here,
+//! direct calls there), and time, delivery order, and loss are the
+//! operating system's.
 //!
 //! Addressing: packets keep carrying the topology's *simulated* IPs
 //! (`10.0.rack.host`, `10.1.0.client`) — they are the wire-format
@@ -63,7 +65,11 @@ pub(crate) const CONNECT_TIMEOUT: Duration = Duration::from_millis(1_000);
 pub(crate) const WRITE_TIMEOUT: Duration = Duration::from_millis(2_000);
 
 /// Reject configs the single-soft-switch loopback deployment cannot run.
+/// The generic knob validation (including the shared `[controller]`
+/// checks) is [`Config::validate`]; this adds only deploy-specific
+/// constraints.
 pub fn validate_deploy(cfg: &Config) -> Result<()> {
+    cfg.validate()?;
     if cfg.coordination != Coordination::InSwitch {
         bail!(
             "the deployment runtime serves in-switch coordination only \
@@ -72,9 +78,14 @@ pub fn validate_deploy(cfg: &Config) -> Result<()> {
         );
     }
     if cfg.cluster.partitioning == crate::config::Partitioning::Hash
-        && cfg.workload.scan_ratio > 0.0
+        && cfg.controller.migration
     {
-        bail!("hash partitioning cannot serve scans; set --workload.scan_ratio=0");
+        bail!(
+            "live migration over the deployment requires range partitioning \
+             (hash-space bounds do not name contiguous key spans to freeze \
+             and copy); set --controller.migration=false or use range \
+             partitioning"
+        );
     }
     if cfg.cluster.racks != 1 {
         bail!(
@@ -227,7 +238,9 @@ pub struct ServerStats {
     /// Frames that failed `Packet::decode` (garbage ethertype/ToS/...)
     /// or a protocol step that rejected a decoded packet.
     pub bad_frames: std::sync::atomic::AtomicU64,
-    /// Well-formed packets this server had no protocol step or route for.
+    /// Well-formed packets this server had no protocol step or route for,
+    /// plus requests the switch deliberately shed inside a frozen
+    /// migration span (clients retransmit those after the window).
     pub dropped: std::sync::atomic::AtomicU64,
     /// Outgoing packets whose destination send failed (peer dead).
     pub send_failures: std::sync::atomic::AtomicU64,

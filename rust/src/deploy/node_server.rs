@@ -147,7 +147,7 @@ fn handle_ctrl_frame(shared: &NodeShared, out: &TcpStream, frame: &[u8]) -> bool
         Ok(CtrlMsg::Ping) => (CtrlReply::Ok, true),
         Ok(CtrlMsg::Shutdown) => {
             shared.stop.store(true, Ordering::SeqCst);
-            (CtrlReply::Ok, false)
+            (CtrlReply::Stats(shared.stats.snapshot()), false)
         }
         Ok(CtrlMsg::ExtractRange { start, end }) => {
             let mut node = shared.node.lock().expect("node poisoned");
@@ -155,6 +155,11 @@ fn handle_ctrl_frame(shared: &NodeShared, out: &TcpStream, frame: &[u8]) -> bool
         }
         Ok(CtrlMsg::IngestRange { pairs }) => {
             shared.node.lock().expect("node poisoned").ingest(pairs);
+            (CtrlReply::Ok, true)
+        }
+        Ok(CtrlMsg::DeleteRange { start, end }) => {
+            // §5.1: the migrated sub-range's old copy is removed.
+            shared.node.lock().expect("node poisoned").delete_range(start, end);
             (CtrlReply::Ok, true)
         }
         Ok(other) => (CtrlReply::Err(format!("storage nodes do not serve {other:?}")), true),

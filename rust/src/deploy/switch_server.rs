@@ -22,10 +22,11 @@ use std::sync::{Arc, Mutex};
 use anyhow::Result;
 
 use crate::config::Config;
-use crate::net::packet::Packet;
+use crate::net::packet::{Packet, Tos};
 use crate::net::topology::{Addr, SwitchRole, Topology};
 use crate::partition::Directory;
 use crate::switch::{RustLookup, Switch};
+use crate::types::{Key, OpCode};
 use crate::util::chain_violation;
 
 use super::control::{CtrlMsg, CtrlReply};
@@ -37,6 +38,10 @@ struct SwitchShared {
     /// table mutate under one lock, exactly like the single-threaded
     /// pipeline they model.
     core: Mutex<(Switch, RustLookup)>,
+    /// Key spans the controller froze for a migration window: fresh
+    /// requests matching a frozen span are dropped (the client's timeout
+    /// retransmission re-routes them through the post-migration table).
+    frozen: Mutex<Vec<(Key, Key)>>,
     topo: Topology,
     net: Netmap,
     pool: PeerPool,
@@ -75,6 +80,7 @@ pub fn spawn(
     let stats = Arc::new(ServerStats::default());
     let shared = Arc::new(SwitchShared {
         core: Mutex::new((sw, RustLookup)),
+        frozen: Mutex::new(Vec::new()),
         topo,
         net,
         pool: PeerPool::new(),
@@ -124,6 +130,13 @@ fn handle_data_frame(shared: &SwitchShared, frame: &[u8]) {
             return;
         }
     };
+    // Migration write barrier: a fresh request whose matching value falls
+    // in a frozen span is dropped before it can enter the pipeline and
+    // race the controller's extract→ingest→SetChain sequence.
+    if is_frozen(shared, &pkt) {
+        shared.stats.dropped.fetch_add(1, Ordering::Relaxed);
+        return;
+    }
     // One pipeline pass per frame; resolve emits under the lock (pure
     // lookups), send after releasing it so a slow/dead peer never stalls
     // the pipeline for other connections.
@@ -150,6 +163,30 @@ fn handle_data_frame(shared: &SwitchShared, frame: &[u8]) {
     }
 }
 
+/// Does this packet's matching-value span intersect a frozen span? Only
+/// fresh (unprocessed) requests are checked — replies and chain-headered
+/// packets never traverse the deployment switch.
+fn is_frozen(shared: &SwitchShared, pkt: &Packet) -> bool {
+    if !matches!(pkt.ipv4.tos, Tos::RangeData | Tos::HashData) {
+        return false;
+    }
+    let Some(turbo) = pkt.turbo else {
+        return false;
+    };
+    let (lo, hi) = match pkt.ipv4.tos {
+        // Hash partitioning matches on the hashedKey field (§4.2).
+        Tos::HashData => (turbo.end_key, turbo.end_key),
+        _ if turbo.op == OpCode::Range => (turbo.key, turbo.end_key),
+        _ => (turbo.key, turbo.key),
+    };
+    shared
+        .frozen
+        .lock()
+        .expect("freeze list poisoned")
+        .iter()
+        .any(|&(s, e)| lo.max(s) <= hi.min(e))
+}
+
 /// Resolve a pipeline emit to a real socket. Direct endpoint emits map
 /// straight through the netmap; emits toward another switch of the
 /// simulated hierarchy (which has no process here) resolve to the
@@ -172,7 +209,7 @@ fn handle_ctrl_frame(shared: &SwitchShared, out: &TcpStream, frame: &[u8]) -> bo
         Ok(CtrlMsg::Ping) => (CtrlReply::Ok, true),
         Ok(CtrlMsg::Shutdown) => {
             shared.stop.store(true, Ordering::SeqCst);
-            (CtrlReply::Ok, false)
+            (CtrlReply::Stats(shared.stats.snapshot()), false)
         }
         Ok(CtrlMsg::DrainCounters) => {
             let mut core = shared.core.lock().expect("switch poisoned");
@@ -181,22 +218,74 @@ fn handle_ctrl_frame(shared: &SwitchShared, out: &TcpStream, frame: &[u8]) -> bo
         }
         Ok(CtrlMsg::SetChain { idx, chain }) => {
             let mut core = shared.core.lock().expect("switch poisoned");
-            let sw = &mut core.0;
-            let reply = if idx as usize >= sw.table.len() {
-                CtrlReply::Err(format!("record {idx} out of range ({} records)", sw.table.len()))
-            } else if let Some(violation) = chain_violation(&chain) {
-                CtrlReply::Err(format!("invalid chain {chain:?}: {violation}"))
-            } else if chain.iter().any(|&r| (r as usize) >= sw.registers.num_nodes()) {
-                CtrlReply::Err(format!("chain {chain:?} names an unknown node register"))
+            (set_chain(&mut core.0, idx, chain), true)
+        }
+        Ok(CtrlMsg::SplitRecord { idx, at, chain }) => {
+            let mut core = shared.core.lock().expect("switch poisoned");
+            (split_record(&mut core.0, idx, at, chain), true)
+        }
+        Ok(CtrlMsg::SetFreeze { start, end, frozen }) => {
+            let mut spans = shared.frozen.lock().expect("freeze list poisoned");
+            if frozen {
+                if !spans.contains(&(start, end)) {
+                    spans.push((start, end));
+                }
             } else {
-                sw.table.set_chain(idx as usize, chain);
-                CtrlReply::Ok
-            };
-            (reply, true)
+                spans.retain(|&s| s != (start, end));
+            }
+            (CtrlReply::Ok, true)
         }
         Ok(other) => (CtrlReply::Err(format!("switches do not serve {other:?}")), true),
         Err(e) => (CtrlReply::Err(format!("undecodable control message: {e:#}")), true),
     };
     let sent = write_frame(&mut &*out, &reply.encode()).is_ok();
     keep_going && sent
+}
+
+/// Shared install-time validation for every chain-bearing control push:
+/// the record must exist and the chain must be well-formed over known
+/// node registers. Returns the error reply to send, if any.
+fn check_install(sw: &Switch, idx: usize, chain: &[u16]) -> Option<CtrlReply> {
+    if idx >= sw.table.len() {
+        return Some(CtrlReply::Err(format!(
+            "record {idx} out of range ({} records)",
+            sw.table.len()
+        )));
+    }
+    if let Some(violation) = chain_violation(chain) {
+        return Some(CtrlReply::Err(format!("invalid chain {chain:?}: {violation}")));
+    }
+    if chain.iter().any(|&r| (r as usize) >= sw.registers.num_nodes()) {
+        return Some(CtrlReply::Err(format!("chain {chain:?} names an unknown node register")));
+    }
+    None
+}
+
+/// Validate + install a chain rewrite (§5.1 migration / §5.2 repair).
+fn set_chain(sw: &mut Switch, idx: u32, chain: Vec<u16>) -> CtrlReply {
+    let idx = idx as usize;
+    if let Some(err) = check_install(sw, idx, &chain) {
+        return err;
+    }
+    sw.table.set_chain(idx, chain);
+    CtrlReply::Ok
+}
+
+/// Validate + install a hot-range division (§4.1.1/§5.1): split the
+/// match-action record and insert the new record's counter slot, exactly
+/// the sequence the simulator's applier performs on its switch structs.
+fn split_record(sw: &mut Switch, idx: u32, at: Key, chain: Vec<u16>) -> CtrlReply {
+    let idx = idx as usize;
+    if let Some(err) = check_install(sw, idx, &chain) {
+        return err;
+    }
+    let (start, end) = sw.table.bounds(idx);
+    if !(start < at && at <= end) {
+        return CtrlReply::Err(format!(
+            "split point {at:?} outside record {idx} [{start:?}, {end:?}]"
+        ));
+    }
+    sw.table.split(idx, at, chain);
+    sw.registers.insert_counter_slot(idx + 1);
+    CtrlReply::Ok
 }

@@ -22,6 +22,7 @@
 
 pub mod chain;
 pub mod cluster;
+pub mod control;
 pub mod deploy;
 pub mod experiments;
 pub mod config;

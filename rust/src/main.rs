@@ -61,8 +61,12 @@ Real-socket deployment (one soft switch, --cluster.racks=1):
   turbokv serve-node --node=0 [--deploy.base_port=7600] ...
   turbokv drive [--workload.ops_per_client=1700] [--deploy.timeout_ms=1000]
   turbokv harness [--threads] [--deploy.kill_node=1 --deploy.kill_after_ops=3500]
+                  [--controller.migration=true --controller.split_hot=true
+                   --workload.zipf_theta=1.2 --deploy.expect_migrations=1]
 All processes must share the same config flags; the chain headers carry the
-topology's simulated IPs, the [deploy] port map carries the bytes.
+topology's simulated IPs, the [deploy] port map carries the bytes. With
+--controller.migration the harness controller runs the full §5.1 loop live:
+hot sub-ranges are split and migrated over the control plane mid-workload.
 ";
 
 fn cmd_run(args: &Args) -> Result<()> {

@@ -93,6 +93,51 @@ fn loopback_cluster_survives_node_kill_with_chain_repair() {
 }
 
 #[test]
+fn loopback_cluster_migrates_and_splits_hot_ranges_under_skew() {
+    // The §5.1 load-balancing loop over real sockets: a zipf-1.2 workload
+    // whose (deterministic, scrambled) hot keys concentrate ~51% of the
+    // read load on one node — far above the overload threshold even with
+    // few samples per epoch, so the planner must drive at least one live
+    // migration (freeze → extract → ingest → SetChain → thaw → delete)
+    // and at least one hot-range division through the control codec,
+    // while every op — including keys read mid-migration, which the
+    // switch sheds into client retransmission during the freeze window —
+    // verifies against the oracle.
+    let mut cfg = loopback_cfg(4, 2);
+    cfg.cluster.replication = 2;
+    cfg.cluster.num_ranges = 64;
+    cfg.workload.num_keys = 160;
+    cfg.workload.ops_per_client = 400;
+    cfg.workload.write_ratio = 0.0;
+    cfg.workload.scan_ratio = 0.0;
+    cfg.workload.zipf_theta = Some(1.2);
+    cfg.controller.migration = true;
+    cfg.controller.split_hot = true;
+    cfg.controller.overload_factor = 1.2;
+    cfg.controller.max_migrations_per_epoch = 2;
+    cfg.deploy.epoch_ms = 300;
+    cfg.deploy.timeout_ms = 400;
+    cfg.deploy.expect_migrations = 1;
+
+    let report = run_threads(&cfg).expect("skewed loopback run");
+    report.gate(&cfg).expect("≥1 live migration with 100% verification");
+    assert!(
+        report.controller.migrations >= 1,
+        "hot node must shed a range over the control plane: {}",
+        report.summary()
+    );
+    assert!(
+        report.controller.splits >= 1,
+        "a ~26%-mass range (8x-mean bar: 12.5%) must divide: {}",
+        report.summary()
+    );
+    assert_eq!(report.drive.ops, 800);
+    assert_eq!(report.drive.verify_failures, 0, "no stale read survived migration");
+    assert_eq!(report.drive.gave_up, 0);
+    assert_eq!(report.servers.bad_frames, 0, "no wire corruption: {:?}", report.servers);
+}
+
+#[test]
 fn harness_shuts_down_cleanly_and_is_rerunnable() {
     // Clean-shutdown regression: a completed run must leave nothing
     // behind — all server/acceptor/connection threads joined, all

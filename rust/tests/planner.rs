@@ -1,0 +1,242 @@
+//! Properties of the pure control-plane planner (`control::plan_epoch`):
+//! determinism, key-space conservation under migration and splitting, the
+//! >4-sigma noise guard, and repair sanity. These are the guarantees both
+//! executors (simulator epoch, deployment TCP applier) lean on.
+
+use turbokv::config::ControllerConfig;
+use turbokv::control::{
+    plan_epoch, ClusterView, ControlOp, Intent, NothingReason, RustEstimator,
+};
+use turbokv::partition::Directory;
+use turbokv::types::NodeId;
+
+fn knobs() -> ControllerConfig {
+    ControllerConfig {
+        migration: true,
+        overload_factor: 1.3,
+        write_cost: 3.0,
+        max_migrations_per_epoch: 4,
+        split_hot: false,
+        ..Default::default()
+    }
+}
+
+fn view(
+    dir: &Directory,
+    read: Vec<u64>,
+    write: Vec<u64>,
+    nodes: usize,
+    failures: Vec<NodeId>,
+    knobs: ControllerConfig,
+) -> ClusterView {
+    ClusterView { dir: dir.clone(), read, write, alive: vec![true; nodes], failures, knobs }
+}
+
+/// One very hot range (node 1 is its tail in `Directory::initial(8, 4,
+/// 2)`), enough mass that the sampling-noise guard cannot bite.
+fn skewed_counters() -> (Vec<u64>, Vec<u64>) {
+    let mut read = vec![1_000u64; 8];
+    read[0] = 100_000;
+    (read, vec![0; 8])
+}
+
+#[test]
+fn same_view_same_plan() {
+    // Everything at once — repairs, hot splits, migrations — planned
+    // twice from the same view must come out identical. This is the
+    // planner's core contract: it is a pure function of the view.
+    let dir = Directory::initial(32, 4, 2);
+    let mut read = vec![1_000u64; 32];
+    read[0] = 100_000;
+    let mut k = knobs();
+    k.split_hot = true;
+    let mk = || view(&dir, read.clone(), vec![50; 32], 4, vec![2], k.clone());
+    let a = plan_epoch(mk(), &mut RustEstimator);
+    let b = plan_epoch(mk(), &mut RustEstimator);
+    assert_eq!(a, b, "identical views must yield identical plans");
+    assert!(a.repairs() > 0 && a.splits() > 0 && a.migrations() > 0, "{a:?}");
+}
+
+#[test]
+fn migration_conserves_key_space() {
+    let dir = Directory::initial(8, 4, 2);
+    let (read, write) = skewed_counters();
+    let plan = plan_epoch(view(&dir, read, write, 4, vec![], knobs()), &mut RustEstimator);
+    assert!(plan.migrations() >= 1, "hot tail must trigger migration: {plan:?}");
+
+    // Every migration action carries exactly copy → delete-old → rewrite,
+    // moving data off the node the rewrite removes.
+    for action in &plan.actions {
+        if let Intent::Migrate { idx, from, to } = action.intent {
+            match &action.ops[..] {
+                [ControlOp::CopyRange { from: cf, to: ct, span },
+                 ControlOp::DeleteRange { node, span: dspan },
+                 ControlOp::SetChain { idx: si, chain }] => {
+                    assert_eq!((*cf, *ct), (from, to));
+                    assert_eq!(*node, from);
+                    assert_eq!(span, dspan);
+                    assert_eq!(*si, idx);
+                    assert!(chain.contains(&to) && !chain.contains(&from));
+                }
+                other => panic!("unexpected migration op shape: {other:?}"),
+            }
+        }
+    }
+
+    // Replaying the routing ops onto the directory must leave the
+    // key-space partition intact: same record count, full coverage,
+    // sorted starts, valid chains of unchanged length.
+    let mut replay = dir.clone();
+    for op in plan.ops() {
+        op.apply_to_directory(&mut replay);
+    }
+    replay.check_invariants().expect("plan preserved the partition");
+    assert_eq!(replay.len(), dir.len(), "migration neither adds nor drops ranges");
+    for i in 0..replay.len() {
+        assert_eq!(replay.bounds(i), dir.bounds(i), "range {i} bounds moved");
+        assert_eq!(replay.chain(i).len(), 2, "range {i} replication factor changed");
+    }
+}
+
+#[test]
+fn uniform_load_under_noise_guard_yields_empty_plan() {
+    // Mild imbalance on a small sample: the >4-sigma guard must keep the
+    // planner from migrating on noise.
+    let dir = Directory::initial(8, 4, 2);
+    let read = vec![30, 31, 29, 30, 28, 32, 30, 30];
+    let plan =
+        plan_epoch(view(&dir, read, vec![0; 8], 4, vec![], knobs()), &mut RustEstimator);
+    assert!(!plan.has_effects(), "noise must not move data: {plan:?}");
+    assert!(
+        plan.actions.iter().any(|a| a.ops.contains(&ControlOp::Nothing {
+            reason: NothingReason::NoOverload
+        })),
+        "the inaction carries its reason: {plan:?}"
+    );
+    assert!(plan.load.is_some(), "the estimate itself is still computed");
+
+    // No traffic at all is its own reason.
+    let plan =
+        plan_epoch(view(&dir, vec![0; 8], vec![0; 8], 4, vec![], knobs()), &mut RustEstimator);
+    assert!(!plan.has_effects());
+    assert!(plan.actions.iter().any(|a| a.ops.contains(&ControlOp::Nothing {
+        reason: NothingReason::NoTraffic
+    })));
+}
+
+#[test]
+fn migration_disabled_is_an_explicit_noop() {
+    let dir = Directory::initial(8, 4, 2);
+    let (read, write) = skewed_counters();
+    let mut k = knobs();
+    k.migration = false;
+    let plan = plan_epoch(view(&dir, read, write, 4, vec![], k), &mut RustEstimator);
+    assert!(!plan.has_effects(), "{plan:?}");
+    assert_eq!(plan.load, None, "no estimate is computed when balancing is off");
+    assert!(plan.actions.iter().any(|a| a.ops.contains(&ControlOp::Nothing {
+        reason: NothingReason::MigrationDisabled
+    })));
+}
+
+#[test]
+fn repair_plans_never_select_a_failed_node() {
+    for failures in [vec![1usize], vec![0, 2], vec![3, 1]] {
+        let dir = Directory::initial(8, 5, 3);
+        let plan = plan_epoch(
+            view(&dir, vec![0; 8], vec![0; 8], 5, failures.clone(), knobs()),
+            &mut RustEstimator,
+        );
+        assert!(plan.repairs() > 0, "failures {failures:?} must be repaired");
+        // No op may route to, copy from, or copy onto a failed node once
+        // that node's failure has been processed; replaying the whole
+        // plan proves the end state excludes every failed node.
+        let mut replay = dir.clone();
+        for op in plan.ops() {
+            op.apply_to_directory(&mut replay);
+        }
+        replay.check_invariants().unwrap();
+        for i in 0..replay.len() {
+            for f in &failures {
+                assert!(
+                    !replay.chain(i).contains(f),
+                    "range {i} still routed to failed node {f}: {:?}",
+                    replay.chain(i)
+                );
+            }
+        }
+        // Copies attached to the *last* failure's repairs can never name
+        // any failed node (earlier failures are already dead, the last is
+        // dead at its own turn).
+        let last = *failures.last().unwrap();
+        for action in &plan.actions {
+            let Intent::Repair { failed, .. } = action.intent else { continue };
+            if failed != last {
+                continue;
+            }
+            for op in &action.ops {
+                if let ControlOp::CopyRange { from, to, .. } = op {
+                    assert!(!failures.contains(from), "copy source {from} is dead");
+                    assert!(!failures.contains(to), "copy target {to} is dead");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn repair_restores_replication_factor_when_spare_exists() {
+    // 4 nodes, r=3, one failure: the single node outside each chain is
+    // the only legal replacement, and the new tail needs the data copy.
+    let dir = Directory::initial(8, 4, 3);
+    let plan = plan_epoch(
+        view(&dir, vec![0; 8], vec![0; 8], 4, vec![1], knobs()),
+        &mut RustEstimator,
+    );
+    assert_eq!(plan.repairs(), dir.ranges_of_node(1).len() as u64);
+    for action in &plan.actions {
+        let Intent::Repair { failed, .. } = action.intent else { continue };
+        assert_eq!(failed, 1);
+        let set = action.ops.iter().find_map(|op| match op {
+            ControlOp::SetChain { chain, .. } => Some(chain.clone()),
+            _ => None,
+        });
+        let chain = set.expect("every repair rewrites the chain");
+        assert_eq!(chain.len(), 3, "replication factor restored");
+        assert!(!chain.contains(&1));
+        let copy = action.ops.iter().find_map(|op| match op {
+            ControlOp::CopyRange { from, to, .. } => Some((*from, *to)),
+            _ => None,
+        });
+        let (from, to) = copy.expect("the appended tail needs the sub-range data");
+        assert_ne!(from, 1);
+        assert_eq!(Some(&to), chain.last(), "copy lands on the new tail");
+    }
+}
+
+#[test]
+fn hot_splits_are_prefix_aligned_and_preserve_coverage() {
+    let dir = Directory::initial(32, 4, 2);
+    let mut read = vec![1_000u64; 32];
+    read[0] = 100_000;
+    let mut k = knobs();
+    k.split_hot = true;
+    let plan = plan_epoch(view(&dir, read, vec![0; 32], 4, vec![], k), &mut RustEstimator);
+    assert!(plan.splits() >= 1, "a 25x-mean range must divide: {plan:?}");
+    // Divisions may cascade (the still-hot half re-splits), but every
+    // split point stays inside the hot range's original span, stays
+    // prefix-aligned (the XLA-exactness invariant), and keeps the chain.
+    let (start, end) = dir.bounds(0);
+    for op in plan.ops() {
+        if let ControlOp::SplitRecord { at, chain, .. } = op {
+            assert!(at.is_prefix_aligned(), "XLA-exactness invariant: {at:?}");
+            assert!(*at > start && *at <= end, "split point left the hot span: {at:?}");
+            assert_eq!(chain, dir.chain(0), "both halves keep the original chain");
+        }
+    }
+    let mut replay = dir.clone();
+    for op in plan.ops() {
+        op.apply_to_directory(&mut replay);
+    }
+    replay.check_invariants().unwrap();
+    assert_eq!(replay.len(), dir.len() + plan.splits() as usize);
+}
