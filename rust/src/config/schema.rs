@@ -245,6 +245,22 @@ pub struct DeployConfig {
     pub timeout_ms: u64,
     /// Attempts before the driver abandons an operation.
     pub max_retries: u32,
+    /// Event-loop shards per server data port (acceptor/worker threads,
+    /// each owning its own connection table).
+    pub shards: usize,
+    /// Requests each drive client keeps in flight. Closed-loop window
+    /// when `rate_ops` is 0; `1` reproduces the one-outstanding client.
+    pub pipeline: usize,
+    /// Open-loop arrival rate per client, ops/second. `0` = closed loop.
+    /// Latency under a schedule is measured from the *intended* send
+    /// time (coordinated-omission-safe).
+    pub rate_ops: u64,
+    /// Harness gate: fail the run if the measured-phase throughput
+    /// (ops/second, all clients) lands below this floor. `0` = no gate.
+    pub min_throughput: u64,
+    /// Where `drive` writes its machine-readable JSON run report
+    /// (`turbokv-loadgen-v1`); empty = no report file.
+    pub report_path: String,
     /// Node the harness kills mid-run; negative = no induced failure.
     pub kill_node: i64,
     /// Switch-observed operations before the kill fires.
@@ -262,6 +278,11 @@ impl Default for DeployConfig {
             epoch_ms: 250,
             timeout_ms: 1_000,
             max_retries: 80,
+            shards: 2,
+            pipeline: 4,
+            rate_ops: 0,
+            min_throughput: 0,
+            report_path: String::new(),
             kill_node: -1,
             kill_after_ops: 0,
             expect_migrations: 0,
@@ -382,6 +403,14 @@ impl Config {
         ovr!(doc, "deploy.epoch_ms", self.deploy.epoch_ms, int);
         ovr!(doc, "deploy.timeout_ms", self.deploy.timeout_ms, int);
         ovr!(doc, "deploy.max_retries", self.deploy.max_retries, int);
+        ovr!(doc, "deploy.shards", self.deploy.shards, int);
+        ovr!(doc, "deploy.pipeline", self.deploy.pipeline, int);
+        ovr!(doc, "deploy.rate_ops", self.deploy.rate_ops, int);
+        ovr!(doc, "deploy.min_throughput", self.deploy.min_throughput, int);
+        if let Some(v) = doc.get("deploy.report_path") {
+            self.deploy.report_path =
+                v.as_str().context("deploy.report_path must be a string")?.to_string();
+        }
         ovr!(doc, "deploy.kill_node", self.deploy.kill_node, int);
         ovr!(doc, "deploy.kill_after_ops", self.deploy.kill_after_ops, int);
         ovr!(doc, "deploy.expect_migrations", self.deploy.expect_migrations, int);
@@ -471,6 +500,12 @@ impl Config {
         if self.deploy.max_retries == 0 {
             bail!("deploy.max_retries must be ≥ 1");
         }
+        if self.deploy.shards == 0 {
+            bail!("deploy.shards must be ≥ 1 (each data port needs a worker shard)");
+        }
+        if self.deploy.pipeline == 0 {
+            bail!("deploy.pipeline must be ≥ 1 (1 = one outstanding request)");
+        }
         Ok(())
     }
 }
@@ -542,6 +577,11 @@ mod tests {
         assert!(Config::from_str("[deploy]\ntimeout_ms = 100").is_err());
         assert!(Config::from_str("[deploy]\nepoch_ms = 50\ntimeout_ms = 200").is_ok());
         assert!(Config::from_str("[deploy]\nmax_retries = 0").is_err());
+        // The runtime shape knobs must describe at least one worker / one
+        // outstanding request.
+        assert!(Config::from_str("[deploy]\nshards = 0").is_err());
+        assert!(Config::from_str("[deploy]\npipeline = 0").is_err());
+        assert!(Config::from_str("[deploy]\nshards = 4\npipeline = 1").is_ok());
         // Hash partitioning + scans is rejected here, not ad hoc in the
         // cluster builder and the deployment validator.
         let err = Config::from_str(
@@ -563,6 +603,11 @@ mod tests {
             epoch_ms = 100
             timeout_ms = 500
             max_retries = 12
+            shards = 3
+            pipeline = 8
+            rate_ops = 2500
+            min_throughput = 1500
+            report_path = "out/drive.json"
             kill_node = 1
             kill_after_ops = 4000
             expect_migrations = 2
@@ -574,12 +619,22 @@ mod tests {
         assert_eq!(cfg.deploy.epoch_ms, 100);
         assert_eq!(cfg.deploy.timeout_ms, 500);
         assert_eq!(cfg.deploy.max_retries, 12);
+        assert_eq!(cfg.deploy.shards, 3);
+        assert_eq!(cfg.deploy.pipeline, 8);
+        assert_eq!(cfg.deploy.rate_ops, 2500);
+        assert_eq!(cfg.deploy.min_throughput, 1500);
+        assert_eq!(cfg.deploy.report_path, "out/drive.json");
         assert_eq!(cfg.deploy.kill_node, 1);
         assert_eq!(cfg.deploy.kill_after_ops, 4000);
         assert_eq!(cfg.deploy.expect_migrations, 2);
         // Defaults hold when the section is absent.
         let cfg = Config::default();
         assert_eq!(cfg.deploy.base_port, 7600);
+        assert_eq!(cfg.deploy.shards, 2);
+        assert_eq!(cfg.deploy.pipeline, 4);
+        assert_eq!(cfg.deploy.rate_ops, 0, "closed loop by default");
+        assert_eq!(cfg.deploy.min_throughput, 0);
+        assert!(cfg.deploy.report_path.is_empty());
         assert_eq!(cfg.deploy.kill_node, -1);
         assert_eq!(cfg.deploy.expect_migrations, 0);
     }

@@ -17,7 +17,7 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::store::blob::{get_bytes, get_uvarint, put_bytes, put_uvarint};
 use crate::types::{Key, Value};
 
-use super::transport::{read_frame_deadline, write_frame, FrameReader};
+use super::transport::{configure_stream, read_frame_deadline, write_frame, FrameReader};
 use super::ServerStatsSnapshot;
 
 /// A controller → server request.
@@ -271,10 +271,9 @@ impl CtrlReply {
 pub fn ctrl_call(addr: SocketAddr, msg: &CtrlMsg, timeout: Duration) -> Result<CtrlReply> {
     let mut stream = TcpStream::connect_timeout(&addr, timeout)
         .with_context(|| format!("connecting control socket {addr}"))?;
-    stream.set_nodelay(true).ok();
     // Short socket timeout + overall deadline: the reader polls, so a
     // slow-but-alive peer gets the full window.
-    stream.set_read_timeout(Some(Duration::from_millis(50))).ok();
+    configure_stream(&stream, true, Some(Duration::from_millis(50)));
     write_frame(&mut stream, &msg.encode())
         .with_context(|| format!("sending control message to {addr}"))?;
     let deadline = Instant::now() + timeout;

@@ -36,9 +36,9 @@ use crate::partition::Directory;
 use crate::types::{Key, NodeId, Value};
 
 use super::control::{ctrl_call, CtrlMsg, CtrlReply};
-use super::driver::DriveReport;
+use super::loadgen::DriveReport;
 use super::{
-    driver, node_server, switch_server, validate_deploy, Netmap, ServerHandle,
+    loadgen, node_server, switch_server, validate_deploy, Netmap, ServerHandle,
     ServerStatsSnapshot,
 };
 
@@ -100,6 +100,15 @@ impl LoopbackReport {
             if self.controller.repairs == 0 {
                 bail!("node {} was killed but no chain was repaired", cfg.deploy.kill_node);
             }
+        }
+        if cfg.deploy.min_throughput > 0 && self.drive.throughput_ops < cfg.deploy.min_throughput {
+            bail!(
+                "measured throughput {} ops/s is below the deploy.min_throughput floor {} \
+                 ({})",
+                self.drive.throughput_ops,
+                cfg.deploy.min_throughput,
+                self.drive.summary_line()
+            );
         }
         if self.controller.migrations < cfg.deploy.expect_migrations {
             bail!(
@@ -677,7 +686,7 @@ pub fn run_threads(cfg: &Config) -> Result<LoopbackReport> {
             .expect("spawn controller")
     };
 
-    let drive = driver::run(cfg, &net, client_listeners);
+    let drive = loadgen::run(cfg, &net, client_listeners);
 
     ctl_stop.store(true, Ordering::SeqCst);
     let controller = controller.join().unwrap_or_default();
@@ -685,7 +694,11 @@ pub fn run_threads(cfg: &Config) -> Result<LoopbackReport> {
     for h in node_handles {
         servers.absorb(h.shutdown());
     }
-    Ok(LoopbackReport { drive: drive?, controller, servers })
+    let drive = drive?;
+    if !cfg.deploy.report_path.is_empty() {
+        loadgen::write_report(&drive, cfg, &cfg.deploy.report_path)?;
+    }
+    Ok(LoopbackReport { drive, controller, servers })
 }
 
 /// Process mode: spawn serve-switch / serve-node / drive as children of
@@ -790,24 +803,75 @@ fn with_args(passthrough: &[String], head: &[String]) -> Vec<String> {
 }
 
 /// Recover the drive child's [`DriveReport`] counters from its
-/// `deploy: ops=... load_ops=...` summary line (the `metrics` histograms
-/// stay with the child — it already printed them above).
+/// `deploy: ops=... load_ops=...` summary line (the histograms stay with
+/// the child — it already printed their percentiles in the same line and
+/// wrote the JSON report when one was configured). Tokens this version
+/// does not know — including the per-op percentile tokens and whatever a
+/// future drive adds — are skipped, not errors: the gate needs only the
+/// counters below.
 fn parse_drive_summary(stdout: &str) -> Option<DriveReport> {
     let line = stdout.lines().find(|l| l.starts_with("deploy: "))?;
     let mut report = DriveReport::default();
     for token in line.trim_start_matches("deploy: ").split_whitespace() {
-        let (key, value) = token.split_once('=')?;
-        let value: u64 = value.parse().ok()?;
+        let Some((key, value)) = token.split_once('=') else {
+            continue;
+        };
+        let Ok(value) = value.parse::<u64>() else {
+            continue;
+        };
         match key {
             "ops" => report.ops = value,
             "load_ops" => report.load_ops = value,
             "retries" => report.retries = value,
             "gave_up" => report.gave_up = value,
             "verify_failures" => report.verify_failures = value,
+            "throughput_ops" => report.throughput_ops = value,
+            "elapsed_ms" => report.elapsed_ms = value,
             _ => {}
         }
     }
     Some(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drive_summary_parser_skips_tokens_it_does_not_know() {
+        let stdout = "noise\ndeploy: ops=100 load_ops=50 retries=2 gave_up=0 \
+                      verify_failures=0 throughput_ops=4321 elapsed_ms=23 \
+                      get_p50_us=210 get_p99_us=900 get_p999_us=1500 \
+                      future_token=7 weird=x=y not_a_pair\ntrailer\n";
+        let report = parse_drive_summary(stdout).expect("line parses");
+        assert_eq!(report.ops, 100);
+        assert_eq!(report.load_ops, 50);
+        assert_eq!(report.retries, 2);
+        assert_eq!(report.throughput_ops, 4321);
+        assert_eq!(report.elapsed_ms, 23);
+        assert!(report.clean());
+        assert!(parse_drive_summary("no summary here\n").is_none());
+    }
+
+    #[test]
+    fn throughput_floor_gates_the_run() {
+        let mut cfg = Config::default();
+        cfg.cluster.racks = 1;
+        cfg.cluster.nodes_per_rack = 3;
+        cfg.workload.ops_per_client = 25;
+        cfg.deploy.min_throughput = 1_000;
+        let mut report = LoopbackReport {
+            drive: DriveReport::default(),
+            controller: ControllerReport::default(),
+            servers: ServerStatsSnapshot::default(),
+        };
+        report.drive.ops = cfg.cluster.clients as u64 * cfg.workload.ops_per_client;
+        report.drive.throughput_ops = 999;
+        let err = report.gate(&cfg).unwrap_err();
+        assert!(format!("{err:#}").contains("min_throughput"), "{err:#}");
+        report.drive.throughput_ops = 1_000;
+        report.gate(&cfg).unwrap();
+    }
 }
 
 /// Wait until the switch and every node answer control pings.

@@ -4,16 +4,26 @@
 //!
 //! Module map:
 //!
-//! * [`transport`] — length-prefixed framed transport (blocking
-//!   `std::net`, one thread per connection, no new dependencies).
+//! * [`transport`] — length-prefixed framed transport: resumable
+//!   [`transport::FrameReader`]/[`transport::FrameWriter`] over
+//!   nonblocking `std::net` sockets, no new dependencies.
+//! * [`shard`] — the sharded nonblocking event loop every server runs on:
+//!   N acceptor/worker shards, each owning a slab-indexed connection
+//!   table (poll → drain frames → process batch → flush write buffers).
 //! * [`control`] — controller ⇄ server control-plane codec (counters,
 //!   chain updates, repair copies, liveness, shutdown).
 //! * [`node_server`] — `serve-node`: `store::StorageNode` behind the
-//!   shared chain-replication step (`cluster::node_actor`).
+//!   shared chain-replication step (`cluster::node_actor`), as a
+//!   per-shard state machine.
 //! * [`switch_server`] — `serve-switch`: `switch::Switch` (match-action
-//!   table + registers + counter-drain endpoint) as a userspace forwarder.
-//! * [`driver`] — `drive`: `workload::Generator` against the cluster with
-//!   100% value verification, printing the simulator's report shapes.
+//!   table + registers + counter-drain endpoint) as a userspace forwarder,
+//!   batching each shard pass through one `process_batch` call.
+//! * [`pool`] — the client-side connection pool: multiple pipelined
+//!   in-flight requests per socket, reconnect on failure.
+//! * [`loadgen`] — `drive`: `workload::Generator` against the cluster
+//!   with 100% value verification, as an open-loop (fixed arrival
+//!   schedule, coordinated-omission-safe latency) or closed-loop
+//!   pipelined generator with per-op-type histograms.
 //! * [`harness`] — boots the whole topology in-process-per-thread (tests)
 //!   or as child processes (CI), plus the controller epoch loop.
 //!
@@ -32,17 +42,17 @@
 //! that index to the real TCP listener.
 
 pub mod control;
-pub mod driver;
 pub mod harness;
+pub mod loadgen;
 pub mod node_server;
+pub mod pool;
+pub mod shard;
 pub mod switch_server;
 pub mod transport;
 
-use std::collections::HashMap;
-use std::io;
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::SocketAddr;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::Duration;
 
@@ -52,17 +62,8 @@ use crate::config::{Config, Coordination};
 use crate::net::packet::Ip;
 use crate::net::topology::{Addr, Topology};
 
-use transport::{FrameEvent, FrameReader};
-
-/// Read-timeout used by connection threads so they can observe shutdown.
-pub(crate) const POLL_READ_TIMEOUT: Duration = Duration::from_millis(100);
-/// Accept-poll interval for listener threads.
-pub(crate) const ACCEPT_POLL: Duration = Duration::from_millis(20);
 /// Outbound connect timeout for data-plane sends.
 pub(crate) const CONNECT_TIMEOUT: Duration = Duration::from_millis(1_000);
-/// Outbound write timeout: a peer that stops reading long enough to fill
-/// its socket buffer counts as dead (the stream is evicted).
-pub(crate) const WRITE_TIMEOUT: Duration = Duration::from_millis(2_000);
 
 /// Reject configs the single-soft-switch loopback deployment cannot run.
 /// The generic knob validation (including the shared `[controller]`
@@ -169,67 +170,6 @@ impl Netmap {
     }
 }
 
-/// Cached outbound connections, one per destination. Writes serialize
-/// per destination (frames to one peer never interleave) without a
-/// global write lock: the map mutex is held only for lookups/inserts, so
-/// a dead or stalled peer slows *its* packets, not the whole data plane.
-/// A failed send evicts the cached stream (the next send reconnects);
-/// the caller decides whether the drop matters — the data plane drops
-/// like a switch would, the control plane surfaces it.
-pub struct PeerPool {
-    conns: Mutex<HashMap<SocketAddr, Arc<Mutex<TcpStream>>>>,
-}
-
-impl Default for PeerPool {
-    fn default() -> Self {
-        PeerPool::new()
-    }
-}
-
-impl PeerPool {
-    pub fn new() -> PeerPool {
-        PeerPool { conns: Mutex::new(HashMap::new()) }
-    }
-
-    /// Send one frame to `addr`, connecting (and caching) on first use.
-    pub fn send(&self, addr: SocketAddr, frame: &[u8]) -> io::Result<()> {
-        let cached = self.conns.lock().expect("peer pool poisoned").get(&addr).cloned();
-        let stream = match cached {
-            Some(s) => s,
-            None => {
-                // Connect without holding the map lock; if another sender
-                // raced us here, the first insert wins and the loser's
-                // socket just drops.
-                let s = TcpStream::connect_timeout(&addr, CONNECT_TIMEOUT)?;
-                s.set_nodelay(true).ok();
-                s.set_write_timeout(Some(WRITE_TIMEOUT)).ok();
-                let fresh = Arc::new(Mutex::new(s));
-                self.conns
-                    .lock()
-                    .expect("peer pool poisoned")
-                    .entry(addr)
-                    .or_insert(fresh)
-                    .clone()
-            }
-        };
-        let res = {
-            let mut s = stream.lock().expect("peer stream poisoned");
-            transport::write_frame(&mut *s, frame)
-        };
-        if res.is_err() {
-            // A timed-out partial write also lands here: the stream's
-            // framing is unrecoverable, so evict and reconnect next send.
-            self.conns.lock().expect("peer pool poisoned").remove(&addr);
-        }
-        res
-    }
-
-    /// Drop every cached connection (shutdown hygiene).
-    pub fn clear(&self) {
-        self.conns.lock().expect("peer pool poisoned").clear();
-    }
-}
-
 /// Observability counters every deploy server keeps, readable through
 /// [`ServerHandle::stats`] — the harness folds them into its report and
 /// the loopback tests assert on them.
@@ -315,80 +255,6 @@ impl ServerHandle {
             t.join().ok();
         }
         self.stats.snapshot()
-    }
-}
-
-/// Accept loop: polls a nonblocking listener until `stop`, handing each
-/// connection (switched back to blocking with a short read timeout) to a
-/// `handler` thread. Joins its connection threads before returning, so a
-/// server's shutdown is complete when its accept threads are joined.
-pub(crate) fn spawn_accept_loop(
-    name: String,
-    listener: TcpListener,
-    stop: Arc<AtomicBool>,
-    handler: Arc<dyn Fn(TcpStream) + Send + Sync>,
-) -> JoinHandle<()> {
-    std::thread::Builder::new()
-        .name(name.clone())
-        .spawn(move || {
-            if listener.set_nonblocking(true).is_err() {
-                return;
-            }
-            let mut conns: Vec<JoinHandle<()>> = Vec::new();
-            while !stop.load(Ordering::SeqCst) {
-                // Long-lived servers see endless short control
-                // connections; shed finished handles instead of hoarding
-                // them until shutdown.
-                conns.retain(|t| !t.is_finished());
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        stream.set_nonblocking(false).ok();
-                        stream.set_read_timeout(Some(POLL_READ_TIMEOUT)).ok();
-                        stream.set_nodelay(true).ok();
-                        let h = handler.clone();
-                        if let Ok(t) = std::thread::Builder::new()
-                            .name(format!("{name}-conn"))
-                            .spawn(move || h(stream))
-                        {
-                            conns.push(t);
-                        }
-                    }
-                    Err(e) if transport::is_would_block(&e) => {
-                        std::thread::sleep(ACCEPT_POLL);
-                    }
-                    Err(_) => break,
-                }
-            }
-            for t in conns {
-                t.join().ok();
-            }
-        })
-        .expect("spawn accept loop")
-}
-
-/// Per-connection frame loop: deliver each complete frame to `on_frame`
-/// (which may write replies back through the same stream) until EOF,
-/// error, stop, or `on_frame` returns `false`.
-pub(crate) fn serve_frames(
-    stream: TcpStream,
-    stop: &AtomicBool,
-    mut on_frame: impl FnMut(&TcpStream, Vec<u8>) -> bool,
-) {
-    let mut reader = FrameReader::new();
-    let mut src = &stream;
-    loop {
-        if stop.load(Ordering::SeqCst) {
-            return;
-        }
-        match reader.poll(&mut src) {
-            Ok(FrameEvent::Frame(frame)) => {
-                if !on_frame(&stream, frame) {
-                    return;
-                }
-            }
-            Ok(FrameEvent::Pending) => continue,
-            Ok(FrameEvent::Eof) | Err(_) => return,
-        }
     }
 }
 

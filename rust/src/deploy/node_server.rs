@@ -8,8 +8,23 @@
 //! the client IP at the header's end. The control port serves the
 //! controller: liveness pings, repair data copies (extract/ingest), and
 //! clean shutdown.
+//!
+//! Both ports run on the sharded event loop ([`super::shard`]): data
+//! frames accumulate per shard pass and run through the store under one
+//! lock acquisition per pass; control connections get one single-shard
+//! loop (the controller's RPCs are sparse and strictly request/reply).
+//!
+//! Reply correlation for the pipelined client pool: the shared
+//! `build_reply_packet` leaves Get/Put/Del tail replies without a TurboKV
+//! header (the simulator's one-outstanding-request clients never needed
+//! one; only scan replies carry their covered interval). A pipelined
+//! client does need to know *which* in-flight op a reply answers, and the
+//! wire format cannot change — so the deployment tail echoes the
+//! request's own TurboKV header onto the reply here, the exact shape scan
+//! replies already use (TurboKV ethertype + normal ToS + turbo header).
+//! The simulator's packet paths are untouched.
 
-use std::net::{TcpListener, TcpStream};
+use std::net::TcpListener;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -17,20 +32,19 @@ use anyhow::Result;
 
 use crate::cluster::node_actor::chain_step_packet;
 use crate::config::{Config, Partitioning};
-use crate::net::packet::{Packet, Tos};
+use crate::net::packet::{Packet, Tos, ETHERTYPE_TURBOKV};
 use crate::net::topology::Topology;
 use crate::store::{Engine as StoreEngine, LsmOptions, StorageNode};
 use crate::types::NodeId;
 
 use super::control::{CtrlMsg, CtrlReply};
-use super::transport::write_frame;
-use super::{serve_frames, spawn_accept_loop, Netmap, PeerPool, ServerHandle, ServerStats};
+use super::shard::{spawn_shards, ConnId, ShardHandler, ShardIo};
+use super::{Netmap, ServerHandle, ServerStats};
 
 struct NodeShared {
     node: Mutex<StorageNode>,
     topo: Topology,
     net: Netmap,
-    pool: PeerPool,
     stop: Arc<AtomicBool>,
     stats: Arc<ServerStats>,
 }
@@ -48,7 +62,7 @@ pub fn build_store(cfg: &Config, node_id: NodeId) -> StorageNode {
     StorageNode::new(node_id, engine)
 }
 
-/// Spawn the node's data + control accept loops on the given pre-bound
+/// Spawn the node's data + control shard loops on the given pre-bound
 /// listeners. Returns once the threads are running; the handle's `wait`
 /// blocks until a control-plane `Shutdown` (or `shutdown()` is called).
 pub fn spawn(
@@ -64,107 +78,136 @@ pub fn spawn(
         node: Mutex::new(build_store(cfg, node_id)),
         topo: Topology::build(&cfg.cluster),
         net,
-        pool: PeerPool::new(),
         stop: stop.clone(),
         stats: stats.clone(),
     });
 
-    let data = {
+    let mut threads = {
         let shared = shared.clone();
-        let stop = stop.clone();
-        spawn_accept_loop(
-            format!("node{node_id}-data"),
+        spawn_shards(
+            &format!("node{node_id}-data"),
             data_listener,
+            cfg.deploy.shards,
             stop.clone(),
-            Arc::new(move |stream: TcpStream| {
-                let shared = shared.clone();
-                serve_frames(stream, &stop, move |_out, frame| {
-                    handle_data_frame(&shared, &frame);
-                    true
-                });
-            }),
-        )
+            stats.clone(),
+            move |_| Box::new(NodeData { shared: shared.clone(), batch: Vec::new() }),
+        )?
     };
-    let ctrl = {
-        let shared = shared.clone();
-        let stop = stop.clone();
-        spawn_accept_loop(
-            format!("node{node_id}-ctrl"),
-            ctrl_listener,
-            stop.clone(),
-            Arc::new(move |stream: TcpStream| {
-                let shared = shared.clone();
-                serve_frames(stream, &stop, move |out, frame| {
-                    handle_ctrl_frame(&shared, out, &frame)
-                });
-            }),
-        )
-    };
-    Ok(ServerHandle::new(stop, stats, vec![data, ctrl]))
+    threads.extend(spawn_shards(
+        &format!("node{node_id}-ctrl"),
+        ctrl_listener,
+        1,
+        stop.clone(),
+        stats.clone(),
+        move |_| Box::new(NodeCtrl { shared: shared.clone() }),
+    )?);
+    Ok(ServerHandle::new(stop, stats, threads))
 }
 
-fn handle_data_frame(shared: &NodeShared, frame: &[u8]) {
-    let pkt = match Packet::decode(frame) {
-        Ok(pkt) => pkt,
-        Err(_) => {
-            shared.stats.bad_frames.fetch_add(1, Ordering::Relaxed);
+/// Data-plane shard state: decoded packets accumulate across the pass and
+/// run through the chain step in one batch at the pass end.
+struct NodeData {
+    shared: Arc<NodeShared>,
+    batch: Vec<Packet>,
+}
+
+impl ShardHandler for NodeData {
+    fn on_frame(&mut self, _io: &mut ShardIo, _conn: ConnId, frame: Vec<u8>) -> bool {
+        match Packet::decode(&frame) {
+            // Same admission rules as the simulator's in-switch node
+            // strategy: a chain-headered packet runs the protocol step;
+            // anything else is a stray and drops (a baseline-shaped
+            // request cannot reach a deployed node — there is no
+            // directory replica here to serve it with).
+            Ok(pkt) if pkt.ipv4.tos == Tos::Processed && pkt.turbo.is_some() => {
+                self.batch.push(pkt);
+            }
+            Ok(_) => {
+                self.shared.stats.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(_) => {
+                self.shared.stats.bad_frames.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        true
+    }
+
+    fn on_pass_end(&mut self, io: &mut ShardIo) {
+        if self.batch.is_empty() {
             return;
         }
-    };
-    // Same admission rules as the simulator's in-switch node strategy: a
-    // chain-headered packet runs the protocol step; anything else is a
-    // stray and drops (a baseline-shaped request cannot reach a deployed
-    // node — there is no directory replica here to serve it with).
-    if pkt.ipv4.tos != Tos::Processed || pkt.turbo.is_none() {
-        shared.stats.dropped.fetch_add(1, Ordering::Relaxed);
-        return;
-    }
-    let out = {
-        let mut node = shared.node.lock().expect("node poisoned");
-        let node_ip = shared.topo.node_ip(node.id);
-        match chain_step_packet(&mut node, node_ip, pkt) {
-            Ok(out) => out,
-            Err(_) => {
-                shared.stats.bad_frames.fetch_add(1, Ordering::Relaxed);
-                return;
+        let shared = &self.shared;
+        let outs: Vec<Packet> = {
+            let mut node = shared.node.lock().expect("node poisoned");
+            let node_ip = shared.topo.node_ip(node.id);
+            self.batch
+                .drain(..)
+                .filter_map(|pkt| {
+                    let req_turbo = pkt.turbo;
+                    match chain_step_packet(&mut node, node_ip, pkt) {
+                        Ok(mut out) => {
+                            // Deployment-only reply correlation: a tail
+                            // reply without a TurboKV header (Get/Put/Del)
+                            // gets the request's header echoed on, so the
+                            // pipelined client can match it to the right
+                            // in-flight op. Forwards keep their header and
+                            // are untouched.
+                            if out.turbo.is_none() {
+                                out.turbo = req_turbo;
+                                out.eth.ethertype = ETHERTYPE_TURBOKV;
+                            }
+                            Some(out)
+                        }
+                        Err(_) => {
+                            shared.stats.bad_frames.fetch_add(1, Ordering::Relaxed);
+                            None
+                        }
+                    }
+                })
+                .collect()
+        };
+        for out in outs {
+            match shared.net.endpoint_addr(&shared.topo, out.ipv4.dst) {
+                Some(addr) => io.send_to(addr, out.encode()),
+                None => {
+                    shared.stats.dropped.fetch_add(1, Ordering::Relaxed);
+                }
             }
-        }
-    };
-    match shared.net.endpoint_addr(&shared.topo, out.ipv4.dst) {
-        Some(addr) => {
-            if shared.pool.send(addr, &out.encode()).is_err() {
-                shared.stats.send_failures.fetch_add(1, Ordering::Relaxed);
-            }
-        }
-        None => {
-            shared.stats.dropped.fetch_add(1, Ordering::Relaxed);
         }
     }
 }
 
-fn handle_ctrl_frame(shared: &NodeShared, out: &TcpStream, frame: &[u8]) -> bool {
-    let (reply, keep_going) = match CtrlMsg::decode(frame) {
-        Ok(CtrlMsg::Ping) => (CtrlReply::Ok, true),
-        Ok(CtrlMsg::Shutdown) => {
-            shared.stop.store(true, Ordering::SeqCst);
-            (CtrlReply::Stats(shared.stats.snapshot()), false)
-        }
-        Ok(CtrlMsg::ExtractRange { start, end }) => {
-            let mut node = shared.node.lock().expect("node poisoned");
-            (CtrlReply::Pairs(node.extract_range(start, end)), true)
-        }
-        Ok(CtrlMsg::IngestRange { pairs }) => {
-            shared.node.lock().expect("node poisoned").ingest(pairs);
-            (CtrlReply::Ok, true)
-        }
-        Ok(CtrlMsg::DeleteRange { start, end }) => {
-            // §5.1: the migrated sub-range's old copy is removed.
-            shared.node.lock().expect("node poisoned").delete_range(start, end);
-            (CtrlReply::Ok, true)
-        }
-        Ok(other) => (CtrlReply::Err(format!("storage nodes do not serve {other:?}")), true),
-        Err(e) => (CtrlReply::Err(format!("undecodable control message: {e:#}")), true),
-    };
-    let sent = write_frame(&mut &*out, &reply.encode()).is_ok();
-    keep_going && sent
+/// Control-plane shard state: strict request/reply per frame.
+struct NodeCtrl {
+    shared: Arc<NodeShared>,
+}
+
+impl ShardHandler for NodeCtrl {
+    fn on_frame(&mut self, io: &mut ShardIo, conn: ConnId, frame: Vec<u8>) -> bool {
+        let shared = &self.shared;
+        let (reply, keep_going) = match CtrlMsg::decode(&frame) {
+            Ok(CtrlMsg::Ping) => (CtrlReply::Ok, true),
+            Ok(CtrlMsg::Shutdown) => {
+                shared.stop.store(true, Ordering::SeqCst);
+                (CtrlReply::Stats(shared.stats.snapshot()), false)
+            }
+            Ok(CtrlMsg::ExtractRange { start, end }) => {
+                let mut node = shared.node.lock().expect("node poisoned");
+                (CtrlReply::Pairs(node.extract_range(start, end)), true)
+            }
+            Ok(CtrlMsg::IngestRange { pairs }) => {
+                shared.node.lock().expect("node poisoned").ingest(pairs);
+                (CtrlReply::Ok, true)
+            }
+            Ok(CtrlMsg::DeleteRange { start, end }) => {
+                // §5.1: the migrated sub-range's old copy is removed.
+                shared.node.lock().expect("node poisoned").delete_range(start, end);
+                (CtrlReply::Ok, true)
+            }
+            Ok(other) => (CtrlReply::Err(format!("storage nodes do not serve {other:?}")), true),
+            Err(e) => (CtrlReply::Err(format!("undecodable control message: {e:#}")), true),
+        };
+        io.reply(conn, reply.encode());
+        keep_going
+    }
 }

@@ -1,0 +1,202 @@
+//! The client-side connection pool: multiple pipelined in-flight requests
+//! per socket instead of one RPC per round trip.
+//!
+//! A [`Pool`] holds `size` nonblocking connections to one address (the
+//! switch's data port). Sends round-robin across them and *enqueue* on the
+//! connection's resumable [`FrameWriter`] — the caller never blocks on a
+//! full socket buffer, it keeps issuing while the kernel drains. Replies
+//! do not flow back through the pool: the deployment's tails reply
+//! straight to the client's own listener (the netmap resolves the client
+//! IP), so these sockets are write-only.
+//!
+//! Failure model: a connection whose write fails, or whose queued backlog
+//! shows the peer stopped reading, is torn down and redialed — once per
+//! send; a frame that cannot be handed to a live connection is reported
+//! lost (`send` returns false) and the generator's retransmission covers
+//! it, exactly like a dropped switch port.
+
+use std::net::{SocketAddr, TcpStream};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::transport::{configure_stream, FrameWriter};
+
+/// Queued-byte cap per connection; above it the peer has demonstrably
+/// stopped reading and the connection is replaced.
+const MAX_CONN_BACKLOG: usize = 16 << 20;
+/// Per-attempt connect timeout while dialing.
+const DIAL_STEP: Duration = Duration::from_millis(500);
+/// Redial budget for a connection that died mid-run (initial connects get
+/// the caller's — usually much longer — budget).
+const REDIAL_BUDGET: Duration = Duration::from_secs(2);
+
+struct PoolConn {
+    stream: TcpStream,
+    writer: FrameWriter,
+}
+
+/// A fixed-size pool of pipelined connections to one destination.
+pub struct Pool {
+    addr: SocketAddr,
+    conns: Vec<Option<PoolConn>>,
+    next: usize,
+}
+
+impl Pool {
+    /// Dial `size` connections, retrying each until `budget` elapses
+    /// (servers may still be binding when the client starts).
+    pub fn connect(addr: SocketAddr, size: usize, budget: Duration) -> Result<Pool> {
+        let deadline = Instant::now() + budget;
+        let conns = (0..size.max(1))
+            .map(|i| {
+                dial(addr, deadline)
+                    .map(Some)
+                    .with_context(|| format!("pool connection {i} to {addr}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Pool { addr, conns, next: 0 })
+    }
+
+    /// Queue one frame on the next connection (round robin) and flush
+    /// opportunistically. A dead connection is redialed once; returns
+    /// false when the frame could not be handed to a live connection
+    /// (it is lost — the caller's retransmission covers it).
+    pub fn send(&mut self, frame: &[u8]) -> bool {
+        let slot = self.next % self.conns.len();
+        self.next = self.next.wrapping_add(1);
+        for _ in 0..2 {
+            if self.conns[slot].is_none() {
+                match dial(self.addr, Instant::now() + REDIAL_BUDGET) {
+                    Ok(conn) => self.conns[slot] = Some(conn),
+                    Err(_) => return false,
+                }
+            }
+            let conn = self.conns[slot].as_mut().expect("slot just filled");
+            if conn.writer.pending_bytes() + frame.len() > MAX_CONN_BACKLOG
+                || conn.writer.enqueue(frame).is_err()
+            {
+                // Peer stopped reading (or the frame is oversized —
+                // impossible for real packets). Tear down and redial; the
+                // backlogged frames are lost either way.
+                self.conns[slot] = None;
+                continue;
+            }
+            match conn.writer.flush_into(&mut conn.stream) {
+                // Drained or would-block: the frame is queued on a live
+                // connection either way.
+                Ok(_) => return true,
+                Err(_) => {
+                    // The enqueued frame died with the connection; one
+                    // redial attempt gets a fresh socket for it.
+                    self.conns[slot] = None;
+                }
+            }
+        }
+        false
+    }
+
+    /// Push buffered bytes on every connection; call from the generator's
+    /// event loop so queued frames keep moving between sends. A failed
+    /// connection is dropped (redialed on next use); its queued frames
+    /// are covered by retransmission.
+    pub fn flush(&mut self) {
+        for slot in self.conns.iter_mut() {
+            if let Some(conn) = slot {
+                if conn.writer.flush_into(&mut conn.stream).is_err() {
+                    *slot = None;
+                }
+            }
+        }
+    }
+}
+
+/// Connect with retries until `deadline`, then configure: nonblocking,
+/// nodelay (request frames are small and latency-bound).
+fn dial(addr: SocketAddr, deadline: Instant) -> Result<PoolConn> {
+    loop {
+        match TcpStream::connect_timeout(&addr, DIAL_STEP) {
+            Ok(stream) => {
+                configure_stream(&stream, true, None);
+                stream.set_nonblocking(true).with_context(|| format!("nonblocking {addr}"))?;
+                return Ok(PoolConn { stream, writer: FrameWriter::new() });
+            }
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(e).with_context(|| format!("connecting {addr}"));
+                }
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::deploy::transport::{FrameEvent, FrameReader};
+    use std::net::TcpListener;
+
+    #[test]
+    fn pool_pipelines_frames_across_its_connections() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut pool = Pool::connect(addr, 3, Duration::from_secs(5)).unwrap();
+        // All frames issued before anything is read: in flight together.
+        for i in 0..30u32 {
+            assert!(pool.send(format!("frame{i}").as_bytes()), "send {i}");
+        }
+        pool.flush();
+        // Round robin: connection k carries frames k, k+3, k+6, ...
+        let mut got = Vec::new();
+        for _ in 0..3 {
+            let (stream, _) = listener.accept().unwrap();
+            configure_stream(&stream, true, Some(Duration::from_millis(200)));
+            let mut reader = FrameReader::new();
+            let mut src = &stream;
+            loop {
+                // Keep flushing the pool while draining (a frame may still
+                // be queued when the writer's socket buffer was full).
+                pool.flush();
+                match reader.poll(&mut src) {
+                    Ok(FrameEvent::Frame(f)) => got.push(f),
+                    Ok(FrameEvent::Pending) => break,
+                    Ok(FrameEvent::Eof) | Err(_) => break,
+                }
+            }
+        }
+        assert_eq!(got.len(), 30);
+        let mut texts: Vec<String> =
+            got.iter().map(|f| String::from_utf8(f.clone()).unwrap()).collect();
+        texts.sort();
+        let mut want: Vec<String> = (0..30).map(|i| format!("frame{i}")).collect();
+        want.sort();
+        assert_eq!(texts, want);
+    }
+
+    #[test]
+    fn pool_redials_after_the_peer_closes() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let mut pool = Pool::connect(addr, 1, Duration::from_secs(5)).unwrap();
+        assert!(pool.send(b"first"));
+        // Accept and immediately drop the connection; the next send hits a
+        // dead socket (possibly after a grace period for the FIN to land).
+        drop(listener.accept().unwrap());
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            // Writes into a closed socket may succeed until the kernel
+            // notices; what matters is that sends keep succeeding once
+            // the pool redials.
+            let ok = pool.send(b"after-close");
+            if ok {
+                if listener.accept().is_ok() {
+                    break; // redialed: a fresh connection arrived
+                }
+            } else {
+                assert!(Instant::now() < deadline, "pool never redialed");
+            }
+            assert!(Instant::now() < deadline, "pool never recovered");
+        }
+    }
+}

@@ -3,10 +3,13 @@
 //! Embeds the simulator's `switch::Switch` — the same match-action table,
 //! register arrays, counter state, and `process_batch` pipeline (parser →
 //! batched lookup → chain-header insertion → scan split via
-//! clone+recirculate) — behind a TCP data port. Each arriving frame is one
-//! packet; the pipeline's emits are resolved to real sockets and
-//! forwarded. The control port is the §5 control plane: counter drains,
-//! chain updates, liveness, shutdown.
+//! clone+recirculate) — behind a TCP data port running the sharded event
+//! loop. Frames arriving within one shard pass accumulate and run through
+//! `process_batch` as a single batch under one lock acquisition — the
+//! same batched-lookup shape the simulated pipeline models — and the
+//! emits are resolved to real sockets and forwarded through the shard's
+//! outbound peer connections. The control port is the §5 control plane:
+//! counter drains, chain updates, liveness, shutdown.
 //!
 //! The loopback deployment runs a single soft ToR with every node
 //! attached (cluster.racks = 1), so key-routed packets always take the
@@ -15,7 +18,7 @@
 //! client edge) are resolved to their final endpoint by destination IP —
 //! the one-switch topology collapses the hierarchy.
 
-use std::net::{TcpListener, TcpStream};
+use std::net::TcpListener;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -30,8 +33,8 @@ use crate::types::{Key, OpCode};
 use crate::util::chain_violation;
 
 use super::control::{CtrlMsg, CtrlReply};
-use super::transport::write_frame;
-use super::{serve_frames, spawn_accept_loop, Netmap, PeerPool, ServerHandle, ServerStats};
+use super::shard::{spawn_shards, ConnId, ShardHandler, ShardIo};
+use super::{Netmap, ServerHandle, ServerStats};
 
 struct SwitchShared {
     /// The switch plus its lookup engine, guarded together: counters and
@@ -44,7 +47,6 @@ struct SwitchShared {
     frozen: Mutex<Vec<(Key, Key)>>,
     topo: Topology,
     net: Netmap,
-    pool: PeerPool,
     stop: Arc<AtomicBool>,
     stats: Arc<ServerStats>,
 }
@@ -67,7 +69,7 @@ pub fn build_switch(cfg: &Config, topo: &Topology) -> Switch {
     sw
 }
 
-/// Spawn the switch's data + control accept loops on pre-bound listeners.
+/// Spawn the switch's data + control shard loops on pre-bound listeners.
 pub fn spawn(
     cfg: &Config,
     net: Netmap,
@@ -83,83 +85,79 @@ pub fn spawn(
         frozen: Mutex::new(Vec::new()),
         topo,
         net,
-        pool: PeerPool::new(),
         stop: stop.clone(),
         stats: stats.clone(),
     });
 
-    let data = {
+    let mut threads = {
         let shared = shared.clone();
-        let stop = stop.clone();
-        spawn_accept_loop(
-            "switch-data".to_string(),
+        spawn_shards(
+            "switch-data",
             data_listener,
+            cfg.deploy.shards,
             stop.clone(),
-            Arc::new(move |stream: TcpStream| {
-                let shared = shared.clone();
-                serve_frames(stream, &stop, move |_out, frame| {
-                    handle_data_frame(&shared, &frame);
-                    true
-                });
-            }),
-        )
+            stats.clone(),
+            move |_| Box::new(SwitchData { shared: shared.clone(), batch: Vec::new() }),
+        )?
     };
-    let ctrl = {
-        let shared = shared.clone();
-        let stop = stop.clone();
-        spawn_accept_loop(
-            "switch-ctrl".to_string(),
-            ctrl_listener,
-            stop.clone(),
-            Arc::new(move |stream: TcpStream| {
-                let shared = shared.clone();
-                serve_frames(stream, &stop, move |out, frame| {
-                    handle_ctrl_frame(&shared, out, &frame)
-                });
-            }),
-        )
-    };
-    Ok(ServerHandle::new(stop, stats, vec![data, ctrl]))
+    threads.extend(spawn_shards(
+        "switch-ctrl",
+        ctrl_listener,
+        1,
+        stop.clone(),
+        stats.clone(),
+        move |_| Box::new(SwitchCtrl { shared: shared.clone() }),
+    )?);
+    Ok(ServerHandle::new(stop, stats, threads))
 }
 
-fn handle_data_frame(shared: &SwitchShared, frame: &[u8]) {
-    let pkt = match Packet::decode(frame) {
-        Ok(pkt) => pkt,
-        Err(_) => {
-            shared.stats.bad_frames.fetch_add(1, Ordering::Relaxed);
+/// Data-plane shard state: the pass's admitted packets, run through one
+/// `process_batch` call at the pass end.
+struct SwitchData {
+    shared: Arc<SwitchShared>,
+    batch: Vec<Packet>,
+}
+
+impl ShardHandler for SwitchData {
+    fn on_frame(&mut self, _io: &mut ShardIo, _conn: ConnId, frame: Vec<u8>) -> bool {
+        let pkt = match Packet::decode(&frame) {
+            Ok(pkt) => pkt,
+            Err(_) => {
+                self.shared.stats.bad_frames.fetch_add(1, Ordering::Relaxed);
+                return true;
+            }
+        };
+        // Migration write barrier: a fresh request whose matching value
+        // falls in a frozen span is dropped before it can enter the
+        // pipeline and race the controller's extract→ingest→SetChain
+        // sequence.
+        if is_frozen(&self.shared, &pkt) {
+            self.shared.stats.dropped.fetch_add(1, Ordering::Relaxed);
+            return true;
+        }
+        self.batch.push(pkt);
+        true
+    }
+
+    fn on_pass_end(&mut self, io: &mut ShardIo) {
+        if self.batch.is_empty() {
             return;
         }
-    };
-    // Migration write barrier: a fresh request whose matching value falls
-    // in a frozen span is dropped before it can enter the pipeline and
-    // race the controller's extract→ingest→SetChain sequence.
-    if is_frozen(shared, &pkt) {
-        shared.stats.dropped.fetch_add(1, Ordering::Relaxed);
-        return;
-    }
-    // One pipeline pass per frame; resolve emits under the lock (pure
-    // lookups), send after releasing it so a slow/dead peer never stalls
-    // the pipeline for other connections.
-    let mut sends: Vec<(std::net::SocketAddr, Vec<u8>)> = Vec::new();
-    {
+        let shared = &self.shared;
+        // One pipeline pass per shard pass; resolve emits under the lock
+        // (pure lookups), stage sends for the shard loop to deliver after
+        // releasing it so a slow peer never stalls the pipeline.
         let mut core = shared.core.lock().expect("switch poisoned");
         let (sw, lookup) = &mut *core;
-        let mut batch = vec![pkt];
-        let emits = sw.process_batch(&mut batch, &shared.topo, lookup, 0, 0);
+        let emits = sw.process_batch(&mut self.batch, &shared.topo, lookup, 0, 0);
         for e in emits {
             match emit_addr(&shared.topo, &shared.net, e.to, &e.pkt) {
-                Some(addr) => sends.push((addr, e.pkt.encode())),
+                Some(addr) => io.send_to(addr, e.pkt.encode()),
                 None => sw.stats.dropped += 1,
             }
         }
-    }
-    for (addr, bytes) in sends {
-        if shared.pool.send(addr, &bytes).is_err() {
-            // A dead endpoint behaves like a dropped packet on a real
-            // switch port; the client's timeout retry covers it and the
-            // controller's repair redirects the route.
-            shared.stats.send_failures.fetch_add(1, Ordering::Relaxed);
-        }
+        drop(core);
+        self.batch.clear();
     }
 }
 
@@ -204,42 +202,50 @@ fn emit_addr(
     }
 }
 
-fn handle_ctrl_frame(shared: &SwitchShared, out: &TcpStream, frame: &[u8]) -> bool {
-    let (reply, keep_going) = match CtrlMsg::decode(frame) {
-        Ok(CtrlMsg::Ping) => (CtrlReply::Ok, true),
-        Ok(CtrlMsg::Shutdown) => {
-            shared.stop.store(true, Ordering::SeqCst);
-            (CtrlReply::Stats(shared.stats.snapshot()), false)
-        }
-        Ok(CtrlMsg::DrainCounters) => {
-            let mut core = shared.core.lock().expect("switch poisoned");
-            let (read, write) = core.0.registers.drain_counters();
-            (CtrlReply::Counters { read, write }, true)
-        }
-        Ok(CtrlMsg::SetChain { idx, chain }) => {
-            let mut core = shared.core.lock().expect("switch poisoned");
-            (set_chain(&mut core.0, idx, chain), true)
-        }
-        Ok(CtrlMsg::SplitRecord { idx, at, chain }) => {
-            let mut core = shared.core.lock().expect("switch poisoned");
-            (split_record(&mut core.0, idx, at, chain), true)
-        }
-        Ok(CtrlMsg::SetFreeze { start, end, frozen }) => {
-            let mut spans = shared.frozen.lock().expect("freeze list poisoned");
-            if frozen {
-                if !spans.contains(&(start, end)) {
-                    spans.push((start, end));
-                }
-            } else {
-                spans.retain(|&s| s != (start, end));
+/// Control-plane shard state: strict request/reply per frame.
+struct SwitchCtrl {
+    shared: Arc<SwitchShared>,
+}
+
+impl ShardHandler for SwitchCtrl {
+    fn on_frame(&mut self, io: &mut ShardIo, conn: ConnId, frame: Vec<u8>) -> bool {
+        let shared = &self.shared;
+        let (reply, keep_going) = match CtrlMsg::decode(&frame) {
+            Ok(CtrlMsg::Ping) => (CtrlReply::Ok, true),
+            Ok(CtrlMsg::Shutdown) => {
+                shared.stop.store(true, Ordering::SeqCst);
+                (CtrlReply::Stats(shared.stats.snapshot()), false)
             }
-            (CtrlReply::Ok, true)
-        }
-        Ok(other) => (CtrlReply::Err(format!("switches do not serve {other:?}")), true),
-        Err(e) => (CtrlReply::Err(format!("undecodable control message: {e:#}")), true),
-    };
-    let sent = write_frame(&mut &*out, &reply.encode()).is_ok();
-    keep_going && sent
+            Ok(CtrlMsg::DrainCounters) => {
+                let mut core = shared.core.lock().expect("switch poisoned");
+                let (read, write) = core.0.registers.drain_counters();
+                (CtrlReply::Counters { read, write }, true)
+            }
+            Ok(CtrlMsg::SetChain { idx, chain }) => {
+                let mut core = shared.core.lock().expect("switch poisoned");
+                (set_chain(&mut core.0, idx, chain), true)
+            }
+            Ok(CtrlMsg::SplitRecord { idx, at, chain }) => {
+                let mut core = shared.core.lock().expect("switch poisoned");
+                (split_record(&mut core.0, idx, at, chain), true)
+            }
+            Ok(CtrlMsg::SetFreeze { start, end, frozen }) => {
+                let mut spans = shared.frozen.lock().expect("freeze list poisoned");
+                if frozen {
+                    if !spans.contains(&(start, end)) {
+                        spans.push((start, end));
+                    }
+                } else {
+                    spans.retain(|&s| s != (start, end));
+                }
+                (CtrlReply::Ok, true)
+            }
+            Ok(other) => (CtrlReply::Err(format!("switches do not serve {other:?}")), true),
+            Err(e) => (CtrlReply::Err(format!("undecodable control message: {e:#}")), true),
+        };
+        io.reply(conn, reply.encode());
+        keep_going
+    }
 }
 
 /// Shared install-time validation for every chain-bearing control push:

@@ -3,18 +3,25 @@
 //! A frame is a 4-byte big-endian length followed by that many payload
 //! bytes; data-plane frames carry exactly `Packet::encode` output (the
 //! unchanged Fig. 8 wire format), control-plane frames carry
-//! `deploy::control` messages. Blocking `std::net` only — no new
-//! dependencies; one OS thread per connection.
+//! `deploy::control` messages. `std::net` only — no new dependencies; the
+//! sharded event loops in [`super::shard`] drive nonblocking sockets
+//! through the resumable reader/writer pair below.
 //!
-//! [`FrameReader`] is resumable: connection threads poll with short read
-//! timeouts so they can observe shutdown flags, and a timeout that fires
-//! mid-frame must not lose the bytes already consumed (`Read::read_exact`
-//! leaves partially-filled buffers unspecified on error, so it cannot be
-//! used here). The reader owns the partial header/body state and picks up
-//! exactly where the previous poll stopped — the split-read tests below
-//! feed it one byte at a time.
+//! [`FrameReader`] is resumable: shard loops poll nonblocking sockets, and
+//! a `WouldBlock` that fires mid-frame must not lose the bytes already
+//! consumed (`Read::read_exact` leaves partially-filled buffers
+//! unspecified on error, so it cannot be used here). The reader owns the
+//! partial header/body state and picks up exactly where the previous poll
+//! stopped — the split-read tests below feed it one byte at a time.
+//!
+//! [`FrameWriter`] is the symmetric write side: frames enqueue whole, the
+//! flush pushes bytes until the socket would block, and the partial-write
+//! cursor survives across flushes so a frame interrupted mid-header or
+//! mid-body resumes at the exact byte — never re-sent, never torn.
 
 use std::io::{self, Read, Write};
+use std::net::TcpStream;
+use std::time::Duration;
 
 /// Upper bound on one frame's payload. Generous for the deployment's
 /// packets (a full scan reply over the smoke workload is well under 1 MiB)
@@ -34,6 +41,106 @@ pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> io::Result<()> {
     w.write_all(&(payload.len() as u32).to_be_bytes())?;
     w.write_all(payload)?;
     w.flush()
+}
+
+/// The one place deployment sockets get their options. Every connection —
+/// shard-accepted, outbound peer, pool, control — goes through here, so
+/// the settings can't drift between call sites. Best-effort: an option the
+/// OS refuses (already-closed socket, exotic platform) is not fatal to the
+/// connection itself.
+pub fn configure_stream(stream: &TcpStream, nodelay: bool, read_timeout: Option<Duration>) {
+    stream.set_nodelay(nodelay).ok();
+    stream.set_read_timeout(read_timeout).ok();
+}
+
+/// Resumable frame writer: the symmetric counterpart of [`FrameReader`].
+///
+/// Frames enqueue as fused header+payload byte runs; [`FrameWriter::flush_into`]
+/// writes from the front of the queue until everything drained or the sink
+/// would block, keeping a byte cursor into the front frame so a partial
+/// write — even one that stops inside the 4-byte header — resumes exactly
+/// where it left off. The emitted byte stream is identical to repeated
+/// [`write_frame`] calls.
+#[derive(Debug, Default)]
+pub struct FrameWriter {
+    /// Pending frames, each already prefixed with its 4-byte BE length.
+    queue: std::collections::VecDeque<Vec<u8>>,
+    /// How much of the front frame has been written.
+    front_pos: usize,
+    /// Total queued bytes not yet written (backpressure accounting).
+    pending_bytes: usize,
+}
+
+impl FrameWriter {
+    pub fn new() -> FrameWriter {
+        FrameWriter::default()
+    }
+
+    /// Queue one frame for writing. Rejects payloads over [`MAX_FRAME`]
+    /// (mirroring the read-side cap) without queueing anything.
+    pub fn enqueue(&mut self, payload: &[u8]) -> io::Result<()> {
+        if payload.len() > MAX_FRAME {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("frame of {} bytes exceeds MAX_FRAME ({MAX_FRAME})", payload.len()),
+            ));
+        }
+        let mut frame = Vec::with_capacity(4 + payload.len());
+        frame.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+        frame.extend_from_slice(payload);
+        self.pending_bytes += frame.len();
+        self.queue.push_back(frame);
+        Ok(())
+    }
+
+    /// Push queued bytes into `w` until drained (`Ok(true)`) or the sink
+    /// would block (`Ok(false)` — call again when writable). A sink that
+    /// accepts zero bytes without blocking is a dead peer
+    /// (`ErrorKind::WriteZero`); any hard error leaves the queue intact so
+    /// the caller can count the frames it is about to drop.
+    pub fn flush_into(&mut self, w: &mut impl Write) -> io::Result<bool> {
+        while let Some(front) = self.queue.front() {
+            match w.write(&front[self.front_pos..]) {
+                Ok(0) => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::WriteZero,
+                        "peer accepted zero bytes of a pending frame",
+                    ));
+                }
+                Ok(n) => {
+                    self.front_pos += n;
+                    self.pending_bytes -= n;
+                    if self.front_pos == front.len() {
+                        self.queue.pop_front();
+                        self.front_pos = 0;
+                    }
+                }
+                Err(e) if is_would_block(&e) => return Ok(false),
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+        match w.flush() {
+            Ok(()) => Ok(true),
+            Err(e) if is_would_block(&e) => Ok(false),
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => Ok(true),
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Frames not yet fully written (the partially-written front counts).
+    pub fn pending_frames(&self) -> u64 {
+        self.queue.len() as u64
+    }
+
+    /// Bytes not yet written.
+    pub fn pending_bytes(&self) -> usize {
+        self.pending_bytes
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
 }
 
 /// One poll step's outcome.
@@ -320,6 +427,108 @@ mod tests {
         };
         let err = Packet::decode(&f).unwrap_err();
         assert!(format!("{err:#}").contains("unknown ToS"), "{err:#}");
+    }
+
+    /// A sink that accepts at most `chunk` bytes per call and interposes a
+    /// WouldBlock before every acceptance — the shape a full socket send
+    /// buffer produces, hit at every byte offset.
+    struct BlockySink {
+        written: Vec<u8>,
+        chunk: usize,
+        blocked: bool,
+    }
+
+    impl Write for BlockySink {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            if !self.blocked {
+                self.blocked = true;
+                return Err(io::Error::new(io::ErrorKind::WouldBlock, "sink full"));
+            }
+            self.blocked = false;
+            let n = self.chunk.min(buf.len());
+            self.written.extend_from_slice(&buf[..n]);
+            Ok(n)
+        }
+
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn frame_writer_resumes_across_would_blocks_byte_identically() {
+        // Reference byte stream: the same frames through write_frame.
+        let payloads: Vec<Vec<u8>> =
+            vec![sample_packet().encode(), Vec::new(), b"tail-frame".to_vec()];
+        let mut want = Vec::new();
+        for p in &payloads {
+            write_frame(&mut want, p).unwrap();
+        }
+        // chunk=1 blocks inside the 4-byte header; larger chunks land the
+        // boundary mid-body and across frame boundaries.
+        for chunk in [1usize, 2, 3, 5, 7, 64] {
+            let mut writer = FrameWriter::new();
+            for p in &payloads {
+                writer.enqueue(p).unwrap();
+            }
+            assert_eq!(writer.pending_frames(), 3);
+            assert_eq!(writer.pending_bytes(), want.len());
+            let mut sink = BlockySink { written: Vec::new(), chunk, blocked: false };
+            let mut flushes = 0u32;
+            while !writer.flush_into(&mut sink).unwrap() {
+                flushes += 1;
+                assert!(flushes < 10_000, "flush loop must terminate (chunk={chunk})");
+            }
+            assert!(writer.is_empty());
+            assert_eq!(writer.pending_bytes(), 0);
+            assert_eq!(sink.written, want, "chunk={chunk}");
+            // And the resumed stream still parses back to the original
+            // payloads: the cursor never re-sent or dropped a byte.
+            let mut src = sink.written.as_slice();
+            let mut reader = FrameReader::new();
+            for p in &payloads {
+                let FrameEvent::Frame(f) = reader.poll(&mut src).unwrap() else {
+                    panic!("expected a frame (chunk={chunk})");
+                };
+                assert_eq!(&f, p, "chunk={chunk}");
+            }
+            assert_eq!(reader.poll(&mut src).unwrap(), FrameEvent::Eof);
+        }
+    }
+
+    #[test]
+    fn frame_writer_rejects_oversized_frames_like_the_reader() {
+        let mut writer = FrameWriter::new();
+        let err = writer.enqueue(&vec![0u8; MAX_FRAME + 1]).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::InvalidData);
+        // Nothing was queued: the writer is still clean for valid frames.
+        assert!(writer.is_empty());
+        assert_eq!(writer.pending_bytes(), 0);
+        writer.enqueue(b"still works").unwrap();
+        let mut out = Vec::new();
+        assert!(writer.flush_into(&mut out).unwrap());
+        let mut want = Vec::new();
+        write_frame(&mut want, b"still works").unwrap();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn frame_writer_surfaces_a_zero_accepting_sink_as_write_zero() {
+        struct DeadSink;
+        impl Write for DeadSink {
+            fn write(&mut self, _buf: &[u8]) -> io::Result<usize> {
+                Ok(0)
+            }
+            fn flush(&mut self) -> io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut writer = FrameWriter::new();
+        writer.enqueue(b"going nowhere").unwrap();
+        let err = writer.flush_into(&mut DeadSink).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::WriteZero);
+        // The queue is intact so the caller can count what it drops.
+        assert_eq!(writer.pending_frames(), 1);
     }
 
     #[test]

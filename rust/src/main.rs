@@ -57,16 +57,24 @@ usage: turbokv <run|exp|smoke|serve-node|serve-switch|drive|harness|help>
   turbokv smoke [--dataplane.artifacts_dir=artifacts]
 
 Real-socket deployment (one soft switch, --cluster.racks=1):
-  turbokv serve-switch [--deploy.base_port=7600] [--cluster.nodes_per_rack=3]
+  turbokv serve-switch [--deploy.base_port=7600] [--deploy.shards=2]
   turbokv serve-node --node=0 [--deploy.base_port=7600] ...
   turbokv drive [--workload.ops_per_client=1700] [--deploy.timeout_ms=1000]
+                [--deploy.pipeline=4] [--deploy.rate_ops=2500]
+                [--deploy.report_path=out/drive.json]
   turbokv harness [--threads] [--deploy.kill_node=1 --deploy.kill_after_ops=3500]
                   [--controller.migration=true --controller.split_hot=true
                    --workload.zipf_theta=1.2 --deploy.expect_migrations=1]
+                  [--deploy.min_throughput=1500]
 All processes must share the same config flags; the chain headers carry the
-topology's simulated IPs, the [deploy] port map carries the bytes. With
---controller.migration the harness controller runs the full §5.1 loop live:
-hot sub-ranges are split and migrated over the control plane mid-workload.
+topology's simulated IPs, the [deploy] port map carries the bytes. Servers
+run --deploy.shards event-loop shards per data port. Each drive client keeps
+--deploy.pipeline requests in flight; --deploy.rate_ops>0 switches it to an
+open-loop fixed-arrival schedule whose latency is measured from the intended
+send time (coordinated-omission-safe), and --deploy.report_path writes the
+machine-readable turbokv-loadgen-v1 JSON report. With --controller.migration
+the harness controller runs the full §5.1 loop live: hot sub-ranges are
+split and migrated over the control plane mid-workload.
 ";
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -202,9 +210,13 @@ fn cmd_drive(args: &Args) -> Result<()> {
                 .with_context(|| format!("binding client reply port {addr}"))
         })
         .collect::<Result<_>>()?;
-    let mut report = deploy::driver::run(&cfg, &net, listeners)?;
+    let mut report = deploy::loadgen::run(&cfg, &net, listeners)?;
     println!("{}", report.metrics.summary());
     println!("{}", report.summary_line());
+    if !cfg.deploy.report_path.is_empty() {
+        deploy::loadgen::write_report(&report, &cfg, &cfg.deploy.report_path)?;
+        eprintln!("drive: wrote report to {}", cfg.deploy.report_path);
+    }
     let expected = cfg.cluster.clients as u64 * cfg.workload.ops_per_client;
     if report.ops != expected {
         bail!("drive completed {}/{expected} measured ops", report.ops);

@@ -46,6 +46,22 @@ fn loopback_cluster_serves_verified_gets_puts_and_scans() {
     assert!(metrics.count_for(OpCode::Put) > 0, "puts");
     assert!(metrics.count_for(OpCode::Range) > 0, "scans");
     assert!(metrics.latency_stats_ms(OpCode::Get).is_some());
+    // The per-op-type histograms captured every measured op, and their
+    // percentiles made it into the summary line the process harness
+    // parses.
+    let hists = &report.drive.hists;
+    assert!(hists.get.count() > 0 && hists.put.count() > 0 && hists.scan.count() > 0);
+    assert_eq!(
+        hists.get.count() + hists.put.count() + hists.scan.count(),
+        report.drive.ops,
+        "every measured op lands in exactly one histogram"
+    );
+    assert!(hists.get.quantile(0.99) >= hists.get.quantile(0.50));
+    let line = report.drive.summary_line();
+    for token in ["get_p50_us=", "put_p99_us=", "scan_p999_us=", "throughput_ops="] {
+        assert!(line.contains(token), "summary missing {token}: {line}");
+    }
+    assert!(report.drive.throughput_ops > 0);
     // The controller ran real epochs and saw the traffic in the switch's
     // registers (load + measured phases both count).
     assert!(report.controller.epochs > 0);
@@ -135,6 +151,51 @@ fn loopback_cluster_migrates_and_splits_hot_ranges_under_skew() {
     assert_eq!(report.drive.verify_failures, 0, "no stale read survived migration");
     assert_eq!(report.drive.gave_up, 0);
     assert_eq!(report.servers.bad_frames, 0, "no wire corruption: {:?}", report.servers);
+}
+
+#[test]
+fn open_loop_schedule_sustains_its_rate_and_reports() {
+    // The coordinated-omission-safe mode: each client issues on a fixed
+    // 2000 ops/s arrival schedule (pipelined, not one-outstanding), the
+    // throughput gate applies, and the machine-readable report lands on
+    // disk. Loopback completes ops in well under the inter-arrival gap,
+    // so the schedule — not the cluster — paces the run: the measured
+    // wall clock must sit near ops/rate, and the floor holds even on a
+    // slow CI runner because it is set far below the schedule's rate.
+    let mut cfg = loopback_cfg(3, 2);
+    cfg.workload.num_keys = 200;
+    cfg.workload.ops_per_client = 300;
+    cfg.deploy.pipeline = 8;
+    cfg.deploy.rate_ops = 2_000;
+    cfg.deploy.min_throughput = 200;
+    let report_path = std::env::temp_dir()
+        .join(format!("turbokv_loadgen_{}.json", std::process::id()));
+    cfg.deploy.report_path = report_path.to_string_lossy().into_owned();
+
+    let report = run_threads(&cfg).expect("open-loop run");
+    report.gate(&cfg).expect("verified at the throughput floor");
+    assert_eq!(report.drive.ops, 600);
+    assert_eq!(report.drive.verify_failures, 0);
+    // 300 ops at 2000/s per client = a 150ms schedule; the run cannot
+    // finish faster than its arrival schedule (open loop never
+    // front-runs it), so completion throughput is capped near the
+    // configured rate — that is what distinguishes a paced run from a
+    // closed loop going as fast as it can.
+    // (>= 149: the last arrival is scheduled at 299/2000s = 149.5ms and
+    // elapsed_ms floors.)
+    assert!(
+        report.drive.elapsed_ms >= 149,
+        "open loop finished faster than its own schedule: {}ms",
+        report.drive.elapsed_ms
+    );
+    assert!(report.drive.throughput_ops <= 2 * 2_000 * 2);
+
+    let json = std::fs::read_to_string(&report_path).expect("report written");
+    std::fs::remove_file(&report_path).ok();
+    assert!(json.contains("\"schema\":\"turbokv-loadgen-v1\""));
+    assert!(json.contains("\"mode\":\"open-loop\""));
+    assert!(json.contains("\"rate_ops\":2000"));
+    assert!(!json.contains("\"count\":0,"), "all three op classes sampled: {json}");
 }
 
 #[test]

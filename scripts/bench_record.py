@@ -16,6 +16,12 @@ Usage:
         --target micro_store=/tmp/bench_micro_store.txt \
         [--note "CI smoke at 5% scale"]
 
+It also ingests the deployment load generator's machine-readable run
+report (`turbokv drive --deploy.report_path=...`, schema
+turbokv-loadgen-v1) via `--loadgen NAME=report.json`, flattening its
+throughput and per-op-type percentiles into the same benches schema so
+`bench_diff.py` can compare loadgen runs across PRs.
+
 Exit status: 0 on success, 2 on usage/parse errors (a target file that
 yields zero bench lines is an error — silence must not masquerade as a
 recording).
@@ -69,31 +75,92 @@ def parse_report(path):
     return benches
 
 
+def parse_loadgen(path):
+    """Flatten a turbokv-loadgen-v1 run report into bench entries."""
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"bench_record: cannot read loadgen report {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+    if doc.get("schema") != "turbokv-loadgen-v1":
+        print(
+            f"bench_record: {path} is not a turbokv-loadgen-v1 report "
+            f"(schema={doc.get('schema')!r})",
+            file=sys.stderr,
+        )
+        sys.exit(2)
+    throughput = doc.get("throughput_ops", 0)
+    if not throughput:
+        print(f"bench_record: {path} reports zero throughput", file=sys.stderr)
+        sys.exit(2)
+    mode = doc.get("mode", "unknown")
+    benches = {
+        f"{mode}/throughput": {
+            "mean_ns": 1e9 / throughput,  # per-op service interval
+            "elems_per_s": float(throughput),
+        }
+    }
+    for op, h in sorted(doc.get("latency_us", {}).items()):
+        if not h.get("count"):
+            continue  # an op class the workload mix never issued
+        for q in ("p50_us", "p99_us", "p999_us"):
+            benches[f"{mode}/{op}/{q[:-3]}"] = {
+                "mean_ns": h[q] * 1e3,
+                "elems_per_s": None,
+            }
+    return benches
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--out", required=True, help="output BENCH_*.json path")
     ap.add_argument(
         "--target",
         action="append",
-        required=True,
+        default=[],
         metavar="NAME=REPORT",
         help="bench target name and its captured stdout (repeatable)",
     )
+    ap.add_argument(
+        "--loadgen",
+        action="append",
+        default=[],
+        metavar="NAME=REPORT.json",
+        help="deployment loadgen JSON report (turbokv-loadgen-v1, repeatable)",
+    )
     ap.add_argument("--note", default="", help="free-form provenance note")
     args = ap.parse_args()
+    if not args.target and not args.loadgen:
+        print("bench_record: need at least one --target or --loadgen", file=sys.stderr)
+        sys.exit(2)
 
     benches = {}
+    regenerate = []
     for spec in args.target:
         if "=" not in spec:
             print(f"bench_record: --target wants NAME=REPORT, got {spec!r}", file=sys.stderr)
             sys.exit(2)
         name, path = spec.split("=", 1)
         benches[name] = parse_report(path)
+        regenerate.append(f"cargo bench --bench {name}")
+    for spec in args.loadgen:
+        if "=" not in spec:
+            print(
+                f"bench_record: --loadgen wants NAME=REPORT.json, got {spec!r}",
+                file=sys.stderr,
+            )
+            sys.exit(2)
+        name, path = spec.split("=", 1)
+        benches[name] = parse_loadgen(path)
+        regenerate.append(
+            "turbokv harness --deploy.report_path=... (see .github/workflows/ci.yml)"
+        )
 
     doc = {
-        "description": "Recorded by scripts/bench_record.py from cargo bench output.",
-        "regenerate": "cd rust && cargo bench --bench "
-        + " --bench ".join(sorted(benches)),
+        "description": "Recorded by scripts/bench_record.py from cargo bench "
+        "output and/or turbokv-loadgen-v1 run reports.",
+        "regenerate": "cd rust && " + "; ".join(regenerate),
         "compare": "python3 scripts/bench_diff.py <BASE>.json <THIS>.json",
         "status": "recorded",
         "status_note": args.note,
