@@ -120,6 +120,11 @@ pub fn run_epoch(cl: &mut Cluster) {
 fn apply_op(cl: &mut Cluster, op: &ControlOp) {
     match op {
         ControlOp::CopyRange { from, to, span: (start, end) } => {
+            // Migration data movement: flush cached values under the span
+            // before any ownership change becomes visible.
+            for sw in &mut cl.switches {
+                sw.invalidate_span(*start, *end);
+            }
             let pairs = cl.nodes[*from].extract_range(*start, *end);
             cl.nodes[*to].ingest(pairs);
         }
@@ -130,12 +135,18 @@ fn apply_op(cl: &mut Cluster, op: &ControlOp) {
             cl.dir.set_chain(*idx, chain.clone());
             let regs: Vec<u16> = chain.iter().map(|&n| n as u16).collect();
             for sw in &mut cl.switches {
+                // A rerouted record's cached values (and every in-flight
+                // admission sample) must die before the new chain serves.
+                let (start, end) = sw.table.bounds(*idx);
+                sw.invalidate_span(start, end);
                 sw.table.set_chain(*idx, regs.clone());
             }
         }
         ControlOp::SplitRecord { idx, at, chain } => {
             cl.dir.split(*idx, *at, chain.clone());
             for sw in &mut cl.switches {
+                let (start, end) = sw.table.bounds(*idx);
+                sw.invalidate_span(start, end);
                 sw.table.split(*idx, *at, chain.iter().map(|&n| n as u16).collect());
                 sw.registers.insert_counter_slot(*idx + 1);
             }

@@ -203,6 +203,8 @@ impl Cluster {
             for n in 0..cfg.cluster.nodes() {
                 sw.registers.set_node(n as u16, topo.node_ip(n), n as u16);
             }
+            // No-op unless `switch.cache_slots > 0` (and only ToRs get one).
+            sw.configure_cache(&cfg.switch);
         }
 
         let mut rng = Rng::new(cfg.sim.seed);

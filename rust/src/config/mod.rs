@@ -8,5 +8,5 @@ pub mod value;
 pub use cli::Args;
 pub use schema::{
     ClusterConfig, Config, ControllerConfig, Coordination, DataplaneConfig, DataplaneMode,
-    DeployConfig, Partitioning, SimConfig, WorkloadConfig,
+    DeployConfig, Partitioning, SimConfig, SwitchConfig, WorkloadConfig,
 };

@@ -268,6 +268,10 @@ pub struct DeployConfig {
     /// Harness gate: fail the run unless the controller applied at least
     /// this many live migrations (the CI skewed-workload variant sets 1).
     pub expect_migrations: u64,
+    /// Harness gate: fail the run if the switch value cache served less
+    /// than this fraction of coordinator Gets (hits / (hits + misses)).
+    /// `0.0` = no gate; only meaningful with `switch.cache_slots > 0`.
+    pub min_cache_hit_rate: f64,
 }
 
 impl Default for DeployConfig {
@@ -286,7 +290,29 @@ impl Default for DeployConfig {
             kill_node: -1,
             kill_after_ops: 0,
             expect_migrations: 0,
+            min_cache_hit_rate: 0.0,
         }
+    }
+}
+
+/// The switch-resident hot-key value cache (DESIGN.md "Switch value
+/// cache"). Off by default (`cache_slots = 0`): every existing simulator
+/// run stays RunStats-identical and the deployment wire behavior is
+/// byte-for-byte unchanged.
+#[derive(Clone, Debug)]
+pub struct SwitchConfig {
+    /// Value-cache entries per ToR switch; `0` disables the cache.
+    pub cache_slots: usize,
+    /// Largest value (bytes) the cache will admit.
+    pub cache_value_max: usize,
+    /// Hotness-sketch count a key must reach before the admission policy
+    /// will sample it (frequency-threshold admission).
+    pub cache_admit_threshold: u32,
+}
+
+impl Default for SwitchConfig {
+    fn default() -> Self {
+        SwitchConfig { cache_slots: 0, cache_value_max: 256, cache_admit_threshold: 3 }
     }
 }
 
@@ -313,6 +339,7 @@ pub struct Config {
     pub controller: ControllerConfig,
     pub dataplane: DataplaneConfig,
     pub deploy: DeployConfig,
+    pub switch: SwitchConfig,
     pub coordination: Coordination,
 }
 
@@ -414,6 +441,11 @@ impl Config {
         ovr!(doc, "deploy.kill_node", self.deploy.kill_node, int);
         ovr!(doc, "deploy.kill_after_ops", self.deploy.kill_after_ops, int);
         ovr!(doc, "deploy.expect_migrations", self.deploy.expect_migrations, int);
+        ovr!(doc, "deploy.min_cache_hit_rate", self.deploy.min_cache_hit_rate, float);
+
+        ovr!(doc, "switch.cache_slots", self.switch.cache_slots, int);
+        ovr!(doc, "switch.cache_value_max", self.switch.cache_value_max, int);
+        ovr!(doc, "switch.cache_admit_threshold", self.switch.cache_admit_threshold, int);
 
         if let Some(v) = doc.get("dataplane.mode") {
             self.dataplane.mode = match v.as_str().context("dataplane.mode must be a string")? {
@@ -505,6 +537,19 @@ impl Config {
         }
         if self.deploy.pipeline == 0 {
             bail!("deploy.pipeline must be ≥ 1 (1 = one outstanding request)");
+        }
+        let hit = self.deploy.min_cache_hit_rate;
+        if !hit.is_finite() || !(0.0..=1.0).contains(&hit) {
+            bail!("deploy.min_cache_hit_rate {hit} must be a fraction in [0, 1]");
+        }
+        if hit > 0.0 && self.switch.cache_slots == 0 {
+            bail!(
+                "deploy.min_cache_hit_rate {hit} needs switch.cache_slots > 0 \
+                 (the gate can never pass with the cache disabled)"
+            );
+        }
+        if self.switch.cache_slots > 0 && self.switch.cache_value_max == 0 {
+            bail!("switch.cache_value_max must be ≥ 1 when the cache is enabled");
         }
         Ok(())
     }
@@ -637,6 +682,41 @@ mod tests {
         assert!(cfg.deploy.report_path.is_empty());
         assert_eq!(cfg.deploy.kill_node, -1);
         assert_eq!(cfg.deploy.expect_migrations, 0);
+    }
+
+    #[test]
+    fn switch_cache_knobs_apply_and_validate() {
+        // Off by default: the entire feature is inert unless asked for.
+        let cfg = Config::default();
+        assert_eq!(cfg.switch.cache_slots, 0);
+        assert_eq!(cfg.switch.cache_value_max, 256);
+        assert_eq!(cfg.switch.cache_admit_threshold, 3);
+        assert_eq!(cfg.deploy.min_cache_hit_rate, 0.0);
+
+        let cfg = Config::from_str(
+            r#"
+            [switch]
+            cache_slots = 256
+            cache_value_max = 512
+            cache_admit_threshold = 2
+            [deploy]
+            min_cache_hit_rate = 0.2
+        "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.switch.cache_slots, 256);
+        assert_eq!(cfg.switch.cache_value_max, 512);
+        assert_eq!(cfg.switch.cache_admit_threshold, 2);
+        assert_eq!(cfg.deploy.min_cache_hit_rate, 0.2);
+
+        // The hit-rate gate is a fraction, and meaningless without a cache.
+        assert!(Config::from_str("[deploy]\nmin_cache_hit_rate = 1.5").is_err());
+        assert!(Config::from_str("[deploy]\nmin_cache_hit_rate = -0.1").is_err());
+        let err = Config::from_str("[deploy]\nmin_cache_hit_rate = 0.2").unwrap_err();
+        assert!(format!("{err:#}").contains("cache_slots"), "{err:#}");
+        // An enabled cache must be able to hold at least a 1-byte value.
+        assert!(Config::from_str("[switch]\ncache_slots = 8\ncache_value_max = 0").is_err());
+        assert!(Config::from_str("[switch]\ncache_slots = 8").is_ok());
     }
 
     #[test]

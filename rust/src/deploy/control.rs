@@ -230,6 +230,11 @@ impl CtrlReply {
                 put_uvarint(&mut out, s.bad_frames);
                 put_uvarint(&mut out, s.dropped);
                 put_uvarint(&mut out, s.send_failures);
+                put_uvarint(&mut out, s.cache_hits);
+                put_uvarint(&mut out, s.cache_misses);
+                put_uvarint(&mut out, s.cache_admits);
+                put_uvarint(&mut out, s.cache_evicts);
+                put_uvarint(&mut out, s.cache_invalidations);
             }
         }
         out
@@ -259,6 +264,11 @@ impl CtrlReply {
                 bad_frames: get_uvarint(data, &mut pos)?,
                 dropped: get_uvarint(data, &mut pos)?,
                 send_failures: get_uvarint(data, &mut pos)?,
+                cache_hits: get_uvarint(data, &mut pos)?,
+                cache_misses: get_uvarint(data, &mut pos)?,
+                cache_admits: get_uvarint(data, &mut pos)?,
+                cache_evicts: get_uvarint(data, &mut pos)?,
+                cache_invalidations: get_uvarint(data, &mut pos)?,
             }),
             other => bail!("bad control reply tag {other}"),
         })
@@ -327,6 +337,11 @@ mod tests {
                 bad_frames: 3,
                 dropped: u64::MAX,
                 send_failures: 0,
+                cache_hits: 41,
+                cache_misses: 7,
+                cache_admits: 5,
+                cache_evicts: 2,
+                cache_invalidations: u64::MAX - 1,
             }),
         ];
         for r in replies {

@@ -110,6 +110,21 @@ impl LoopbackReport {
                 self.drive.summary_line()
             );
         }
+        if cfg.deploy.min_cache_hit_rate > 0.0 {
+            let rate = self.servers.cache_hit_rate().unwrap_or(0.0);
+            if rate < cfg.deploy.min_cache_hit_rate {
+                bail!(
+                    "switch cache hit rate {:.3} is below the deploy.min_cache_hit_rate \
+                     floor {:.3} (hits={} misses={} admits={} evicts={})",
+                    rate,
+                    cfg.deploy.min_cache_hit_rate,
+                    self.servers.cache_hits,
+                    self.servers.cache_misses,
+                    self.servers.cache_admits,
+                    self.servers.cache_evicts
+                );
+            }
+        }
         if self.controller.migrations < cfg.deploy.expect_migrations {
             bail!(
                 "deploy.expect_migrations={} but only {} migrations were applied \
@@ -126,7 +141,7 @@ impl LoopbackReport {
     }
 
     pub fn summary(&self) -> String {
-        format!(
+        let mut line = format!(
             "{} | controller: epochs={} repairs={} migrations={} splits={} killed={:?} \
              observed_ops={} | servers: bad_frames={} dropped={} send_failures={}",
             self.drive.summary_line(),
@@ -139,7 +154,20 @@ impl LoopbackReport {
             self.servers.bad_frames,
             self.servers.dropped,
             self.servers.send_failures
-        )
+        );
+        if let Some(rate) = self.servers.cache_hit_rate() {
+            line.push_str(&format!(
+                " | switch_cache: hits={} misses={} hit_rate={:.1}% admits={} evicts={} \
+                 invalidations={}",
+                self.servers.cache_hits,
+                self.servers.cache_misses,
+                rate * 100.0,
+                self.servers.cache_admits,
+                self.servers.cache_evicts,
+                self.servers.cache_invalidations
+            ));
+        }
+        line
     }
 }
 
@@ -697,6 +725,9 @@ pub fn run_threads(cfg: &Config) -> Result<LoopbackReport> {
     let drive = drive?;
     if !cfg.deploy.report_path.is_empty() {
         loadgen::write_report(&drive, cfg, &cfg.deploy.report_path)?;
+        if cfg.switch.cache_slots > 0 {
+            append_cache_report(&cfg.deploy.report_path, &servers)?;
+        }
     }
     Ok(LoopbackReport { drive, controller, servers })
 }
@@ -790,10 +821,44 @@ pub fn run_processes(cfg: &Config, passthrough: &[String]) -> Result<LoopbackRep
             reap(&mut c);
         }
     }
+    // The drive child wrote the JSON report before the cache counters
+    // were collectible; patch them in now. Best-effort: a patch failure
+    // must not fail an otherwise-clean run (the gate reads the in-memory
+    // snapshot, not the file).
+    if result.is_ok() && !cfg.deploy.report_path.is_empty() && cfg.switch.cache_slots > 0 {
+        if let Err(e) = append_cache_report(&cfg.deploy.report_path, &servers) {
+            eprintln!("[harness] could not append switch_cache to report: {e:#}");
+        }
+    }
     result.map(|mut report| {
         report.servers = servers;
         report
     })
+}
+
+/// Graft the switch-cache counters onto an already-written loadgen JSON
+/// report. The drive side cannot write these itself — the counters live
+/// with the switch (in-process handle or child snapshot) and are only
+/// final after shutdown — so the harness appends a `switch_cache` object
+/// to the report's top level once they are collected.
+fn append_cache_report(path: &str, servers: &ServerStatsSnapshot) -> Result<()> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading loadgen report {path}"))?;
+    let body = text
+        .trim_end()
+        .strip_suffix('}')
+        .with_context(|| format!("loadgen report {path} is not a JSON object"))?;
+    let patched = format!(
+        "{body},\"switch_cache\":{{\"hits\":{},\"misses\":{},\"hit_rate\":{:.6},\
+         \"admits\":{},\"evicts\":{},\"invalidations\":{}}}}}",
+        servers.cache_hits,
+        servers.cache_misses,
+        servers.cache_hit_rate().unwrap_or(0.0),
+        servers.cache_admits,
+        servers.cache_evicts,
+        servers.cache_invalidations
+    );
+    std::fs::write(path, patched).with_context(|| format!("rewriting loadgen report {path}"))
 }
 
 fn with_args(passthrough: &[String], head: &[String]) -> Vec<String> {
@@ -871,6 +936,49 @@ mod tests {
         assert!(format!("{err:#}").contains("min_throughput"), "{err:#}");
         report.drive.throughput_ops = 1_000;
         report.gate(&cfg).unwrap();
+    }
+
+    #[test]
+    fn cache_hit_rate_floor_gates_the_run() {
+        let mut cfg = Config::default();
+        cfg.cluster.racks = 1;
+        cfg.cluster.nodes_per_rack = 3;
+        cfg.workload.ops_per_client = 25;
+        cfg.switch.cache_slots = 64;
+        cfg.deploy.min_cache_hit_rate = 0.5;
+        let mut report = LoopbackReport {
+            drive: DriveReport::default(),
+            controller: ControllerReport::default(),
+            servers: ServerStatsSnapshot::default(),
+        };
+        report.drive.ops = cfg.cluster.clients as u64 * cfg.workload.ops_per_client;
+        // No cache traffic at all reads as a 0% hit rate, not a free pass.
+        let err = report.gate(&cfg).unwrap_err();
+        assert!(format!("{err:#}").contains("min_cache_hit_rate"), "{err:#}");
+        report.servers.cache_hits = 4;
+        report.servers.cache_misses = 6;
+        let err = report.gate(&cfg).unwrap_err();
+        assert!(format!("{err:#}").contains("min_cache_hit_rate"), "{err:#}");
+        report.servers.cache_hits = 6;
+        report.gate(&cfg).unwrap();
+    }
+
+    #[test]
+    fn cache_report_patch_grafts_a_top_level_object() {
+        let path = std::env::temp_dir().join("turbokv_cache_patch_test.json");
+        let path = path.to_str().expect("utf8 temp path");
+        std::fs::write(path, "{\"schema\":\"turbokv-loadgen-v1\",\"latency_us\":{}}").unwrap();
+        let servers = ServerStatsSnapshot {
+            cache_hits: 3,
+            cache_misses: 1,
+            ..Default::default()
+        };
+        append_cache_report(path, &servers).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(text.contains("\"switch_cache\":{\"hits\":3,\"misses\":1"), "{text}");
+        assert!(text.ends_with("}}"), "{text}");
+        assert_eq!(text.matches('{').count(), text.matches('}').count());
+        std::fs::remove_file(path).ok();
     }
 }
 

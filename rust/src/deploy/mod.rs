@@ -184,6 +184,15 @@ pub struct ServerStats {
     pub dropped: std::sync::atomic::AtomicU64,
     /// Outgoing packets whose destination send failed (peer dead).
     pub send_failures: std::sync::atomic::AtomicU64,
+    /// Switch value cache (serve-switch only; zero elsewhere): Gets
+    /// served from switch memory / misses on the coordinator path /
+    /// admitted reply values / policy evictions / invalidations. These
+    /// mirror `SwitchStats.cache_*`, published after every pipeline pass.
+    pub cache_hits: std::sync::atomic::AtomicU64,
+    pub cache_misses: std::sync::atomic::AtomicU64,
+    pub cache_admits: std::sync::atomic::AtomicU64,
+    pub cache_evicts: std::sync::atomic::AtomicU64,
+    pub cache_invalidations: std::sync::atomic::AtomicU64,
 }
 
 /// A plain copy of [`ServerStats`] at one instant.
@@ -192,6 +201,11 @@ pub struct ServerStatsSnapshot {
     pub bad_frames: u64,
     pub dropped: u64,
     pub send_failures: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub cache_admits: u64,
+    pub cache_evicts: u64,
+    pub cache_invalidations: u64,
 }
 
 impl ServerStats {
@@ -200,6 +214,11 @@ impl ServerStats {
             bad_frames: self.bad_frames.load(Ordering::Relaxed),
             dropped: self.dropped.load(Ordering::Relaxed),
             send_failures: self.send_failures.load(Ordering::Relaxed),
+            cache_hits: self.cache_hits.load(Ordering::Relaxed),
+            cache_misses: self.cache_misses.load(Ordering::Relaxed),
+            cache_admits: self.cache_admits.load(Ordering::Relaxed),
+            cache_evicts: self.cache_evicts.load(Ordering::Relaxed),
+            cache_invalidations: self.cache_invalidations.load(Ordering::Relaxed),
         }
     }
 }
@@ -210,6 +229,18 @@ impl ServerStatsSnapshot {
         self.bad_frames += other.bad_frames;
         self.dropped += other.dropped;
         self.send_failures += other.send_failures;
+        self.cache_hits += other.cache_hits;
+        self.cache_misses += other.cache_misses;
+        self.cache_admits += other.cache_admits;
+        self.cache_evicts += other.cache_evicts;
+        self.cache_invalidations += other.cache_invalidations;
+    }
+
+    /// Cache hit rate over the coordinator Gets this server saw (`None`
+    /// when it never ran the cache stage).
+    pub fn cache_hit_rate(&self) -> Option<f64> {
+        let total = self.cache_hits + self.cache_misses;
+        (total > 0).then(|| self.cache_hits as f64 / total as f64)
     }
 }
 

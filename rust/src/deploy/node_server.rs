@@ -47,6 +47,11 @@ struct NodeShared {
     net: Netmap,
     stop: Arc<AtomicBool>,
     stats: Arc<ServerStats>,
+    /// When the switch runs a value cache, point-op tail replies detour
+    /// through the switch data port (instead of going straight to the
+    /// client) so the cache observes update acks and can admit hot Get
+    /// values from reply traffic. Off (direct-to-client) by default.
+    reply_via_switch: bool,
 }
 
 /// The storage engine the simulator's `Cluster::build` would give this
@@ -80,6 +85,7 @@ pub fn spawn(
         net,
         stop: stop.clone(),
         stats: stats.clone(),
+        reply_via_switch: cfg.switch.cache_slots > 0,
     });
 
     let mut threads = {
@@ -137,7 +143,7 @@ impl ShardHandler for NodeData {
             return;
         }
         let shared = &self.shared;
-        let outs: Vec<Packet> = {
+        let outs: Vec<(Packet, bool)> = {
             let mut node = shared.node.lock().expect("node poisoned");
             let node_ip = shared.topo.node_ip(node.id);
             self.batch
@@ -152,11 +158,12 @@ impl ShardHandler for NodeData {
                             // pipelined client can match it to the right
                             // in-flight op. Forwards keep their header and
                             // are untouched.
-                            if out.turbo.is_none() {
+                            let echoed = out.turbo.is_none();
+                            if echoed {
                                 out.turbo = req_turbo;
                                 out.eth.ethertype = ETHERTYPE_TURBOKV;
                             }
-                            Some(out)
+                            Some((out, echoed))
                         }
                         Err(_) => {
                             shared.stats.bad_frames.fetch_add(1, Ordering::Relaxed);
@@ -166,8 +173,18 @@ impl ShardHandler for NodeData {
                 })
                 .collect()
         };
-        for out in outs {
-            match shared.net.endpoint_addr(&shared.topo, out.ipv4.dst) {
+        for (out, echoed) in outs {
+            // With the switch value cache on, point-op tail replies take
+            // the simulator's return path — back through the ToR — so the
+            // cache sees update acks and can admit Get values. The switch
+            // forwards them to the client by destination IP. Chain
+            // forwards and scan replies are never detoured.
+            let addr = if echoed && shared.reply_via_switch {
+                Some(shared.net.switch_data)
+            } else {
+                shared.net.endpoint_addr(&shared.topo, out.ipv4.dst)
+            };
+            match addr {
                 Some(addr) => io.send_to(addr, out.encode()),
                 None => {
                     shared.stats.dropped.fetch_add(1, Ordering::Relaxed);

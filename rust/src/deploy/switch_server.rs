@@ -66,6 +66,7 @@ pub fn build_switch(cfg: &Config, topo: &Topology) -> Switch {
     for n in 0..cfg.cluster.nodes() {
         sw.registers.set_node(n as u16, topo.node_ip(n), n as u16);
     }
+    sw.configure_cache(&cfg.switch);
     sw
 }
 
@@ -156,6 +157,15 @@ impl ShardHandler for SwitchData {
                 None => sw.stats.dropped += 1,
             }
         }
+        // Publish the value cache's counters while still under the core
+        // lock: absolute stores, since `sw.stats` is the single source of
+        // truth and every shard publishes the same totals.
+        let st = Ordering::Relaxed;
+        shared.stats.cache_hits.store(sw.stats.cache_hits, st);
+        shared.stats.cache_misses.store(sw.stats.cache_misses, st);
+        shared.stats.cache_admits.store(sw.stats.cache_admits, st);
+        shared.stats.cache_evicts.store(sw.stats.cache_evicts, st);
+        shared.stats.cache_invalidations.store(sw.stats.cache_invalidations, st);
         drop(core);
         self.batch.clear();
     }
@@ -219,7 +229,7 @@ impl ShardHandler for SwitchCtrl {
             Ok(CtrlMsg::DrainCounters) => {
                 let mut core = shared.core.lock().expect("switch poisoned");
                 let (read, write) = core.0.registers.drain_counters();
-                (CtrlReply::Counters { read, write }, true)
+                (CtrlReply::Counters { read: read.to_vec(), write: write.to_vec() }, true)
             }
             Ok(CtrlMsg::SetChain { idx, chain }) => {
                 let mut core = shared.core.lock().expect("switch poisoned");
@@ -273,6 +283,10 @@ fn set_chain(sw: &mut Switch, idx: u32, chain: Vec<u16>) -> CtrlReply {
     if let Some(err) = check_install(sw, idx, &chain) {
         return err;
     }
+    // A rerouted record's cached values (and in-flight admission samples)
+    // must die before the new chain serves — same order as the simulator.
+    let (start, end) = sw.table.bounds(idx);
+    sw.invalidate_span(start, end);
     sw.table.set_chain(idx, chain);
     CtrlReply::Ok
 }
@@ -291,6 +305,7 @@ fn split_record(sw: &mut Switch, idx: u32, at: Key, chain: Vec<u16>) -> CtrlRepl
             "split point {at:?} outside record {idx} [{start:?}, {end:?}]"
         ));
     }
+    sw.invalidate_span(start, end);
     sw.table.split(idx, at, chain);
     sw.registers.insert_counter_slot(idx + 1);
     CtrlReply::Ok

@@ -66,6 +66,9 @@ Real-socket deployment (one soft switch, --cluster.racks=1):
                   [--controller.migration=true --controller.split_hot=true
                    --workload.zipf_theta=1.2 --deploy.expect_migrations=1]
                   [--deploy.min_throughput=1500]
+                  [--switch.cache_slots=256 --switch.cache_value_max=256
+                   --switch.cache_admit_threshold=3
+                   --deploy.min_cache_hit_rate=0.2]
 All processes must share the same config flags; the chain headers carry the
 topology's simulated IPs, the [deploy] port map carries the bytes. Servers
 run --deploy.shards event-loop shards per data port. Each drive client keeps
@@ -75,6 +78,10 @@ send time (coordinated-omission-safe), and --deploy.report_path writes the
 machine-readable turbokv-loadgen-v1 JSON report. With --controller.migration
 the harness controller runs the full §5.1 loop live: hot sub-ranges are
 split and migrated over the control plane mid-workload.
+--switch.cache_slots>0 enables the in-switch hot-value cache on the
+coordinator ToR (simulator and deployment alike): hot Gets are answered
+from switch memory, every update invalidates before forwarding, and the
+harness gates on --deploy.min_cache_hit_rate when set.
 ";
 
 fn cmd_run(args: &Args) -> Result<()> {

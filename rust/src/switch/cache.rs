@@ -1,0 +1,565 @@
+//! Switch-resident hot-key value cache with version-safe invalidation
+//! (the ROADMAP's NetCache-style step beyond the paper).
+//!
+//! The switch already sees every packet on the coordinator path, so the
+//! hottest *values* can be served sub-RTT from switch memory: a bounded
+//! number of `cache_slots` entries, each holding one key's reply payload
+//! (value bytes capped at `cache_value_max`). Three mechanisms keep a
+//! cached read indistinguishable from an authoritative one:
+//!
+//! * **Version-sampled admission.** A Get miss on the attached-ToR path
+//!   records a *pending sample* carrying the key's current `(version,
+//!   generation)`. When the tail's reply flows back through the switch,
+//!   the value is admitted only if that sample still matches and no
+//!   update is in flight — a read that raced a write can never be cached
+//!   stale, because the racing write bumped the version (at ingress) and
+//!   bumps it again when its ack passes (so a pre-write value also fails
+//!   the recheck).
+//! * **Invalidate-before-forward.** Every update ingress (Put/Del)
+//!   removes the key's entry *before* the packet is forwarded to the
+//!   chain head, bumps the key's version, and marks an in-flight update;
+//!   the matching ack (tail reply) clears the in-flight mark under a
+//!   fresh version. Controller reconfigurations (`SetChain`, migration
+//!   extract, splits) invalidate every entry in the covering span and
+//!   bump a cache-wide generation, killing all outstanding samples.
+//! * **Deterministic staleness recovery.** A lost ack would pin a key's
+//!   slot dirty forever, so in-flight marks expire after a fixed number
+//!   of pipeline passes (a pass counter, not wall clock — simulator runs
+//!   stay bit-identical per seed).
+//!
+//! Admission is driven by a per-key hotness sketch fed on every attached
+//! Get miss, through a pluggable [`CachePolicy`] (default:
+//! frequency-threshold admission + clock eviction). The cache's memory
+//! bound is `cache_slots * (key + value_max + version)` plus the fixed
+//! hash-indexed version/sketch arrays; hash collisions in those arrays
+//! can only cause *spurious* invalidation or refused admission — never a
+//! stale hit.
+
+use std::collections::{BTreeMap, VecDeque};
+
+use crate::net::packet::Payload;
+use crate::types::Key;
+
+/// Pipeline passes an in-flight update mark may survive without an ack
+/// before it is conservatively expired (with a version bump, so nothing
+/// sampled meanwhile can be admitted).
+const INFLIGHT_TTL_TICKS: u64 = 4096;
+
+/// Sketch feeds between halving decays (per sketch cell, amortized).
+const SKETCH_DECAY_FEEDS_PER_CELL: usize = 16;
+
+/// Admission/eviction policy seam, so NetCache-style frequency admission
+/// can be swapped for e.g. LFU or TinyLFU without touching the cache's
+/// version protocol.
+pub trait CachePolicy: Send + std::fmt::Debug {
+    /// Admit a key whose hotness-sketch count has reached `hotness`?
+    fn should_admit(&mut self, hotness: u32) -> bool;
+    /// Choose the slot to evict; every slot is occupied when called.
+    /// `ref_bits` are the per-slot reference bits (set on hit/admit); the
+    /// policy may clear them as it scans.
+    fn pick_victim(&mut self, ref_bits: &mut [bool]) -> usize;
+}
+
+/// Default policy: admit once a key's sketch count reaches `threshold`;
+/// evict with the classic clock (second-chance) sweep.
+#[derive(Debug)]
+pub struct FreqClockPolicy {
+    threshold: u32,
+    hand: usize,
+}
+
+impl FreqClockPolicy {
+    pub fn new(threshold: u32) -> FreqClockPolicy {
+        FreqClockPolicy { threshold: threshold.max(1), hand: 0 }
+    }
+}
+
+impl CachePolicy for FreqClockPolicy {
+    fn should_admit(&mut self, hotness: u32) -> bool {
+        hotness >= self.threshold
+    }
+
+    fn pick_victim(&mut self, ref_bits: &mut [bool]) -> usize {
+        // Terminates: every referenced slot loses its bit on the first
+        // sweep, so the second sweep must find a victim.
+        loop {
+            if self.hand >= ref_bits.len() {
+                self.hand = 0;
+            }
+            if ref_bits[self.hand] {
+                ref_bits[self.hand] = false;
+                self.hand += 1;
+            } else {
+                let victim = self.hand;
+                self.hand += 1;
+                return victim;
+            }
+        }
+    }
+}
+
+/// One cached entry: the key and its reply payload (the already-encoded
+/// `Reply::Value(Some(v))` bytes, shared O(1) via [`Payload`]).
+#[derive(Debug)]
+struct Entry {
+    key: Key,
+    payload: Payload,
+    /// Version the value was admitted under (diagnostic; correctness
+    /// comes from the admission-time recheck).
+    #[allow(dead_code)]
+    version: u64,
+}
+
+/// Hash-indexed per-key write state. Collisions fold distinct keys onto
+/// one slot, which is safe: a collision can only bump versions or show
+/// in-flight updates spuriously, refusing an admission — never serving
+/// a stale value.
+#[derive(Clone, Copy, Debug, Default)]
+struct VersionSlot {
+    version: u64,
+    inflight: u32,
+    /// Pass tick of the last change, for in-flight TTL expiry.
+    tick: u64,
+}
+
+/// An admission sample taken at Get-miss ingress: the reply may be
+/// admitted only if the key's `(version, generation)` still match and no
+/// update is in flight when the reply passes back through the switch.
+#[derive(Clone, Copy, Debug)]
+pub struct Sample {
+    tag: u64,
+    key: Key,
+    version: u64,
+    generation: u64,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct PendingUpdate {
+    tag: u64,
+    key: Key,
+}
+
+/// Outcome of an admission attempt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Admitted {
+    /// Version/generation recheck failed (or an update is in flight).
+    No,
+    /// Stored into a free slot (or refreshed an existing entry).
+    Fresh,
+    /// Stored after evicting another entry.
+    Evicted,
+}
+
+/// The bounded, version-safe value cache one ToR switch carries.
+#[derive(Debug)]
+pub struct ValueCache {
+    slots: Vec<Option<Entry>>,
+    /// Key -> slot index. A BTreeMap so covering-span invalidation is a
+    /// range scan and iteration order is deterministic.
+    by_key: BTreeMap<Key, usize>,
+    ref_bits: Vec<bool>,
+    value_max: usize,
+    versions: Vec<VersionSlot>,
+    version_mask: usize,
+    sketch: Vec<u32>,
+    sketch_mask: usize,
+    sketch_feeds: usize,
+    /// Bumped by every covering-span invalidation; admission samples from
+    /// before a reconfiguration can never land after it.
+    generation: u64,
+    /// Pipeline-pass counter (deterministic time base for TTL expiry).
+    tick: u64,
+    pending_samples: VecDeque<Sample>,
+    pending_updates: VecDeque<PendingUpdate>,
+    pending_cap: usize,
+    policy: Box<dyn CachePolicy>,
+}
+
+impl ValueCache {
+    pub fn new(slots: usize, value_max: usize, policy: Box<dyn CachePolicy>) -> ValueCache {
+        assert!(slots > 0, "a zero-slot cache must be represented as None");
+        let version_len = (slots * 4).next_power_of_two().max(64);
+        let sketch_len = (slots * 8).next_power_of_two().max(256);
+        ValueCache {
+            slots: (0..slots).map(|_| None).collect(),
+            by_key: BTreeMap::new(),
+            ref_bits: vec![false; slots],
+            value_max,
+            versions: vec![VersionSlot::default(); version_len],
+            version_mask: version_len - 1,
+            sketch: vec![0; sketch_len],
+            sketch_mask: sketch_len - 1,
+            sketch_feeds: 0,
+            generation: 0,
+            tick: 0,
+            pending_samples: VecDeque::new(),
+            pending_updates: VecDeque::new(),
+            pending_cap: (slots * 4).max(64),
+            policy,
+        }
+    }
+
+    /// Advance the deterministic pass clock (once per `process_batch`).
+    pub fn begin_pass(&mut self) {
+        self.tick += 1;
+    }
+
+    /// Serve a Get from the cache, if present. Sets the slot's reference
+    /// bit (clock eviction's recency signal). The payload clone is O(1).
+    pub fn lookup(&mut self, key: Key) -> Option<Payload> {
+        let &i = self.by_key.get(&key)?;
+        let e = self.slots[i].as_ref().expect("by_key points at an occupied slot");
+        self.ref_bits[i] = true;
+        Some(e.payload.clone())
+    }
+
+    /// Record an attached-ToR Get miss: feed the hotness sketch and, if
+    /// the policy says the key is hot and its write state is clean,
+    /// register an admission sample for the reply flowing back.
+    pub fn note_miss(&mut self, key: Key, tag: u64) {
+        let si = (hash_key(key) as usize) & self.sketch_mask;
+        self.sketch[si] = self.sketch[si].saturating_add(1);
+        self.sketch_feeds += 1;
+        if self.sketch_feeds >= self.sketch.len() * SKETCH_DECAY_FEEDS_PER_CELL {
+            for c in self.sketch.iter_mut() {
+                *c /= 2;
+            }
+            self.sketch_feeds = 0;
+        }
+        let hotness = self.sketch[si];
+        if self.by_key.contains_key(&key) || !self.policy.should_admit(hotness) {
+            return;
+        }
+        let generation = self.generation;
+        let (version, inflight) = {
+            let s = self.resolve_slot(key);
+            (s.version, s.inflight)
+        };
+        if inflight != 0 {
+            return; // a write is racing this read: never sample it
+        }
+        let dup = if tag != 0 {
+            self.pending_samples.iter().any(|s| s.tag == tag)
+        } else {
+            self.pending_samples.iter().any(|s| s.key == key)
+        };
+        if dup {
+            return;
+        }
+        if self.pending_samples.len() >= self.pending_cap {
+            self.pending_samples.pop_front();
+        }
+        self.pending_samples.push_back(Sample { tag, key, version, generation });
+    }
+
+    /// Record an update (Put/Del) at ingress: bump the key's version,
+    /// mark an update in flight, and invalidate any cached entry — all
+    /// *before* the packet is forwarded to the chain head. Returns true
+    /// if an entry was actually invalidated.
+    ///
+    /// The simulator routes one update attempt through the coordinator
+    /// ToR exactly once at the key-routing stage, but retransmissions
+    /// reuse nothing: each attempt carries its own correlation tag, so
+    /// duplicate sightings of one attempt (`tag != 0`) are deduplicated
+    /// while deployment traffic (`tag == 0`, seen once per frame) counts
+    /// every sighting.
+    pub fn note_update(&mut self, key: Key, tag: u64) -> bool {
+        let dup = tag != 0 && self.pending_updates.iter().any(|u| u.tag == tag);
+        if !dup {
+            if self.pending_updates.len() >= self.pending_cap {
+                if let Some(lost) = self.pending_updates.pop_front() {
+                    // Treat the rotated-out update as a lost ack:
+                    // conservatively free its slot under a fresh version.
+                    let tick = self.tick;
+                    let s = self.slot_mut(lost.key);
+                    s.inflight = s.inflight.saturating_sub(1);
+                    s.version += 1;
+                    s.tick = tick;
+                }
+            }
+            self.pending_updates.push_back(PendingUpdate { tag, key });
+            let tick = self.tick;
+            let s = self.slot_mut(key);
+            s.inflight += 1;
+            s.version += 1;
+            s.tick = tick;
+        }
+        if let Some(i) = self.by_key.remove(&key) {
+            self.slots[i] = None;
+            self.ref_bits[i] = false;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// An update ack passed back through the switch: clear the in-flight
+    /// mark under a fresh version (the write is committed at the tail; a
+    /// *new* sample taken from here on may be admitted). Simulator acks
+    /// match by tag; deployment acks (`tag == 0`) match by the echoed
+    /// key of an update-op reply.
+    pub fn try_ack(&mut self, tag: u64, update_echo_key: Option<Key>) -> bool {
+        let pos = if tag != 0 {
+            self.pending_updates.iter().position(|u| u.tag == tag)
+        } else if let Some(key) = update_echo_key {
+            self.pending_updates.iter().position(|u| u.key == key)
+        } else {
+            None
+        };
+        let Some(pos) = pos else {
+            return false;
+        };
+        let key = self.pending_updates.remove(pos).expect("position in range").key;
+        let tick = self.tick;
+        let s = self.slot_mut(key);
+        s.inflight = s.inflight.saturating_sub(1);
+        s.version += 1;
+        s.tick = tick;
+        true
+    }
+
+    /// Claim the admission sample matching a Get reply, if any. Simulator
+    /// replies match by tag; deployment replies (`tag == 0`) by the
+    /// echoed key of a Get-op reply.
+    pub fn take_sample(&mut self, tag: u64, get_echo_key: Option<Key>) -> Option<Sample> {
+        let pos = if tag != 0 {
+            self.pending_samples.iter().position(|s| s.tag == tag)
+        } else if let Some(key) = get_echo_key {
+            self.pending_samples.iter().position(|s| s.key == key)
+        } else {
+            None
+        };
+        pos.and_then(|p| self.pending_samples.remove(p))
+    }
+
+    /// Admit a reply payload under a claimed sample. The recheck is the
+    /// version-safety core: the key's version and the cache generation
+    /// must still equal what the request sampled at ingress, and no
+    /// update may be in flight.
+    pub fn admit(&mut self, sample: Sample, payload: Payload) -> Admitted {
+        let generation = self.generation;
+        let (version, inflight) = {
+            let s = self.resolve_slot(sample.key);
+            (s.version, s.inflight)
+        };
+        if version != sample.version || generation != sample.generation || inflight != 0 {
+            return Admitted::No;
+        }
+        if let Some(&i) = self.by_key.get(&sample.key) {
+            self.slots[i] = Some(Entry { key: sample.key, payload, version });
+            self.ref_bits[i] = true;
+            return Admitted::Fresh;
+        }
+        let (idx, evicted) = match self.slots.iter().position(|s| s.is_none()) {
+            Some(free) => (free, false),
+            None => {
+                let victim = self.policy.pick_victim(&mut self.ref_bits);
+                let old = self.slots[victim].take().expect("full cache slot occupied");
+                self.by_key.remove(&old.key);
+                (victim, true)
+            }
+        };
+        self.slots[idx] = Some(Entry { key: sample.key, payload, version });
+        self.by_key.insert(sample.key, idx);
+        self.ref_bits[idx] = true;
+        if evicted {
+            Admitted::Evicted
+        } else {
+            Admitted::Fresh
+        }
+    }
+
+    /// Controller reconfiguration (`SetChain`, migration extract, split)
+    /// over `[start, end]`: drop every cached entry in the span and bump
+    /// the cache generation so *all* outstanding admission samples die —
+    /// a value read under the old chain must never land after the new
+    /// chain took over. Returns the number of entries invalidated.
+    pub fn invalidate_span(&mut self, start: Key, end: Key) -> u64 {
+        let keys: Vec<Key> = self.by_key.range(start..=end).map(|(&k, _)| k).collect();
+        for k in &keys {
+            if let Some(i) = self.by_key.remove(k) {
+                self.slots[i] = None;
+                self.ref_bits[i] = false;
+            }
+        }
+        self.generation += 1;
+        self.pending_samples.clear();
+        keys.len() as u64
+    }
+
+    /// Largest value (in bytes) the cache will admit.
+    pub fn value_max(&self) -> usize {
+        self.value_max
+    }
+
+    /// Number of currently cached entries.
+    pub fn len(&self) -> usize {
+        self.by_key.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_key.is_empty()
+    }
+
+    /// Is `key` currently cached? (Test/diagnostic helper.)
+    pub fn contains(&self, key: Key) -> bool {
+        self.by_key.contains_key(&key)
+    }
+
+    fn slot_mut(&mut self, key: Key) -> &mut VersionSlot {
+        let i = (hash_key(key) as usize) & self.version_mask;
+        &mut self.versions[i]
+    }
+
+    /// The key's version slot, with in-flight TTL expiry applied first: a
+    /// mark older than [`INFLIGHT_TTL_TICKS`] passes is a lost ack and is
+    /// cleared under a fresh version (so nothing sampled meanwhile can be
+    /// admitted, but the key becomes cacheable again).
+    fn resolve_slot(&mut self, key: Key) -> &mut VersionSlot {
+        let tick = self.tick;
+        let s = self.slot_mut(key);
+        if s.inflight > 0 && tick.saturating_sub(s.tick) > INFLIGHT_TTL_TICKS {
+            s.inflight = 0;
+            s.version += 1;
+            s.tick = tick;
+        }
+        s
+    }
+}
+
+/// Deterministic 128-bit -> 64-bit key hash (splitmix64-style finalizer
+/// over the folded halves). No wall clock, no per-process seed: the same
+/// run always hashes the same way.
+fn hash_key(key: Key) -> u64 {
+    let x = (key.0 as u64) ^ ((key.0 >> 64) as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    let mut z = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache(slots: usize, threshold: u32) -> ValueCache {
+        ValueCache::new(slots, 256, Box::new(FreqClockPolicy::new(threshold)))
+    }
+
+    fn payload(byte: u8) -> Payload {
+        Payload::from(vec![byte; 8])
+    }
+
+    /// Miss + matching reply with threshold 1: straight admission.
+    fn admit_key(c: &mut ValueCache, key: Key, tag: u64, byte: u8) {
+        c.note_miss(key, tag);
+        let sample = c.take_sample(tag, None).expect("sample registered");
+        assert_ne!(c.admit(sample, payload(byte)), Admitted::No);
+    }
+
+    #[test]
+    fn admission_requires_unchanged_version() {
+        let mut c = cache(4, 1);
+        // Get miss samples version 0...
+        c.note_miss(Key(10), 7);
+        // ...a Put races in before the Get's reply returns...
+        c.note_update(Key(10), 8);
+        // ...so the reply must NOT be admitted (version moved + inflight).
+        let sample = c.take_sample(7, None).expect("sample was registered");
+        assert_eq!(c.admit(sample, payload(1)), Admitted::No);
+        assert!(!c.contains(Key(10)));
+
+        // Even after the ack (inflight cleared), an old sample stays dead.
+        c.note_miss(Key(10), 9);
+        c.note_update(Key(10), 10);
+        c.try_ack(10, None);
+        let sample = c.take_sample(9, None).expect("second sample");
+        assert_eq!(c.admit(sample, payload(2)), Admitted::No, "ack bumped the version");
+
+        // A fresh sample taken after the ack admits cleanly.
+        admit_key(&mut c, Key(10), 11, 3);
+        assert!(c.contains(Key(10)));
+        assert_eq!(c.lookup(Key(10)).unwrap().as_slice(), &[3u8; 8][..]);
+    }
+
+    #[test]
+    fn update_ingress_invalidates_before_forwarding() {
+        let mut c = cache(4, 1);
+        admit_key(&mut c, Key(5), 1, 9);
+        assert!(c.contains(Key(5)));
+        assert!(c.note_update(Key(5), 2), "entry must be dropped at update ingress");
+        assert!(c.lookup(Key(5)).is_none());
+        // While the write is in flight the key cannot even be sampled.
+        c.note_miss(Key(5), 3);
+        assert!(c.take_sample(3, None).is_none());
+    }
+
+    #[test]
+    fn clock_eviction_under_slot_pressure() {
+        let mut c = cache(2, 1);
+        admit_key(&mut c, Key(1), 1, 1);
+        admit_key(&mut c, Key(2), 2, 2);
+        assert_eq!(c.len(), 2);
+        // Third admission must evict exactly one entry.
+        c.note_miss(Key(3), 3);
+        let s = c.take_sample(3, None).unwrap();
+        assert_eq!(c.admit(s, payload(3)), Admitted::Evicted);
+        assert_eq!(c.len(), 2);
+        assert!(c.contains(Key(3)));
+        // A hit refreshes the reference bit, steering the clock away.
+        let survivor = if c.contains(Key(1)) { Key(1) } else { Key(2) };
+        c.lookup(survivor).unwrap();
+        admit_key(&mut c, Key(4), 4, 4);
+        assert_eq!(c.len(), 2);
+        assert!(c.contains(survivor), "recently-hit entry survives the clock sweep");
+    }
+
+    #[test]
+    fn covering_span_invalidation_kills_entries_and_samples() {
+        let mut c = cache(8, 1);
+        admit_key(&mut c, Key(100), 1, 1);
+        admit_key(&mut c, Key(200), 2, 2);
+        admit_key(&mut c, Key(900), 3, 3);
+        // A sample in flight across the reconfiguration...
+        c.note_miss(Key(150), 4);
+        assert_eq!(c.invalidate_span(Key(100), Key(300)), 2);
+        assert!(!c.contains(Key(100)) && !c.contains(Key(200)));
+        assert!(c.contains(Key(900)), "outside the span survives");
+        // ...is generation-killed even though its key's version never moved.
+        assert!(c.take_sample(4, None).is_none(), "generation bump cleared samples");
+    }
+
+    #[test]
+    fn deployment_matching_by_echoed_key_with_zero_tags() {
+        let mut c = cache(4, 1);
+        c.note_miss(Key(42), 0);
+        let s = c.take_sample(0, Some(Key(42))).expect("key-matched sample");
+        assert_ne!(c.admit(s, payload(7)), Admitted::No);
+        c.note_update(Key(42), 0);
+        assert!(!c.contains(Key(42)));
+        assert!(c.try_ack(0, Some(Key(42))), "ack matched by echoed update key");
+    }
+
+    #[test]
+    fn lost_ack_expires_and_key_becomes_cacheable_again() {
+        let mut c = cache(4, 1);
+        c.note_update(Key(77), 1); // ack never arrives
+        for _ in 0..=INFLIGHT_TTL_TICKS {
+            c.begin_pass();
+        }
+        c.begin_pass();
+        admit_key(&mut c, Key(77), 2, 5);
+        assert!(c.contains(Key(77)), "TTL expiry freed the slot");
+    }
+
+    #[test]
+    fn frequency_threshold_gates_sampling() {
+        let mut c = cache(4, 3);
+        c.note_miss(Key(1), 1);
+        c.note_miss(Key(1), 2);
+        assert!(c.take_sample(1, None).is_none(), "below threshold");
+        assert!(c.take_sample(2, None).is_none(), "below threshold");
+        c.note_miss(Key(1), 3);
+        assert!(c.take_sample(3, None).is_some(), "third miss crosses the threshold");
+    }
+}

@@ -2,11 +2,13 @@
 //! register arrays, the P4-style pipeline with range splitting, and the
 //! pluggable lookup engine (rust reference / XLA artifact).
 
+pub mod cache;
 pub mod lookup;
 pub mod pipeline;
 pub mod registers;
 pub mod table;
 
+pub use cache::{Admitted, CachePolicy, FreqClockPolicy, ValueCache};
 pub use lookup::{DataplaneLookup, RustLookup};
 pub use pipeline::{Emit, Switch, SwitchStats};
 pub use registers::{RegIndex, RegisterArrays};

@@ -8,10 +8,13 @@
 //! engine plugs in), and returns the packets to emit with the neighbor to
 //! send each to. The cluster's event loop adds link and pipeline delays.
 
-use crate::net::packet::{ChainHeader, IpList, Packet, Tos};
+use crate::cluster::proto::decode_reply;
+use crate::config::SwitchConfig;
+use crate::net::packet::{ChainHeader, IpList, Packet, Tos, ETHERTYPE_TURBOKV};
 use crate::net::topology::{Addr, SwitchRole, Topology};
-use crate::types::{Key, OpCode, SwitchId};
+use crate::types::{Key, OpCode, Reply, SwitchId};
 
+use super::cache::{Admitted, FreqClockPolicy, ValueCache};
 use super::lookup::DataplaneLookup;
 use super::registers::RegisterArrays;
 use super::table::MatchActionTable;
@@ -42,6 +45,19 @@ pub struct SwitchStats {
     pub lookup_batches: u64,
     /// Total matching values looked up.
     pub lookups: u64,
+    /// Gets served straight from the switch value cache (never reached a
+    /// node).
+    pub cache_hits: u64,
+    /// Gets that went through the cache stage on the attached-coordinator
+    /// path but had no entry.
+    pub cache_misses: u64,
+    /// Reply values admitted into the cache (version recheck passed).
+    pub cache_admits: u64,
+    /// Entries evicted by the policy to make room for an admission.
+    pub cache_evicts: u64,
+    /// Entries invalidated (update ingress + covering-span
+    /// reconfigurations).
+    pub cache_invalidations: u64,
 }
 
 /// Per-pass scratch buffers, hoisted onto the switch so steady-state
@@ -58,6 +74,9 @@ struct PassScratch {
     mvs: Vec<Key>,
     /// Write flags for the batched lookup, parallel to `fresh`.
     writes: Vec<bool>,
+    /// Emitted packets of the current pass; taken by the caller each
+    /// `process_batch`, its storage handed back on the next call.
+    out: Vec<Emit>,
 }
 
 /// A programmable switch.
@@ -69,6 +88,9 @@ pub struct Switch {
     pub stats: SwitchStats,
     /// Cleared by the switch-failure experiment (§5.2).
     pub alive: bool,
+    /// Hot-key value cache; `None` unless `switch.cache_slots > 0` and
+    /// this is a ToR (the coordinator role that installs chain headers).
+    pub cache: Option<ValueCache>,
     scratch: PassScratch,
 }
 
@@ -81,12 +103,38 @@ impl Switch {
             registers: RegisterArrays::new(),
             stats: SwitchStats::default(),
             alive: true,
+            cache: None,
             scratch: PassScratch::default(),
         }
     }
 
     fn is_tor(&self) -> bool {
         matches!(self.role, SwitchRole::Tor { .. })
+    }
+
+    /// Install (or remove) the value cache from config. Only ToRs carry
+    /// one: the attached coordinator is the single point that both sees a
+    /// key's every update ingress and forwards its replies, which is what
+    /// makes version-sampled admission sound.
+    pub fn configure_cache(&mut self, cfg: &SwitchConfig) {
+        self.cache = if cfg.cache_slots > 0 && self.is_tor() {
+            Some(ValueCache::new(
+                cfg.cache_slots,
+                cfg.cache_value_max,
+                Box::new(FreqClockPolicy::new(cfg.cache_admit_threshold)),
+            ))
+        } else {
+            None
+        };
+    }
+
+    /// Invalidate every cached entry in `[start, end]` (controller
+    /// reconfigurations: `SetChain`, migration extract, splits). A no-op
+    /// without a cache.
+    pub fn invalidate_span(&mut self, start: Key, end: Key) {
+        if let Some(cache) = self.cache.as_mut() {
+            self.stats.cache_invalidations += cache.invalidate_span(start, end);
+        }
     }
 
     /// Process a batch of packets arriving in one pipeline pass. The
@@ -108,10 +156,14 @@ impl Switch {
             pkts.clear();
             return Vec::new();
         }
-        let mut out = Vec::with_capacity(pkts.len());
+        if let Some(cache) = self.cache.as_mut() {
+            cache.begin_pass();
+        }
         // The scratch buffers live on the switch between passes; take them
-        // out so `self` stays borrowable while we iterate them.
+        // out so `self` stays borrowable while we iterate them. `out` is
+        // part of the scratch too: its storage returns on the next call.
         let mut scratch = std::mem::take(&mut self.scratch);
+        scratch.out.clear();
         scratch.work.extend(pkts.drain(..).map(|p| (p, 0)));
 
         while !scratch.work.is_empty() {
@@ -123,9 +175,18 @@ impl Switch {
                     && matches!(pkt.ipv4.tos, Tos::RangeData | Tos::HashData)
                     && !self.table.is_empty();
                 if needs_keyrouting {
-                    scratch.fresh.push((pkt, delay));
+                    // Value-cache stage, before the match-action lookup:
+                    // update ingress invalidates, a hot Get may be served
+                    // right here without ever reaching a node.
+                    match self.cache_stage(pkt, delay + keyroute_ns, topo, &mut scratch.out) {
+                        Some(pkt) => scratch.fresh.push((pkt, delay)),
+                        None => {}
+                    }
                 } else {
-                    self.forward_ipv4(pkt, delay, topo, &mut out);
+                    // Reply traffic flowing back through the coordinator
+                    // feeds cache admission (and clears in-flight marks).
+                    self.observe_reply(&pkt);
+                    self.forward_ipv4(pkt, delay, topo, &mut scratch.out);
                 }
             }
             if scratch.fresh.is_empty() {
@@ -170,11 +231,90 @@ impl Switch {
                     // pkt_out is clipped to the matched sub-range.
                     pkt.turbo.as_mut().unwrap().end_key = range_end;
                 }
-                self.route_matched(pkt, delay, idx, topo, &mut out);
+                self.route_matched(pkt, delay, idx, topo, &mut scratch.out);
             }
         }
         self.scratch = scratch;
-        out
+        std::mem::take(&mut self.scratch.out)
+    }
+
+    /// Pre-lookup value-cache stage for one key-routed packet. Returns
+    /// the packet if it must continue into the match-action lookup, or
+    /// `None` if it was consumed here (a cache hit whose reply was
+    /// synthesized at the switch).
+    fn cache_stage(
+        &mut self,
+        pkt: Packet,
+        delay: u64,
+        topo: &Topology,
+        out: &mut Vec<Emit>,
+    ) -> Option<Packet> {
+        if self.cache.is_none() {
+            return Some(pkt);
+        }
+        let turbo = pkt.turbo.expect("turbokv pkt");
+        if turbo.op.is_update() {
+            // Bump the key's version and drop its entry BEFORE the update
+            // is forwarded toward the chain head: from this instant no
+            // reply sampled earlier can be admitted and no hit served.
+            let cache = self.cache.as_mut().expect("checked above");
+            if cache.note_update(turbo.key, pkt.tag) {
+                self.stats.cache_invalidations += 1;
+            }
+            return Some(pkt);
+        }
+        if turbo.op != OpCode::Get {
+            return Some(pkt); // scans always take the full path
+        }
+        let cache = self.cache.as_mut().expect("checked above");
+        let Some(payload) = cache.lookup(turbo.key) else {
+            return Some(pkt); // miss: continue into the lookup stage
+        };
+        // Hit: synthesize the reply the chain tail would have sent — the
+        // turbo-echo shape (TurboKV ethertype, Normal ToS, echoed Get
+        // header) carrying the cached, already-encoded reply payload.
+        self.stats.cache_hits += 1;
+        let mut reply = Packet::reply(pkt.ipv4.dst, pkt.ipv4.src, payload);
+        reply.eth.ethertype = ETHERTYPE_TURBOKV;
+        reply.turbo = Some(turbo);
+        reply.tag = pkt.tag;
+        self.forward_ipv4(reply, delay, topo, out);
+        None
+    }
+
+    /// Inspect a non-key-routed packet for cache bookkeeping: an update
+    /// ack clears the key's in-flight mark; a Get reply matching a
+    /// pending admission sample may be admitted (after the version-safety
+    /// recheck). Only plain reply traffic (`Tos::Normal`) is considered.
+    fn observe_reply(&mut self, pkt: &Packet) {
+        let Some(cache) = self.cache.as_mut() else { return };
+        if pkt.ipv4.tos != Tos::Normal {
+            return;
+        }
+        // Simulator replies correlate by globally-unique tag (their
+        // point-op replies carry no turbo header); deployment replies
+        // have tag 0 and correlate by the echoed turbo op + key.
+        let update_key = pkt.turbo.filter(|t| t.op.is_update()).map(|t| t.key);
+        if cache.try_ack(pkt.tag, update_key) {
+            return;
+        }
+        let get_key = pkt.turbo.filter(|t| t.op == OpCode::Get).map(|t| t.key);
+        let Some(sample) = cache.take_sample(pkt.tag, get_key) else { return };
+        // Only a present value within the size cap is cacheable; anything
+        // else (miss, ack, WrongNode, scan pairs) just burns the sample.
+        match decode_reply(pkt.payload.as_slice()) {
+            Ok(Reply::Value(Some(v))) if v.len() <= cache.value_max() => {
+                match cache.admit(sample, pkt.payload.clone()) {
+                    Admitted::Fresh => self.stats.cache_admits += 1,
+                    Admitted::Evicted => {
+                        self.stats.cache_admits += 1;
+                        self.stats.cache_evicts += 1;
+                    }
+                    Admitted::No => {}
+                }
+            }
+            _ => {}
+        }
     }
 
     /// Key-based routing action for a packet matched to record `idx`.
@@ -186,7 +326,8 @@ impl Switch {
         topo: &Topology,
         out: &mut Vec<Emit>,
     ) {
-        let op = pkt.turbo.expect("turbokv pkt").op;
+        let turbo = pkt.turbo.expect("turbokv pkt");
+        let op = turbo.op;
         // Borrowed, not cloned: every later `self` access in this function
         // touches a different field (`registers`, `stats`), so the action
         // can stay a reference — no per-packet heap allocation.
@@ -198,6 +339,15 @@ impl Switch {
 
         let attached = self.is_tor() && topo.next_hop(self.id, target_addr) == Some(target_addr);
         if attached {
+            // Cache admission is sampled on the attached-coordinator path
+            // only: this switch sees the key's every update ingress, so
+            // the (version, generation) captured here is authoritative.
+            if op == OpCode::Get {
+                if let Some(cache) = self.cache.as_mut() {
+                    self.stats.cache_misses += 1;
+                    cache.note_miss(turbo.key, pkt.tag);
+                }
+            }
             // Full coordinator processing (Fig. 9): set destination to the
             // chain entry point, mark processed, insert the chain header.
             let client_ip = pkt.ipv4.src;
@@ -253,6 +403,7 @@ fn matching_value(pkt: &Packet) -> Key {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cluster::proto::encode_reply;
     use crate::config::ClusterConfig;
     use crate::net::packet::{Ip, ETHERTYPE_IPV4};
     use crate::partition::Directory;
@@ -451,17 +602,168 @@ mod tests {
     #[test]
     fn scratch_buffers_survive_reuse_across_passes() {
         // Two passes through the same switch must behave identically —
-        // the hoisted scratch buffers are cleared, not stale.
+        // the hoisted scratch buffers are cleared, not stale. The emit
+        // buffer is scratch too: each call must hand out a fully-owned
+        // vector (mem::take) and leave the scratch empty behind it.
         let (topo, dir, mut tor0, _) = setup();
         let (start, _) = dir.bounds(0);
         for round in 0..3 {
             let emits =
                 tor0.process_batch(&mut vec![get_pkt(&topo, start)], &topo, &mut RustLookup, 0, 0);
             assert_eq!(emits.len(), 1, "round {round}");
+            assert!(tor0.scratch.out.is_empty(), "round {round}: emit scratch was taken");
+            assert!(tor0.scratch.work.is_empty(), "round {round}");
+            // Lookup-stage buffers keep their storage between passes.
+            assert!(tor0.scratch.mvs.capacity() >= 1, "round {round}");
+            assert!(tor0.scratch.writes.capacity() >= 1, "round {round}");
         }
         assert_eq!(tor0.stats.keyrouted, 3);
         assert_eq!(tor0.stats.lookup_batches, 3);
         assert_eq!(tor0.stats.lookups, 3);
+    }
+
+    /// Cache-enabled ToR + the range whose chain tail lives in rack 0
+    /// (so tor0 is the attached coordinator for it).
+    fn cached_setup() -> (Topology, Directory, Switch, usize) {
+        let (topo, dir, mut tor0, _) = setup();
+        tor0.configure_cache(&SwitchConfig {
+            cache_slots: 4,
+            cache_value_max: 256,
+            cache_admit_threshold: 1,
+        });
+        let idx = (0..dir.len()).find(|&i| dir.tail(i) < 4).unwrap();
+        (topo, dir, tor0, idx)
+    }
+
+    /// Drive one miss + tail-reply cycle for `key` so it ends up cached.
+    fn warm_key(tor0: &mut Switch, topo: &Topology, dir: &Directory, idx: usize, tag: u64) -> Vec<u8> {
+        let (key, _) = dir.bounds(idx);
+        let mut req = get_pkt(topo, key);
+        req.tag = tag;
+        tor0.process_batch(&mut vec![req], topo, &mut RustLookup, 0, 0);
+        let value = vec![0x5A; 16];
+        let mut reply = Packet::reply(
+            topo.node_ip(dir.tail(idx)),
+            topo.client_ip(0),
+            encode_reply(&Reply::Value(Some(value.clone()))),
+        );
+        reply.tag = tag;
+        tor0.process_batch(&mut vec![reply], topo, &mut RustLookup, 0, 0);
+        value
+    }
+
+    #[test]
+    fn cached_get_is_served_from_the_switch() {
+        let (topo, dir, mut tor0, idx) = cached_setup();
+        let value = warm_key(&mut tor0, &topo, &dir, idx, 11);
+        assert_eq!(tor0.stats.cache_misses, 1);
+        assert_eq!(tor0.stats.cache_admits, 1);
+        // The same key again: the reply is synthesized at the switch in
+        // the tail's turbo-echo shape and heads back toward the client —
+        // no Emit to any node, no lookup, no register bump.
+        let (key, _) = dir.bounds(idx);
+        let mut req = get_pkt(&topo, key);
+        req.tag = 12;
+        let lookups_before = tor0.stats.lookups;
+        let emits = tor0.process_batch(&mut vec![req], &topo, &mut RustLookup, 0, 0);
+        assert_eq!(tor0.stats.cache_hits, 1);
+        assert_eq!(tor0.stats.lookups, lookups_before, "hit skips the lookup stage");
+        assert_eq!(emits.len(), 1);
+        let e = &emits[0];
+        assert!(matches!(e.to, Addr::Switch(_)), "routed up toward the client, not a node");
+        assert_eq!(e.pkt.ipv4.dst, topo.client_ip(0));
+        assert_eq!(e.pkt.eth.ethertype, ETHERTYPE_TURBOKV);
+        assert_eq!(e.pkt.ipv4.tos, Tos::Normal);
+        assert_eq!(e.pkt.tag, 12);
+        let echo = e.pkt.turbo.unwrap();
+        assert_eq!((echo.op, echo.key), (OpCode::Get, key));
+        assert_eq!(
+            e.pkt.payload.as_slice(),
+            encode_reply(&Reply::Value(Some(value))).as_slice()
+        );
+    }
+
+    #[test]
+    fn update_ingress_invalidates_the_cached_entry() {
+        let (topo, dir, mut tor0, idx) = cached_setup();
+        warm_key(&mut tor0, &topo, &dir, idx, 21);
+        let (key, _) = dir.bounds(idx);
+        let put = {
+            let mut p = Packet::request(
+                topo.client_ip(0), Ip(0), Tos::RangeData, OpCode::Put, key, Key::MIN, vec![1u8; 8],
+            );
+            p.tag = 22;
+            p
+        };
+        let emits = tor0.process_batch(&mut vec![put], &topo, &mut RustLookup, 0, 0);
+        assert_eq!(emits.len(), 1, "the update still flows to the chain head");
+        assert_eq!(emits[0].to, Addr::Node(dir.head(idx)));
+        assert_eq!(tor0.stats.cache_invalidations, 1);
+        // The next read goes to the node again.
+        let mut req = get_pkt(&topo, key);
+        req.tag = 23;
+        let emits = tor0.process_batch(&mut vec![req], &topo, &mut RustLookup, 0, 0);
+        assert_eq!(tor0.stats.cache_hits, 0);
+        assert_eq!(emits[0].to, Addr::Node(dir.tail(idx)));
+    }
+
+    #[test]
+    fn read_raced_by_write_is_not_admitted() {
+        let (topo, dir, mut tor0, idx) = cached_setup();
+        let (key, _) = dir.bounds(idx);
+        // Get samples the version at ingress...
+        let mut req = get_pkt(&topo, key);
+        req.tag = 31;
+        tor0.process_batch(&mut vec![req], &topo, &mut RustLookup, 0, 0);
+        // ...a Put for the same key passes before the Get's reply returns...
+        let mut put = Packet::request(
+            topo.client_ip(1), Ip(0), Tos::RangeData, OpCode::Put, key, Key::MIN, vec![2u8; 8],
+        );
+        put.tag = 32;
+        tor0.process_batch(&mut vec![put], &topo, &mut RustLookup, 0, 0);
+        // ...so the (possibly pre-write) reply value must NOT be cached.
+        let mut reply = Packet::reply(
+            topo.node_ip(dir.tail(idx)),
+            topo.client_ip(0),
+            encode_reply(&Reply::Value(Some(vec![9u8; 8]))),
+        );
+        reply.tag = 31;
+        tor0.process_batch(&mut vec![reply], &topo, &mut RustLookup, 0, 0);
+        assert_eq!(tor0.stats.cache_admits, 0);
+        let mut again = get_pkt(&topo, key);
+        again.tag = 33;
+        let emits = tor0.process_batch(&mut vec![again], &topo, &mut RustLookup, 0, 0);
+        assert_eq!(tor0.stats.cache_hits, 0, "stale value never entered the cache");
+        assert_eq!(emits[0].to, Addr::Node(dir.tail(idx)));
+    }
+
+    #[test]
+    fn covering_span_invalidation_flushes_the_range() {
+        let (topo, dir, mut tor0, idx) = cached_setup();
+        warm_key(&mut tor0, &topo, &dir, idx, 41);
+        assert_eq!(tor0.cache.as_ref().unwrap().len(), 1);
+        // A SetChain/migration over the record's span flushes its entries.
+        let (start, end) = tor0.table.bounds(idx);
+        tor0.invalidate_span(start, end);
+        assert_eq!(tor0.stats.cache_invalidations, 1);
+        assert_eq!(tor0.cache.as_ref().unwrap().len(), 0);
+        let (key, _) = dir.bounds(idx);
+        let mut req = get_pkt(&topo, key);
+        req.tag = 42;
+        let emits = tor0.process_batch(&mut vec![req], &topo, &mut RustLookup, 0, 0);
+        assert_eq!(tor0.stats.cache_hits, 0);
+        assert_eq!(emits[0].to, Addr::Node(dir.tail(idx)));
+    }
+
+    #[test]
+    fn non_tor_switches_never_get_a_cache() {
+        let (_, _, _, mut edge) = setup();
+        edge.configure_cache(&SwitchConfig {
+            cache_slots: 64,
+            cache_value_max: 256,
+            cache_admit_threshold: 1,
+        });
+        assert!(edge.cache.is_none(), "only the coordinator ToR caches");
     }
 
     #[test]

@@ -24,6 +24,11 @@ pub struct RegisterArrays {
     read_count: Vec<u64>,
     /// Per-index-record update hit counters (Put/Del).
     write_count: Vec<u64>,
+    /// Kept scratch pair for `drain_counters`: the live counter arrays are
+    /// swapped against these each epoch instead of allocating fresh zero
+    /// vectors, so steady-state epochs allocate nothing.
+    drained_read: Vec<u64>,
+    drained_write: Vec<u64>,
 }
 
 impl RegisterArrays {
@@ -90,13 +95,17 @@ impl RegisterArrays {
 
     /// Controller epoch: read and reset both counter arrays (§5.1: the
     /// controller "resets these counters in the beginning of each time
-    /// period").
-    pub fn drain_counters(&mut self) -> (Vec<u64>, Vec<u64>) {
-        let zeros_r = vec![0; self.read_count.len()];
-        let zeros_w = vec![0; self.write_count.len()];
-        let read = std::mem::replace(&mut self.read_count, zeros_r);
-        let write = std::mem::replace(&mut self.write_count, zeros_w);
-        (read, write)
+    /// period"). The returned slices stay valid until the next drain; the
+    /// backing buffers are a kept scratch pair that is zeroed and swapped
+    /// in, so no per-epoch allocation once sizes are steady.
+    pub fn drain_counters(&mut self) -> (&[u64], &[u64]) {
+        self.drained_read.resize(self.read_count.len(), 0);
+        self.drained_read.fill(0);
+        self.drained_write.resize(self.write_count.len(), 0);
+        self.drained_write.fill(0);
+        std::mem::swap(&mut self.read_count, &mut self.drained_read);
+        std::mem::swap(&mut self.write_count, &mut self.drained_write);
+        (&self.drained_read, &self.drained_write)
     }
 
     pub fn counters(&self) -> (&[u64], &[u64]) {
@@ -127,12 +136,36 @@ mod tests {
         r.bump(0, false);
         r.bump(2, true);
         let (read, write) = r.drain_counters();
-        assert_eq!(read, vec![2, 0, 0, 0]);
-        assert_eq!(write, vec![0, 0, 1, 0]);
+        assert_eq!(read, &[2, 0, 0, 0]);
+        assert_eq!(write, &[0, 0, 1, 0]);
         // Reset after drain.
         let (read, write) = r.counters();
         assert!(read.iter().all(|&c| c == 0));
         assert!(write.iter().all(|&c| c == 0));
+    }
+
+    #[test]
+    fn drain_twice_reuses_buffers_and_rezeroes() {
+        let mut r = RegisterArrays::new();
+        r.resize_counters(4);
+        r.bump(0, false);
+        r.bump(3, true);
+        let (read, write) = r.drain_counters();
+        assert_eq!((read.len(), write.len()), (4, 4));
+        assert_eq!(read, &[1, 0, 0, 0]);
+        assert_eq!(write, &[0, 0, 0, 1]);
+        // A second epoch with different traffic: the swapped-back scratch
+        // buffers must come back zeroed and correctly sized — yesterday's
+        // counts can never bleed into today's drain.
+        r.bump(1, false);
+        let (read, write) = r.drain_counters();
+        assert_eq!((read.len(), write.len()), (4, 4));
+        assert_eq!(read, &[0, 1, 0, 0]);
+        assert_eq!(write, &[0, 0, 0, 0]);
+        // And a drain with no traffic at all is all-zero.
+        let (read, write) = r.drain_counters();
+        assert_eq!(read, &[0, 0, 0, 0]);
+        assert_eq!(write, &[0, 0, 0, 0]);
     }
 
     #[test]

@@ -199,6 +199,43 @@ fn open_loop_schedule_sustains_its_rate_and_reports() {
 }
 
 #[test]
+fn switch_value_cache_serves_hot_gets_over_real_sockets() {
+    // The in-switch hot-value cache under a skewed read-heavy workload:
+    // point-op tail replies detour through the soft switch, hot Get
+    // values are admitted from that reply traffic, later Gets for them
+    // are answered from switch memory — and every read (cached or not)
+    // still verifies against the driver's oracle, with writes to hot
+    // keys invalidating before they forward.
+    let mut cfg = loopback_cfg(3, 2);
+    cfg.cluster.num_ranges = 12;
+    cfg.workload.num_keys = 200;
+    cfg.workload.ops_per_client = 600;
+    cfg.workload.write_ratio = 0.1;
+    cfg.workload.scan_ratio = 0.0;
+    cfg.workload.zipf_theta = Some(1.2);
+    cfg.switch.cache_slots = 64;
+    cfg.switch.cache_value_max = 256;
+    cfg.switch.cache_admit_threshold = 1;
+    cfg.deploy.pipeline = 4;
+    cfg.deploy.min_cache_hit_rate = 0.05;
+
+    let report = run_threads(&cfg).expect("cached loopback run");
+    report.gate(&cfg).expect("hit-rate floor + 100% verification");
+    assert_eq!(report.drive.ops, 1200);
+    assert_eq!(report.drive.verify_failures, 0, "a cached Get returned a stale value");
+    assert_eq!(report.drive.gave_up, 0);
+    assert!(report.servers.cache_admits > 0, "no admission: {}", report.summary());
+    assert!(report.servers.cache_hits > 0, "no hit: {}", report.summary());
+    assert!(
+        report.servers.cache_invalidations > 0,
+        "10% writes over hot keys must invalidate: {}",
+        report.summary()
+    );
+    assert!(report.summary().contains("switch_cache:"), "{}", report.summary());
+    assert_eq!(report.servers.bad_frames, 0, "no wire corruption: {:?}", report.servers);
+}
+
+#[test]
 fn harness_shuts_down_cleanly_and_is_rerunnable() {
     // Clean-shutdown regression: a completed run must leave nothing
     // behind — all server/acceptor/connection threads joined, all

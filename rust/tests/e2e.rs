@@ -116,6 +116,67 @@ fn scan_results_are_correct_and_sorted() {
 }
 
 #[test]
+fn switch_cache_off_keeps_runs_identical_and_counters_dark() {
+    // cache_slots = 0 (the default) must leave the simulator exactly as
+    // it was: deterministic run-for-run, no cache ever constructed, no
+    // cache counter ever moving.
+    let run = || {
+        let mut cfg = base();
+        cfg.workload.write_ratio = 0.25;
+        cfg.workload.zipf_theta = Some(1.2);
+        assert_eq!(cfg.switch.cache_slots, 0, "cache must default off");
+        let mut cl = Cluster::build(cfg);
+        let stats = cl.run().unwrap();
+        let touched: u64 = cl
+            .switches
+            .iter()
+            .map(|s| {
+                s.stats.cache_hits
+                    + s.stats.cache_misses
+                    + s.stats.cache_admits
+                    + s.stats.cache_evicts
+                    + s.stats.cache_invalidations
+            })
+            .sum();
+        assert_eq!(touched, 0, "cache-off run moved a cache counter");
+        assert!(cl.switches.iter().all(|s| s.cache.is_none()));
+        (stats, cl.metrics.completed(), cl.metrics.throughput())
+    };
+    assert_eq!(run(), run(), "cache-off simulation must be deterministic");
+}
+
+#[test]
+fn switch_value_cache_serves_hot_gets_with_full_verification() {
+    // Skewed read-heavy workload with the value cache on: hot Gets are
+    // answered at the coordinator ToR, every read still verifies against
+    // the oracle, and the run stays deterministic.
+    let run = || {
+        let mut cfg = base();
+        cfg.workload.ops_per_client = 500;
+        cfg.workload.write_ratio = 0.1;
+        cfg.workload.scan_ratio = 0.0;
+        cfg.workload.zipf_theta = Some(1.2);
+        cfg.switch.cache_slots = 128;
+        cfg.switch.cache_value_max = 256;
+        cfg.switch.cache_admit_threshold = 1;
+        let mut cl = Cluster::build(cfg);
+        cl.verify_reads = true;
+        let stats = cl.run().unwrap();
+        assert_eq!(cl.metrics.errors, 0);
+        assert_eq!(cl.verify_failures, 0, "a cached Get returned a stale value");
+        let hits: u64 = cl.switches.iter().map(|s| s.stats.cache_hits).sum();
+        let admits: u64 = cl.switches.iter().map(|s| s.stats.cache_admits).sum();
+        let invalidations: u64 =
+            cl.switches.iter().map(|s| s.stats.cache_invalidations).sum();
+        assert!(admits > 0, "no value was ever admitted");
+        assert!(hits > 0, "a zipf-1.2 read-heavy run must hit the cache");
+        assert!(invalidations > 0, "writes to hot keys must invalidate");
+        (stats, cl.metrics.completed(), hits, admits, invalidations)
+    };
+    assert_eq!(run(), run(), "cached simulation must be deterministic");
+}
+
+#[test]
 fn larger_cluster_smoke() {
     let mut cfg = base();
     cfg.cluster.racks = 8;

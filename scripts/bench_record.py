@@ -109,6 +109,23 @@ def parse_loadgen(path):
                 "mean_ns": h[q] * 1e3,
                 "elems_per_s": None,
             }
+    # Switch value-cache effectiveness (present only when the harness ran
+    # with --switch.cache_slots>0 and patched the report). Recorded in
+    # mean_ns so bench_diff renders run-to-run deltas; neither entry is a
+    # watched (gating) prefix — higher is better here, and the CI floor
+    # lives in deploy.min_cache_hit_rate, not in the bench diff.
+    cache = doc.get("switch_cache")
+    if cache:
+        total = cache.get("hits", 0) + cache.get("misses", 0)
+        if total:
+            benches[f"{mode}/cache/hit_rate_pct"] = {
+                "mean_ns": 100.0 * cache["hits"] / total,
+                "elems_per_s": None,
+            }
+        benches[f"{mode}/cache/served_from_switch"] = {
+            "mean_ns": float(cache.get("hits", 0)),
+            "elems_per_s": None,
+        }
     return benches
 
 
