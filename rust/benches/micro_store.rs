@@ -2,8 +2,8 @@
 //! get/put at the experiment's data shape (16 B keys, 128 B values).
 use turbokv::experiments::benchkit::{scaled_reps, Bench};
 use turbokv::store::hashtable::HashTable;
-use turbokv::store::{Lsm, LsmOptions};
-use turbokv::types::Key;
+use turbokv::store::{Engine, Lsm, LsmOptions, StorageNode};
+use turbokv::types::{Key, Value};
 use turbokv::util::rng::Rng;
 
 fn main() {
@@ -51,6 +51,39 @@ fn main() {
         }
     });
     println!("{}", b.report_throughput(keys.len() as f64));
+
+    // Contended striped store: 4 threads hammer one node concurrently,
+    // each confined to its own key-space quarter. At stripes=1 every op
+    // serializes on the single stripe lock; at stripes=4 the quarters
+    // map to disjoint stripes and the threads proceed in parallel.
+    let shared: Value = Value::from(value.clone());
+    for stripes in [1usize, 4] {
+        let node = StorageNode::striped(0, stripes, |s| {
+            Engine::lsm(LsmOptions { seed: 0xBE7C ^ ((s as u64) << 32), ..Default::default() })
+        });
+        for t in 0..4u128 {
+            for i in 0..1_000u128 {
+                node.put(Key((t << 126) | i), shared.clone());
+            }
+        }
+        let name = format!("store/striped-contended/{stripes}-stripes");
+        let b = Bench::run(&name, 2, scaled_reps(10), || {
+            std::thread::scope(|scope| {
+                for t in 0..4u128 {
+                    let node = &node;
+                    let shared = &shared;
+                    scope.spawn(move || {
+                        for i in 0..500u128 {
+                            let k = Key((t << 126) | i);
+                            node.put(k, shared.clone());
+                            std::hint::black_box(node.get(k));
+                        }
+                    });
+                }
+            });
+        });
+        println!("{}", b.report_throughput((4 * 1_000) as f64));
+    }
 
     println!(
         "lsm stats: {:?}, levels {:?}, {} table bytes",

@@ -176,11 +176,11 @@ impl ClientActor {
         if env.verify_reads && pending.req.op == OpCode::Get {
             let want = self.expected_value(pending.req.key);
             let got = match &pending.last_reply {
-                Some(Reply::Value(v)) => v.clone(),
+                Some(Reply::Value(v)) => v.as_ref().map(|b| b.as_slice()),
                 _ => None,
             };
             // Only verify keys never overwritten by the workload itself.
-            if env.cfg.workload.write_ratio == 0.0 && got != want {
+            if env.cfg.workload.write_ratio == 0.0 && got != want.as_deref() {
                 *env.verify_failures += 1;
             }
         }
@@ -252,7 +252,7 @@ impl TransmitStrategy for InSwitchTransmit {
             Partitioning::Hash => (Tos::HashData, matching_value(part, req.key)),
         };
         let mut pkt =
-            Packet::request(st.ip, Ip(0), tos, req.op, req.key, end_key, req.value.as_slice());
+            Packet::request(st.ip, Ip(0), tos, req.op, req.key, end_key, req.value.clone());
         pkt.tag = tag;
         env.bus.send(Addr::Switch(edge), pkt);
         Ok(())
@@ -300,7 +300,7 @@ impl TransmitStrategy for ClientDrivenTransmit {
                 req.op,
                 req.key,
                 req.end_key,
-                req.value.as_slice(),
+                req.value.clone(),
             );
             pkt.tag = tag;
             env.bus.send(Addr::Switch(edge), pkt);
@@ -333,7 +333,7 @@ impl TransmitStrategy for ServerDrivenTransmit {
             req.op,
             req.key,
             req.end_key,
-            req.value.as_slice(),
+            req.value.clone(),
         );
         pkt.tag = tag;
         env.bus.send(Addr::Switch(edge), pkt);

@@ -34,9 +34,11 @@ pub struct ControllerState {
     pub splits: u64,
     /// Nodes that failed since the last epoch (detected now).
     pub pending_failures: Vec<NodeId>,
-    /// Last epoch's per-range read+write counters (observability).
+    /// Last epoch's per-range read/write/cache-hit counters
+    /// (observability).
     pub last_read: Vec<u64>,
     pub last_write: Vec<u64>,
+    pub last_hits: Vec<u64>,
     /// Last computed per-node load estimate.
     pub last_load: Vec<f32>,
 }
@@ -50,6 +52,7 @@ pub fn run_epoch(cl: &mut Cluster) {
     let records = cl.dir.len();
     let mut read = vec![0u64; records];
     let mut write = vec![0u64; records];
+    let mut hits = vec![0u64; records];
     for sw in &mut cl.switches {
         if !matches!(sw.role, SwitchRole::Tor { .. }) {
             // Non-ToR switches also keep counters; reset them but only the
@@ -58,16 +61,20 @@ pub fn run_epoch(cl: &mut Cluster) {
             sw.registers.drain_counters();
             continue;
         }
-        let (r, w) = sw.registers.drain_counters();
+        let (r, w, h) = sw.registers.drain_counters();
         for (acc, v) in read.iter_mut().zip(r) {
             *acc += v;
         }
         for (acc, v) in write.iter_mut().zip(w) {
             *acc += v;
         }
+        for (acc, v) in hits.iter_mut().zip(h) {
+            *acc += v;
+        }
     }
     cl.controller.last_read = read.clone();
     cl.controller.last_write = write.clone();
+    cl.controller.last_hits = hits.clone();
 
     // --- The controller's liveness view, *before* this epoch's
     // switch-failure fallout is marked: the planner marks each failure
@@ -92,6 +99,7 @@ pub fn run_epoch(cl: &mut Cluster) {
         dir: cl.dir.clone(),
         read,
         write,
+        hits,
         alive,
         failures,
         knobs: cl.cfg.controller.clone(),

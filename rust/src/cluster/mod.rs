@@ -47,7 +47,7 @@ use crate::net::packet::Packet;
 use crate::net::topology::{Addr, Topology};
 use crate::partition::{matching_value, Directory};
 use crate::sim::{Driver, Engine, Link, ServiceQueue};
-use crate::store::{Engine as StoreEngine, LsmOptions, StorageNode};
+use crate::store::{build_store, StorageNode};
 use crate::switch::{DataplaneLookup, RustLookup, Switch};
 use crate::types::{Key, NodeId, SimTime, SwitchId};
 use crate::util::rng::Rng;
@@ -208,18 +208,12 @@ impl Cluster {
         }
 
         let mut rng = Rng::new(cfg.sim.seed);
-        let mut nodes: Vec<StorageNode> = (0..cfg.cluster.nodes())
-            .map(|n| {
-                let engine = match cfg.cluster.partitioning {
-                    Partitioning::Range => StoreEngine::lsm(LsmOptions {
-                        seed: cfg.sim.seed ^ n as u64,
-                        ..Default::default()
-                    }),
-                    Partitioning::Hash => StoreEngine::hash(1024),
-                };
-                StorageNode::new(n, engine)
-            })
-            .collect();
+        // The shared striped-store constructor (store::build_store) keeps
+        // the simulator and the deploy node_server on identical engine
+        // shapes; at the default `store.stripes = 1` the node is
+        // bit-identical to the historical unstriped engine.
+        let mut nodes: Vec<StorageNode> =
+            (0..cfg.cluster.nodes()).map(|n| build_store(&cfg, n)).collect();
 
         let gen = Generator::new(
             cfg.workload.num_keys,
@@ -426,8 +420,10 @@ fn load_phase(
     for (key, value) in gen.load_keys() {
         let mv = matching_value(partitioning, key);
         let idx = dir.lookup(mv);
+        // Convert once: replicas then share the buffer (O(1) clones).
+        let value = crate::types::Value::from(value);
         for &n in dir.chain(idx) {
-            nodes[n].engine.put(key, value.clone());
+            nodes[n].put(key, value.clone());
         }
     }
 }

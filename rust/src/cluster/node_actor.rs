@@ -215,12 +215,32 @@ impl NodeStrategy for ServerDrivenNode {
 /// simulator's node actor and the deployment runtime's `serve-node`
 /// process (`deploy::node_server`) — both worlds differ only in how the
 /// returned packet reaches its destination.
-pub(crate) fn chain_step_packet(
-    node: &mut StorageNode,
+pub(crate) fn chain_step_packet(node: &StorageNode, node_ip: Ip, pkt: Packet) -> Result<Packet> {
+    chain_step_packet_inner(node, node_ip, pkt, false)
+}
+
+/// Group-commit variant for the deployment shard: mutations go through
+/// the stripes' deferred write path (WAL bytes buffered in memory, no
+/// per-op persist). The caller owns durability — it must
+/// [`StorageNode::sync_wal`] before putting any returned packet on the
+/// wire, or an acknowledged write could be lost to a crash.
+pub(crate) fn chain_step_packet_deferred(
+    node: &StorageNode,
+    node_ip: Ip,
+    pkt: Packet,
+) -> Result<Packet> {
+    chain_step_packet_inner(node, node_ip, pkt, true)
+}
+
+fn chain_step_packet_inner(
+    node: &StorageNode,
     node_ip: Ip,
     mut pkt: Packet,
+    deferred: bool,
 ) -> Result<Packet> {
     let n = node.id;
+    let apply =
+        |req: &Request| if deferred { node.apply_deferred(req) } else { node.apply(req) };
     let turbo = pkt
         .turbo
         .ok_or_else(|| anyhow!("malformed packet: chain step without TurboKV header at node {n}"))?;
@@ -233,7 +253,7 @@ pub(crate) fn chain_step_packet(
         // Head/middle: apply locally, forward to successor — next IP
         // straight from the chain header (the TurboKV advantage: no
         // mapping step, §8.1).
-        node.apply(&req);
+        apply(&req);
         let next_ip = chain.ips[0];
         pkt.chain.as_mut().expect("chain checked above").ips.remove(0);
         pkt.ipv4.dst = next_ip;
@@ -241,7 +261,7 @@ pub(crate) fn chain_step_packet(
         Ok(pkt)
     } else {
         // Tail (CLength == 1): apply and reply to the client IP.
-        let reply = node.apply(&req);
+        let reply = apply(&req);
         let client_ip = *chain
             .ips
             .last()
@@ -273,7 +293,7 @@ pub(crate) fn build_reply_packet(
 /// In-switch mode: execute one chain-replication step per the chain
 /// header (Fig. 9). No directory lookups on the node.
 fn chain_step(env: &mut NodeEnv<'_>, n: NodeId, pkt: Packet) -> Result<()> {
-    let out = chain_step_packet(&mut env.nodes[n], env.topo.node_ip(n), pkt)?;
+    let out = chain_step_packet(&env.nodes[n], env.topo.node_ip(n), pkt)?;
     let tor = env.topo.edge_switch(Addr::Node(n))?;
     env.bus.send(Addr::Switch(tor), out);
     Ok(())
@@ -388,12 +408,12 @@ fn reply_to_client(
     Ok(())
 }
 
-/// Reconstruct a `Request` from the TurboKV header + payload. This is the
-/// copy-on-write point of the shared-payload scheme (DESIGN.md §2c): the
-/// shim materializes one owned copy at the packet → store-API boundary,
-/// after every forward/split/recirculation hop shared the buffer for free.
+/// Reconstruct a `Request` from the TurboKV header + payload. Since the
+/// store adopted the shared-buffer `Value` (DESIGN.md §2c/§2f), the
+/// packet → store-API boundary is an O(1) handle clone: the shim, the
+/// engine, and every forward/split/recirculation hop share one buffer.
 fn request_of(turbo: &TurboHeader, pkt: &Packet) -> Request {
-    Request { op: turbo.op, key: turbo.key, end_key: turbo.end_key, value: pkt.payload.to_vec() }
+    Request { op: turbo.op, key: turbo.key, end_key: turbo.end_key, value: pkt.payload.clone() }
 }
 
 /// Requests keep the client's IP in `ipv4.src` along node forwards (client

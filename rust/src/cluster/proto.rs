@@ -41,7 +41,7 @@ pub fn decode_reply(data: &[u8]) -> Result<Reply> {
     let mut pos = 1usize;
     Ok(match data[0] {
         0 => Reply::Value(None),
-        1 => Reply::Value(Some(get_bytes(data, &mut pos)?.to_vec())),
+        1 => Reply::Value(Some(Value::from(get_bytes(data, &mut pos)?))),
         2 => Reply::Ack,
         3 => {
             let n = get_uvarint(data, &mut pos)? as usize;
@@ -53,7 +53,7 @@ pub fn decode_reply(data: &[u8]) -> Result<Reply> {
                 let mut kb = [0u8; 16];
                 kb.copy_from_slice(&data[pos..pos + 16]);
                 pos += 16;
-                let v = get_bytes(data, &mut pos)?.to_vec();
+                let v = Value::from(get_bytes(data, &mut pos)?);
                 pairs.push((Key::from_bytes(kb), v));
             }
             Reply::Pairs(pairs)
@@ -113,9 +113,9 @@ mod tests {
     fn reply_roundtrip() {
         let cases = vec![
             Reply::Value(None),
-            Reply::Value(Some(b"hello".to_vec())),
+            Reply::Value(Some(b"hello".into())),
             Reply::Ack,
-            Reply::Pairs(vec![(Key(1), b"a".to_vec()), (Key(2), vec![0; 128])]),
+            Reply::Pairs(vec![(Key(1), b"a".into()), (Key(2), vec![0; 128].into())]),
             Reply::Pairs(vec![]),
             Reply::WrongNode,
         ];
@@ -129,7 +129,7 @@ mod tests {
     fn reply_decode_rejects_garbage() {
         assert!(decode_reply(&[]).is_err());
         assert!(decode_reply(&[9]).is_err());
-        let mut bytes = encode_reply(&Reply::Value(Some(vec![1; 50])));
+        let mut bytes = encode_reply(&Reply::Value(Some(vec![1; 50].into())));
         bytes.truncate(10);
         assert!(decode_reply(&bytes).is_err());
     }

@@ -62,7 +62,7 @@ fn writes_propagate_through_whole_chain() {
         cl.run().unwrap();
         assert_eq!(cl.metrics.completed(), 240, "mode {mode:?}");
         // Every write applied r=3 times (plus the load phase's puts).
-        let applied: u64 = cl.nodes.iter().map(|n| n.ops_applied).sum();
+        let applied: u64 = cl.nodes.iter().map(|n| n.ops_applied()).sum();
         assert!(applied >= 3 * 240, "mode {mode:?}: applied={applied}");
     }
 }

@@ -8,5 +8,5 @@ pub mod value;
 pub use cli::Args;
 pub use schema::{
     ClusterConfig, Config, ControllerConfig, Coordination, DataplaneConfig, DataplaneMode,
-    DeployConfig, Partitioning, SimConfig, SwitchConfig, WorkloadConfig,
+    DeployConfig, Partitioning, SimConfig, StoreConfig, SwitchConfig, WorkloadConfig,
 };

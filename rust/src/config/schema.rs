@@ -308,11 +308,36 @@ pub struct SwitchConfig {
     /// Hotness-sketch count a key must reach before the admission policy
     /// will sample it (frequency-threshold admission).
     pub cache_admit_threshold: u32,
+    /// Per-entry TTL in switch passes (ticks): an entry older than this
+    /// many passes is treated as a miss and evicted on lookup. `0`
+    /// disables expiry (entries live until invalidated or evicted).
+    pub cache_ttl_passes: u64,
 }
 
 impl Default for SwitchConfig {
     fn default() -> Self {
-        SwitchConfig { cache_slots: 0, cache_value_max: 256, cache_admit_threshold: 3 }
+        SwitchConfig {
+            cache_slots: 0,
+            cache_value_max: 256,
+            cache_admit_threshold: 3,
+            cache_ttl_passes: 0,
+        }
+    }
+}
+
+/// Storage-engine shape (DESIGN.md §2f). `stripes = 1` reproduces the
+/// historical single-engine node exactly — the simulator's golden runs
+/// depend on that.
+#[derive(Clone, Debug)]
+pub struct StoreConfig {
+    /// Key-partitioned stripes per node engine, each behind its own lock.
+    /// Must be a power of two (the stripe index is a key/hash prefix).
+    pub stripes: usize,
+}
+
+impl Default for StoreConfig {
+    fn default() -> Self {
+        StoreConfig { stripes: 1 }
     }
 }
 
@@ -340,6 +365,7 @@ pub struct Config {
     pub dataplane: DataplaneConfig,
     pub deploy: DeployConfig,
     pub switch: SwitchConfig,
+    pub store: StoreConfig,
     pub coordination: Coordination,
 }
 
@@ -446,6 +472,9 @@ impl Config {
         ovr!(doc, "switch.cache_slots", self.switch.cache_slots, int);
         ovr!(doc, "switch.cache_value_max", self.switch.cache_value_max, int);
         ovr!(doc, "switch.cache_admit_threshold", self.switch.cache_admit_threshold, int);
+        ovr!(doc, "switch.cache_ttl_passes", self.switch.cache_ttl_passes, int);
+
+        ovr!(doc, "store.stripes", self.store.stripes, int);
 
         if let Some(v) = doc.get("dataplane.mode") {
             self.dataplane.mode = match v.as_str().context("dataplane.mode must be a string")? {
@@ -550,6 +579,13 @@ impl Config {
         }
         if self.switch.cache_slots > 0 && self.switch.cache_value_max == 0 {
             bail!("switch.cache_value_max must be ≥ 1 when the cache is enabled");
+        }
+        if !self.store.stripes.is_power_of_two() {
+            bail!(
+                "store.stripes {} must be a power of two ≥ 1 \
+                 (the stripe index is a key/hash prefix)",
+                self.store.stripes
+            );
         }
         Ok(())
     }
@@ -691,6 +727,7 @@ mod tests {
         assert_eq!(cfg.switch.cache_slots, 0);
         assert_eq!(cfg.switch.cache_value_max, 256);
         assert_eq!(cfg.switch.cache_admit_threshold, 3);
+        assert_eq!(cfg.switch.cache_ttl_passes, 0, "TTL expiry off by default");
         assert_eq!(cfg.deploy.min_cache_hit_rate, 0.0);
 
         let cfg = Config::from_str(
@@ -699,6 +736,7 @@ mod tests {
             cache_slots = 256
             cache_value_max = 512
             cache_admit_threshold = 2
+            cache_ttl_passes = 64
             [deploy]
             min_cache_hit_rate = 0.2
         "#,
@@ -707,6 +745,7 @@ mod tests {
         assert_eq!(cfg.switch.cache_slots, 256);
         assert_eq!(cfg.switch.cache_value_max, 512);
         assert_eq!(cfg.switch.cache_admit_threshold, 2);
+        assert_eq!(cfg.switch.cache_ttl_passes, 64);
         assert_eq!(cfg.deploy.min_cache_hit_rate, 0.2);
 
         // The hit-rate gate is a fraction, and meaningless without a cache.
@@ -717,6 +756,22 @@ mod tests {
         // An enabled cache must be able to hold at least a 1-byte value.
         assert!(Config::from_str("[switch]\ncache_slots = 8\ncache_value_max = 0").is_err());
         assert!(Config::from_str("[switch]\ncache_slots = 8").is_ok());
+    }
+
+    #[test]
+    fn store_stripes_apply_and_validate() {
+        // The striped engine is opt-in: one stripe by default, which is
+        // the shape every golden simulator run pins.
+        assert_eq!(Config::default().store.stripes, 1);
+        let cfg = Config::from_str("[store]\nstripes = 4").unwrap();
+        assert_eq!(cfg.store.stripes, 4);
+        // Stripe routing extracts a key/hash prefix, so the count must be
+        // a power of two (and zero stripes is no store at all).
+        for bad in ["0", "3", "6", "12"] {
+            let err = Config::from_str(&format!("[store]\nstripes = {bad}")).unwrap_err();
+            assert!(format!("{err:#}").contains("stripes"), "{err:#}");
+        }
+        assert!(Config::from_str("[store]\nstripes = 16").is_ok());
     }
 
     #[test]

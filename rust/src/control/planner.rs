@@ -83,8 +83,11 @@ fn least_loaded_replacement(
 /// Plan one controller epoch over `view`. Deterministic: the same view
 /// (and a deterministic estimator) always produces the same plan.
 pub fn plan_epoch(view: ClusterView, est: &mut dyn LoadEstimator) -> Plan {
-    let ClusterView { dir, read, write, alive, failures, knobs } = view;
-    let mut p = Planner { dir, read, write, alive, knobs, est, actions: Vec::new() };
+    let ClusterView { dir, read, write, hits, alive, failures, knobs } = view;
+    // Executors without switch-cache telemetry may send an empty (or
+    // stale-shaped) hits vector; a shape mismatch means zero hits.
+    let hits = if hits.len() == read.len() { hits } else { vec![0; read.len()] };
+    let mut p = Planner { dir, read, write, hits, alive, knobs, est, actions: Vec::new() };
     for failed in failures {
         // Marked dead at its turn: a node that fails later in the list is
         // still a valid replacement for one that failed earlier.
@@ -99,6 +102,7 @@ struct Planner<'a> {
     dir: Directory,
     read: Vec<u64>,
     write: Vec<u64>,
+    hits: Vec<u64>,
     alive: Vec<bool>,
     knobs: ControllerConfig,
     est: &'a mut dyn LoadEstimator,
@@ -106,6 +110,15 @@ struct Planner<'a> {
 }
 
 impl Planner<'_> {
+    /// Reads the storage nodes actually served: switch-cache hits never
+    /// reach a chain tail, so they are subtracted from the raw
+    /// coordinator counts before estimating node load (§5.1). The raw
+    /// counts still drive hot-range *splits* — the switch routes (and
+    /// counts) every request whether or not its cache absorbed it.
+    fn served_reads(&self) -> Vec<u64> {
+        self.read.iter().zip(&self.hits).map(|(&r, &h)| r.saturating_sub(h)).collect()
+    }
+
     fn note(&mut self, reason: NothingReason) {
         self.actions.push(PlanAction {
             intent: Intent::Observe,
@@ -147,10 +160,11 @@ impl Planner<'_> {
             self.plan_splits();
         }
         let num_nodes = self.alive.len();
+        let served = self.served_reads();
         let load = estimate_loads(
             self.est,
             &self.dir,
-            &self.read,
+            &served,
             &self.write,
             num_nodes,
             self.knobs.write_cost as f32,
@@ -216,6 +230,8 @@ impl Planner<'_> {
                 self.read[i] -= self.read[i + 1];
                 self.write.insert(i + 1, self.write[i] / 2);
                 self.write[i] -= self.write[i + 1];
+                self.hits.insert(i + 1, self.hits[i] / 2);
+                self.hits[i] -= self.hits[i + 1];
                 self.actions.push(PlanAction {
                     intent: Intent::Split { idx: i },
                     ops: vec![ControlOp::SplitRecord { idx: i, at: mid, chain }],
@@ -231,10 +247,11 @@ impl Planner<'_> {
     /// chains.
     fn load_ranked(&mut self) -> Vec<(NodeId, f32)> {
         let num_nodes = self.alive.len();
+        let served = self.served_reads();
         let load = estimate_loads(
             self.est,
             &self.dir,
-            &self.read,
+            &served,
             &self.write,
             num_nodes,
             self.knobs.write_cost as f32,
@@ -254,7 +271,7 @@ impl Planner<'_> {
         let mut candidate: Option<(usize, u64)> = None;
         for idx in self.dir.ranges_of_node(hot_node) {
             let weight = if self.dir.tail(idx) == hot_node {
-                self.read[idx] + self.write[idx]
+                self.read[idx].saturating_sub(self.hits[idx]) + self.write[idx]
             } else {
                 self.write[idx]
             };
@@ -349,6 +366,7 @@ mod tests {
             dir: dir.clone(),
             read: vec![0; 8],
             write: vec![0; 8],
+            hits: vec![],
             // Node 1 already marked (its failure event preceded the
             // epoch); node 3 still alive until its turn.
             alive: vec![true, false, true, true, true],
@@ -369,5 +387,40 @@ mod tests {
         }
         replay.check_invariants().unwrap();
         assert!(plan.repairs() > 0);
+    }
+
+    #[test]
+    fn cache_hits_are_subtracted_from_node_load() {
+        use crate::control::estimator::RustEstimator;
+        // Range 0 is extremely hot at the coordinator switch. When the
+        // nodes actually served that heat, its tail is overloaded and
+        // migration fires; when the switch value cache absorbed (almost)
+        // all of it, node-side load is near uniform and nothing moves.
+        let dir = Directory::initial(8, 4, 3);
+        let mut knobs = ControllerConfig::default();
+        knobs.migration = true;
+        let mut read = vec![10u64; 8];
+        read[0] = 100_000;
+        let view = |hits: Vec<u64>| ClusterView {
+            dir: dir.clone(),
+            read: read.clone(),
+            write: vec![0; 8],
+            hits,
+            alive: vec![true; 4],
+            failures: vec![],
+            knobs: knobs.clone(),
+        };
+        let plan = plan_epoch(view(vec![0; 8]), &mut RustEstimator);
+        assert!(
+            plan.actions.iter().any(|a| matches!(a.intent, Intent::Migrate { .. })),
+            "node-served heat must trigger migration"
+        );
+        let mut hits = vec![0u64; 8];
+        hits[0] = 99_990;
+        let plan = plan_epoch(view(hits), &mut RustEstimator);
+        assert!(
+            !plan.actions.iter().any(|a| matches!(a.intent, Intent::Migrate { .. })),
+            "switch-absorbed reads are not node load"
+        );
     }
 }

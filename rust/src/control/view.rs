@@ -20,6 +20,11 @@ pub struct ClusterView {
     pub read: Vec<u64>,
     /// Per-range update counters, same shape as `read`.
     pub write: Vec<u64>,
+    /// Per-range reads served straight from the switch value cache, same
+    /// shape as `read` (every hit is also counted in `read`). Executors
+    /// without hit telemetry may leave this empty — the planner treats a
+    /// shape mismatch as zero hits.
+    pub hits: Vec<u64>,
     /// Liveness as the controller currently believes it, with this
     /// epoch's `failures` *not yet all marked dead*: the planner marks
     /// each failure dead at its turn, so a node that died later in the

@@ -58,7 +58,7 @@ pub enum CtrlMsg {
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum CtrlReply {
     Ok,
-    Counters { read: Vec<u64>, write: Vec<u64> },
+    Counters { read: Vec<u64>, write: Vec<u64>, hits: Vec<u64> },
     Pairs(Vec<(Key, Value)>),
     Err(String),
     /// Final observability counters, sent in response to `Shutdown`.
@@ -92,7 +92,7 @@ fn get_pairs(data: &[u8], pos: &mut usize) -> Result<Vec<(Key, Value)>> {
     let mut pairs = Vec::with_capacity(n.min(1 << 20));
     for _ in 0..n {
         let k = get_key(data, pos)?;
-        let v = get_bytes(data, pos)?.to_vec();
+        let v = Value::from(get_bytes(data, pos)?);
         pairs.push((k, v));
     }
     Ok(pairs)
@@ -203,17 +203,21 @@ impl CtrlReply {
         let mut out = Vec::new();
         match self {
             CtrlReply::Ok => out.push(1),
-            CtrlReply::Counters { read, write } => {
+            CtrlReply::Counters { read, write, hits } => {
                 out.push(2);
                 put_uvarint(&mut out, read.len() as u64);
                 for &v in read {
                     put_uvarint(&mut out, v);
                 }
-                // Lengths always match today (one counter pair per table
-                // record), but the codec carries both so an unequal pair
+                // Lengths always match today (one counter triple per table
+                // record), but the codec carries each so an unequal set
                 // can never silently shear the frame.
                 put_uvarint(&mut out, write.len() as u64);
                 for &v in write {
+                    put_uvarint(&mut out, v);
+                }
+                put_uvarint(&mut out, hits.len() as u64);
+                for &v in hits {
                     put_uvarint(&mut out, v);
                 }
             }
@@ -256,7 +260,12 @@ impl CtrlReply {
                 for _ in 0..m {
                     write.push(get_uvarint(data, &mut pos)?);
                 }
-                CtrlReply::Counters { read, write }
+                let h = get_uvarint(data, &mut pos)? as usize;
+                let mut hits = Vec::with_capacity(h.min(1 << 20));
+                for _ in 0..h {
+                    hits.push(get_uvarint(data, &mut pos)?);
+                }
+                CtrlReply::Counters { read, write, hits }
             }
             3 => CtrlReply::Pairs(get_pairs(data, &mut pos)?),
             4 => CtrlReply::Err(String::from_utf8_lossy(get_bytes(data, &mut pos)?).into_owned()),
@@ -311,7 +320,7 @@ mod tests {
             CtrlMsg::ExtractRange { start: Key(5 << 96), end: Key::MAX },
             CtrlMsg::IngestRange { pairs: vec![] },
             CtrlMsg::IngestRange {
-                pairs: vec![(Key(1), b"a".to_vec()), (Key(2), vec![0xAB; 128])],
+                pairs: vec![(Key(1), b"a".into()), (Key(2), vec![0xAB; 128].into())],
             },
             CtrlMsg::SplitRecord { idx: 9, at: Key(7 << 96), chain: vec![1, 2, 3] },
             CtrlMsg::SplitRecord { idx: 0, at: Key::MAX, chain: vec![] },
@@ -328,10 +337,14 @@ mod tests {
     fn control_replies_roundtrip() {
         let replies = vec![
             CtrlReply::Ok,
-            CtrlReply::Counters { read: vec![0, 7, u64::MAX], write: vec![1, 2, 3] },
-            CtrlReply::Counters { read: vec![], write: vec![] },
-            CtrlReply::Counters { read: vec![5], write: vec![] },
-            CtrlReply::Pairs(vec![(Key::MIN, vec![]), (Key(9), b"v".to_vec())]),
+            CtrlReply::Counters {
+                read: vec![0, 7, u64::MAX],
+                write: vec![1, 2, 3],
+                hits: vec![0, 4, 9],
+            },
+            CtrlReply::Counters { read: vec![], write: vec![], hits: vec![] },
+            CtrlReply::Counters { read: vec![5], write: vec![], hits: vec![5] },
+            CtrlReply::Pairs(vec![(Key::MIN, vec![].into()), (Key(9), b"v".into())]),
             CtrlReply::Err("no such record".into()),
             CtrlReply::Stats(ServerStatsSnapshot {
                 bad_frames: 3,
@@ -359,7 +372,8 @@ mod tests {
         bytes.truncate(1 + 16);
         assert!(CtrlMsg::decode(&bytes).is_err());
         // Truncated pair list.
-        let mut bytes = CtrlMsg::IngestRange { pairs: vec![(Key(1), vec![9; 40])] }.encode();
+        let mut bytes =
+            CtrlMsg::IngestRange { pairs: vec![(Key(1), vec![9; 40].into())] }.encode();
         bytes.truncate(bytes.len() - 10);
         assert!(CtrlMsg::decode(&bytes).is_err());
         // Truncated freeze flag.

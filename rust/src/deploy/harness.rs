@@ -218,28 +218,34 @@ struct TcpController<'a> {
     pending_thaws: Vec<(Key, Key)>,
     /// Counters drained out-of-band by [`TcpController::switch_records`]
     /// probes, carried into the next epoch's drain so probe traffic is
-    /// never erased from the load estimate.
-    carry: Option<(Vec<u64>, Vec<u64>)>,
+    /// never erased from the load estimate (read, write, cache hits).
+    carry: Option<(Vec<u64>, Vec<u64>, Vec<u64>)>,
 }
 
 impl TcpController<'_> {
     /// §5.1: collect + reset the switch's per-range statistics. Returns
     /// zeroed counters when the switch is unreachable or its table has
     /// diverged in length (repair-only planning then proceeds).
-    fn drain_counters(&mut self) -> (Vec<u64>, Vec<u64>, u64) {
+    fn drain_counters(&mut self) -> (Vec<u64>, Vec<u64>, Vec<u64>, u64) {
         let drained = ctrl_call(self.net.switch_ctrl, &CtrlMsg::DrainCounters, self.ctrl_timeout);
-        if let Ok(CtrlReply::Counters { mut read, mut write }) = drained {
+        if let Ok(CtrlReply::Counters { mut read, mut write, mut hits }) = drained {
             if read.len() == self.dir.len() && write.len() == self.dir.len() {
+                if hits.len() != read.len() {
+                    hits = vec![0; read.len()];
+                }
                 // Fold back anything a probe drained since the last epoch
                 // (positional when shapes agree; a shape change across a
                 // probe is possible only via an interleaved split, whose
                 // mass still counts).
-                if let Some((cr, cw)) = self.carry.take() {
+                if let Some((cr, cw, ch)) = self.carry.take() {
                     if cr.len() == read.len() {
                         for (acc, v) in read.iter_mut().zip(&cr) {
                             *acc += v;
                         }
                         for (acc, v) in write.iter_mut().zip(&cw) {
+                            *acc += v;
+                        }
+                        for (acc, v) in hits.iter_mut().zip(&ch) {
                             *acc += v;
                         }
                     } else {
@@ -248,7 +254,7 @@ impl TcpController<'_> {
                     }
                 }
                 let mass: u64 = read.iter().sum::<u64>() + write.iter().sum::<u64>();
-                return (read, write, mass);
+                return (read, write, hits, mass);
             }
             // The drained mass still counts toward the observed-ops
             // total (the induced-kill threshold and gate diagnostics
@@ -262,7 +268,7 @@ impl TcpController<'_> {
                 self.dir.len()
             );
         }
-        (vec![0; self.dir.len()], vec![0; self.dir.len()], 0)
+        (vec![0; self.dir.len()], vec![0; self.dir.len()], vec![0; self.dir.len()], 0)
     }
 
     /// §5.2 failure detection by control-plane ping; returns nodes newly
@@ -298,7 +304,7 @@ impl TcpController<'_> {
         for (s, e) in stale {
             self.thaw(s, e);
         }
-        let (read, write, mass) = self.drain_counters();
+        let (read, write, hits, mass) = self.drain_counters();
         self.report.total_ops += mass;
         let failures = self.detect_failures();
         for &f in &failures {
@@ -309,6 +315,7 @@ impl TcpController<'_> {
             dir: self.dir.clone(),
             read,
             write,
+            hits,
             alive: self.alive.clone(),
             failures: failures.clone(),
             knobs: self.cfg.controller.clone(),
@@ -440,18 +447,24 @@ impl TcpController<'_> {
     /// erases nothing from the load estimate.
     fn switch_records(&mut self) -> Option<usize> {
         match ctrl_call(self.net.switch_ctrl, &CtrlMsg::DrainCounters, self.ctrl_timeout) {
-            Ok(CtrlReply::Counters { mut read, mut write }) => {
+            Ok(CtrlReply::Counters { mut read, mut write, mut hits }) => {
                 let records = read.len();
+                if hits.len() != records {
+                    hits = vec![0; records];
+                }
                 match self.carry.take() {
-                    Some((cr, cw)) if cr.len() == records => {
+                    Some((cr, cw, ch)) if cr.len() == records => {
                         for (acc, v) in read.iter_mut().zip(&cr) {
                             *acc += v;
                         }
                         for (acc, v) in write.iter_mut().zip(&cw) {
                             *acc += v;
                         }
+                        for (acc, v) in hits.iter_mut().zip(&ch) {
+                            *acc += v;
+                        }
                     }
-                    Some((cr, cw)) => {
+                    Some((cr, cw, _)) => {
                         // A shape change between probes: the old window's
                         // positional info is gone, but its mass still
                         // counts toward the observed-ops total.
@@ -460,7 +473,7 @@ impl TcpController<'_> {
                     }
                     None => {}
                 }
-                self.carry = Some((read, write));
+                self.carry = Some((read, write, hits));
                 Some(records)
             }
             _ => None,

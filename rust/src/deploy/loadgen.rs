@@ -531,7 +531,8 @@ impl Engine<'_> {
         }
         let verdict = match &reply {
             Reply::Value(got) => {
-                if *got == self.gen.expected_value(pending[idx].req.key) {
+                let want = self.gen.expected_value(pending[idx].req.key);
+                if got.as_ref().map(|v| v.as_slice()) == want.as_deref() {
                     Verdict::Complete
                 } else {
                     Verdict::Mismatch
@@ -640,7 +641,7 @@ impl Engine<'_> {
             req.op,
             req.key,
             end_key,
-            req.value.as_slice(),
+            req.value.clone(),
         );
         self.pool.send(&pkt.encode())
     }

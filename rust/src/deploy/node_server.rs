@@ -10,9 +10,12 @@
 //! clean shutdown.
 //!
 //! Both ports run on the sharded event loop ([`super::shard`]): data
-//! frames accumulate per shard pass and run through the store under one
-//! lock acquisition per pass; control connections get one single-shard
-//! loop (the controller's RPCs are sparse and strictly request/reply).
+//! frames accumulate per shard pass and run through the striped store's
+//! per-stripe locks — shards working disjoint stripes never contend on a
+//! node-wide lock — with one WAL group commit
+//! ([`StorageNode::sync_wal`]) per pass before any reply leaves. Control
+//! connections get one single-shard loop (the controller's RPCs are
+//! sparse and strictly request/reply).
 //!
 //! Reply correlation for the pipelined client pool: the shared
 //! `build_reply_packet` leaves Get/Put/Del tail replies without a TurboKV
@@ -26,15 +29,15 @@
 
 use std::net::TcpListener;
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::cluster::node_actor::chain_step_packet;
-use crate::config::{Config, Partitioning};
+use crate::cluster::node_actor::chain_step_packet_deferred;
+use crate::config::Config;
 use crate::net::packet::{Packet, Tos, ETHERTYPE_TURBOKV};
 use crate::net::topology::Topology;
-use crate::store::{Engine as StoreEngine, LsmOptions, StorageNode};
+use crate::store::{build_store, StorageNode};
 use crate::types::NodeId;
 
 use super::control::{CtrlMsg, CtrlReply};
@@ -42,7 +45,9 @@ use super::shard::{spawn_shards, ConnId, ShardHandler, ShardIo};
 use super::{Netmap, ServerHandle, ServerStats};
 
 struct NodeShared {
-    node: Mutex<StorageNode>,
+    /// The striped store. No node-wide mutex: `StorageNode`'s ops lock
+    /// only the owning stripe, so data shards contend per stripe.
+    node: StorageNode,
     topo: Topology,
     net: Netmap,
     stop: Arc<AtomicBool>,
@@ -52,19 +57,6 @@ struct NodeShared {
     /// client) so the cache observes update acks and can admit hot Get
     /// values from reply traffic. Off (direct-to-client) by default.
     reply_via_switch: bool,
-}
-
-/// The storage engine the simulator's `Cluster::build` would give this
-/// node — same seeds, so both worlds run identical LSM shapes.
-pub fn build_store(cfg: &Config, node_id: NodeId) -> StorageNode {
-    let engine = match cfg.cluster.partitioning {
-        Partitioning::Range => StoreEngine::lsm(LsmOptions {
-            seed: cfg.sim.seed ^ node_id as u64,
-            ..Default::default()
-        }),
-        Partitioning::Hash => StoreEngine::hash(1024),
-    };
-    StorageNode::new(node_id, engine)
 }
 
 /// Spawn the node's data + control shard loops on the given pre-bound
@@ -80,7 +72,10 @@ pub fn spawn(
     let stop = Arc::new(AtomicBool::new(false));
     let stats = Arc::new(ServerStats::default());
     let shared = Arc::new(NodeShared {
-        node: Mutex::new(build_store(cfg, node_id)),
+        // The exact store the simulator's `Cluster::build` would give
+        // this node — same seeds and stripe layout, so both worlds run
+        // identical engine shapes.
+        node: build_store(cfg, node_id),
         topo: Topology::build(&cfg.cluster),
         net,
         stop: stop.clone(),
@@ -143,36 +138,39 @@ impl ShardHandler for NodeData {
             return;
         }
         let shared = &self.shared;
-        let outs: Vec<(Packet, bool)> = {
-            let mut node = shared.node.lock().expect("node poisoned");
-            let node_ip = shared.topo.node_ip(node.id);
-            self.batch
-                .drain(..)
-                .filter_map(|pkt| {
-                    let req_turbo = pkt.turbo;
-                    match chain_step_packet(&mut node, node_ip, pkt) {
-                        Ok(mut out) => {
-                            // Deployment-only reply correlation: a tail
-                            // reply without a TurboKV header (Get/Put/Del)
-                            // gets the request's header echoed on, so the
-                            // pipelined client can match it to the right
-                            // in-flight op. Forwards keep their header and
-                            // are untouched.
-                            let echoed = out.turbo.is_none();
-                            if echoed {
-                                out.turbo = req_turbo;
-                                out.eth.ethertype = ETHERTYPE_TURBOKV;
-                            }
-                            Some((out, echoed))
+        let node = &shared.node;
+        let node_ip = shared.topo.node_ip(node.id);
+        let outs: Vec<(Packet, bool)> = self
+            .batch
+            .drain(..)
+            .filter_map(|pkt| {
+                let req_turbo = pkt.turbo;
+                match chain_step_packet_deferred(node, node_ip, pkt) {
+                    Ok(mut out) => {
+                        // Deployment-only reply correlation: a tail
+                        // reply without a TurboKV header (Get/Put/Del)
+                        // gets the request's header echoed on, so the
+                        // pipelined client can match it to the right
+                        // in-flight op. Forwards keep their header and
+                        // are untouched.
+                        let echoed = out.turbo.is_none();
+                        if echoed {
+                            out.turbo = req_turbo;
+                            out.eth.ethertype = ETHERTYPE_TURBOKV;
                         }
-                        Err(_) => {
-                            shared.stats.bad_frames.fetch_add(1, Ordering::Relaxed);
-                            None
-                        }
+                        Some((out, echoed))
                     }
-                })
-                .collect()
-        };
+                    Err(_) => {
+                        shared.stats.bad_frames.fetch_add(1, Ordering::Relaxed);
+                        None
+                    }
+                }
+            })
+            .collect();
+        // WAL group commit: every deferred apply above becomes durable in
+        // one flush per stripe, BEFORE any reply or chain forward leaves
+        // — an acknowledged write can never be lost to a crash.
+        node.sync_wal();
         for (out, echoed) in outs {
             // With the switch value cache on, point-op tail replies take
             // the simulator's return path — back through the ToR — so the
@@ -209,16 +207,17 @@ impl ShardHandler for NodeCtrl {
                 (CtrlReply::Stats(shared.stats.snapshot()), false)
             }
             Ok(CtrlMsg::ExtractRange { start, end }) => {
-                let mut node = shared.node.lock().expect("node poisoned");
-                (CtrlReply::Pairs(node.extract_range(start, end)), true)
+                (CtrlReply::Pairs(shared.node.extract_range(start, end)), true)
             }
             Ok(CtrlMsg::IngestRange { pairs }) => {
-                shared.node.lock().expect("node poisoned").ingest(pairs);
+                // Durable per-op path: migration ingests are sparse, and
+                // the Ok reply below must mean the pairs are on disk.
+                shared.node.ingest(pairs);
                 (CtrlReply::Ok, true)
             }
             Ok(CtrlMsg::DeleteRange { start, end }) => {
                 // §5.1: the migrated sub-range's old copy is removed.
-                shared.node.lock().expect("node poisoned").delete_range(start, end);
+                shared.node.delete_range(start, end);
                 (CtrlReply::Ok, true)
             }
             Ok(other) => (CtrlReply::Err(format!("storage nodes do not serve {other:?}")), true),

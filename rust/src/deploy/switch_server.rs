@@ -228,8 +228,15 @@ impl ShardHandler for SwitchCtrl {
             }
             Ok(CtrlMsg::DrainCounters) => {
                 let mut core = shared.core.lock().expect("switch poisoned");
-                let (read, write) = core.0.registers.drain_counters();
-                (CtrlReply::Counters { read: read.to_vec(), write: write.to_vec() }, true)
+                let (read, write, hits) = core.0.registers.drain_counters();
+                (
+                    CtrlReply::Counters {
+                        read: read.to_vec(),
+                        write: write.to_vec(),
+                        hits: hits.to_vec(),
+                    },
+                    true,
+                )
             }
             Ok(CtrlMsg::SetChain { idx, chain }) => {
                 let mut core = shared.core.lock().expect("switch poisoned");

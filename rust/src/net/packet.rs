@@ -11,8 +11,6 @@
 //! switch pipeline's parser stage (switch/pipeline.rs) consumes these
 //! headers exactly as a P4 parser state machine would.
 
-use std::sync::Arc;
-
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::types::{Key, OpCode};
@@ -126,84 +124,10 @@ pub const TURBO_LEN: usize = 1 + 16 + 16;
 /// `Rc`) so packets are `Send` — the deployment runtime moves them
 /// between connection threads; the uncontended atomic bump is noise next
 /// to the byte copy it replaces.
-#[derive(Clone, Default)]
-pub struct Payload(Option<Arc<[u8]>>);
-
-impl Payload {
-    /// The empty payload (no backing allocation at all).
-    pub fn new() -> Payload {
-        Payload(None)
-    }
-
-    pub fn as_slice(&self) -> &[u8] {
-        self.0.as_deref().unwrap_or(&[])
-    }
-
-    pub fn len(&self) -> usize {
-        self.as_slice().len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.as_slice().is_empty()
-    }
-
-    /// Materialize an owned copy (the copy-on-write point: the store shim
-    /// copies once at the packet → API-call boundary).
-    pub fn to_vec(&self) -> Vec<u8> {
-        self.as_slice().to_vec()
-    }
-
-    /// Do the two payloads share one backing buffer? (Aliasing oracle for
-    /// the sharing-semantics tests; empty payloads trivially share.)
-    pub fn shares_buffer(&self, other: &Payload) -> bool {
-        match (&self.0, &other.0) {
-            (Some(a), Some(b)) => Arc::ptr_eq(a, b),
-            (None, None) => true,
-            _ => false,
-        }
-    }
-}
-
-impl std::ops::Deref for Payload {
-    type Target = [u8];
-    fn deref(&self) -> &[u8] {
-        self.as_slice()
-    }
-}
-
-impl From<Vec<u8>> for Payload {
-    fn from(v: Vec<u8>) -> Payload {
-        if v.is_empty() {
-            Payload(None)
-        } else {
-            Payload(Some(v.into()))
-        }
-    }
-}
-
-impl From<&[u8]> for Payload {
-    fn from(v: &[u8]) -> Payload {
-        if v.is_empty() {
-            Payload(None)
-        } else {
-            Payload(Some(v.into()))
-        }
-    }
-}
-
-impl PartialEq for Payload {
-    fn eq(&self, other: &Payload) -> bool {
-        self.as_slice() == other.as_slice()
-    }
-}
-
-impl Eq for Payload {}
-
-impl std::fmt::Debug for Payload {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "Payload({} bytes)", self.len())
-    }
-}
+///
+/// This is the same type the store uses for values ([`crate::types::Value`]),
+/// so a value travels store → shim → reply payload without a byte copy.
+pub use crate::types::Bytes as Payload;
 
 /// Inline capacity of [`IpList`]: chains carry at most replication-factor
 /// IPs plus the client IP, so 4 slots cover the default r=3 config with

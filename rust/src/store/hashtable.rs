@@ -118,9 +118,9 @@ impl HashTable {
         self.len == 0
     }
 
-    pub fn put(&mut self, key: Key, value: Value) {
+    pub fn put(&mut self, key: Key, value: impl Into<Value>) {
         let b = self.bucket_of(key);
-        if BstNode::insert(&mut self.buckets[b], key, value) {
+        if BstNode::insert(&mut self.buckets[b], key, value.into()) {
             self.len += 1;
         }
     }
@@ -173,9 +173,9 @@ mod tests {
         let mut h = HashTable::new(16);
         h.put(Key(1), b"a".to_vec());
         h.put(Key(2), b"b".to_vec());
-        assert_eq!(h.get(Key(1)), Some(&b"a".to_vec()));
+        assert_eq!(h.get(Key(1)), Some(&b"a".into()));
         h.put(Key(1), b"a2".to_vec());
-        assert_eq!(h.get(Key(1)), Some(&b"a2".to_vec()));
+        assert_eq!(h.get(Key(1)), Some(&b"a2".into()));
         assert_eq!(h.len(), 2);
         assert!(h.del(Key(1)));
         assert!(!h.del(Key(1)));
@@ -193,14 +193,14 @@ mod tests {
         assert_eq!(h.len(), 100);
         assert_eq!(h.max_chain(), 100);
         for i in 0..100u128 {
-            assert_eq!(h.get(Key(i)), Some(&vec![i as u8]));
+            assert_eq!(h.get(Key(i)), Some(&vec![i as u8].into()));
         }
         // Delete interior nodes (exercises two-child removal).
         for i in (0..100u128).step_by(3) {
             assert!(h.del(Key(i)));
         }
         for i in 0..100u128 {
-            let want = if i % 3 == 0 { None } else { Some(vec![i as u8]) };
+            let want = if i % 3 == 0 { None } else { Some(vec![i as u8].into()) };
             assert_eq!(h.get(Key(i)).cloned(), want, "key {i}");
         }
     }
@@ -240,7 +240,7 @@ mod tests {
             let mut model: BTreeMap<u128, Value> = BTreeMap::new();
             for &(key, action) in ops {
                 if action < 3 {
-                    let v = vec![action as u8];
+                    let v: Value = vec![action as u8].into();
                     h.put(Key(key), v.clone());
                     model.insert(key, v);
                 } else {

@@ -159,9 +159,9 @@ impl Lsm {
         self.fs.put(MANIFEST, m);
     }
 
-    pub fn put(&mut self, key: Key, value: Value) {
+    pub fn put(&mut self, key: Key, value: impl Into<Value>) {
         self.stats.puts += 1;
-        self.write(key, Some(value));
+        self.write(key, Some(value.into()));
     }
 
     pub fn del(&mut self, key: Key) {
@@ -169,11 +169,43 @@ impl Lsm {
         self.write(key, None);
     }
 
+    /// Group-commit variant of [`Lsm::put`]: the record reaches the WAL
+    /// buffer and the memtable, but the WAL is not persisted. The caller
+    /// must call [`Lsm::sync_wal`] before acknowledging the write.
+    pub fn put_deferred(&mut self, key: Key, value: impl Into<Value>) {
+        self.stats.puts += 1;
+        self.write_deferred(key, Some(value.into()));
+    }
+
+    /// Group-commit variant of [`Lsm::del`] (see [`Lsm::put_deferred`]).
+    pub fn del_deferred(&mut self, key: Key) {
+        self.stats.dels += 1;
+        self.write_deferred(key, None);
+    }
+
+    /// Persist the WAL suffix accumulated by deferred writes — the group
+    /// commit point. The deploy shards batch a whole pass of writes
+    /// through the deferred path and sync once here before sending any
+    /// ack, so durability-before-ack is preserved with one blob append
+    /// per pass instead of one per record.
+    pub fn sync_wal(&mut self) {
+        self.persist_wal();
+    }
+
     fn write(&mut self, key: Key, value: Option<Value>) {
+        self.write_deferred(key, value);
+        self.persist_wal();
+    }
+
+    /// Append to the in-memory WAL and memtable without persisting the
+    /// log. A memtable flush triggered mid-batch still persists (the
+    /// rotation rewrites the log wholesale), so the persisted WAL is a
+    /// valid record prefix at every point — recovery's torn/corrupt-tail
+    /// semantics are unchanged by group commit.
+    fn write_deferred(&mut self, key: Key, value: Option<Value>) {
         let seqno = self.next_seqno;
         self.next_seqno += 1;
         self.wal.append(&WalRecord { seqno, key, value: value.clone() });
-        self.persist_wal();
         self.mem.insert(key, seqno, value);
         if self.mem.approx_bytes() >= self.opts.memtable_bytes {
             self.flush();
@@ -305,6 +337,12 @@ impl Lsm {
         self.write_manifest();
     }
 
+    /// Test-only view of the backing blob store (durability assertions).
+    #[cfg(test)]
+    fn fs_ref(&self) -> &BlobStore {
+        &self.fs
+    }
+
     /// Number of live SST files per level (for tests/observability).
     pub fn level_files(&self) -> [usize; 3] {
         [self.l0.len(), self.l1.len(), self.l2.len()]
@@ -341,10 +379,10 @@ mod tests {
         let mut db = Lsm::new(LsmOptions::default());
         db.put(Key(1), b"one".to_vec());
         db.put(Key(2), b"two".to_vec());
-        assert_eq!(db.get(Key(1)), Some(b"one".to_vec()));
+        assert_eq!(db.get(Key(1)), Some(b"one".into()));
         db.del(Key(1));
         assert_eq!(db.get(Key(1)), None);
-        assert_eq!(db.get(Key(2)), Some(b"two".to_vec()));
+        assert_eq!(db.get(Key(2)), Some(b"two".into()));
         assert_eq!(db.get(Key(3)), None);
     }
 
@@ -358,7 +396,7 @@ mod tests {
         assert!(db.stats.flushes > 0, "flushes: {:?}", db.stats);
         assert!(db.stats.compactions > 0);
         for i in 0..n {
-            assert_eq!(db.get(Key(i)), Some(format!("value-{i}").into_bytes()), "key {i}");
+            assert_eq!(db.get(Key(i)), Some(format!("value-{i}").into_bytes().into()), "key {i}");
         }
     }
 
@@ -372,7 +410,7 @@ mod tests {
         }
         db.flush();
         for i in 0..100u128 {
-            assert_eq!(db.get(Key(i)), Some(format!("r4-{i}").into_bytes()));
+            assert_eq!(db.get(Key(i)), Some(format!("r4-{i}").into_bytes().into()));
         }
     }
 
@@ -390,7 +428,7 @@ mod tests {
         }
         db.flush();
         for i in 0..200u128 {
-            let want = if i % 2 == 0 { None } else { Some(vec![1u8; 20]) };
+            let want = if i % 2 == 0 { None } else { Some(vec![1u8; 20].into()) };
             assert_eq!(db.get(Key(i)), want, "key {i}");
         }
         let scanned = db.scan(Key(0), Key(199));
@@ -433,11 +471,11 @@ mod tests {
         let mut db2 = Lsm::recover(small_opts(), fs).unwrap();
         assert_eq!(db2.get(Key(0)), None);
         for i in 1..150u128 {
-            assert_eq!(db2.get(Key(i)), Some(format!("v{i}").into_bytes()), "key {i}");
+            assert_eq!(db2.get(Key(i)), Some(format!("v{i}").into_bytes().into()), "key {i}");
         }
         // Writes continue with monotone seqnos after recovery.
         db2.put(Key(1), b"post-recovery".to_vec());
-        assert_eq!(db2.get(Key(1)), Some(b"post-recovery".to_vec()));
+        assert_eq!(db2.get(Key(1)), Some(b"post-recovery".into()));
     }
 
     #[test]
@@ -457,7 +495,7 @@ mod tests {
         let mut db2 = Lsm::recover(small_opts(), fs).unwrap();
         assert_eq!(db2.get(Key(19)), None, "torn tail record dropped");
         for i in 0..19u128 {
-            assert_eq!(db2.get(Key(i)), Some(format!("w{i}").into_bytes()), "key {i}");
+            assert_eq!(db2.get(Key(i)), Some(format!("w{i}").into_bytes().into()), "key {i}");
         }
     }
 
@@ -477,11 +515,11 @@ mod tests {
         let mut db2 = Lsm::recover(small_opts(), fs).unwrap();
         assert_eq!(db2.get(Key(9)), None, "corrupt tail record dropped");
         for i in 0..9u128 {
-            assert_eq!(db2.get(Key(i)), Some(vec![i as u8; 8]), "key {i}");
+            assert_eq!(db2.get(Key(i)), Some(vec![i as u8; 8].into()), "key {i}");
         }
         // The engine stays writable after recovering past corruption.
         db2.put(Key(9), b"rewritten".to_vec());
-        assert_eq!(db2.get(Key(9)), Some(b"rewritten".to_vec()));
+        assert_eq!(db2.get(Key(9)), Some(b"rewritten".into()));
     }
 
     #[test]
@@ -503,9 +541,9 @@ mod tests {
         fs.put(WAL_BLOB, wal);
         let mut db2 = Lsm::recover(small_opts(), fs).unwrap();
         for i in 0..300u128 {
-            assert_eq!(db2.get(Key(i)), Some(format!("base{i}").into_bytes()), "key {i}");
+            assert_eq!(db2.get(Key(i)), Some(format!("base{i}").into_bytes().into()), "key {i}");
         }
-        assert_eq!(db2.get(Key(1_000)), Some(b"tail-a".to_vec()), "intact WAL record");
+        assert_eq!(db2.get(Key(1_000)), Some(b"tail-a".into()), "intact WAL record");
         assert_eq!(db2.get(Key(1_001)), None, "corrupt WAL record dropped");
     }
 
@@ -527,7 +565,7 @@ mod tests {
     #[test]
     fn repeated_kill_and_reopen_cycles_preserve_data_and_seqnos() {
         let mut fs = BlobStore::new();
-        let mut expect: BTreeMap<u128, Vec<u8>> = BTreeMap::new();
+        let mut expect: BTreeMap<u128, Value> = BTreeMap::new();
         for round in 0..4u64 {
             let mut db = Lsm::recover(small_opts(), fs).unwrap();
             // Everything from previous lives survives.
@@ -536,21 +574,21 @@ mod tests {
             }
             for i in 0..120u128 {
                 let key = round as u128 * 1_000 + i;
-                let val = format!("r{round}-{i}").into_bytes();
+                let val: Value = format!("r{round}-{i}").into_bytes().into();
                 db.put(Key(key), val.clone());
                 expect.insert(key, val);
             }
             // Overwrites across lives resolve by seqno: a stale seqno
             // after recovery would make the old value win.
             db.put(Key(5), format!("latest-{round}").into_bytes());
-            expect.insert(5, format!("latest-{round}").into_bytes());
+            expect.insert(5, format!("latest-{round}").into_bytes().into());
             fs = db.into_fs();
         }
         let mut db = Lsm::recover(small_opts(), fs).unwrap();
         for (&k, v) in &expect {
             assert_eq!(db.get(Key(k)).as_ref(), Some(v), "final key {k}");
         }
-        assert_eq!(db.get(Key(5)), Some(b"latest-3".to_vec()));
+        assert_eq!(db.get(Key(5)), Some(b"latest-3".into()));
     }
 
     #[test]
@@ -570,7 +608,7 @@ mod tests {
             let mut model: BTreeMap<u128, Value> = BTreeMap::new();
             for &(key, action) in ops {
                 if action < 7 {
-                    let v = vec![action as u8; 10];
+                    let v: Value = vec![action as u8; 10].into();
                     db.put(Key(key), v.clone());
                     model.insert(key, v);
                 } else {
@@ -593,6 +631,46 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn group_commit_defers_wal_persistence_until_sync() {
+        let mut db = Lsm::new(LsmOptions::default());
+        db.put_deferred(Key(1), b"a".to_vec());
+        db.put_deferred(Key(2), b"b".to_vec());
+        // Nothing persisted yet: the records live only in the in-memory
+        // WAL buffer and memtable.
+        assert!(db.fs_ref().get(WAL_BLOB).is_none(), "deferred writes must not persist");
+        assert_eq!(db.get(Key(1)), Some(b"a".into()), "reads see deferred writes");
+        db.sync_wal();
+        let persisted = db.fs_ref().get(WAL_BLOB).unwrap();
+        assert_eq!(replay(persisted).unwrap().len(), 2, "sync persists the whole batch");
+        // A second sync with nothing new appends nothing.
+        let len = persisted.len();
+        db.sync_wal();
+        assert_eq!(db.fs_ref().get(WAL_BLOB).unwrap().len(), len);
+    }
+
+    #[test]
+    fn group_commit_batches_survive_flush_and_reopen() {
+        let mut db = Lsm::new(small_opts());
+        // Enough deferred writes that the memtable flushes (and the WAL
+        // rotates) mid-batch — recovery must still see every record.
+        for i in 0..300u128 {
+            db.put_deferred(Key(i), format!("g{i}").into_bytes());
+        }
+        db.del_deferred(Key(7));
+        assert!(db.stats.flushes > 0, "batch must cross a flush");
+        db.sync_wal();
+        let fs = db.into_fs();
+        let mut db2 = Lsm::recover(small_opts(), fs).unwrap();
+        assert_eq!(db2.get(Key(7)), None);
+        for i in 0..300u128 {
+            if i == 7 {
+                continue;
+            }
+            assert_eq!(db2.get(Key(i)), Some(format!("g{i}").into_bytes().into()), "key {i}");
+        }
     }
 
     #[test]

@@ -11,4 +11,4 @@ pub mod sst;
 pub mod wal;
 
 pub use lsm::{Lsm, LsmOptions};
-pub use node::{Engine, StorageNode};
+pub use node::{build_store, Engine, StorageNode};

@@ -155,11 +155,11 @@ mod tests {
     #[test]
     fn insert_get_basic() {
         let mut sl = SkipList::new(1);
-        sl.insert(Key(10), 1, Some(b"a".to_vec()));
-        sl.insert(Key(5), 2, Some(b"b".to_vec()));
+        sl.insert(Key(10), 1, Some(b"a".into()));
+        sl.insert(Key(5), 2, Some(b"b".into()));
         sl.insert(Key(20), 3, None); // tombstone
-        assert_eq!(sl.get(Key(10)), Some((1, Some(&b"a".to_vec()))));
-        assert_eq!(sl.get(Key(5)), Some((2, Some(&b"b".to_vec()))));
+        assert_eq!(sl.get(Key(10)), Some((1, Some(&b"a".into()))));
+        assert_eq!(sl.get(Key(5)), Some((2, Some(&b"b".into()))));
         assert_eq!(sl.get(Key(20)), Some((3, None)));
         assert_eq!(sl.get(Key(7)), None);
         assert_eq!(sl.len(), 3);
@@ -168,12 +168,12 @@ mod tests {
     #[test]
     fn newer_seqno_overwrites() {
         let mut sl = SkipList::new(2);
-        sl.insert(Key(1), 1, Some(b"old".to_vec()));
-        sl.insert(Key(1), 5, Some(b"new".to_vec()));
-        assert_eq!(sl.get(Key(1)), Some((5, Some(&b"new".to_vec()))));
+        sl.insert(Key(1), 1, Some(b"old".into()));
+        sl.insert(Key(1), 5, Some(b"new".into()));
+        assert_eq!(sl.get(Key(1)), Some((5, Some(&b"new".into()))));
         // Stale write is ignored.
-        sl.insert(Key(1), 3, Some(b"stale".to_vec()));
-        assert_eq!(sl.get(Key(1)), Some((5, Some(&b"new".to_vec()))));
+        sl.insert(Key(1), 3, Some(b"stale".into()));
+        assert_eq!(sl.get(Key(1)), Some((5, Some(&b"new".into()))));
         assert_eq!(sl.len(), 1);
     }
 
@@ -182,7 +182,7 @@ mod tests {
         let mut sl = SkipList::new(3);
         let mut rng = crate::util::rng::Rng::new(9);
         for _ in 0..500 {
-            sl.insert(Key(rng.next_u128()), 1, Some(vec![1]));
+            sl.insert(Key(rng.next_u128()), 1, Some(vec![1].into()));
         }
         let keys: Vec<Key> = sl.iter().map(|(k, _, _)| k).collect();
         let mut sorted = keys.clone();
@@ -195,7 +195,7 @@ mod tests {
     fn range_bounds_inclusive() {
         let mut sl = SkipList::new(4);
         for i in 0..10u128 {
-            sl.insert(Key(i * 10), 1, Some(vec![i as u8]));
+            sl.insert(Key(i * 10), 1, Some(vec![i as u8].into()));
         }
         let got: Vec<Key> = sl.range(Key(20), Key(50)).map(|(k, _, _)| k).collect();
         assert_eq!(got, vec![Key(20), Key(30), Key(40), Key(50)]);
@@ -219,7 +219,7 @@ mod tests {
             let mut sl = SkipList::new(7);
             let mut model: BTreeMap<u128, (u64, Option<Value>)> = BTreeMap::new();
             for &(key, seqno, del) in ops {
-                let value = if del { None } else { Some(vec![seqno as u8]) };
+                let value: Option<Value> = if del { None } else { Some(vec![seqno as u8].into()) };
                 sl.insert(Key(key), seqno, value.clone());
                 model.insert(key, (seqno, value));
             }
@@ -242,12 +242,12 @@ mod tests {
     #[test]
     fn approx_bytes_grows_and_tracks_overwrites() {
         let mut sl = SkipList::new(5);
-        sl.insert(Key(1), 1, Some(vec![0u8; 100]));
+        sl.insert(Key(1), 1, Some(vec![0u8; 100].into()));
         let b1 = sl.approx_bytes();
         assert!(b1 >= 100);
-        sl.insert(Key(1), 2, Some(vec![0u8; 10]));
+        sl.insert(Key(1), 2, Some(vec![0u8; 10].into()));
         assert!(sl.approx_bytes() < b1);
-        sl.insert(Key(2), 3, Some(vec![0u8; 100]));
+        sl.insert(Key(2), 3, Some(vec![0u8; 100].into()));
         assert!(sl.approx_bytes() > b1);
     }
 }

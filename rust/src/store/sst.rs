@@ -85,7 +85,7 @@ impl Sst {
             let tag = body[pos];
             pos += 1;
             let value = match tag {
-                1 => Some(get_bytes(body, &mut pos)?.to_vec()),
+                1 => Some(Value::from(get_bytes(body, &mut pos)?)),
                 0 => None,
                 other => bail!("bad SST value tag {other}"),
             };
@@ -176,7 +176,7 @@ mod tests {
     use super::*;
 
     fn entry(k: u128, seq: u64, v: Option<&[u8]>) -> Entry {
-        Entry { key: Key(k), seqno: seq, value: v.map(|b| b.to_vec()) }
+        Entry { key: Key(k), seqno: seq, value: v.map(Value::from) }
     }
 
     #[test]

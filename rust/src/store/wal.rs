@@ -95,7 +95,7 @@ pub fn replay(data: &[u8]) -> Result<Vec<WalRecord>> {
         let tag = body[bpos];
         bpos += 1;
         let value = match tag {
-            1 => Some(get_bytes(body, &mut bpos)?.to_vec()),
+            1 => Some(Value::from(get_bytes(body, &mut bpos)?)),
             0 => None,
             other => bail!("bad WAL value tag {other}"),
         };
@@ -113,7 +113,7 @@ mod tests {
             .map(|i| WalRecord {
                 seqno: i as u64 + 1,
                 key: Key(i as u128 * 7),
-                value: if i % 3 == 0 { None } else { Some(vec![i as u8; i % 50]) },
+                value: if i % 3 == 0 { None } else { Some(vec![i as u8; i % 50].into()) },
             })
             .collect()
     }

@@ -108,6 +108,8 @@ struct Entry {
     /// comes from the admission-time recheck).
     #[allow(dead_code)]
     version: u64,
+    /// Pass tick the value was admitted at, for per-entry TTL expiry.
+    admitted_tick: u64,
 }
 
 /// Hash-indexed per-key write state. Collisions fold distinct keys onto
@@ -169,6 +171,8 @@ pub struct ValueCache {
     generation: u64,
     /// Pipeline-pass counter (deterministic time base for TTL expiry).
     tick: u64,
+    /// Per-entry TTL in passes; `0` = entries never expire by age.
+    ttl_passes: u64,
     pending_samples: VecDeque<Sample>,
     pending_updates: VecDeque<PendingUpdate>,
     pending_cap: usize,
@@ -176,7 +180,12 @@ pub struct ValueCache {
 }
 
 impl ValueCache {
-    pub fn new(slots: usize, value_max: usize, policy: Box<dyn CachePolicy>) -> ValueCache {
+    pub fn new(
+        slots: usize,
+        value_max: usize,
+        ttl_passes: u64,
+        policy: Box<dyn CachePolicy>,
+    ) -> ValueCache {
         assert!(slots > 0, "a zero-slot cache must be represented as None");
         let version_len = (slots * 4).next_power_of_two().max(64);
         let sketch_len = (slots * 8).next_power_of_two().max(256);
@@ -192,6 +201,7 @@ impl ValueCache {
             sketch_feeds: 0,
             generation: 0,
             tick: 0,
+            ttl_passes,
             pending_samples: VecDeque::new(),
             pending_updates: VecDeque::new(),
             pending_cap: (slots * 4).max(64),
@@ -206,9 +216,19 @@ impl ValueCache {
 
     /// Serve a Get from the cache, if present. Sets the slot's reference
     /// bit (clock eviction's recency signal). The payload clone is O(1).
+    ///
+    /// With `cache_ttl_passes > 0`, an entry admitted more than that many
+    /// passes ago is expired lazily here: dropped and reported as a miss
+    /// (the subsequent authoritative read re-admits it if still hot).
     pub fn lookup(&mut self, key: Key) -> Option<Payload> {
         let &i = self.by_key.get(&key)?;
         let e = self.slots[i].as_ref().expect("by_key points at an occupied slot");
+        if self.ttl_passes > 0 && self.tick.saturating_sub(e.admitted_tick) >= self.ttl_passes {
+            self.by_key.remove(&key);
+            self.slots[i] = None;
+            self.ref_bits[i] = false;
+            return None;
+        }
         self.ref_bits[i] = true;
         Some(e.payload.clone())
     }
@@ -346,7 +366,7 @@ impl ValueCache {
             return Admitted::No;
         }
         if let Some(&i) = self.by_key.get(&sample.key) {
-            self.slots[i] = Some(Entry { key: sample.key, payload, version });
+            self.slots[i] = Some(Entry { key: sample.key, payload, version, admitted_tick: self.tick });
             self.ref_bits[i] = true;
             return Admitted::Fresh;
         }
@@ -359,7 +379,7 @@ impl ValueCache {
                 (victim, true)
             }
         };
-        self.slots[idx] = Some(Entry { key: sample.key, payload, version });
+        self.slots[idx] = Some(Entry { key: sample.key, payload, version, admitted_tick: self.tick });
         self.by_key.insert(sample.key, idx);
         self.ref_bits[idx] = true;
         if evicted {
@@ -443,7 +463,7 @@ mod tests {
     use super::*;
 
     fn cache(slots: usize, threshold: u32) -> ValueCache {
-        ValueCache::new(slots, 256, Box::new(FreqClockPolicy::new(threshold)))
+        ValueCache::new(slots, 256, 0, Box::new(FreqClockPolicy::new(threshold)))
     }
 
     fn payload(byte: u8) -> Payload {
@@ -561,5 +581,35 @@ mod tests {
         assert!(c.take_sample(2, None).is_none(), "below threshold");
         c.note_miss(Key(1), 3);
         assert!(c.take_sample(3, None).is_some(), "third miss crosses the threshold");
+    }
+
+    #[test]
+    fn ttl_expires_entries_by_pass_age() {
+        let mut c = ValueCache::new(4, 256, 3, Box::new(FreqClockPolicy::new(1)));
+        admit_key(&mut c, Key(9), 1, 6);
+        // Young entry: still served.
+        c.begin_pass();
+        c.begin_pass();
+        assert!(c.lookup(Key(9)).is_some(), "2 passes < ttl 3");
+        // Crossing the TTL: the lookup itself expires the entry...
+        c.begin_pass();
+        assert!(c.lookup(Key(9)).is_none(), "3 passes >= ttl 3");
+        // ...and it is really gone, not just hidden.
+        assert!(!c.contains(Key(9)));
+        assert_eq!(c.len(), 0);
+        // Re-admission restarts the clock.
+        admit_key(&mut c, Key(9), 2, 7);
+        c.begin_pass();
+        assert!(c.lookup(Key(9)).is_some());
+    }
+
+    #[test]
+    fn ttl_zero_never_expires() {
+        let mut c = cache(4, 1); // ttl_passes = 0
+        admit_key(&mut c, Key(3), 1, 1);
+        for _ in 0..10_000 {
+            c.begin_pass();
+        }
+        assert!(c.lookup(Key(3)).is_some(), "no TTL: age alone never evicts");
     }
 }

@@ -121,6 +121,7 @@ impl Switch {
             Some(ValueCache::new(
                 cfg.cache_slots,
                 cfg.cache_value_max,
+                cfg.cache_ttl_passes,
                 Box::new(FreqClockPolicy::new(cfg.cache_admit_threshold)),
             ))
         } else {
@@ -274,6 +275,11 @@ impl Switch {
         // turbo-echo shape (TurboKV ethertype, Normal ToS, echoed Get
         // header) carrying the cached, already-encoded reply payload.
         self.stats.cache_hits += 1;
+        // A hit is still a read against its range: bump the read counter
+        // plus the per-range hit counter, so the controller can subtract
+        // switch-absorbed load from node load estimates.
+        let rec = self.table.lookup(matching_value(&pkt));
+        self.registers.bump_cache_hit(rec);
         let mut reply = Packet::reply(pkt.ipv4.dst, pkt.ipv4.src, payload);
         reply.eth.ethertype = ETHERTYPE_TURBOKV;
         reply.turbo = Some(turbo);
@@ -630,6 +636,7 @@ mod tests {
             cache_slots: 4,
             cache_value_max: 256,
             cache_admit_threshold: 1,
+            cache_ttl_passes: 0,
         });
         let idx = (0..dir.len()).find(|&i| dir.tail(i) < 4).unwrap();
         (topo, dir, tor0, idx)
@@ -645,7 +652,7 @@ mod tests {
         let mut reply = Packet::reply(
             topo.node_ip(dir.tail(idx)),
             topo.client_ip(0),
-            encode_reply(&Reply::Value(Some(value.clone()))),
+            encode_reply(&Reply::Value(Some(value.clone().into()))),
         );
         reply.tag = tag;
         tor0.process_batch(&mut vec![reply], topo, &mut RustLookup, 0, 0);
@@ -660,7 +667,8 @@ mod tests {
         assert_eq!(tor0.stats.cache_admits, 1);
         // The same key again: the reply is synthesized at the switch in
         // the tail's turbo-echo shape and heads back toward the client —
-        // no Emit to any node, no lookup, no register bump.
+        // no Emit to any node, no lookup; the hit still bumps the range's
+        // read counter (plus the hit counter) for load accounting.
         let (key, _) = dir.bounds(idx);
         let mut req = get_pkt(&topo, key);
         req.tag = 12;
@@ -679,8 +687,11 @@ mod tests {
         assert_eq!((echo.op, echo.key), (OpCode::Get, key));
         assert_eq!(
             e.pkt.payload.as_slice(),
-            encode_reply(&Reply::Value(Some(value))).as_slice()
+            encode_reply(&Reply::Value(Some(value.into()))).as_slice()
         );
+        let (read, _, hits) = tor0.registers.drain_counters();
+        assert_eq!(read[idx], 2, "the miss and the hit both count as reads");
+        assert_eq!(hits[idx], 1, "the served hit is recorded per range");
     }
 
     #[test]
@@ -725,7 +736,7 @@ mod tests {
         let mut reply = Packet::reply(
             topo.node_ip(dir.tail(idx)),
             topo.client_ip(0),
-            encode_reply(&Reply::Value(Some(vec![9u8; 8]))),
+            encode_reply(&Reply::Value(Some(vec![9u8; 8].into()))),
         );
         reply.tag = 31;
         tor0.process_batch(&mut vec![reply], &topo, &mut RustLookup, 0, 0);
@@ -762,6 +773,7 @@ mod tests {
             cache_slots: 64,
             cache_value_max: 256,
             cache_admit_threshold: 1,
+            cache_ttl_passes: 0,
         });
         assert!(edge.cache.is_none(), "only the coordinator ToR caches");
     }

@@ -24,11 +24,17 @@ pub struct RegisterArrays {
     read_count: Vec<u64>,
     /// Per-index-record update hit counters (Put/Del).
     write_count: Vec<u64>,
-    /// Kept scratch pair for `drain_counters`: the live counter arrays are
+    /// Per-index-record value-cache hit counters: Gets the ToR's value
+    /// cache answered without touching the record's tail node. The
+    /// planner subtracts these from the read counts when estimating node
+    /// load — cached reads cost the chain nothing (DESIGN.md §2e).
+    hit_count: Vec<u64>,
+    /// Kept scratch set for `drain_counters`: the live counter arrays are
     /// swapped against these each epoch instead of allocating fresh zero
     /// vectors, so steady-state epochs allocate nothing.
     drained_read: Vec<u64>,
     drained_write: Vec<u64>,
+    drained_hit: Vec<u64>,
 }
 
 impl RegisterArrays {
@@ -64,6 +70,7 @@ impl RegisterArrays {
     pub fn resize_counters(&mut self, records: usize) {
         self.read_count.resize(records, 0);
         self.write_count.resize(records, 0);
+        self.hit_count.resize(records, 0);
     }
 
     /// Counter arrays must be re-sized when records are inserted mid-table:
@@ -71,6 +78,7 @@ impl RegisterArrays {
     pub fn insert_counter_slot(&mut self, at: usize) {
         self.read_count.insert(at, 0);
         self.write_count.insert(at, 0);
+        self.hit_count.insert(at, 0);
     }
 
     pub fn bump(&mut self, record: usize, is_write: bool) {
@@ -79,6 +87,14 @@ impl RegisterArrays {
         } else {
             self.read_count[record] += 1;
         }
+    }
+
+    /// Count a Get served straight from the switch value cache. The read
+    /// counter is bumped too (the record *was* accessed); this counter
+    /// tells the planner how much of that traffic never reached the node.
+    pub fn bump_cache_hit(&mut self, record: usize) {
+        self.read_count[record] += 1;
+        self.hit_count[record] += 1;
     }
 
     /// Batched counter-delta application (XLA dataplane path).
@@ -98,14 +114,17 @@ impl RegisterArrays {
     /// period"). The returned slices stay valid until the next drain; the
     /// backing buffers are a kept scratch pair that is zeroed and swapped
     /// in, so no per-epoch allocation once sizes are steady.
-    pub fn drain_counters(&mut self) -> (&[u64], &[u64]) {
+    pub fn drain_counters(&mut self) -> (&[u64], &[u64], &[u64]) {
         self.drained_read.resize(self.read_count.len(), 0);
         self.drained_read.fill(0);
         self.drained_write.resize(self.write_count.len(), 0);
         self.drained_write.fill(0);
+        self.drained_hit.resize(self.hit_count.len(), 0);
+        self.drained_hit.fill(0);
         std::mem::swap(&mut self.read_count, &mut self.drained_read);
         std::mem::swap(&mut self.write_count, &mut self.drained_write);
-        (&self.drained_read, &self.drained_write)
+        std::mem::swap(&mut self.hit_count, &mut self.drained_hit);
+        (&self.drained_read, &self.drained_write, &self.drained_hit)
     }
 
     pub fn counters(&self) -> (&[u64], &[u64]) {
@@ -135,9 +154,11 @@ mod tests {
         r.bump(0, false);
         r.bump(0, false);
         r.bump(2, true);
-        let (read, write) = r.drain_counters();
-        assert_eq!(read, &[2, 0, 0, 0]);
+        r.bump_cache_hit(1);
+        let (read, write, hits) = r.drain_counters();
+        assert_eq!(read, &[2, 1, 0, 0], "cache hits count as reads too");
         assert_eq!(write, &[0, 0, 1, 0]);
+        assert_eq!(hits, &[0, 1, 0, 0]);
         // Reset after drain.
         let (read, write) = r.counters();
         assert!(read.iter().all(|&c| c == 0));
@@ -150,20 +171,21 @@ mod tests {
         r.resize_counters(4);
         r.bump(0, false);
         r.bump(3, true);
-        let (read, write) = r.drain_counters();
-        assert_eq!((read.len(), write.len()), (4, 4));
+        let (read, write, hits) = r.drain_counters();
+        assert_eq!((read.len(), write.len(), hits.len()), (4, 4, 4));
         assert_eq!(read, &[1, 0, 0, 0]);
         assert_eq!(write, &[0, 0, 0, 1]);
         // A second epoch with different traffic: the swapped-back scratch
         // buffers must come back zeroed and correctly sized — yesterday's
         // counts can never bleed into today's drain.
         r.bump(1, false);
-        let (read, write) = r.drain_counters();
-        assert_eq!((read.len(), write.len()), (4, 4));
+        let (read, write, hits) = r.drain_counters();
+        assert_eq!((read.len(), write.len(), hits.len()), (4, 4, 4));
         assert_eq!(read, &[0, 1, 0, 0]);
         assert_eq!(write, &[0, 0, 0, 0]);
+        assert_eq!(hits, &[0, 0, 0, 0]);
         // And a drain with no traffic at all is all-zero.
-        let (read, write) = r.drain_counters();
+        let (read, write, _) = r.drain_counters();
         assert_eq!(read, &[0, 0, 0, 0]);
         assert_eq!(write, &[0, 0, 0, 0]);
     }

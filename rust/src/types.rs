@@ -6,6 +6,7 @@
 //! range spans from 0 to 2^128").
 
 use std::fmt;
+use std::sync::Arc;
 
 /// A 16-byte TurboKV key. Ordered lexicographically over its big-endian
 /// bytes, which is identical to integer order on the `u128`.
@@ -68,9 +69,103 @@ impl From<u128> for Key {
     }
 }
 
+/// An immutable, cheaply clonable byte string: cloning is an `Arc`
+/// refcount bump, never a byte copy. This is both the packet payload
+/// representation (re-exported as `net::packet::Payload`) and the stored
+/// value representation, so a value read from the store travels to the
+/// reply encoder without a single byte copy. `Arc` (not `Rc`) because
+/// deployment shards move frames across threads.
+///
+/// The empty payload is `None` — no allocation, and `Default` is free.
+#[derive(Clone, Default)]
+pub struct Bytes(Option<Arc<[u8]>>);
+
+impl Bytes {
+    /// The empty byte string (no allocation).
+    pub fn new() -> Bytes {
+        Bytes(None)
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        self.0.as_deref().unwrap_or(&[])
+    }
+
+    pub fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Materialize an owned copy (the copy-on-write point for callers
+    /// that need a mutable buffer).
+    pub fn to_vec(&self) -> Vec<u8> {
+        self.as_slice().to_vec()
+    }
+
+    /// Do the two byte strings share one backing buffer? (Aliasing oracle
+    /// for the sharing-semantics tests; empty strings trivially share.)
+    pub fn shares_buffer(&self, other: &Bytes) -> bool {
+        match (&self.0, &other.0) {
+            (Some(a), Some(b)) => Arc::ptr_eq(a, b),
+            (None, None) => true,
+            _ => false,
+        }
+    }
+}
+
+impl std::ops::Deref for Bytes {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl From<Vec<u8>> for Bytes {
+    fn from(v: Vec<u8>) -> Bytes {
+        if v.is_empty() {
+            Bytes(None)
+        } else {
+            Bytes(Some(v.into()))
+        }
+    }
+}
+
+impl From<&[u8]> for Bytes {
+    fn from(v: &[u8]) -> Bytes {
+        if v.is_empty() {
+            Bytes(None)
+        } else {
+            Bytes(Some(v.into()))
+        }
+    }
+}
+
+impl<const N: usize> From<&[u8; N]> for Bytes {
+    fn from(v: &[u8; N]) -> Bytes {
+        Bytes::from(v.as_slice())
+    }
+}
+
+impl PartialEq for Bytes {
+    fn eq(&self, other: &Bytes) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for Bytes {}
+
+impl fmt::Debug for Bytes {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Bytes({} bytes)", self.len())
+    }
+}
+
 /// Values are opaque byte strings (the experiments use 128-byte values,
-/// paper §8).
-pub type Value = Vec<u8>;
+/// paper §8), stored as O(1)-clone [`Bytes`] so the store's read path
+/// never copies value bytes.
+pub type Value = Bytes;
 
 /// Key-value operation codes carried in the TurboKV header (paper §4.2:
 /// "Get, Put, Del, and Range").
@@ -126,16 +221,16 @@ pub struct Request {
 
 impl Request {
     pub fn get(key: Key) -> Self {
-        Request { op: OpCode::Get, key, end_key: Key::MIN, value: Vec::new() }
+        Request { op: OpCode::Get, key, end_key: Key::MIN, value: Value::new() }
     }
-    pub fn put(key: Key, value: Value) -> Self {
-        Request { op: OpCode::Put, key, end_key: Key::MIN, value }
+    pub fn put(key: Key, value: impl Into<Value>) -> Self {
+        Request { op: OpCode::Put, key, end_key: Key::MIN, value: value.into() }
     }
     pub fn del(key: Key) -> Self {
-        Request { op: OpCode::Del, key, end_key: Key::MIN, value: Vec::new() }
+        Request { op: OpCode::Del, key, end_key: Key::MIN, value: Value::new() }
     }
     pub fn range(start: Key, end: Key) -> Self {
-        Request { op: OpCode::Range, key: start, end_key: end, value: Vec::new() }
+        Request { op: OpCode::Range, key: start, end_key: end, value: Value::new() }
     }
 }
 
@@ -193,5 +288,22 @@ mod tests {
     fn key_next_saturates() {
         assert_eq!(Key(7).next(), Key(8));
         assert_eq!(Key::MAX.next(), Key::MAX);
+    }
+
+    #[test]
+    fn bytes_clone_shares_the_backing_buffer() {
+        let v: Value = vec![1u8, 2, 3].into();
+        let c = v.clone();
+        assert!(v.shares_buffer(&c));
+        assert_eq!(v, c);
+        assert_eq!(v.as_slice(), &[1, 2, 3]);
+        // Distinct allocations with equal content compare equal but do
+        // not alias.
+        let w: Value = vec![1u8, 2, 3].into();
+        assert_eq!(v, w);
+        assert!(!v.shares_buffer(&w));
+        // Empty strings are allocation-free and trivially share.
+        assert!(Value::new().shares_buffer(&Value::from(Vec::new())));
+        assert!(Value::new().is_empty());
     }
 }

@@ -29,7 +29,15 @@ fn view(
     failures: Vec<NodeId>,
     knobs: ControllerConfig,
 ) -> ClusterView {
-    ClusterView { dir: dir.clone(), read, write, alive: vec![true; nodes], failures, knobs }
+    ClusterView {
+        dir: dir.clone(),
+        read,
+        write,
+        hits: vec![],
+        alive: vec![true; nodes],
+        failures,
+        knobs,
+    }
 }
 
 /// One very hot range (node 1 is its tail in `Directory::initial(8, 4,
