@@ -261,9 +261,11 @@ pub struct DeployConfig {
     /// Where `drive` writes its machine-readable JSON run report
     /// (`turbokv-loadgen-v1`); empty = no report file.
     pub report_path: String,
-    /// Node the harness kills mid-run; negative = no induced failure.
+    /// Deprecated alias for `chaos.kill_node` (kept so older configs and
+    /// CI invocations keep working); negative = no induced failure.
+    /// Setting both spellings is a validation error.
     pub kill_node: i64,
-    /// Switch-observed operations before the kill fires.
+    /// Deprecated alias for `chaos.kill_after_ops`.
     pub kill_after_ops: u64,
     /// Harness gate: fail the run unless the controller applied at least
     /// this many live migrations (the CI skewed-workload variant sets 1).
@@ -292,6 +294,89 @@ impl Default for DeployConfig {
             expect_migrations: 0,
             min_cache_hit_rate: 0.0,
         }
+    }
+}
+
+/// One declarative fault scenario for the deployment harness (DESIGN.md
+/// §2g "Fault model & chaos matrix"). The defaults are fully inert: a
+/// config with no `[chaos]` section runs a healthy cluster. One scenario
+/// per config — the CI chaos matrix is one harness run per scenario file.
+#[derive(Clone, Debug)]
+pub struct ChaosConfig {
+    /// Scenario label, echoed in the harness summary and reports.
+    pub scenario: String,
+    /// Seed for the switches' fault injectors: the drop/duplicate/delay
+    /// schedule is a pure function of (seed, frame sequence), so a failing
+    /// scenario replays exactly.
+    pub seed: u64,
+    /// Storage node to kill (and the controller to repair around)
+    /// mid-run; negative = no kill.
+    pub kill_node: i64,
+    /// Switch-observed operations before the kill fires.
+    pub kill_after_ops: u64,
+    /// Kill the controller at the §5.1 migration's most dangerous point —
+    /// after the destination ingested the sub-range but before any switch
+    /// chain was rewritten — then restart it with empty state, forcing a
+    /// directory rebuild from switch probes. Requires
+    /// `controller.migration = true`.
+    pub controller_crash_in_migration: bool,
+    /// Per-frame drop probability at the switch egress, in permille.
+    pub drop_permille: u16,
+    /// Per-frame duplication probability, in permille.
+    pub dup_permille: u16,
+    /// Per-frame delay probability, in permille. A delayed frame is held
+    /// `delay_passes` shard passes and released after younger traffic —
+    /// i.e. reordered, not just late.
+    pub delay_permille: u16,
+    /// How many shard passes a delayed frame is held.
+    pub delay_passes: u32,
+    /// Which switches inject faults: `"all"`, or one switch by its
+    /// topology name (`"tor0"`, `"agg1"`, `"core"`, `"edge"`).
+    pub fault_scope: String,
+    /// Sever one hierarchy link, named `"<switch>-<switch>"` (e.g.
+    /// `"tor1-agg0"`): both ends drop every frame toward the other until
+    /// the fault window closes. Empty = no partition.
+    pub partition_link: String,
+    /// Switch-observed operations before the transport faults (and the
+    /// partition) arm; 0 = armed from the start of the measured phase.
+    pub fault_start_after_ops: u64,
+    /// How long the fault window stays open (wall-clock ms) before the
+    /// controller disarms it; 0 = until the end of the run. A partition
+    /// must set this — an unhealed link would strand its rack's ops.
+    pub fault_duration_ms: u64,
+    /// Harness gate: fail unless the controller was killed and rebuilt
+    /// its view at least this many times.
+    pub expect_restarts: u64,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig {
+            scenario: String::new(),
+            seed: 0xC4A0,
+            kill_node: -1,
+            kill_after_ops: 0,
+            controller_crash_in_migration: false,
+            drop_permille: 0,
+            dup_permille: 0,
+            delay_permille: 0,
+            delay_passes: 2,
+            fault_scope: "all".into(),
+            partition_link: String::new(),
+            fault_start_after_ops: 0,
+            fault_duration_ms: 0,
+            expect_restarts: 0,
+        }
+    }
+}
+
+impl ChaosConfig {
+    /// Does this scenario inject transport-level faults at all?
+    pub fn has_transport_faults(&self) -> bool {
+        self.drop_permille > 0
+            || self.dup_permille > 0
+            || self.delay_permille > 0
+            || !self.partition_link.is_empty()
     }
 }
 
@@ -366,6 +451,7 @@ pub struct Config {
     pub deploy: DeployConfig,
     pub switch: SwitchConfig,
     pub store: StoreConfig,
+    pub chaos: ChaosConfig,
     pub coordination: Coordination,
 }
 
@@ -475,6 +561,35 @@ impl Config {
         ovr!(doc, "switch.cache_ttl_passes", self.switch.cache_ttl_passes, int);
 
         ovr!(doc, "store.stripes", self.store.stripes, int);
+
+        if let Some(v) = doc.get("chaos.scenario") {
+            self.chaos.scenario =
+                v.as_str().context("chaos.scenario must be a string")?.to_string();
+        }
+        ovr!(doc, "chaos.seed", self.chaos.seed, int);
+        ovr!(doc, "chaos.kill_node", self.chaos.kill_node, int);
+        ovr!(doc, "chaos.kill_after_ops", self.chaos.kill_after_ops, int);
+        ovr!(
+            doc,
+            "chaos.controller_crash_in_migration",
+            self.chaos.controller_crash_in_migration,
+            bool
+        );
+        ovr!(doc, "chaos.drop_permille", self.chaos.drop_permille, int);
+        ovr!(doc, "chaos.dup_permille", self.chaos.dup_permille, int);
+        ovr!(doc, "chaos.delay_permille", self.chaos.delay_permille, int);
+        ovr!(doc, "chaos.delay_passes", self.chaos.delay_passes, int);
+        if let Some(v) = doc.get("chaos.fault_scope") {
+            self.chaos.fault_scope =
+                v.as_str().context("chaos.fault_scope must be a string")?.to_string();
+        }
+        if let Some(v) = doc.get("chaos.partition_link") {
+            self.chaos.partition_link =
+                v.as_str().context("chaos.partition_link must be a string")?.to_string();
+        }
+        ovr!(doc, "chaos.fault_start_after_ops", self.chaos.fault_start_after_ops, int);
+        ovr!(doc, "chaos.fault_duration_ms", self.chaos.fault_duration_ms, int);
+        ovr!(doc, "chaos.expect_restarts", self.chaos.expect_restarts, int);
 
         if let Some(v) = doc.get("dataplane.mode") {
             self.dataplane.mode = match v.as_str().context("dataplane.mode must be a string")? {
@@ -587,7 +702,76 @@ impl Config {
                 self.store.stripes
             );
         }
+        // The `[chaos]` scenario schema — validated centrally so the
+        // harness, the CLI, and every scenario file in config/chaos/ get
+        // the same loud errors.
+        let ch = &self.chaos;
+        if ch.kill_node >= 0 && self.deploy.kill_node >= 0 {
+            bail!(
+                "chaos.kill_node and the deprecated deploy.kill_node are both set; \
+                 use only [chaos] (deploy.kill_node is a compatibility alias)"
+            );
+        }
+        let (kill, _) = self.effective_kill();
+        if kill >= nodes as i64 {
+            bail!("kill_node {kill} out of range (cluster has {nodes} nodes)");
+        }
+        let sum =
+            ch.drop_permille as u32 + ch.dup_permille as u32 + ch.delay_permille as u32;
+        if sum > 1000 {
+            bail!(
+                "chaos drop/dup/delay permilles sum to {sum} > 1000 \
+                 (they are disjoint bands of one per-frame die roll)"
+            );
+        }
+        if ch.delay_permille > 0 && ch.delay_passes == 0 {
+            bail!("chaos.delay_passes must be ≥ 1 when chaos.delay_permille > 0");
+        }
+        if ch.fault_scope.is_empty() {
+            bail!("chaos.fault_scope must be \"all\" or a switch name (e.g. \"tor0\")");
+        }
+        if !ch.partition_link.is_empty() {
+            match ch.partition_link.split_once('-') {
+                Some((a, b)) if !a.is_empty() && !b.is_empty() => {}
+                _ => bail!(
+                    "chaos.partition_link {:?} must name two switches as \
+                     \"<switch>-<switch>\" (e.g. \"tor1-agg0\")",
+                    ch.partition_link
+                ),
+            }
+            if ch.fault_duration_ms == 0 {
+                bail!(
+                    "chaos.partition_link needs chaos.fault_duration_ms > 0: an \
+                     unhealed partition strands the cut rack's operations forever"
+                );
+            }
+        }
+        if ch.controller_crash_in_migration && !self.controller.migration {
+            bail!(
+                "chaos.controller_crash_in_migration needs controller.migration = true \
+                 (the crash point is inside the §5.1 migration)"
+            );
+        }
+        if ch.expect_restarts > 0 && !ch.controller_crash_in_migration {
+            bail!(
+                "chaos.expect_restarts {} can never pass without \
+                 chaos.controller_crash_in_migration = true",
+                ch.expect_restarts
+            );
+        }
         Ok(())
+    }
+
+    /// The induced node kill under whichever spelling declared it: the
+    /// `[chaos]` schema, or the deprecated `deploy.kill_node` /
+    /// `deploy.kill_after_ops` alias older configs still use. Returns
+    /// `(node, after_ops)`; a negative node means no kill.
+    pub fn effective_kill(&self) -> (i64, u64) {
+        if self.chaos.kill_node >= 0 {
+            (self.chaos.kill_node, self.chaos.kill_after_ops)
+        } else {
+            (self.deploy.kill_node, self.deploy.kill_after_ops)
+        }
     }
 }
 
@@ -718,6 +902,103 @@ mod tests {
         assert!(cfg.deploy.report_path.is_empty());
         assert_eq!(cfg.deploy.kill_node, -1);
         assert_eq!(cfg.deploy.expect_migrations, 0);
+    }
+
+    #[test]
+    fn chaos_section_applies_and_is_inert_by_default() {
+        // No [chaos] section = a healthy cluster: every knob defaults off.
+        let cfg = Config::default();
+        assert!(cfg.chaos.scenario.is_empty());
+        assert_eq!(cfg.chaos.kill_node, -1);
+        assert!(!cfg.chaos.controller_crash_in_migration);
+        assert!(!cfg.chaos.has_transport_faults());
+        assert_eq!(cfg.chaos.fault_scope, "all");
+        assert_eq!(cfg.effective_kill(), (-1, 0));
+
+        let cfg = Config::from_str(
+            r#"
+            [controller]
+            migration = true
+            [chaos]
+            scenario = "drop-dup-delay"
+            seed = 42
+            kill_node = 2
+            kill_after_ops = 900
+            controller_crash_in_migration = true
+            drop_permille = 20
+            dup_permille = 10
+            delay_permille = 15
+            delay_passes = 3
+            fault_scope = "tor1"
+            partition_link = "tor1-agg0"
+            fault_start_after_ops = 400
+            fault_duration_ms = 1500
+            expect_restarts = 1
+        "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.chaos.scenario, "drop-dup-delay");
+        assert_eq!(cfg.chaos.seed, 42);
+        assert_eq!(cfg.effective_kill(), (2, 900), "[chaos] spelling wins");
+        assert!(cfg.chaos.controller_crash_in_migration);
+        assert_eq!(
+            (cfg.chaos.drop_permille, cfg.chaos.dup_permille, cfg.chaos.delay_permille),
+            (20, 10, 15)
+        );
+        assert_eq!(cfg.chaos.delay_passes, 3);
+        assert!(cfg.chaos.has_transport_faults());
+        assert_eq!(cfg.chaos.fault_scope, "tor1");
+        assert_eq!(cfg.chaos.partition_link, "tor1-agg0");
+        assert_eq!(cfg.chaos.fault_start_after_ops, 400);
+        assert_eq!(cfg.chaos.fault_duration_ms, 1500);
+        assert_eq!(cfg.chaos.expect_restarts, 1);
+    }
+
+    #[test]
+    fn chaos_validation_and_kill_alias() {
+        // The deprecated deploy.* spelling still works on its own...
+        let cfg = Config::from_str("[deploy]\nkill_node = 1\nkill_after_ops = 500").unwrap();
+        assert_eq!(cfg.effective_kill(), (1, 500));
+        // ...but declaring the kill under both spellings is a conflict.
+        let err = Config::from_str(
+            "[deploy]\nkill_node = 1\n[chaos]\nkill_node = 2",
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("deprecated"), "{err:#}");
+        // Kill target must exist, whichever spelling named it.
+        assert!(Config::from_str("[chaos]\nkill_node = 99").is_err());
+        assert!(Config::from_str("[deploy]\nkill_node = 99").is_err());
+        // Fault bands share one per-frame die roll.
+        assert!(Config::from_str(
+            "[chaos]\ndrop_permille = 600\ndup_permille = 300\ndelay_permille = 200"
+        )
+        .is_err());
+        // Delaying by zero passes is a no-op masquerading as a fault.
+        assert!(
+            Config::from_str("[chaos]\ndelay_permille = 10\ndelay_passes = 0").is_err()
+        );
+        // A partition must name a real-looking link and must heal.
+        assert!(Config::from_str(
+            "[chaos]\npartition_link = \"tor1\"\nfault_duration_ms = 500"
+        )
+        .is_err());
+        let err =
+            Config::from_str("[chaos]\npartition_link = \"tor1-agg0\"").unwrap_err();
+        assert!(format!("{err:#}").contains("fault_duration_ms"), "{err:#}");
+        assert!(Config::from_str(
+            "[chaos]\npartition_link = \"tor1-agg0\"\nfault_duration_ms = 500"
+        )
+        .is_ok());
+        // Controller-crash scenarios need a migration to crash inside of,
+        // and restart gates need a crash to count.
+        assert!(Config::from_str("[chaos]\ncontroller_crash_in_migration = true").is_err());
+        assert!(Config::from_str("[chaos]\nexpect_restarts = 1").is_err());
+        assert!(Config::from_str(
+            "[controller]\nmigration = true\n\
+             [chaos]\ncontroller_crash_in_migration = true\nexpect_restarts = 1"
+        )
+        .is_ok());
+        assert!(Config::from_str("[chaos]\nfault_scope = \"\"").is_err());
     }
 
     #[test]

@@ -17,7 +17,9 @@ use anyhow::{anyhow, bail, Context, Result};
 use crate::store::blob::{get_bytes, get_uvarint, put_bytes, put_uvarint};
 use crate::types::{Key, Value};
 
-use super::transport::{configure_stream, read_frame_deadline, write_frame, FrameReader};
+use super::transport::{
+    configure_stream, read_frame_deadline, write_frame, FaultSpec, FrameReader,
+};
 use super::ServerStatsSnapshot;
 
 /// A controller → server request.
@@ -52,6 +54,15 @@ pub enum CtrlMsg {
     /// barrier. Clients see a lost packet and retransmit after the
     /// reconfiguration, exactly like a real switch mid-update.
     SetFreeze { start: Key, end: Key, frozen: bool },
+    /// Switch only: arm (or, with an inert spec, disarm) the chaos fault
+    /// injector on this switch's data-plane sends — DESIGN.md §2g. Armed
+    /// at runtime so a scenario can start faults mid-run.
+    SetFaults(FaultSpec),
+    /// Switch only: dump the current match-action table (record start
+    /// keys + chains) and the frozen migration spans. The restarted
+    /// controller rebuilds its `ClusterView` from this — the switch *is*
+    /// the durable directory (§6 / NetChain's in-network state).
+    DumpTable,
 }
 
 /// A server → controller reply.
@@ -63,6 +74,10 @@ pub enum CtrlReply {
     Err(String),
     /// Final observability counters, sent in response to `Shutdown`.
     Stats(ServerStatsSnapshot),
+    /// The switch's directory as installed: per-record `(start, chain)`
+    /// in table order, plus any frozen migration spans — the
+    /// `DumpTable` answer a recovering controller resumes from.
+    Table { records: Vec<(Key, Vec<u16>)>, frozen: Vec<(Key, Key)> },
 }
 
 fn put_key(out: &mut Vec<u8>, k: Key) {
@@ -142,6 +157,21 @@ impl CtrlMsg {
                 put_key(&mut out, *end);
                 out.push(u8::from(*frozen));
             }
+            CtrlMsg::SetFaults(spec) => {
+                out.push(10);
+                put_uvarint(&mut out, spec.seed);
+                put_uvarint(&mut out, spec.drop_permille as u64);
+                put_uvarint(&mut out, spec.dup_permille as u64);
+                put_uvarint(&mut out, spec.delay_permille as u64);
+                put_uvarint(&mut out, spec.delay_passes as u64);
+                put_uvarint(&mut out, spec.blocked.len() as u64);
+                for a in &spec.blocked {
+                    // Socket addresses travel as text: the set is tiny and
+                    // the string form round-trips v4 and v6 alike.
+                    put_bytes(&mut out, a.to_string().as_bytes());
+                }
+            }
+            CtrlMsg::DumpTable => out.push(11),
         }
         out
     }
@@ -193,6 +223,31 @@ impl CtrlMsg {
                 };
                 CtrlMsg::SetFreeze { start, end, frozen }
             }
+            10 => {
+                let seed = get_uvarint(data, &mut pos)?;
+                let drop_permille = get_uvarint(data, &mut pos)? as u16;
+                let dup_permille = get_uvarint(data, &mut pos)? as u16;
+                let delay_permille = get_uvarint(data, &mut pos)? as u16;
+                let delay_passes = get_uvarint(data, &mut pos)? as u32;
+                let n = get_uvarint(data, &mut pos)? as usize;
+                let mut blocked = Vec::with_capacity(n.min(64));
+                for _ in 0..n {
+                    let s = String::from_utf8_lossy(get_bytes(data, &mut pos)?).into_owned();
+                    blocked.push(
+                        s.parse()
+                            .map_err(|e| anyhow!("bad blocked address {s:?} in SetFaults: {e}"))?,
+                    );
+                }
+                CtrlMsg::SetFaults(FaultSpec {
+                    seed,
+                    drop_permille,
+                    dup_permille,
+                    delay_permille,
+                    delay_passes,
+                    blocked,
+                })
+            }
+            11 => CtrlMsg::DumpTable,
             other => bail!("bad control message tag {other}"),
         })
     }
@@ -239,6 +294,25 @@ impl CtrlReply {
                 put_uvarint(&mut out, s.cache_admits);
                 put_uvarint(&mut out, s.cache_evicts);
                 put_uvarint(&mut out, s.cache_invalidations);
+                put_uvarint(&mut out, s.faults_dropped);
+                put_uvarint(&mut out, s.faults_duplicated);
+                put_uvarint(&mut out, s.faults_delayed);
+            }
+            CtrlReply::Table { records, frozen } => {
+                out.push(6);
+                put_uvarint(&mut out, records.len() as u64);
+                for (start, chain) in records {
+                    put_key(&mut out, *start);
+                    put_uvarint(&mut out, chain.len() as u64);
+                    for &reg in chain {
+                        put_uvarint(&mut out, reg as u64);
+                    }
+                }
+                put_uvarint(&mut out, frozen.len() as u64);
+                for (s, e) in frozen {
+                    put_key(&mut out, *s);
+                    put_key(&mut out, *e);
+                }
             }
         }
         out
@@ -278,7 +352,31 @@ impl CtrlReply {
                 cache_admits: get_uvarint(data, &mut pos)?,
                 cache_evicts: get_uvarint(data, &mut pos)?,
                 cache_invalidations: get_uvarint(data, &mut pos)?,
+                faults_dropped: get_uvarint(data, &mut pos)?,
+                faults_duplicated: get_uvarint(data, &mut pos)?,
+                faults_delayed: get_uvarint(data, &mut pos)?,
             }),
+            6 => {
+                let n = get_uvarint(data, &mut pos)? as usize;
+                let mut records = Vec::with_capacity(n.min(1 << 20));
+                for _ in 0..n {
+                    let start = get_key(data, &mut pos)?;
+                    let m = get_uvarint(data, &mut pos)? as usize;
+                    let mut chain = Vec::with_capacity(m.min(64));
+                    for _ in 0..m {
+                        chain.push(get_uvarint(data, &mut pos)? as u16);
+                    }
+                    records.push((start, chain));
+                }
+                let f = get_uvarint(data, &mut pos)? as usize;
+                let mut frozen = Vec::with_capacity(f.min(1 << 20));
+                for _ in 0..f {
+                    let s = get_key(data, &mut pos)?;
+                    let e = get_key(data, &mut pos)?;
+                    frozen.push((s, e));
+                }
+                CtrlReply::Table { records, frozen }
+            }
             other => bail!("bad control reply tag {other}"),
         })
     }
@@ -327,6 +425,19 @@ mod tests {
             CtrlMsg::DeleteRange { start: Key(3), end: Key(9 << 100) },
             CtrlMsg::SetFreeze { start: Key(1), end: Key(2), frozen: true },
             CtrlMsg::SetFreeze { start: Key::MIN, end: Key::MAX, frozen: false },
+            CtrlMsg::SetFaults(FaultSpec::default()),
+            CtrlMsg::SetFaults(FaultSpec {
+                seed: u64::MAX,
+                drop_permille: 50,
+                dup_permille: 30,
+                delay_permille: 20,
+                delay_passes: 3,
+                blocked: vec![
+                    "127.0.0.1:7600".parse().unwrap(),
+                    "[::1]:7601".parse().unwrap(),
+                ],
+            }),
+            CtrlMsg::DumpTable,
         ];
         for m in msgs {
             assert_eq!(CtrlMsg::decode(&m.encode()).unwrap(), m);
@@ -355,7 +466,19 @@ mod tests {
                 cache_admits: 5,
                 cache_evicts: 2,
                 cache_invalidations: u64::MAX - 1,
+                faults_dropped: 12,
+                faults_duplicated: 4,
+                faults_delayed: 9,
             }),
+            CtrlReply::Table { records: vec![], frozen: vec![] },
+            CtrlReply::Table {
+                records: vec![
+                    (Key::MIN, vec![0, 1, 2]),
+                    (Key(7 << 96), vec![3]),
+                    (Key::MAX, vec![]),
+                ],
+                frozen: vec![(Key(1), Key(2)), (Key::MIN, Key::MAX)],
+            },
         ];
         for r in replies {
             assert_eq!(CtrlReply::decode(&r.encode()).unwrap(), r);
@@ -386,5 +509,23 @@ mod tests {
             CtrlMsg::SplitRecord { idx: 1, at: Key(5), chain: vec![700, 800] }.encode();
         bytes.truncate(bytes.len() - 1);
         assert!(CtrlMsg::decode(&bytes).is_err());
+        // A blocked address that does not parse back is rejected, not
+        // silently dropped from the partition set.
+        let mut bytes = CtrlMsg::SetFaults(FaultSpec {
+            blocked: vec!["127.0.0.1:9999".parse().unwrap()],
+            ..FaultSpec::default()
+        })
+        .encode();
+        let cut = bytes.len() - 4; // corrupt the address text
+        bytes[cut..].copy_from_slice(b"zzzz");
+        assert!(CtrlMsg::decode(&bytes).is_err());
+        // Truncated table reply: a record's chain is cut off.
+        let mut bytes = CtrlReply::Table {
+            records: vec![(Key(1), vec![300, 400])],
+            frozen: vec![],
+        }
+        .encode();
+        bytes.truncate(bytes.len() - 2);
+        assert!(CtrlReply::decode(&bytes).is_err());
     }
 }

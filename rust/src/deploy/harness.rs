@@ -14,13 +14,29 @@
 //!
 //! The controller loop is the paper's full §5 epoch, planned by the
 //! shared decision core (`control::plan_epoch`) and applied over TCP:
-//! drain the switch's per-range counters, detect failures by
+//! drain the switches' per-range counters, detect failures by
 //! control-plane ping, then map the planner's `ControlOp`s onto the
 //! control codec — `ExtractRange`/`IngestRange` for repair and migration
 //! data copies, `SetChain` for chain rewrites, `SplitRecord` for hot
 //! divisions, `DeleteRange` to drop a migrated range's old copy, and a
 //! `SetFreeze` write barrier around each live migration so no
 //! acknowledged write can slip between the copy and the routing update.
+//!
+//! The harness stands up *every* switch in `net::topology`'s hierarchy —
+//! the rack ToRs, the aggregation layer, the core, and the client edge —
+//! as its own soft switch, and frames hop switch-to-switch exactly as the
+//! simulator routes them. Table-mutating control ops therefore go to all
+//! switches (each holds the full index table), while per-range load
+//! counters are summed over the ToRs only: every switch on a path
+//! key-routes and tallies, but exactly one ToR coordinates each op.
+//!
+//! The `[chaos]` scenario rides on top (DESIGN.md §2g): a
+//! [`ChaosDriver`] arms the switches' seeded fault injectors mid-run and
+//! heals them on schedule, and `chaos.controller_crash_in_migration`
+//! kills the controller at the migration's most dangerous point — the
+//! restarted controller persists nothing and rebuilds its directory from
+//! `DumpTable` probes (the in-switch tables are the durable copy, the
+//! NetChain argument).
 
 use std::net::{TcpListener, TcpStream};
 use std::process::{Child, Command, Stdio};
@@ -32,11 +48,13 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::Config;
 use crate::control::{plan_epoch, ClusterView, ControlOp, Intent, PlanAction, RustEstimator};
-use crate::partition::Directory;
+use crate::net::topology::{SwitchRole, Topology};
+use crate::partition::{Directory, SubRange};
 use crate::types::{Key, NodeId, Value};
 
 use super::control::{ctrl_call, CtrlMsg, CtrlReply};
 use super::loadgen::DriveReport;
+use super::transport::FaultSpec;
 use super::{
     loadgen, node_server, switch_server, validate_deploy, Netmap, ServerHandle,
     ServerStatsSnapshot,
@@ -51,9 +69,12 @@ pub struct ControllerReport {
     pub migrations: u64,
     /// §4.1.1/§5.1 hot-range divisions installed in the switch table.
     pub splits: u64,
-    /// Total read+write counter mass drained from the switch.
+    /// Total read+write counter mass drained from the coordinator ToRs.
     pub total_ops: u64,
     pub killed: Option<NodeId>,
+    /// Times the controller was chaos-killed and rebuilt its directory
+    /// from switch `DumpTable` probes.
+    pub restarts: u64,
     /// Last per-node load estimate (observability).
     pub last_load: Vec<f32>,
 }
@@ -87,18 +108,18 @@ impl LoopbackReport {
         if !self.drive.clean() {
             bail!("verification failed: {}", self.drive.summary_line());
         }
-        if cfg.deploy.kill_node >= 0 {
+        let (kill_node, kill_after_ops) = cfg.effective_kill();
+        if kill_node >= 0 {
             if self.controller.killed.is_none() {
                 bail!(
-                    "kill_node={} was configured but never triggered \
-                     (kill_after_ops={} vs observed {}); raise ops or lower the threshold",
-                    cfg.deploy.kill_node,
-                    cfg.deploy.kill_after_ops,
+                    "kill_node={kill_node} was configured but never triggered \
+                     (kill_after_ops={kill_after_ops} vs observed {}); raise ops or \
+                     lower the threshold",
                     self.controller.total_ops
                 );
             }
             if self.controller.repairs == 0 {
-                bail!("node {} was killed but no chain was repaired", cfg.deploy.kill_node);
+                bail!("node {kill_node} was killed but no chain was repaired");
             }
         }
         if cfg.deploy.min_throughput > 0 && self.drive.throughput_ops < cfg.deploy.min_throughput {
@@ -137,23 +158,48 @@ impl LoopbackReport {
                 self.controller.total_ops
             );
         }
+        // Chaos proof-of-injection: a scenario that declares transport
+        // faults but never actually injected any tested nothing — the
+        // green result would be a lie.
+        if cfg.chaos.has_transport_faults() && self.servers.faults_injected() == 0 {
+            bail!(
+                "the [chaos] scenario declares transport faults but zero frames were \
+                 dropped/duplicated/delayed (armed after {} ops, observed {}); the run \
+                 exercised no fault path",
+                cfg.chaos.fault_start_after_ops,
+                self.controller.total_ops
+            );
+        }
+        if self.controller.restarts < cfg.chaos.expect_restarts {
+            bail!(
+                "chaos.expect_restarts={} but the controller was only killed and \
+                 recovered {} times (migrations={} epochs={})",
+                cfg.chaos.expect_restarts,
+                self.controller.restarts,
+                self.controller.migrations,
+                self.controller.epochs
+            );
+        }
         Ok(())
     }
 
     pub fn summary(&self) -> String {
         let mut line = format!(
             "{} | controller: epochs={} repairs={} migrations={} splits={} killed={:?} \
-             observed_ops={} | servers: bad_frames={} dropped={} send_failures={}",
+             restarts={} observed_ops={} | servers: bad_frames={} dropped={} \
+             send_failures={} faults_injected={}",
             self.drive.summary_line(),
             self.controller.epochs,
             self.controller.repairs,
             self.controller.migrations,
             self.controller.splits,
             self.controller.killed,
+            self.controller.restarts,
             self.controller.total_ops,
             self.servers.bad_frames,
             self.servers.dropped,
-            self.servers.send_failures
+            self.servers.send_failures,
+            self.servers.faults_injected()
         );
         if let Some(rate) = self.servers.cache_hit_rate() {
             line.push_str(&format!(
@@ -206,6 +252,7 @@ impl Killer {
 struct TcpController<'a> {
     cfg: &'a Config,
     net: &'a Netmap,
+    topo: &'a Topology,
     dir: Directory,
     alive: Vec<bool>,
     est: RustEstimator,
@@ -213,62 +260,160 @@ struct TcpController<'a> {
     ctrl_timeout: Duration,
     copy_timeout: Duration,
     /// Frozen spans whose thaw call failed; retried at every epoch start
-    /// until the switch confirms, so a lost thaw reply can never
+    /// until the switches confirm, so a lost thaw reply can never
     /// blackhole a key span for the rest of the run.
     pending_thaws: Vec<(Key, Key)>,
-    /// Counters drained out-of-band by [`TcpController::switch_records`]
-    /// probes, carried into the next epoch's drain so probe traffic is
-    /// never erased from the load estimate (read, write, cache hits).
-    carry: Option<(Vec<u64>, Vec<u64>, Vec<u64>)>,
+    /// The chaos scenario's controller kill: armed once, fires inside the
+    /// next migration (after the data copy, before the chain rewrite).
+    crash_armed: bool,
+    /// Set when the armed kill fired — the epoch loop must discard this
+    /// controller and recover a fresh one from the switches.
+    crashed: bool,
 }
 
-impl TcpController<'_> {
-    /// §5.1: collect + reset the switch's per-range statistics. Returns
-    /// zeroed counters when the switch is unreachable or its table has
-    /// diverged in length (repair-only planning then proceeds).
-    fn drain_counters(&mut self) -> (Vec<u64>, Vec<u64>, Vec<u64>, u64) {
-        let drained = ctrl_call(self.net.switch_ctrl, &CtrlMsg::DrainCounters, self.ctrl_timeout);
-        if let Ok(CtrlReply::Counters { mut read, mut write, mut hits }) = drained {
-            if read.len() == self.dir.len() && write.len() == self.dir.len() {
-                if hits.len() != read.len() {
-                    hits = vec![0; read.len()];
-                }
-                // Fold back anything a probe drained since the last epoch
-                // (positional when shapes agree; a shape change across a
-                // probe is possible only via an interleaved split, whose
-                // mass still counts).
-                if let Some((cr, cw, ch)) = self.carry.take() {
-                    if cr.len() == read.len() {
-                        for (acc, v) in read.iter_mut().zip(&cr) {
-                            *acc += v;
-                        }
-                        for (acc, v) in write.iter_mut().zip(&cw) {
-                            *acc += v;
-                        }
-                        for (acc, v) in hits.iter_mut().zip(&ch) {
-                            *acc += v;
-                        }
-                    } else {
-                        let lost: u64 = cr.iter().sum::<u64>() + cw.iter().sum::<u64>();
-                        self.report.total_ops += lost;
-                    }
-                }
-                let mass: u64 = read.iter().sum::<u64>() + write.iter().sum::<u64>();
-                return (read, write, hits, mass);
-            }
-            // The drained mass still counts toward the observed-ops
-            // total (the induced-kill threshold and gate diagnostics
-            // depend on it) even though its per-range shape is unusable.
-            self.report.total_ops += read.iter().sum::<u64>() + write.iter().sum::<u64>();
-            eprintln!(
-                "[controller] counter shape {}/{} diverged from directory ({} records); \
-                 skipping balancing this epoch",
-                read.len(),
-                write.len(),
-                self.dir.len()
-            );
+impl<'a> TcpController<'a> {
+    fn fresh(cfg: &'a Config, net: &'a Netmap, topo: &'a Topology) -> TcpController<'a> {
+        let nodes = cfg.cluster.nodes();
+        let ctrl_timeout = Duration::from_millis(cfg.deploy.timeout_ms);
+        TcpController {
+            cfg,
+            net,
+            topo,
+            dir: Directory::initial(cfg.cluster.num_ranges, nodes, cfg.cluster.replication),
+            alive: vec![true; nodes],
+            est: RustEstimator,
+            report: ControllerReport::default(),
+            ctrl_timeout,
+            copy_timeout: ctrl_timeout * 10,
+            pending_thaws: Vec::new(),
+            crash_armed: cfg.chaos.controller_crash_in_migration,
+            crashed: false,
         }
-        (vec![0; self.dir.len()], vec![0; self.dir.len()], vec![0; self.dir.len()], 0)
+    }
+
+    /// Controller restart with *no* persisted state: rebuild the
+    /// directory from the switches' own tables (`DumpTable`), which are
+    /// the durable copy of the routing state — §6's hierarchy holds the
+    /// full record set at every switch, so a restarted controller asks
+    /// the network what it previously told it (NetChain's in-network
+    /// state argument, generalized from PR 5's count-probe idiom). Also
+    /// thaws any span a dead controller's interrupted migration left
+    /// frozen, and re-learns node liveness by ping.
+    fn recover(cfg: &'a Config, net: &'a Netmap, topo: &'a Topology) -> Result<TcpController<'a>> {
+        let ctrl_timeout = Duration::from_millis(cfg.deploy.timeout_ms);
+        // Every reachable switch must agree on the record set; a
+        // disagreement means a table mutation was still landing, so
+        // settle and re-dump.
+        let mut dumps: Vec<(Vec<(Key, Vec<u16>)>, Vec<(Key, Key)>)> = Vec::new();
+        for attempt in 0..10 {
+            if attempt > 0 {
+                std::thread::sleep(Duration::from_millis(100));
+            }
+            dumps.clear();
+            for &addr in &net.switch_ctrl {
+                if let Ok(CtrlReply::Table { records, frozen }) =
+                    ctrl_call(addr, &CtrlMsg::DumpTable, ctrl_timeout)
+                {
+                    dumps.push((records, frozen));
+                }
+            }
+            if !dumps.is_empty() && dumps.windows(2).all(|w| w[0].0 == w[1].0) {
+                break;
+            }
+            if attempt == 9 {
+                bail!(
+                    "controller recovery: {}/{} switches answered DumpTable but their \
+                     tables never agreed",
+                    dumps.len(),
+                    net.switch_ctrl.len()
+                );
+            }
+        }
+        let ranges: Vec<SubRange> = dumps[0]
+            .0
+            .iter()
+            .map(|(start, regs)| SubRange {
+                start: *start,
+                chain: regs.iter().map(|&r| r as NodeId).collect(),
+            })
+            .collect();
+        let dir = Directory::from_records(ranges)?;
+        let mut ctl = TcpController::fresh(cfg, net, topo);
+        ctl.dir = dir;
+        // The kill already fired once; a recovered controller finishes
+        // the run without crashing again.
+        ctl.crash_armed = false;
+        // An interrupted migration's write barrier must not outlive the
+        // controller that installed it.
+        let mut frozen: Vec<(Key, Key)> = dumps.iter().flat_map(|(_, f)| f.clone()).collect();
+        frozen.sort();
+        frozen.dedup();
+        for (s, e) in frozen {
+            eprintln!("[controller] recovery: thawing span left frozen at [{s:?}, {e:?}]");
+            ctl.thaw(s, e);
+        }
+        for n in 0..ctl.alive.len() {
+            ctl.alive[n] = ctrl_call(net.node_ctrl[n], &CtrlMsg::Ping, ctrl_timeout).is_ok();
+        }
+        eprintln!(
+            "[controller] recovered from switch state: {} records, alive={:?}",
+            ctl.dir.len(),
+            ctl.alive
+        );
+        Ok(ctl)
+    }
+
+    fn is_tor(&self, sw: usize) -> bool {
+        matches!(self.topo.switches[sw].role, SwitchRole::Tor { .. })
+    }
+
+    /// §5.1: collect + reset every switch's per-range statistics, summing
+    /// the ToRs only. Every switch on a packet's path key-routes and
+    /// bumps its counters, but exactly one ToR (the attached coordinator)
+    /// processes each op — so the ToR sum counts each op once, and the
+    /// other roles' transit tallies are reset and discarded. A ToR whose
+    /// shape diverged from the mirror contributes its mass to the
+    /// observed-ops total but nothing to the load estimate.
+    fn drain_counters(&mut self) -> (Vec<u64>, Vec<u64>, Vec<u64>, u64) {
+        let n = self.dir.len();
+        let (mut read, mut write, mut hits) = (vec![0u64; n], vec![0u64; n], vec![0u64; n]);
+        let mut mass = 0u64;
+        for (sw, &addr) in self.net.switch_ctrl.iter().enumerate() {
+            let drained = ctrl_call(addr, &CtrlMsg::DrainCounters, self.ctrl_timeout);
+            let Ok(CtrlReply::Counters { read: r, write: w, hits: h }) = drained else {
+                continue;
+            };
+            if !self.is_tor(sw) {
+                continue; // transit tallies: reset above, never summed
+            }
+            if r.len() != n || w.len() != n {
+                // The drained mass still counts toward the observed-ops
+                // total (the induced-kill threshold and gate diagnostics
+                // depend on it) even though its per-range shape is
+                // unusable this epoch.
+                self.report.total_ops += r.iter().sum::<u64>() + w.iter().sum::<u64>();
+                eprintln!(
+                    "[controller] switch {sw} counter shape {}/{} diverged from the \
+                     directory ({n} records); excluded from balancing this epoch",
+                    r.len(),
+                    w.len()
+                );
+                continue;
+            }
+            for (acc, v) in read.iter_mut().zip(&r) {
+                *acc += v;
+            }
+            for (acc, v) in write.iter_mut().zip(&w) {
+                *acc += v;
+            }
+            if h.len() == n {
+                for (acc, v) in hits.iter_mut().zip(&h) {
+                    *acc += v;
+                }
+            }
+            mass += r.iter().sum::<u64>() + w.iter().sum::<u64>();
+        }
+        (read, write, hits, mass)
     }
 
     /// §5.2 failure detection by control-plane ping; returns nodes newly
@@ -286,11 +431,24 @@ impl TcpController<'_> {
         failures
     }
 
+    /// Install or clear a freeze span at every switch (each holds the
+    /// full table, so each must agree on the write barrier). Returns
+    /// whether every switch confirmed.
+    fn set_freeze(&self, start: Key, end: Key, frozen: bool) -> bool {
+        let msg = CtrlMsg::SetFreeze { start, end, frozen };
+        let mut all = true;
+        for &addr in &self.net.switch_ctrl {
+            if ctrl_call(addr, &msg, self.ctrl_timeout).is_err() {
+                all = false;
+            }
+        }
+        all
+    }
+
     /// Unfreeze a span, with failure bookkeeping: an undelivered thaw is
     /// retried next epoch rather than dropped.
     fn thaw(&mut self, start: Key, end: Key) {
-        let msg = CtrlMsg::SetFreeze { start, end, frozen: false };
-        if ctrl_call(self.net.switch_ctrl, &msg, self.ctrl_timeout).is_err() {
+        if !self.set_freeze(start, end, false) {
             self.pending_thaws.push((start, end));
         }
     }
@@ -392,8 +550,8 @@ impl TcpController<'_> {
         self.report.repairs += 1;
     }
 
-    /// §4.1.1/§5.1 hot division: the switch installs the split first;
-    /// only a confirmed install mutates the local directory (an
+    /// §4.1.1/§5.1 hot division: every switch installs the split first;
+    /// only a fully confirmed install mutates the local directory (an
     /// unconfirmed one would shift every later record index out of sync).
     fn apply_split(&mut self, action: &PlanAction) -> bool {
         let Some(ControlOp::SplitRecord { idx, at, chain }) = action.ops.first() else {
@@ -401,81 +559,53 @@ impl TcpController<'_> {
         };
         let regs: Vec<u16> = chain.iter().map(|&n| n as u16).collect();
         let msg = CtrlMsg::SplitRecord { idx: *idx as u32, at: *at, chain: regs };
-        match ctrl_call(self.net.switch_ctrl, &msg, self.ctrl_timeout) {
-            Ok(_) => {
-                self.dir.split(*idx, *at, chain.clone());
-                self.report.splits += 1;
-                eprintln!("[controller] split hot range {idx} at {at:?}");
-                true
+        let want = self.dir.len() + 1;
+        let mut all_installed = true;
+        for (sw, &addr) in self.net.switch_ctrl.iter().enumerate() {
+            if ctrl_call(addr, &msg, self.ctrl_timeout).is_ok() {
+                continue;
             }
-            Err(e) => {
-                // A lost *reply* is ambiguous: the switch may have
-                // installed the record anyway, and a silent one-record
-                // offset would misroute every later index-addressed op.
-                // The switch's table length (counter array size) settles
-                // it.
-                eprintln!("[controller] split of range {idx} failed at the switch: {e:#}");
-                // Probe twice with a settle delay: the timed-out install
-                // may still be sitting in the switch's control queue, and
-                // deciding "not installed" while it lands would leave the
-                // mirror permanently one record behind.
-                let mut records = self.switch_records();
-                if records == Some(self.dir.len()) {
-                    std::thread::sleep(Duration::from_millis(100));
-                    records = self.switch_records();
-                }
-                match records {
-                    Some(n) if n == self.dir.len() + 1 => {
-                        eprintln!("[controller] switch did install the split; mirroring");
-                        self.dir.split(*idx, *at, chain.clone());
-                        self.report.splits += 1;
-                        true
-                    }
-                    // Not installed (or unreachable): either way the rest
-                    // of this epoch's plan was computed against post-split
-                    // indexes, so it must be abandoned — the next epoch
-                    // replans from the still-consistent pre-split state.
-                    _ => false,
-                }
+            // A lost *reply* is ambiguous: the switch may have installed
+            // the record anyway, and a silent one-record offset would
+            // misroute every later index-addressed op there. Its own
+            // table settles it — probe twice with a settle delay (the
+            // timed-out install may still be sitting in the control
+            // queue), then retry once: a duplicate split bounces off the
+            // switch's bounds check without touching the table, so the
+            // retry either lands the missing record or changes nothing.
+            eprintln!("[controller] split of range {idx} unconfirmed at switch {sw}");
+            let mut records = self.switch_records(addr);
+            if records == Some(want - 1) {
+                std::thread::sleep(Duration::from_millis(100));
+                records = self.switch_records(addr);
             }
+            if records != Some(want) {
+                ctrl_call(addr, &msg, self.ctrl_timeout).ok();
+                records = self.switch_records(addr);
+            }
+            if records != Some(want) {
+                eprintln!("[controller] switch {sw} never installed the split");
+                all_installed = false;
+            }
+        }
+        if all_installed {
+            self.dir.split(*idx, *at, chain.clone());
+            self.report.splits += 1;
+            eprintln!("[controller] split hot range {idx} at {at:?}");
+            true
+        } else {
+            // The rest of this epoch's plan was computed against
+            // post-split indexes; abandon it and replan next epoch from
+            // the pre-split state the mirror still describes.
+            false
         }
     }
 
-    /// The switch's current record count, read from the shape of a
-    /// counter drain. The drained per-range counters are stashed in
-    /// `carry` and folded into the next epoch's drain, so the probe
-    /// erases nothing from the load estimate.
-    fn switch_records(&mut self) -> Option<usize> {
-        match ctrl_call(self.net.switch_ctrl, &CtrlMsg::DrainCounters, self.ctrl_timeout) {
-            Ok(CtrlReply::Counters { mut read, mut write, mut hits }) => {
-                let records = read.len();
-                if hits.len() != records {
-                    hits = vec![0; records];
-                }
-                match self.carry.take() {
-                    Some((cr, cw, ch)) if cr.len() == records => {
-                        for (acc, v) in read.iter_mut().zip(&cr) {
-                            *acc += v;
-                        }
-                        for (acc, v) in write.iter_mut().zip(&cw) {
-                            *acc += v;
-                        }
-                        for (acc, v) in hits.iter_mut().zip(&ch) {
-                            *acc += v;
-                        }
-                    }
-                    Some((cr, cw, _)) => {
-                        // A shape change between probes: the old window's
-                        // positional info is gone, but its mass still
-                        // counts toward the observed-ops total.
-                        self.report.total_ops +=
-                            cr.iter().sum::<u64>() + cw.iter().sum::<u64>();
-                    }
-                    None => {}
-                }
-                self.carry = Some((read, write, hits));
-                Some(records)
-            }
+    /// One switch's current record count, read from its table dump
+    /// (counter-free, so the load estimate is undisturbed).
+    fn switch_records(&self, addr: std::net::SocketAddr) -> Option<usize> {
+        match ctrl_call(addr, &CtrlMsg::DumpTable, self.ctrl_timeout) {
+            Ok(CtrlReply::Table { records, .. }) => Some(records.len()),
             _ => None,
         }
     }
@@ -511,11 +641,10 @@ impl TcpController<'_> {
             return false;
         };
 
-        // A freeze whose reply was lost may still be active at the
-        // switch, so every exit path thaws (and `thaw` keeps retrying
-        // across epochs until the switch confirms).
-        let on = CtrlMsg::SetFreeze { start, end, frozen: true };
-        if ctrl_call(self.net.switch_ctrl, &on, self.ctrl_timeout).is_err() {
+        // A freeze whose reply was lost may still be active at a switch,
+        // so every exit path thaws (and `thaw` keeps retrying across
+        // epochs until every switch confirms).
+        if !self.set_freeze(start, end, true) {
             self.thaw(start, end);
             return false;
         }
@@ -526,8 +655,33 @@ impl TcpController<'_> {
                 return false;
             }
         };
+        // An earlier attempt at this migration — interrupted by a
+        // controller crash after its ingest — may have left a stale copy
+        // of the span on the destination; ingesting over it would
+        // resurrect any key the fresh snapshot no longer holds (deletes
+        // applied since). Clear the span on the destination first.
+        let scrub = CtrlMsg::DeleteRange { start, end };
+        if ctrl_call(self.net.node_ctrl[to], &scrub, self.copy_timeout).is_err() {
+            self.thaw(start, end);
+            return false;
+        }
         if !self.ingest(to, pairs) {
             self.thaw(start, end);
+            return false;
+        }
+        if self.crash_armed {
+            // The chaos scenario's controller kill fires here — the
+            // migration's most dangerous instant: the destination holds
+            // the data, no switch routes to it yet, and the span is
+            // frozen. A real crash takes the controller's memory with it,
+            // so we deliberately do NOT thaw: recovery must find the
+            // frozen span in the switch dumps and clear it itself.
+            self.crash_armed = false;
+            self.crashed = true;
+            eprintln!(
+                "[controller] CHAOS: controller killed mid-migration of \
+                 [{start:?}, {end:?}] (after ingest, before chain rewrite)"
+            );
             return false;
         }
         // The routing update must land *confirmed* at the switch before
@@ -596,23 +750,154 @@ impl TcpController<'_> {
         self.push_chain(idx, chain);
     }
 
-    /// Push a chain rewrite to the switch with bounded idempotent
+    /// Push a chain rewrite to every switch with bounded idempotent
     /// retries (a lost reply re-sends; installing the same chain twice
-    /// is a no-op). Returns whether the switch confirmed.
+    /// is a no-op). Returns whether every switch confirmed.
     fn push_chain(&mut self, idx: usize, chain: &[NodeId]) -> bool {
         let regs: Vec<u16> = chain.iter().map(|&n| n as u16).collect();
         let msg = CtrlMsg::SetChain { idx: idx as u32, chain: regs };
-        for attempt in 0..5 {
-            if attempt > 0 {
-                std::thread::sleep(Duration::from_millis(50));
-            }
-            if ctrl_call(self.net.switch_ctrl, &msg, self.copy_timeout).is_ok() {
-                return true;
+        let mut all = true;
+        for (sw, &addr) in self.net.switch_ctrl.iter().enumerate() {
+            let confirmed = (0..5).any(|attempt| {
+                if attempt > 0 {
+                    std::thread::sleep(Duration::from_millis(50));
+                }
+                ctrl_call(addr, &msg, self.copy_timeout).is_ok()
+            });
+            if !confirmed {
+                eprintln!(
+                    "[controller] SetChain for range {idx} never confirmed by switch {sw}"
+                );
+                all = false;
             }
         }
-        eprintln!("[controller] SetChain for range {idx} never confirmed by the switch");
-        false
+        all
     }
+}
+
+/// Arms and heals the switches' seeded fault injectors on the `[chaos]`
+/// scenario's schedule: transport faults start once the ToRs have
+/// observed `fault_start_after_ops` operations and are disarmed after
+/// `fault_duration_ms` (0 = the faults outlive the controller loop).
+struct ChaosDriver {
+    /// Per-switch specs to arm; empty when the scenario has no
+    /// transport faults.
+    specs: Vec<(usize, FaultSpec)>,
+    start_after_ops: u64,
+    duration: Duration,
+    armed_at: Option<Instant>,
+    done: bool,
+}
+
+impl ChaosDriver {
+    fn new(cfg: &Config, topo: &Topology, net: &Netmap) -> Result<ChaosDriver> {
+        Ok(ChaosDriver {
+            specs: fault_specs(cfg, topo, net)?,
+            start_after_ops: cfg.chaos.fault_start_after_ops,
+            duration: Duration::from_millis(cfg.chaos.fault_duration_ms),
+            armed_at: None,
+            done: false,
+        })
+    }
+
+    fn tick(&mut self, net: &Netmap, timeout: Duration, observed_ops: u64, final_sweep: bool) {
+        if self.specs.is_empty() || self.done {
+            return;
+        }
+        match self.armed_at {
+            None => {
+                // Nothing left to arm faults *for* on the final sweep.
+                if !final_sweep && observed_ops >= self.start_after_ops {
+                    for (sw, spec) in &self.specs {
+                        let msg = CtrlMsg::SetFaults(spec.clone());
+                        if let Err(e) = ctrl_call(net.switch_ctrl[*sw], &msg, timeout) {
+                            eprintln!("[chaos] could not arm switch {sw}: {e:#}");
+                        }
+                    }
+                    eprintln!(
+                        "[chaos] armed transport faults on {} switches after {} observed ops",
+                        self.specs.len(),
+                        observed_ops
+                    );
+                    self.armed_at = Some(Instant::now());
+                    if self.duration.is_zero() {
+                        self.done = true; // runs to the end of the workload
+                    }
+                }
+            }
+            Some(t0) => {
+                if t0.elapsed() >= self.duration {
+                    for (sw, _) in &self.specs {
+                        let msg = CtrlMsg::SetFaults(FaultSpec::default());
+                        ctrl_call(net.switch_ctrl[*sw], &msg, timeout).ok();
+                    }
+                    eprintln!(
+                        "[chaos] healed transport faults after {} ms",
+                        t0.elapsed().as_millis()
+                    );
+                    self.done = true;
+                }
+            }
+        }
+    }
+}
+
+/// Resolve the `[chaos]` transport-fault declaration into per-switch
+/// [`FaultSpec`]s: the drop/dup/delay bands on every switch in
+/// `fault_scope`, plus — for `partition_link = "a-b"` — each endpoint
+/// blocking frames toward the other's data port (severing the named
+/// hierarchy link in both directions, whatever the scope).
+fn fault_specs(cfg: &Config, topo: &Topology, net: &Netmap) -> Result<Vec<(usize, FaultSpec)>> {
+    let ch = &cfg.chaos;
+    if !ch.has_transport_faults() {
+        return Ok(Vec::new());
+    }
+    let by_name = |name: &str| -> Result<usize> {
+        topo.switches.iter().position(|s| s.name == name).with_context(|| {
+            format!(
+                "[chaos] names switch {name:?}, but this topology has {:?}",
+                topo.switches.iter().map(|s| s.name.as_str()).collect::<Vec<_>>()
+            )
+        })
+    };
+    // Same scenario seed, distinct per-switch schedules.
+    let fork = |sw: usize| ch.seed ^ ((sw as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    let mut specs: Vec<(usize, FaultSpec)> = Vec::new();
+    if ch.drop_permille > 0 || ch.dup_permille > 0 || ch.delay_permille > 0 {
+        let scoped: Vec<usize> = if ch.fault_scope == "all" {
+            (0..topo.switches.len()).collect()
+        } else {
+            vec![by_name(&ch.fault_scope)?]
+        };
+        for sw in scoped {
+            specs.push((
+                sw,
+                FaultSpec {
+                    seed: fork(sw),
+                    drop_permille: ch.drop_permille,
+                    dup_permille: ch.dup_permille,
+                    delay_permille: ch.delay_permille,
+                    delay_passes: ch.delay_passes,
+                    blocked: Vec::new(),
+                },
+            ));
+        }
+    }
+    if !ch.partition_link.is_empty() {
+        let (a, b) = ch.partition_link.split_once('-').context("validated partition_link")?;
+        let (sa, sb) = (by_name(a)?, by_name(b)?);
+        for (me, other) in [(sa, sb), (sb, sa)] {
+            let addr = net.switch_data[other];
+            match specs.iter_mut().find(|(sw, _)| *sw == me) {
+                Some((_, spec)) => spec.blocked.push(addr),
+                None => specs.push((
+                    me,
+                    FaultSpec { seed: fork(me), blocked: vec![addr], ..FaultSpec::default() },
+                )),
+            }
+        }
+    }
+    Ok(specs)
 }
 
 /// The controller's epoch loop; returns when `stop` is set — after one
@@ -626,23 +911,23 @@ fn controller_loop(
     killer: &Killer,
 ) -> ControllerReport {
     let nodes = cfg.cluster.nodes();
+    let topo = Topology::build(&cfg.cluster);
     let epoch = Duration::from_millis(cfg.deploy.epoch_ms);
     let ctrl_timeout = Duration::from_millis(cfg.deploy.timeout_ms);
-    let mut ctl = TcpController {
-        cfg,
-        net,
-        dir: Directory::initial(cfg.cluster.num_ranges, nodes, cfg.cluster.replication),
-        alive: vec![true; nodes],
-        est: RustEstimator,
-        report: ControllerReport::default(),
-        ctrl_timeout,
-        copy_timeout: ctrl_timeout * 10,
-        pending_thaws: Vec::new(),
-        carry: None,
+    let mut ctl = TcpController::fresh(cfg, net, &topo);
+    let (kill_node, kill_after_ops) = cfg.effective_kill();
+    let mut pending_kill =
+        (kill_node >= 0 && (kill_node as usize) < nodes).then_some(kill_node as usize);
+    let mut chaos = match ChaosDriver::new(cfg, &topo, net) {
+        Ok(chaos) => chaos,
+        Err(e) => {
+            // A scenario naming a switch this topology does not have is a
+            // configuration bug; run on without faults and let the
+            // gate's proof-of-injection check fail the run loudly.
+            eprintln!("[chaos] scenario disabled: {e:#}");
+            ChaosDriver { specs: Vec::new(), start_after_ops: 0, duration: Duration::ZERO, armed_at: None, done: true }
+        }
     };
-    let mut pending_kill = (cfg.deploy.kill_node >= 0
-        && (cfg.deploy.kill_node as usize) < nodes)
-        .then_some(cfg.deploy.kill_node as usize);
 
     let mut final_sweep = false;
     while !final_sweep {
@@ -650,11 +935,37 @@ fn controller_loop(
         final_sweep = stop.load(Ordering::SeqCst);
         ctl.epoch();
 
-        // Induced failure: once the switch has observed enough traffic,
+        // The chaos controller kill fired inside this epoch: the
+        // controller "process" is gone. Stand up a replacement that
+        // rebuilds everything it knows from the switches themselves.
+        if ctl.crashed {
+            let report = std::mem::take(&mut ctl.report);
+            loop {
+                match TcpController::recover(cfg, net, &topo) {
+                    Ok(recovered) => {
+                        ctl = recovered;
+                        ctl.report = report;
+                        ctl.report.restarts += 1;
+                        break;
+                    }
+                    Err(e) => {
+                        eprintln!("[controller] recovery failed: {e:#}; retrying");
+                        if stop.load(Ordering::SeqCst) {
+                            return report;
+                        }
+                        std::thread::sleep(Duration::from_millis(200));
+                    }
+                }
+            }
+        }
+
+        chaos.tick(net, ctrl_timeout, ctl.report.total_ops, final_sweep);
+
+        // Induced failure: once the ToRs have observed enough traffic,
         // take the victim down for real. Skipped on the final sweep —
         // there is no later epoch left to detect and repair it.
         if let (Some(victim), false) = (pending_kill, final_sweep) {
-            if ctl.report.total_ops >= cfg.deploy.kill_after_ops {
+            if ctl.report.total_ops >= kill_after_ops {
                 eprintln!(
                     "[controller] killing node {victim} after {} observed ops",
                     ctl.report.total_ops
@@ -685,8 +996,10 @@ pub fn run_threads(cfg: &Config) -> Result<LoopbackReport> {
         TcpListener::bind((host, 0)).context("binding an ephemeral listener")
     };
 
-    let sw_data = bind()?;
-    let sw_ctrl = bind()?;
+    let topo = Topology::build(&cfg.cluster);
+    let switches = topo.switches.len();
+    let switch_listeners: Vec<(TcpListener, TcpListener)> =
+        (0..switches).map(|_| Ok((bind()?, bind()?))).collect::<Result<_>>()?;
     let nodes = cfg.cluster.nodes();
     let node_listeners: Vec<(TcpListener, TcpListener)> =
         (0..nodes).map(|_| Ok((bind()?, bind()?))).collect::<Result<_>>()?;
@@ -694,8 +1007,14 @@ pub fn run_threads(cfg: &Config) -> Result<LoopbackReport> {
         (0..cfg.cluster.clients).map(|_| bind()).collect::<Result<_>>()?;
 
     let net = Netmap {
-        switch_data: sw_data.local_addr()?,
-        switch_ctrl: sw_ctrl.local_addr()?,
+        switch_data: switch_listeners
+            .iter()
+            .map(|(d, _)| d.local_addr())
+            .collect::<std::io::Result<_>>()?,
+        switch_ctrl: switch_listeners
+            .iter()
+            .map(|(_, c)| c.local_addr())
+            .collect::<std::io::Result<_>>()?,
         node_data: node_listeners
             .iter()
             .map(|(d, _)| d.local_addr())
@@ -710,7 +1029,10 @@ pub fn run_threads(cfg: &Config) -> Result<LoopbackReport> {
             .collect::<std::io::Result<_>>()?,
     };
 
-    let switch_handle = switch_server::spawn(cfg, net.clone(), sw_data, sw_ctrl)?;
+    let mut switch_handles: Vec<ServerHandle> = Vec::with_capacity(switches);
+    for (s, (data, ctrl)) in switch_listeners.into_iter().enumerate() {
+        switch_handles.push(switch_server::spawn(cfg, net.clone(), s, data, ctrl)?);
+    }
     let mut node_handles: Vec<ServerHandle> = Vec::with_capacity(nodes);
     for (n, (data, ctrl)) in node_listeners.into_iter().enumerate() {
         node_handles.push(node_server::spawn(cfg, n, net.clone(), data, ctrl)?);
@@ -731,7 +1053,10 @@ pub fn run_threads(cfg: &Config) -> Result<LoopbackReport> {
 
     ctl_stop.store(true, Ordering::SeqCst);
     let controller = controller.join().unwrap_or_default();
-    let mut servers = switch_handle.shutdown();
+    let mut servers = ServerStatsSnapshot::default();
+    for h in switch_handles {
+        servers.absorb(h.shutdown());
+    }
     for h in node_handles {
         servers.absorb(h.shutdown());
     }
@@ -761,13 +1086,19 @@ pub fn run_processes(cfg: &Config, passthrough: &[String]) -> Result<LoopbackRep
     };
 
     let nodes = cfg.cluster.nodes();
+    let switches = net.switch_data.len();
     // Children live outside the run closure so the teardown below reaps
     // whatever was spawned, even when a later spawn/readiness step fails.
-    let mut switch_child: Option<Child> = None;
+    let mut switch_children: Vec<Child> = Vec::new();
     let node_children: NodeChildren = Arc::new(Mutex::new(Vec::new()));
 
     let result = (|| -> Result<LoopbackReport> {
-        switch_child = Some(spawn_child(&with_args(passthrough, &["serve-switch".into()]))?);
+        for s in 0..switches {
+            switch_children.push(spawn_child(&with_args(
+                passthrough,
+                &["serve-switch".into(), format!("--switch={s}")],
+            ))?);
+        }
         {
             let mut children = node_children.lock().expect("children poisoned");
             for n in 0..nodes {
@@ -819,14 +1150,14 @@ pub fn run_processes(cfg: &Config, passthrough: &[String]) -> Result<LoopbackRep
     // no child outlives the harness.
     let ctrl_timeout = Duration::from_millis(cfg.deploy.timeout_ms);
     let mut servers = ServerStatsSnapshot::default();
-    let mut targets = vec![net.switch_ctrl];
+    let mut targets = net.switch_ctrl.clone();
     targets.extend(net.node_ctrl.iter().take(nodes).copied());
     for addr in targets {
         if let Ok(CtrlReply::Stats(s)) = ctrl_call(addr, &CtrlMsg::Shutdown, ctrl_timeout) {
             servers.absorb(s);
         }
     }
-    if let Some(mut c) = switch_child {
+    for mut c in switch_children {
         reap(&mut c);
     }
     for child in node_children.lock().expect("children poisoned").iter_mut() {
@@ -977,6 +1308,75 @@ mod tests {
     }
 
     #[test]
+    fn fault_specs_resolve_scope_and_partition_endpoints() {
+        let mut cfg = Config::default();
+        cfg.cluster.racks = 2;
+        cfg.cluster.nodes_per_rack = 2;
+        cfg.chaos.drop_permille = 10;
+        cfg.chaos.fault_scope = "tor1".into();
+        cfg.chaos.partition_link = "tor1-agg0".into();
+        cfg.chaos.fault_duration_ms = 500;
+        let topo = Topology::build(&cfg.cluster);
+        let net = Netmap::from_config(&cfg).unwrap();
+        // racks=2: tor0, tor1, agg0, core, edge.
+        assert_eq!(topo.switches.len(), 5);
+
+        let specs = fault_specs(&cfg, &topo, &net).unwrap();
+        // tor1 gets the drop band (scope) *and* blocks agg0 (partition);
+        // agg0 gets a block-only spec toward tor1. Nothing else is armed.
+        assert_eq!(specs.len(), 2);
+        let tor1 = &specs.iter().find(|(sw, _)| *sw == 1).expect("tor1 armed").1;
+        assert_eq!(tor1.drop_permille, 10);
+        assert_eq!(tor1.blocked, vec![net.switch_data[2]]);
+        let agg0 = &specs.iter().find(|(sw, _)| *sw == 2).expect("agg0 armed").1;
+        assert_eq!(agg0.drop_permille, 0);
+        assert_eq!(agg0.blocked, vec![net.switch_data[1]]);
+        // Distinct per-switch seeds from the one scenario seed.
+        assert_ne!(tor1.seed, agg0.seed);
+
+        // A scenario naming a switch this topology does not have fails
+        // loudly, listing what it *does* have.
+        cfg.chaos.fault_scope = "tor7".into();
+        let err = fault_specs(&cfg, &topo, &net).unwrap_err();
+        assert!(format!("{err:#}").contains("tor7"), "{err:#}");
+        assert!(format!("{err:#}").contains("edge"), "{err:#}");
+
+        // An inert scenario arms nothing.
+        cfg.chaos = Default::default();
+        assert!(fault_specs(&cfg, &topo, &net).unwrap().is_empty());
+    }
+
+    #[test]
+    fn gate_demands_proof_of_injection_and_controller_restarts() {
+        let mut cfg = Config::default();
+        cfg.cluster.racks = 1;
+        cfg.cluster.nodes_per_rack = 3;
+        cfg.workload.ops_per_client = 25;
+        cfg.chaos.drop_permille = 20;
+        let mut report = LoopbackReport {
+            drive: DriveReport::default(),
+            controller: ControllerReport::default(),
+            servers: ServerStatsSnapshot::default(),
+        };
+        report.drive.ops = cfg.cluster.clients as u64 * cfg.workload.ops_per_client;
+        // Declared transport faults with zero injected frames is a lie,
+        // not a pass.
+        let err = report.gate(&cfg).unwrap_err();
+        assert!(format!("{err:#}").contains("fault"), "{err:#}");
+        report.servers.faults_dropped = 3;
+        report.gate(&cfg).unwrap();
+
+        // Declared controller kills must actually have happened.
+        cfg.chaos.expect_restarts = 1;
+        let err = report.gate(&cfg).unwrap_err();
+        assert!(format!("{err:#}").contains("expect_restarts"), "{err:#}");
+        report.controller.restarts = 1;
+        report.gate(&cfg).unwrap();
+        assert!(report.summary().contains("restarts=1"), "{}", report.summary());
+        assert!(report.summary().contains("faults_injected=3"), "{}", report.summary());
+    }
+
+    #[test]
     fn cache_report_patch_grafts_a_top_level_object() {
         let path = std::env::temp_dir().join("turbokv_cache_patch_test.json");
         let path = path.to_str().expect("utf8 temp path");
@@ -995,11 +1395,11 @@ mod tests {
     }
 }
 
-/// Wait until the switch and every node answer control pings.
+/// Wait until every switch and every node answer control pings.
 fn wait_ready(net: &Netmap, nodes: usize, total: Duration) -> Result<()> {
     let deadline = Instant::now() + total;
     let probe = Duration::from_millis(300);
-    let mut targets: Vec<std::net::SocketAddr> = vec![net.switch_ctrl];
+    let mut targets: Vec<std::net::SocketAddr> = net.switch_ctrl.clone();
     targets.extend(net.node_ctrl.iter().take(nodes).copied());
     for addr in targets {
         loop {
@@ -1031,8 +1431,11 @@ fn reap(child: &mut Child) {
 /// Preflight for process mode: nothing may already be serving on the
 /// base-port map (a stale deployment would silently absorb our traffic).
 pub fn ports_free(net: &Netmap) -> Result<()> {
-    for addr in [net.switch_data, net.switch_ctrl]
-        .into_iter()
+    for addr in net
+        .switch_data
+        .iter()
+        .copied()
+        .chain(net.switch_ctrl.iter().copied())
         .chain(net.node_data.iter().copied())
         .chain(net.node_ctrl.iter().copied())
         .chain(net.client_data.iter().copied())

@@ -44,7 +44,7 @@ use crate::cluster::proto::{decode_reply, Coverage};
 use crate::config::{Config, Partitioning};
 use crate::metrics::Metrics;
 use crate::net::packet::{Ip, Packet, Tos};
-use crate::net::topology::Topology;
+use crate::net::topology::{Addr, Topology};
 use crate::partition::matching_value;
 use crate::types::{ClientId, OpCode, Reply, Request};
 use crate::util::hist::Histogram;
@@ -244,7 +244,15 @@ pub fn run(cfg: &Config, net: &Netmap, listeners: Vec<TcpListener>) -> Result<Dr
         let cfg = cfg.clone();
         let gen = gen.clone();
         let loaded = loaded.clone();
-        let switch_addr = net.switch_data;
+        // Each client dials its own edge switch, so under a multi-rack
+        // topology requests enter the hierarchy where the client is wired
+        // (the switches route onward switch-to-switch, as the simulator's
+        // hierarchy does).
+        let edge = topo.edge_switch(Addr::Client(c))?;
+        let switch_addr = *net
+            .switch_data
+            .get(edge)
+            .with_context(|| format!("client {c}: no data address for edge switch {edge}"))?;
         let client_ip = topo.client_ip(c);
         workers.push(
             std::thread::Builder::new()

@@ -65,10 +65,9 @@ use crate::net::topology::{Addr, Topology};
 /// Outbound connect timeout for data-plane sends.
 pub(crate) const CONNECT_TIMEOUT: Duration = Duration::from_millis(1_000);
 
-/// Reject configs the single-soft-switch loopback deployment cannot run.
-/// The generic knob validation (including the shared `[controller]`
-/// checks) is [`Config::validate`]; this adds only deploy-specific
-/// constraints.
+/// Reject configs the loopback deployment cannot run. The generic knob
+/// validation (including the shared `[controller]` checks) is
+/// [`Config::validate`]; this adds only deploy-specific constraints.
 pub fn validate_deploy(cfg: &Config) -> Result<()> {
     cfg.validate()?;
     if cfg.coordination != Coordination::InSwitch {
@@ -88,20 +87,23 @@ pub fn validate_deploy(cfg: &Config) -> Result<()> {
              partitioning"
         );
     }
-    if cfg.cluster.racks != 1 {
-        bail!(
-            "the loopback deployment runs one soft ToR switch, so all nodes \
-             must share one rack: set --cluster.racks=1 \
-             (got racks={})",
-            cfg.cluster.racks
-        );
-    }
     if cfg.deploy.base_port < 1024 {
         bail!("deploy.base_port {} is in the privileged range", cfg.deploy.base_port);
     }
+    let switches = Topology::build(&cfg.cluster).switches.len();
+    if switches as u16 * 2 > NODE_PORT_OFFSET {
+        bail!(
+            "loopback port map supports at most {} soft switches (topology has {switches}: \
+             reduce cluster.racks)",
+            NODE_PORT_OFFSET / 2
+        );
+    }
     let nodes = cfg.cluster.nodes();
-    if nodes > 90 {
-        bail!("loopback port map supports at most 90 nodes (got {nodes})");
+    if nodes as u16 * 2 > CLIENT_PORT_OFFSET - NODE_PORT_OFFSET {
+        bail!(
+            "loopback port map supports at most {} nodes (got {nodes})",
+            (CLIENT_PORT_OFFSET - NODE_PORT_OFFSET) / 2
+        );
     }
     let top =
         cfg.deploy.base_port as u32 + CLIENT_PORT_OFFSET as u32 + cfg.cluster.clients as u32;
@@ -115,8 +117,8 @@ pub fn validate_deploy(cfg: &Config) -> Result<()> {
     Ok(())
 }
 
-const NODE_PORT_OFFSET: u16 = 10;
-const CLIENT_PORT_OFFSET: u16 = 200;
+const NODE_PORT_OFFSET: u16 = 40;
+const CLIENT_PORT_OFFSET: u16 = 240;
 
 /// Real socket addresses of every process in the deployment, derived
 /// either from the `[deploy]` base-port scheme (child processes agree on
@@ -124,8 +126,12 @@ const CLIENT_PORT_OFFSET: u16 = 200;
 /// in-process test harness).
 #[derive(Clone, Debug)]
 pub struct Netmap {
-    pub switch_data: SocketAddr,
-    pub switch_ctrl: SocketAddr,
+    /// Data listener of every soft switch, indexed by `SwitchId` — the
+    /// same indices as `Topology::switches` (ToRs first, then AGGs, core,
+    /// edge), so the simulator's hierarchy maps 1:1 onto real listeners.
+    pub switch_data: Vec<SocketAddr>,
+    /// Control listener of every soft switch (same indexing).
+    pub switch_ctrl: Vec<SocketAddr>,
     pub node_data: Vec<SocketAddr>,
     pub node_ctrl: Vec<SocketAddr>,
     pub client_data: Vec<SocketAddr>,
@@ -133,8 +139,8 @@ pub struct Netmap {
 
 impl Netmap {
     /// The deterministic port layout every process derives from config:
-    /// switch at `base`/`base+1`, node `n` at `base+10+2n`/`base+11+2n`,
-    /// client `c` at `base+200+c`.
+    /// switch `s` at `base+2s`/`base+2s+1`, node `n` at
+    /// `base+40+2n`/`base+41+2n`, client `c` at `base+240+c`.
     pub fn from_config(cfg: &Config) -> Result<Netmap> {
         validate_deploy(cfg)?;
         let host: std::net::IpAddr = cfg
@@ -144,9 +150,10 @@ impl Netmap {
             .with_context(|| format!("deploy.host {:?} must be a numeric IP", cfg.deploy.host))?;
         let base = cfg.deploy.base_port;
         let at = |port: u16| SocketAddr::new(host, port);
+        let switches = Topology::build(&cfg.cluster).switches.len();
         Ok(Netmap {
-            switch_data: at(base),
-            switch_ctrl: at(base + 1),
+            switch_data: (0..switches).map(|s| at(base + 2 * s as u16)).collect(),
+            switch_ctrl: (0..switches).map(|s| at(base + 2 * s as u16 + 1)).collect(),
             node_data: (0..cfg.cluster.nodes())
                 .map(|n| at(base + NODE_PORT_OFFSET + 2 * n as u16))
                 .collect(),
@@ -193,6 +200,14 @@ pub struct ServerStats {
     pub cache_admits: std::sync::atomic::AtomicU64,
     pub cache_evicts: std::sync::atomic::AtomicU64,
     pub cache_invalidations: std::sync::atomic::AtomicU64,
+    /// Chaos fault injection (serve-switch only; zero elsewhere and zero
+    /// in fault-free runs): frames deliberately dropped / duplicated /
+    /// delayed by the armed [`transport::FaultSpec`]. These prove the
+    /// injector actually fired — a chaos scenario that passes with all
+    /// three at zero tested nothing.
+    pub faults_dropped: std::sync::atomic::AtomicU64,
+    pub faults_duplicated: std::sync::atomic::AtomicU64,
+    pub faults_delayed: std::sync::atomic::AtomicU64,
 }
 
 /// A plain copy of [`ServerStats`] at one instant.
@@ -206,6 +221,9 @@ pub struct ServerStatsSnapshot {
     pub cache_admits: u64,
     pub cache_evicts: u64,
     pub cache_invalidations: u64,
+    pub faults_dropped: u64,
+    pub faults_duplicated: u64,
+    pub faults_delayed: u64,
 }
 
 impl ServerStats {
@@ -219,6 +237,9 @@ impl ServerStats {
             cache_admits: self.cache_admits.load(Ordering::Relaxed),
             cache_evicts: self.cache_evicts.load(Ordering::Relaxed),
             cache_invalidations: self.cache_invalidations.load(Ordering::Relaxed),
+            faults_dropped: self.faults_dropped.load(Ordering::Relaxed),
+            faults_duplicated: self.faults_duplicated.load(Ordering::Relaxed),
+            faults_delayed: self.faults_delayed.load(Ordering::Relaxed),
         }
     }
 }
@@ -234,6 +255,15 @@ impl ServerStatsSnapshot {
         self.cache_admits += other.cache_admits;
         self.cache_evicts += other.cache_evicts;
         self.cache_invalidations += other.cache_invalidations;
+        self.faults_dropped += other.faults_dropped;
+        self.faults_duplicated += other.faults_duplicated;
+        self.faults_delayed += other.faults_delayed;
+    }
+
+    /// Total frames the fault injector touched (dropped + duplicated +
+    /// delayed) — the chaos gate's proof-of-injection signal.
+    pub fn faults_injected(&self) -> u64 {
+        self.faults_dropped + self.faults_duplicated + self.faults_delayed
     }
 
     /// Cache hit rate over the coordinator Gets this server saw (`None`
@@ -306,7 +336,13 @@ mod tests {
     fn netmap_ports_are_disjoint_and_resolvable() {
         let cfg = deploy_cfg();
         let net = Netmap::from_config(&cfg).unwrap();
-        let mut ports: Vec<u16> = vec![net.switch_data.port(), net.switch_ctrl.port()];
+        let topo = Topology::build(&cfg.cluster);
+        // One data + one ctrl listener per topology switch (racks=1 → 4:
+        // tor0, agg0, core, edge), all on distinct ports.
+        assert_eq!(net.switch_data.len(), topo.switches.len());
+        assert_eq!(net.switch_ctrl.len(), topo.switches.len());
+        let mut ports: Vec<u16> = net.switch_data.iter().map(|a| a.port()).collect();
+        ports.extend(net.switch_ctrl.iter().map(|a| a.port()));
         ports.extend(net.node_data.iter().map(|a| a.port()));
         ports.extend(net.node_ctrl.iter().map(|a| a.port()));
         ports.extend(net.client_data.iter().map(|a| a.port()));
@@ -315,19 +351,32 @@ mod tests {
         dedup.dedup();
         assert_eq!(dedup.len(), ports.len(), "{ports:?}");
 
-        let topo = Topology::build(&cfg.cluster);
         assert_eq!(net.endpoint_addr(&topo, topo.node_ip(2)), Some(net.node_data[2]));
         assert_eq!(net.endpoint_addr(&topo, topo.client_ip(0)), Some(net.client_data[0]));
         assert_eq!(net.endpoint_addr(&topo, Ip::new(9, 9, 9, 9)), None);
     }
 
     #[test]
-    fn deploy_validation_rejects_misfits() {
-        let mut cfg = deploy_cfg();
+    fn multi_rack_netmap_stands_up_the_paper_hierarchy() {
+        // The paper testbed (4 racks → 8 switches) now maps onto real
+        // listeners: every ToR, AGG, core and edge switch gets its own
+        // port pair, disjoint from the node/client windows.
+        let mut cfg = Config::default();
         cfg.cluster.racks = 4;
         cfg.cluster.nodes_per_rack = 4;
-        assert!(validate_deploy(&cfg).is_err(), "multi-rack needs the simulator");
+        cfg.cluster.clients = 4;
+        let net = Netmap::from_config(&cfg).expect("multi-rack deployment is supported now");
+        assert_eq!(net.switch_data.len(), 8, "4 ToR + 2 AGG + core + edge");
+        assert_eq!(net.node_data.len(), 16);
+        let base = cfg.deploy.base_port;
+        assert_eq!(net.switch_data[3].port(), base + 6);
+        assert_eq!(net.switch_ctrl[7].port(), base + 15);
+        assert_eq!(net.node_data[0].port(), base + NODE_PORT_OFFSET);
+        assert_eq!(net.client_data[0].port(), base + CLIENT_PORT_OFFSET);
+    }
 
+    #[test]
+    fn deploy_validation_rejects_misfits() {
         let mut cfg = deploy_cfg();
         cfg.coordination = Coordination::ClientDriven;
         assert!(validate_deploy(&cfg).is_err());
@@ -339,6 +388,13 @@ mod tests {
         let mut cfg = deploy_cfg();
         cfg.deploy.host = "localhost".into(); // numeric IPs only
         assert!(Netmap::from_config(&cfg).is_err());
+
+        // Too many switches for the 2-ports-per-switch window below the
+        // node port offset.
+        let mut cfg = deploy_cfg();
+        cfg.cluster.racks = 32;
+        cfg.cluster.nodes_per_rack = 1;
+        assert!(validate_deploy(&cfg).is_err(), "32 racks overflow the switch port window");
 
         assert!(validate_deploy(&deploy_cfg()).is_ok());
     }

@@ -173,12 +173,15 @@ impl ShardHandler for NodeData {
         node.sync_wal();
         for (out, echoed) in outs {
             // With the switch value cache on, point-op tail replies take
-            // the simulator's return path — back through the ToR — so the
-            // cache sees update acks and can admit Get values. The switch
-            // forwards them to the client by destination IP. Chain
-            // forwards and scan replies are never detoured.
+            // the simulator's return path — back through this node's rack
+            // ToR (the attached coordinator whose cache sampled the
+            // request) — so the cache sees update acks and can admit Get
+            // values. The ToR forwards them onward through the hierarchy
+            // by destination IP. Chain forwards and scan replies are
+            // never detoured.
             let addr = if echoed && shared.reply_via_switch {
-                Some(shared.net.switch_data)
+                let tor = shared.topo.tor_of_rack(shared.topo.node_rack[node.id]);
+                shared.net.switch_data.get(tor).copied()
             } else {
                 shared.net.endpoint_addr(&shared.topo, out.ipv4.dst)
             };

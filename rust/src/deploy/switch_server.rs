@@ -11,12 +11,20 @@
 //! outbound peer connections. The control port is the §5 control plane:
 //! counter drains, chain updates, liveness, shutdown.
 //!
-//! The loopback deployment runs a single soft ToR with every node
-//! attached (cluster.racks = 1), so key-routed packets always take the
-//! full coordinator path (chain header inserted). Emits the simulator
-//! would hand to the next switch in a hierarchy (replies toward the
-//! client edge) are resolved to their final endpoint by destination IP —
-//! the one-switch topology collapses the hierarchy.
+//! The deployment stands up the *whole* switch hierarchy of
+//! `net::topology` as real processes (or threads): every ToR, AGG, core
+//! and client-edge switch runs this server with its own data/control port
+//! pair, and emits the pipeline hands to the next switch are forwarded
+//! switch→switch over real sockets — the same hops the simulator's event
+//! loop models (§6 hierarchical indexing). Only the one ToR attached to a
+//! packet's target node inserts the chain header; the others route by key
+//! and move on.
+//!
+//! The data-plane send stage doubles as the chaos choke point: an armed
+//! [`FaultInjector`] (DESIGN.md §2g, `SetFaults` control op) sits between
+//! `process_batch` emits and the event loop's `send_to`, deterministically
+//! dropping / duplicating / delaying frames or blackholing a partitioned
+//! link.
 
 use std::net::TcpListener;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -26,7 +34,7 @@ use anyhow::Result;
 
 use crate::config::Config;
 use crate::net::packet::{Packet, Tos};
-use crate::net::topology::{Addr, SwitchRole, Topology};
+use crate::net::topology::{Addr, Topology};
 use crate::partition::Directory;
 use crate::switch::{RustLookup, Switch};
 use crate::types::{Key, OpCode};
@@ -34,6 +42,7 @@ use crate::util::chain_violation;
 
 use super::control::{CtrlMsg, CtrlReply};
 use super::shard::{spawn_shards, ConnId, ShardHandler, ShardIo};
+use super::transport::{FaultAction, FaultInjector};
 use super::{Netmap, ServerHandle, ServerStats};
 
 struct SwitchShared {
@@ -45,22 +54,31 @@ struct SwitchShared {
     /// requests matching a frozen span are dropped (the client's timeout
     /// retransmission re-routes them through the post-migration table).
     frozen: Mutex<Vec<(Key, Key)>>,
+    /// The chaos injector for this switch's outgoing data-plane frames.
+    faults: Mutex<FaultInjector>,
+    /// Fast-path gate: false until a `SetFaults` arms the injector, and
+    /// cleared again once it is disarmed with nothing left to drain — a
+    /// fault-free run never takes the `faults` lock on the data path.
+    faults_live: AtomicBool,
     topo: Topology,
     net: Netmap,
     stop: Arc<AtomicBool>,
     stats: Arc<ServerStats>,
 }
 
-/// Build the soft ToR exactly as `Cluster::build` provisions switches:
-/// table from the initial directory, counter slots per record, node IP
-/// registers from the topology.
-pub fn build_switch(cfg: &Config, topo: &Topology) -> Switch {
+/// Build soft switch `sw_id` exactly as `Cluster::build` provisions
+/// switches: role from the topology, table from the initial directory,
+/// counter slots per record, node IP registers from the topology. Every
+/// switch in the hierarchy carries the full table (§6: non-ToRs route by
+/// key, ToRs additionally insert chains); `configure_cache` itself keeps
+/// the value cache ToR-only.
+pub fn build_switch(cfg: &Config, topo: &Topology, sw_id: usize) -> Switch {
     let dir = Directory::initial(
         cfg.cluster.num_ranges,
         cfg.cluster.nodes(),
         cfg.cluster.replication,
     );
-    let mut sw = Switch::new(topo.tor_of_rack(0), SwitchRole::Tor { rack: 0 });
+    let mut sw = Switch::new(sw_id, topo.switches[sw_id].role);
     sw.table.install_from_directory(&dir);
     sw.registers.resize_counters(dir.len());
     for n in 0..cfg.cluster.nodes() {
@@ -70,20 +88,25 @@ pub fn build_switch(cfg: &Config, topo: &Topology) -> Switch {
     sw
 }
 
-/// Spawn the switch's data + control shard loops on pre-bound listeners.
+/// Spawn switch `sw_id`'s data + control shard loops on pre-bound
+/// listeners.
 pub fn spawn(
     cfg: &Config,
     net: Netmap,
+    sw_id: usize,
     data_listener: TcpListener,
     ctrl_listener: TcpListener,
 ) -> Result<ServerHandle> {
     let topo = Topology::build(&cfg.cluster);
-    let sw = build_switch(cfg, &topo);
+    anyhow::ensure!(sw_id < topo.switches.len(), "no switch {sw_id} in this topology");
+    let sw = build_switch(cfg, &topo, sw_id);
     let stop = Arc::new(AtomicBool::new(false));
     let stats = Arc::new(ServerStats::default());
     let shared = Arc::new(SwitchShared {
         core: Mutex::new((sw, RustLookup)),
         frozen: Mutex::new(Vec::new()),
+        faults: Mutex::new(FaultInjector::default()),
+        faults_live: AtomicBool::new(false),
         topo,
         net,
         stop: stop.clone(),
@@ -141,18 +164,58 @@ impl ShardHandler for SwitchData {
     }
 
     fn on_pass_end(&mut self, io: &mut ShardIo) {
+        let shared = &self.shared;
+        // Chaos pass tick: age held (delayed) frames and send the ones
+        // that came due — even on passes with no fresh traffic, so a
+        // delayed frame never waits on new arrivals to get out. The
+        // atomic gate keeps fault-free runs off the lock entirely.
+        if shared.faults_live.load(Ordering::Relaxed) {
+            let mut faults = shared.faults.lock().expect("fault injector poisoned");
+            for (addr, frame) in faults.release() {
+                io.send_to(addr, frame);
+            }
+            if faults.is_idle() {
+                shared.faults_live.store(false, Ordering::Relaxed);
+            }
+        }
         if self.batch.is_empty() {
             return;
         }
-        let shared = &self.shared;
         // One pipeline pass per shard pass; resolve emits under the lock
         // (pure lookups), stage sends for the shard loop to deliver after
         // releasing it so a slow peer never stalls the pipeline.
         let mut core = shared.core.lock().expect("switch poisoned");
         let (sw, lookup) = &mut *core;
         let emits = sw.process_batch(&mut self.batch, &shared.topo, lookup, 0, 0);
+        let chaos = shared.faults_live.load(Ordering::Relaxed);
         for e in emits {
-            match emit_addr(&shared.topo, &shared.net, e.to, &e.pkt) {
+            match emit_addr(&shared.net, e.to) {
+                Some(addr) if chaos => {
+                    let st = Ordering::Relaxed;
+                    let mut faults = shared.faults.lock().expect("fault injector poisoned");
+                    if faults.is_blocked(&addr) {
+                        // Partitioned link: the frame goes nowhere, the
+                        // client's retransmission survives it.
+                        shared.stats.faults_dropped.fetch_add(1, st);
+                        continue;
+                    }
+                    match faults.decide() {
+                        FaultAction::Deliver => io.send_to(addr, e.pkt.encode()),
+                        FaultAction::Drop => {
+                            shared.stats.faults_dropped.fetch_add(1, st);
+                        }
+                        FaultAction::Duplicate => {
+                            let frame = e.pkt.encode();
+                            io.send_to(addr, frame.clone());
+                            io.send_to(addr, frame);
+                            shared.stats.faults_duplicated.fetch_add(1, st);
+                        }
+                        FaultAction::Delay => {
+                            faults.hold(addr, e.pkt.encode());
+                            shared.stats.faults_delayed.fetch_add(1, st);
+                        }
+                    }
+                }
                 Some(addr) => io.send_to(addr, e.pkt.encode()),
                 None => sw.stats.dropped += 1,
             }
@@ -195,20 +258,15 @@ fn is_frozen(shared: &SwitchShared, pkt: &Packet) -> bool {
         .any(|&(s, e)| lo.max(s) <= hi.min(e))
 }
 
-/// Resolve a pipeline emit to a real socket. Direct endpoint emits map
-/// straight through the netmap; emits toward another switch of the
-/// simulated hierarchy (which has no process here) resolve to the
-/// packet's final destination IP instead.
-fn emit_addr(
-    topo: &Topology,
-    net: &Netmap,
-    to: Addr,
-    pkt: &Packet,
-) -> Option<std::net::SocketAddr> {
+/// Resolve a pipeline emit to a real socket. Endpoint emits map through
+/// the netmap's node/client tables; emits toward the next switch of the
+/// hierarchy go to that switch's own data listener — the simulator's
+/// switch→switch hop, over a real connection.
+fn emit_addr(net: &Netmap, to: Addr) -> Option<std::net::SocketAddr> {
     match to {
         Addr::Node(n) => net.node_data.get(n).copied(),
         Addr::Client(c) => net.client_data.get(c).copied(),
-        Addr::Switch(_) => net.endpoint_addr(topo, pkt.ipv4.dst),
+        Addr::Switch(s) => net.switch_data.get(s).copied(),
     }
 }
 
@@ -256,6 +314,32 @@ impl ShardHandler for SwitchCtrl {
                     spans.retain(|&s| s != (start, end));
                 }
                 (CtrlReply::Ok, true)
+            }
+            Ok(CtrlMsg::SetFaults(spec)) => match spec.validate() {
+                Ok(()) => {
+                    let mut faults = shared.faults.lock().expect("fault injector poisoned");
+                    faults.set_spec(spec);
+                    // Armed even for an inert spec while frames are still
+                    // held: the data passes keep draining them, then clear
+                    // the gate themselves.
+                    if !faults.is_idle() {
+                        shared.faults_live.store(true, Ordering::SeqCst);
+                    }
+                    (CtrlReply::Ok, true)
+                }
+                Err(e) => (CtrlReply::Err(format!("{e:#}")), true),
+            },
+            Ok(CtrlMsg::DumpTable) => {
+                let core = shared.core.lock().expect("switch poisoned");
+                let records = core
+                    .0
+                    .table
+                    .records()
+                    .iter()
+                    .map(|r| (r.start, r.action.chain.clone()))
+                    .collect();
+                let frozen = shared.frozen.lock().expect("freeze list poisoned").clone();
+                (CtrlReply::Table { records, frozen }, true)
             }
             Ok(other) => (CtrlReply::Err(format!("switches do not serve {other:?}")), true),
             Err(e) => (CtrlReply::Err(format!("undecodable control message: {e:#}")), true),
@@ -316,4 +400,69 @@ fn split_record(sw: &mut Switch, idx: u32, at: Key, chain: Vec<u16>) -> CtrlRepl
     sw.table.split(idx, at, chain);
     sw.registers.insert_counter_slot(idx + 1);
     CtrlReply::Ok
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::net::topology::SwitchRole;
+
+    fn tor_switch() -> Switch {
+        let cfg = Config::default();
+        let topo = Topology::build(&cfg.cluster);
+        build_switch(&cfg, &topo, topo.tor_of_rack(0))
+    }
+
+    #[test]
+    fn duplicated_chain_installs_are_idempotent() {
+        // The chaos injector can duplicate any frame, including a control
+        // push whose reply then arrives twice — and the controller's
+        // push_chain retries after a lost reply re-send the same SetChain.
+        // Either way the switch must converge: applying the same install
+        // N times leaves exactly the state of applying it once.
+        let mut sw = tor_switch();
+        let chain = vec![3u16, 4, 5];
+        assert_eq!(set_chain(&mut sw, 2, chain.clone()), CtrlReply::Ok);
+        let once = sw.table.records().to_vec();
+        assert_eq!(set_chain(&mut sw, 2, chain), CtrlReply::Ok);
+        assert_eq!(sw.table.records(), once.as_slice(), "re-apply changed the table");
+    }
+
+    #[test]
+    fn duplicated_split_is_rejected_not_reapplied() {
+        // SplitRecord is NOT idempotent by construction — re-splitting
+        // would shear the table — so a duplicate must bounce off the
+        // bounds check. The controller's record-count probe relies on
+        // this: after a lost reply it can re-send and read "already
+        // split" from the error + count instead of corrupting the table.
+        let mut sw = tor_switch();
+        let before = sw.table.len();
+        let (start, end) = sw.table.bounds(1);
+        let at = Key(start.0 + (end.0 - start.0) / 2 + 1);
+        assert_eq!(split_record(&mut sw, 1, at, vec![0, 1, 2]), CtrlReply::Ok);
+        assert_eq!(sw.table.len(), before + 1);
+        let reply = split_record(&mut sw, 1, at, vec![0, 1, 2]);
+        assert!(matches!(reply, CtrlReply::Err(_)), "duplicate split must be rejected: {reply:?}");
+        assert_eq!(sw.table.len(), before + 1, "table unchanged by the duplicate");
+    }
+
+    #[test]
+    fn every_hierarchy_role_is_provisioned_with_the_full_table() {
+        let cfg = Config::default();
+        let topo = Topology::build(&cfg.cluster);
+        assert_eq!(topo.switches.len(), 8, "paper testbed: 4 ToR + 2 AGG + core + edge");
+        for info in &topo.switches {
+            let sw = build_switch(&cfg, &topo, info.id);
+            assert_eq!(sw.id, info.id);
+            assert_eq!(sw.role, info.role);
+            assert_eq!(sw.table.len(), cfg.cluster.num_ranges, "{}", info.name);
+            assert_eq!(sw.registers.num_nodes(), cfg.cluster.nodes(), "{}", info.name);
+            // The value cache stays coordinator-only even though every
+            // switch goes through configure_cache.
+            if !matches!(info.role, SwitchRole::Tor { .. }) {
+                assert!(sw.cache.is_none(), "{} must not cache", info.name);
+            }
+        }
+    }
 }

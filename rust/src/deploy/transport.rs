@@ -18,9 +18,16 @@
 //! flush pushes bytes until the socket would block, and the partial-write
 //! cursor survives across flushes so a frame interrupted mid-header or
 //! mid-body resumes at the exact byte — never re-sent, never torn.
+//!
+//! [`FaultInjector`] is the chaos layer (DESIGN.md §2g): a deterministic,
+//! seeded per-frame schedule of drop / duplicate / delay decisions plus a
+//! blocked-destination set (a partitioned link), armed and disarmed at
+//! runtime through the `SetFaults` control op. It sits at the soft
+//! switch's send stage, between `process_batch` emits and the event
+//! loop's `send_to` — the one choke point every routed frame crosses.
 
 use std::io::{self, Read, Write};
-use std::net::TcpStream;
+use std::net::{SocketAddr, TcpStream};
 use std::time::Duration;
 
 /// Upper bound on one frame's payload. Generous for the deployment's
@@ -257,6 +264,179 @@ pub fn read_frame_deadline(
                 }
             }
         }
+    }
+}
+
+/// Declarative description of the faults one soft switch injects into its
+/// outgoing data-plane frames. All-zero (the `Default`) means "no faults":
+/// arming a default spec is the disarm operation, so one control op covers
+/// both directions and a scenario can start, retarget, and stop faults
+/// mid-run.
+///
+/// Rates are permille (0–1000) and partition one die roll per frame into
+/// bands — drop, then duplicate, then delay, remainder delivered — so
+/// `drop + dup + delay` must stay ≤ 1000 (`FaultSpec::validate`).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct FaultSpec {
+    /// Seed of the per-frame decision stream. The same seed always
+    /// produces the same drop/duplicate/delay schedule, so a chaos
+    /// scenario is reproducible run-to-run.
+    pub seed: u64,
+    /// Permille of frames silently dropped (client retransmission is the
+    /// layer responsible for surviving these).
+    pub drop_permille: u16,
+    /// Permille of frames sent twice back-to-back (reply correlation and
+    /// idempotent control application must survive these).
+    pub dup_permille: u16,
+    /// Permille of frames held back for [`FaultSpec::delay_passes`]
+    /// pipeline passes and released after younger frames — the reorder
+    /// fault.
+    pub delay_permille: u16,
+    /// How many event-loop passes a delayed frame is held. Pass-based
+    /// (like `switch.cache_ttl_passes`) so the schedule stays
+    /// deterministic under test: no clocks involved.
+    pub delay_passes: u32,
+    /// Destinations this switch must not reach — a partitioned link.
+    /// Frames toward them are dropped (and counted as injected drops)
+    /// until a later `SetFaults` heals the partition.
+    pub blocked: Vec<SocketAddr>,
+}
+
+impl FaultSpec {
+    /// True when arming this spec would inject nothing — the disarm spec.
+    pub fn is_inert(&self) -> bool {
+        self.drop_permille == 0
+            && self.dup_permille == 0
+            && self.delay_permille == 0
+            && self.blocked.is_empty()
+    }
+
+    /// Reject rate combinations the banded die roll cannot represent.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let sum = self.drop_permille as u32 + self.dup_permille as u32 + self.delay_permille as u32;
+        anyhow::ensure!(
+            sum <= 1000,
+            "fault rates are permille bands of one roll: drop({}) + dup({}) + delay({}) = {sum} > 1000",
+            self.drop_permille,
+            self.dup_permille,
+            self.delay_permille,
+        );
+        Ok(())
+    }
+}
+
+/// What the injector decided for one frame.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Send normally.
+    Deliver,
+    /// Do not send; count as an injected drop.
+    Drop,
+    /// Send twice.
+    Duplicate,
+    /// Hold via [`FaultInjector::hold`]; released by later
+    /// [`FaultInjector::release`] calls.
+    Delay,
+}
+
+/// The runtime half of [`FaultSpec`]: a deterministic xorshift decision
+/// stream plus the queue of held (delayed) frames.
+///
+/// Replacing the spec mid-run ([`FaultInjector::set_spec`]) reseeds the
+/// decision stream but keeps held frames queued, so disarming never loses
+/// a frame the scenario only meant to *delay*.
+#[derive(Debug, Default)]
+pub struct FaultInjector {
+    spec: FaultSpec,
+    rng: u64,
+    /// (passes left, destination, frame) — push order is release order
+    /// among frames that come due on the same pass.
+    held: Vec<(u32, SocketAddr, Vec<u8>)>,
+}
+
+impl FaultInjector {
+    pub fn new(spec: FaultSpec) -> FaultInjector {
+        // splitmix64 of the seed so seed=0 still yields a nonzero
+        // xorshift state.
+        let mut z = spec.seed.wrapping_add(0x9E3779B97F4A7C15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        FaultInjector { spec, rng: (z ^ (z >> 31)) | 1, held: Vec::new() }
+    }
+
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
+    }
+
+    /// Swap in a new spec (reseeding the decision stream); held frames
+    /// stay queued and keep draining on subsequent passes.
+    pub fn set_spec(&mut self, spec: FaultSpec) {
+        let held = std::mem::take(&mut self.held);
+        *self = FaultInjector::new(spec);
+        self.held = held;
+    }
+
+    /// True when no fault can fire and nothing is held — the data path
+    /// can skip the injector entirely.
+    pub fn is_idle(&self) -> bool {
+        self.spec.is_inert() && self.held.is_empty()
+    }
+
+    fn next(&mut self) -> u64 {
+        // xorshift64*: tiny, seedable, and plenty for fault scheduling.
+        let mut x = self.rng;
+        x ^= x << 13;
+        x ^= x >> 7;
+        x ^= x << 17;
+        self.rng = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Is `dest` on the far side of the armed partition?
+    pub fn is_blocked(&self, dest: &SocketAddr) -> bool {
+        self.spec.blocked.contains(dest)
+    }
+
+    /// One die roll for one frame. Advances the deterministic stream, so
+    /// call exactly once per outgoing frame.
+    pub fn decide(&mut self) -> FaultAction {
+        let roll = (self.next() % 1000) as u16;
+        if roll < self.spec.drop_permille {
+            FaultAction::Drop
+        } else if roll < self.spec.drop_permille + self.spec.dup_permille {
+            FaultAction::Duplicate
+        } else if roll < self.spec.drop_permille + self.spec.dup_permille + self.spec.delay_permille
+        {
+            FaultAction::Delay
+        } else {
+            FaultAction::Deliver
+        }
+    }
+
+    /// Queue a frame the decision stream marked [`FaultAction::Delay`].
+    pub fn hold(&mut self, dest: SocketAddr, frame: Vec<u8>) {
+        self.held.push((self.spec.delay_passes.max(1), dest, frame));
+    }
+
+    /// Tick one pipeline pass: age held frames and return the ones that
+    /// came due, in hold order.
+    pub fn release(&mut self) -> Vec<(SocketAddr, Vec<u8>)> {
+        let mut due = Vec::new();
+        self.held.retain_mut(|(passes, dest, frame)| {
+            *passes -= 1;
+            if *passes == 0 {
+                due.push((*dest, std::mem::take(frame)));
+                false
+            } else {
+                true
+            }
+        });
+        due
+    }
+
+    /// Frames currently held back.
+    pub fn held_frames(&self) -> usize {
+        self.held.len()
     }
 }
 
@@ -542,5 +722,85 @@ mod tests {
         let deadline = std::time::Instant::now() + std::time::Duration::from_millis(20);
         let err = read_frame_deadline(&mut Silent, &mut FrameReader::new(), deadline).unwrap_err();
         assert_eq!(err.kind(), io::ErrorKind::TimedOut);
+    }
+
+    fn addr(port: u16) -> SocketAddr {
+        SocketAddr::from(([127, 0, 0, 1], port))
+    }
+
+    #[test]
+    fn seeded_fault_schedule_is_deterministic_and_rate_accurate() {
+        let spec = FaultSpec {
+            seed: 42,
+            drop_permille: 50,
+            dup_permille: 30,
+            delay_permille: 20,
+            delay_passes: 2,
+            blocked: Vec::new(),
+        };
+        spec.validate().unwrap();
+        let mut a = FaultInjector::new(spec.clone());
+        let mut b = FaultInjector::new(spec.clone());
+        let schedule: Vec<FaultAction> = (0..10_000).map(|_| a.decide()).collect();
+        let replay: Vec<FaultAction> = (0..10_000).map(|_| b.decide()).collect();
+        assert_eq!(schedule, replay, "same seed must replay the same schedule");
+        // The banded roll lands near the configured permilles (±50% slack:
+        // this pins rates, not exact counts).
+        let count = |w: FaultAction| schedule.iter().filter(|&&x| x == w).count();
+        let (drops, dups, delays) =
+            (count(FaultAction::Drop), count(FaultAction::Duplicate), count(FaultAction::Delay));
+        assert!((250..=750).contains(&drops), "drop rate off: {drops}/10000");
+        assert!((150..=450).contains(&dups), "dup rate off: {dups}/10000");
+        assert!((100..=300).contains(&delays), "delay rate off: {delays}/10000");
+        // A different seed produces a different schedule.
+        let mut c = FaultInjector::new(FaultSpec { seed: 43, ..spec });
+        let other: Vec<FaultAction> = (0..10_000).map(|_| c.decide()).collect();
+        assert_ne!(schedule, other, "seed must matter");
+        // Rate sums over 1000 cannot be armed.
+        let bad = FaultSpec { drop_permille: 600, dup_permille: 500, ..FaultSpec::default() };
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn delayed_frames_release_in_hold_order_after_their_passes() {
+        let spec = FaultSpec { delay_passes: 2, delay_permille: 1000, ..FaultSpec::default() };
+        let mut inj = FaultInjector::new(spec);
+        inj.hold(addr(1000), b"first".to_vec());
+        inj.hold(addr(1001), b"second".to_vec());
+        assert_eq!(inj.held_frames(), 2);
+        // Pass 1: not due yet; a younger frame held now comes due a pass
+        // later — that is the reorder.
+        assert!(inj.release().is_empty());
+        inj.hold(addr(1002), b"third".to_vec());
+        // Pass 2: the first two release together, in hold order, ahead of
+        // the younger third.
+        let due = inj.release();
+        assert_eq!(
+            due,
+            vec![(addr(1000), b"first".to_vec()), (addr(1001), b"second".to_vec())]
+        );
+        let due = inj.release();
+        assert_eq!(due, vec![(addr(1002), b"third".to_vec())]);
+        assert_eq!(inj.held_frames(), 0);
+        assert!(inj.release().is_empty());
+    }
+
+    #[test]
+    fn partition_blocks_only_named_destinations_and_heals() {
+        let spec = FaultSpec { blocked: vec![addr(2000)], ..FaultSpec::default() };
+        assert!(!spec.is_inert(), "a partition is a fault");
+        let mut inj = FaultInjector::new(spec);
+        assert!(inj.is_blocked(&addr(2000)));
+        assert!(!inj.is_blocked(&addr(2001)));
+        // Frames delayed before the heal survive the spec swap: disarming
+        // releases them on subsequent passes instead of losing them.
+        inj.hold(addr(2001), b"survivor".to_vec());
+        inj.set_spec(FaultSpec::default());
+        assert!(!inj.is_blocked(&addr(2000)), "partition healed");
+        assert!(!inj.is_idle(), "held frames still draining");
+        assert_eq!(inj.release(), vec![(addr(2001), b"survivor".to_vec())]);
+        assert!(inj.is_idle());
+        // An idle injector delivers everything.
+        assert_eq!(inj.decide(), FaultAction::Deliver);
     }
 }

@@ -56,13 +56,14 @@ usage: turbokv <run|exp|smoke|serve-node|serve-switch|drive|harness|help>
               [--scale=1.0] [--out=results]
   turbokv smoke [--dataplane.artifacts_dir=artifacts]
 
-Real-socket deployment (one soft switch, --cluster.racks=1):
-  turbokv serve-switch [--deploy.base_port=7600] [--deploy.shards=2]
+Real-socket deployment (one soft switch per topology switch — 4 at
+--cluster.racks=1, 8 at the paper's racks=4):
+  turbokv serve-switch [--switch=0] [--deploy.base_port=7600] [--deploy.shards=2]
   turbokv serve-node --node=0 [--deploy.base_port=7600] ...
   turbokv drive [--workload.ops_per_client=1700] [--deploy.timeout_ms=1000]
                 [--deploy.pipeline=4] [--deploy.rate_ops=2500]
                 [--deploy.report_path=out/drive.json]
-  turbokv harness [--threads] [--deploy.kill_node=1 --deploy.kill_after_ops=3500]
+  turbokv harness [--threads] [--chaos.kill_node=1 --chaos.kill_after_ops=3500]
                   [--controller.migration=true --controller.split_hot=true
                    --workload.zipf_theta=1.2 --deploy.expect_migrations=1]
                   [--deploy.min_throughput=1500]
@@ -82,6 +83,14 @@ split and migrated over the control plane mid-workload.
 coordinator ToR (simulator and deployment alike): hot Gets are answered
 from switch memory, every update invalidates before forwarding, and the
 harness gates on --deploy.min_cache_hit_rate when set.
+The [chaos] section declares one fault scenario per run (see
+config/chaos/*.toml and OPERATIONS.md): --chaos.kill_node / kill_after_ops
+kill-and-restart a storage node, --chaos.drop_permille / dup_permille /
+delay_permille arm seeded frame faults at the switches mid-run,
+--chaos.partition_link=torX-aggY severs (then heals) one hierarchy link,
+and --chaos.controller_crash_in_migration=true kills the controller
+mid-migration so it must rebuild its directory from switch state. Every
+scenario still gates on 100% oracle verification.
 ";
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -190,19 +199,29 @@ fn cmd_serve_node(args: &Args) -> Result<()> {
 fn cmd_serve_switch(args: &Args) -> Result<()> {
     let cfg = args.to_config()?;
     let net = Netmap::from_config(&cfg)?;
-    let data = std::net::TcpListener::bind(net.switch_data)
-        .with_context(|| format!("binding switch data port {}", net.switch_data))?;
-    let ctrl = std::net::TcpListener::bind(net.switch_ctrl)
-        .with_context(|| format!("binding switch ctrl port {}", net.switch_ctrl))?;
+    // One process per switch in the hierarchy; --switch picks which
+    // (defaults to 0, the single ToR of a one-rack cluster).
+    let sw: usize = args
+        .get("switch")
+        .unwrap_or("0")
+        .parse()
+        .context("--switch must be an index")?;
+    if sw >= net.switch_data.len() {
+        bail!("--switch={sw} out of range (topology has {} switches)", net.switch_data.len());
+    }
+    let data = std::net::TcpListener::bind(net.switch_data[sw])
+        .with_context(|| format!("binding switch {sw} data port {}", net.switch_data[sw]))?;
+    let ctrl = std::net::TcpListener::bind(net.switch_ctrl[sw])
+        .with_context(|| format!("binding switch {sw} ctrl port {}", net.switch_ctrl[sw]))?;
     eprintln!(
-        "serve-switch: data={} ctrl={} ({} records, {} nodes)",
-        net.switch_data,
-        net.switch_ctrl,
+        "serve-switch {sw}: data={} ctrl={} ({} records, {} nodes)",
+        net.switch_data[sw],
+        net.switch_ctrl[sw],
         cfg.cluster.num_ranges,
         cfg.cluster.nodes()
     );
-    let stats = deploy::switch_server::spawn(&cfg, net, data, ctrl)?.wait();
-    eprintln!("serve-switch exiting: {stats:?}");
+    let stats = deploy::switch_server::spawn(&cfg, net, sw, data, ctrl)?.wait();
+    eprintln!("serve-switch {sw} exiting: {stats:?}");
     Ok(())
 }
 

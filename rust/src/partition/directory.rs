@@ -50,6 +50,22 @@ impl Directory {
         Directory { ranges, version: 0 }
     }
 
+    /// Rebuild a directory from records dumped out of a switch's mapping
+    /// table — the controller-recovery path (DESIGN.md §2g): a restarted
+    /// controller holds nothing, so the in-network state *is* the
+    /// authoritative directory, exactly NetChain's durability argument.
+    /// The records may arrive in any order; the usual invariants (full
+    /// coverage from `Key::MIN`, disjoint sorted starts, valid chains)
+    /// are enforced, so a half-written or disagreeing dump is a loud
+    /// error instead of a silently wrong view.
+    pub fn from_records(mut ranges: Vec<SubRange>) -> anyhow::Result<Directory> {
+        ranges.sort_by_key(|r| r.start);
+        let dir = Directory { ranges, version: 0 };
+        dir.check_invariants()
+            .map_err(|e| anyhow::anyhow!("recovered directory is invalid: {e}"))?;
+        Ok(dir)
+    }
+
     pub fn len(&self) -> usize {
         self.ranges.len()
     }
@@ -386,6 +402,32 @@ mod tests {
         assert_eq!(d.lookup(Key::MAX), new_idx);
         assert_eq!(d.lookup(Key(u128::MAX - 1)), last);
         d.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn from_records_rebuilds_a_mutated_directory_exactly() {
+        // Controller recovery: splits and chain rewrites happened, then
+        // the controller died. The shuffled record dump must rebuild the
+        // same table (modulo the version counter, which restarts at 0).
+        let mut d = paper_dir();
+        let (start, end) = d.bounds(9);
+        d.split(9, Key((start.0 >> 1) + (end.0 >> 1) + 1), vec![13, 14, 15]);
+        d.set_chain(3, vec![5, 6, 7]);
+        let mut dump: Vec<SubRange> = d.ranges().to_vec();
+        dump.reverse(); // arrival order must not matter
+        let rebuilt = Directory::from_records(dump).unwrap();
+        assert_eq!(rebuilt.ranges(), d.ranges());
+        rebuilt.check_invariants().unwrap();
+
+        // A dump that lost its first record (coverage hole) is rejected...
+        let partial: Vec<SubRange> = d.ranges()[1..].to_vec();
+        assert!(Directory::from_records(partial).is_err());
+        // ...as are duplicate starts (two switches disagreeing) and an
+        // empty dump.
+        let mut dup = d.ranges().to_vec();
+        dup.push(dup[4].clone());
+        assert!(Directory::from_records(dup).is_err());
+        assert!(Directory::from_records(Vec::new()).is_err());
     }
 
     #[test]

@@ -236,6 +236,116 @@ fn switch_value_cache_serves_hot_gets_over_real_sockets() {
 }
 
 #[test]
+fn chaos_drop_dup_delay_faults_are_survived_with_full_verification() {
+    // DESIGN.md §2g: seeded drop/duplicate/delay faults armed at every
+    // switch mid-run. The client layer owns surviving drops (timeout
+    // retransmission), the oracle owns surviving duplicates and reorders
+    // (oldest-match correlation) — so the run must still complete every
+    // op verified, and the gate's proof-of-injection check must see that
+    // faults actually fired.
+    let mut cfg = loopback_cfg(3, 2);
+    cfg.chaos.scenario = "drop-dup-delay".into();
+    cfg.chaos.drop_permille = 15;
+    cfg.chaos.dup_permille = 15;
+    cfg.chaos.delay_permille = 20;
+    cfg.chaos.delay_passes = 3;
+    // Arm after the load phase's ~240 switch-observed ops so loading is
+    // clean and the whole measured phase runs under fire.
+    cfg.chaos.fault_start_after_ops = 240;
+    cfg.chaos.fault_duration_ms = 0; // faults run to the end of the workload
+
+    let report = run_threads(&cfg).expect("faulty-transport run");
+    report.gate(&cfg).expect("proof-of-injection + 100% verification");
+    assert_eq!(report.drive.ops, 240);
+    assert_eq!(report.drive.verify_failures, 0, "a fault corrupted a reply: {}", report.summary());
+    assert_eq!(report.drive.gave_up, 0, "retry budget must absorb the drops");
+    assert!(
+        report.servers.faults_injected() > 0,
+        "the injector never fired: {}",
+        report.summary()
+    );
+    // Faults mangle delivery, never bytes: nothing decodes as garbage.
+    assert_eq!(report.servers.bad_frames, 0, "{:?}", report.servers);
+}
+
+#[test]
+fn chaos_partitioned_rack_link_heals_and_every_op_completes() {
+    // Sever the tor1–agg0 hierarchy link of a two-rack topology for a
+    // bounded window, then heal it. While severed, every frame toward
+    // rack 1 blackholes at agg0 (counted as injected drops); clients keep
+    // retransmitting past the window, so after the heal the run finishes
+    // with zero gave-ups and full verification.
+    let mut cfg = loopback_cfg(2, 2);
+    cfg.cluster.racks = 2; // 4 nodes across 2 racks; switches: tor0 tor1 agg0 core edge
+    cfg.workload.ops_per_client = 200;
+    cfg.chaos.scenario = "partition-heal".into();
+    cfg.chaos.partition_link = "tor1-agg0".into();
+    // Past the ~240-op load phase, so the partition lands mid-measured-
+    // phase; heal well inside one 800 ms retransmission timeout.
+    cfg.chaos.fault_start_after_ops = 260;
+    cfg.chaos.fault_duration_ms = 700;
+
+    let report = run_threads(&cfg).expect("partition-heal run");
+    report.gate(&cfg).expect("partition healed + 100% verification");
+    assert_eq!(report.drive.ops, 400);
+    assert_eq!(report.drive.verify_failures, 0);
+    assert_eq!(report.drive.gave_up, 0, "ops blocked by the partition must finish after heal");
+    assert!(
+        report.servers.faults_dropped > 0,
+        "no frame ever hit the severed link: {}",
+        report.summary()
+    );
+    assert!(
+        report.drive.retries > 0,
+        "rack-1 ops inside the window must have retransmitted: {}",
+        report.summary()
+    );
+    assert_eq!(report.servers.bad_frames, 0, "{:?}", report.servers);
+}
+
+#[test]
+fn chaos_controller_killed_mid_migration_recovers_from_switch_state() {
+    // The §5.1 migration interrupted at its most dangerous instant: the
+    // controller dies after the destination ingested the sub-range but
+    // before any chain was rewritten, leaving the span frozen and its
+    // own directory mirror gone. The replacement controller persists
+    // nothing — it must rebuild the directory from the switches'
+    // DumpTable answers, thaw the orphaned span, and then drive the
+    // migration the crash interrupted through to completion.
+    let mut cfg = loopback_cfg(4, 2);
+    cfg.cluster.replication = 2;
+    cfg.cluster.num_ranges = 64;
+    cfg.workload.num_keys = 160;
+    cfg.workload.ops_per_client = 500;
+    cfg.workload.write_ratio = 0.0;
+    cfg.workload.scan_ratio = 0.0;
+    cfg.workload.zipf_theta = Some(1.2);
+    cfg.controller.migration = true;
+    cfg.controller.split_hot = true;
+    cfg.controller.overload_factor = 1.2;
+    cfg.controller.max_migrations_per_epoch = 2;
+    cfg.deploy.epoch_ms = 300;
+    cfg.deploy.timeout_ms = 400;
+    cfg.deploy.expect_migrations = 1;
+    cfg.chaos.scenario = "controller-restart-migration".into();
+    cfg.chaos.controller_crash_in_migration = true;
+    cfg.chaos.expect_restarts = 1;
+
+    let report = run_threads(&cfg).expect("controller-crash run");
+    report.gate(&cfg).expect("recovery + ≥1 completed migration + 100% verification");
+    assert_eq!(report.controller.restarts, 1, "the armed kill fires exactly once");
+    assert!(
+        report.controller.migrations >= 1,
+        "the recovered controller must finish what the dead one started: {}",
+        report.summary()
+    );
+    assert_eq!(report.drive.ops, 1000);
+    assert_eq!(report.drive.verify_failures, 0, "no stale read survived the crash window");
+    assert_eq!(report.drive.gave_up, 0);
+    assert_eq!(report.servers.bad_frames, 0, "{:?}", report.servers);
+}
+
+#[test]
 fn harness_shuts_down_cleanly_and_is_rerunnable() {
     // Clean-shutdown regression: a completed run must leave nothing
     // behind — all server/acceptor/connection threads joined, all
