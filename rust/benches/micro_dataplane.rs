@@ -3,11 +3,34 @@
 //! integration point; interpret-mode Pallas on CPU is not a TPU proxy
 //! (DESIGN.md §6), so the interesting rust-side numbers are the reference
 //! path's throughput and the PJRT call overhead.
+use std::io::Write;
+
+use turbokv::config::Config;
+use turbokv::deploy::switch_server::transit_dest;
+use turbokv::deploy::transport::{write_frame, FrameWriter};
 use turbokv::experiments::benchkit::Bench;
+use turbokv::net::packet::Packet;
+use turbokv::net::topology::{SwitchRole, Topology};
 use turbokv::partition::Directory;
 use turbokv::switch::{DataplaneLookup, MatchActionTable, RegisterArrays, RustLookup};
 use turbokv::types::Key;
 use turbokv::util::rng::Rng;
+
+/// A sink that swallows bytes but models the per-call cost boundary the
+/// coalescing writer optimizes: each `write` is one would-be syscall.
+struct NullSink {
+    calls: u64,
+}
+
+impl Write for NullSink {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.calls += 1;
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
 
 fn main() {
     let dir = Directory::initial(128, 16, 3);
@@ -28,7 +51,68 @@ fn main() {
         println!("{}", b.report_throughput(batch as f64));
     }
 
+    writer_section();
+    forward_section();
     xla_section(&table, &mut rng);
+}
+
+/// DESIGN.md §2h flush coalescing: N queued frames through one contiguous
+/// write vs N per-frame `write_frame` calls against the same sink.
+fn writer_section() {
+    const FRAMES: usize = 64;
+    let payload = vec![0xA5u8; 128];
+
+    let mut writer = FrameWriter::new();
+    let mut sink = NullSink { calls: 0 };
+    let b = Bench::run(&format!("dataplane/writer/coalesced{FRAMES}"), 20, 500, || {
+        for _ in 0..FRAMES {
+            writer.enqueue(&payload).expect("payload under MAX_FRAME");
+        }
+        let drained = writer.flush_into(&mut sink).expect("null sink never fails");
+        std::hint::black_box(drained);
+    });
+    println!("{}", b.report_throughput(FRAMES as f64));
+
+    let mut sink = NullSink { calls: 0 };
+    let b = Bench::run(&format!("dataplane/writer/per-frame{FRAMES}"), 20, 500, || {
+        for _ in 0..FRAMES {
+            write_frame(&mut sink, &payload).expect("null sink never fails");
+        }
+    });
+    println!("{}", b.report_throughput(FRAMES as f64));
+}
+
+/// DESIGN.md §2h cut-through: the non-coordinating switch's raw-forward
+/// peek (fixed-offset ToS + dst IP + next hop) vs the full pipeline's
+/// decode → re-encode of the same transit frame.
+fn forward_section() {
+    let cfg = Config::default();
+    let topo = Topology::build(&cfg.cluster);
+    let sw_id = topo
+        .switches
+        .iter()
+        .find(|s| matches!(s.role, SwitchRole::Agg))
+        .expect("testbed topology has AGG switches")
+        .id;
+    let frame = Packet::reply(topo.node_ip(0), topo.client_ip(0), vec![0x5Au8; 128]).encode();
+    assert!(transit_dest(&topo, sw_id, &frame).is_some(), "bench frame must be dst-routable");
+
+    let mut out = Vec::new();
+    let b = Bench::run("dataplane/forward/cut-through", 20, 2000, || {
+        let hop = transit_dest(&topo, sw_id, &frame).expect("dst-routable");
+        out.clear();
+        out.extend_from_slice(&frame);
+        std::hint::black_box((hop, out.len()));
+    });
+    println!("{}", b.report_throughput(1.0));
+
+    let mut enc = Vec::new();
+    let b = Bench::run("dataplane/forward/full-pipeline", 20, 2000, || {
+        let pkt = Packet::decode(&frame).expect("bench frame decodes");
+        pkt.encode_into(&mut enc);
+        std::hint::black_box((pkt.ipv4.dst, enc.len()));
+    });
+    println!("{}", b.report_throughput(1.0));
 }
 
 #[cfg(feature = "pjrt")]

@@ -116,64 +116,71 @@ fn get_pairs(data: &[u8], pos: &mut usize) -> Result<Vec<(Key, Value)>> {
 impl CtrlMsg {
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::new();
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Encode into a caller-owned (possibly recycled) buffer, clearing it
+    /// first. Byte-identical to [`CtrlMsg::encode`].
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.clear();
         match self {
             CtrlMsg::Ping => out.push(1),
             CtrlMsg::Shutdown => out.push(2),
             CtrlMsg::DrainCounters => out.push(3),
             CtrlMsg::SetChain { idx, chain } => {
                 out.push(4);
-                put_uvarint(&mut out, *idx as u64);
-                put_uvarint(&mut out, chain.len() as u64);
+                put_uvarint(out, *idx as u64);
+                put_uvarint(out, chain.len() as u64);
                 for &reg in chain {
-                    put_uvarint(&mut out, reg as u64);
+                    put_uvarint(out, reg as u64);
                 }
             }
             CtrlMsg::ExtractRange { start, end } => {
                 out.push(5);
-                put_key(&mut out, *start);
-                put_key(&mut out, *end);
+                put_key(out, *start);
+                put_key(out, *end);
             }
             CtrlMsg::IngestRange { pairs } => {
                 out.push(6);
-                put_pairs(&mut out, pairs);
+                put_pairs(out, pairs);
             }
             CtrlMsg::SplitRecord { idx, at, chain } => {
                 out.push(7);
-                put_uvarint(&mut out, *idx as u64);
-                put_key(&mut out, *at);
-                put_uvarint(&mut out, chain.len() as u64);
+                put_uvarint(out, *idx as u64);
+                put_key(out, *at);
+                put_uvarint(out, chain.len() as u64);
                 for &reg in chain {
-                    put_uvarint(&mut out, reg as u64);
+                    put_uvarint(out, reg as u64);
                 }
             }
             CtrlMsg::DeleteRange { start, end } => {
                 out.push(8);
-                put_key(&mut out, *start);
-                put_key(&mut out, *end);
+                put_key(out, *start);
+                put_key(out, *end);
             }
             CtrlMsg::SetFreeze { start, end, frozen } => {
                 out.push(9);
-                put_key(&mut out, *start);
-                put_key(&mut out, *end);
+                put_key(out, *start);
+                put_key(out, *end);
                 out.push(u8::from(*frozen));
             }
             CtrlMsg::SetFaults(spec) => {
                 out.push(10);
-                put_uvarint(&mut out, spec.seed);
-                put_uvarint(&mut out, spec.drop_permille as u64);
-                put_uvarint(&mut out, spec.dup_permille as u64);
-                put_uvarint(&mut out, spec.delay_permille as u64);
-                put_uvarint(&mut out, spec.delay_passes as u64);
-                put_uvarint(&mut out, spec.blocked.len() as u64);
+                put_uvarint(out, spec.seed);
+                put_uvarint(out, spec.drop_permille as u64);
+                put_uvarint(out, spec.dup_permille as u64);
+                put_uvarint(out, spec.delay_permille as u64);
+                put_uvarint(out, spec.delay_passes as u64);
+                put_uvarint(out, spec.blocked.len() as u64);
                 for a in &spec.blocked {
                     // Socket addresses travel as text: the set is tiny and
                     // the string form round-trips v4 and v6 alike.
-                    put_bytes(&mut out, a.to_string().as_bytes());
+                    put_bytes(out, a.to_string().as_bytes());
                 }
             }
             CtrlMsg::DumpTable => out.push(11),
         }
-        out
     }
 
     pub fn decode(data: &[u8]) -> Result<CtrlMsg> {
@@ -256,66 +263,78 @@ impl CtrlMsg {
 impl CtrlReply {
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::new();
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Encode into a caller-owned (possibly recycled) buffer, clearing it
+    /// first. Byte-identical to [`CtrlReply::encode`].
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.clear();
         match self {
             CtrlReply::Ok => out.push(1),
             CtrlReply::Counters { read, write, hits } => {
                 out.push(2);
-                put_uvarint(&mut out, read.len() as u64);
+                put_uvarint(out, read.len() as u64);
                 for &v in read {
-                    put_uvarint(&mut out, v);
+                    put_uvarint(out, v);
                 }
                 // Lengths always match today (one counter triple per table
                 // record), but the codec carries each so an unequal set
                 // can never silently shear the frame.
-                put_uvarint(&mut out, write.len() as u64);
+                put_uvarint(out, write.len() as u64);
                 for &v in write {
-                    put_uvarint(&mut out, v);
+                    put_uvarint(out, v);
                 }
-                put_uvarint(&mut out, hits.len() as u64);
+                put_uvarint(out, hits.len() as u64);
                 for &v in hits {
-                    put_uvarint(&mut out, v);
+                    put_uvarint(out, v);
                 }
             }
             CtrlReply::Pairs(pairs) => {
                 out.push(3);
-                put_pairs(&mut out, pairs);
+                put_pairs(out, pairs);
             }
             CtrlReply::Err(msg) => {
                 out.push(4);
-                put_bytes(&mut out, msg.as_bytes());
+                put_bytes(out, msg.as_bytes());
             }
             CtrlReply::Stats(s) => {
                 out.push(5);
-                put_uvarint(&mut out, s.bad_frames);
-                put_uvarint(&mut out, s.dropped);
-                put_uvarint(&mut out, s.send_failures);
-                put_uvarint(&mut out, s.cache_hits);
-                put_uvarint(&mut out, s.cache_misses);
-                put_uvarint(&mut out, s.cache_admits);
-                put_uvarint(&mut out, s.cache_evicts);
-                put_uvarint(&mut out, s.cache_invalidations);
-                put_uvarint(&mut out, s.faults_dropped);
-                put_uvarint(&mut out, s.faults_duplicated);
-                put_uvarint(&mut out, s.faults_delayed);
+                put_uvarint(out, s.bad_frames);
+                put_uvarint(out, s.dropped);
+                put_uvarint(out, s.send_failures);
+                put_uvarint(out, s.cache_hits);
+                put_uvarint(out, s.cache_misses);
+                put_uvarint(out, s.cache_admits);
+                put_uvarint(out, s.cache_evicts);
+                put_uvarint(out, s.cache_invalidations);
+                put_uvarint(out, s.faults_dropped);
+                put_uvarint(out, s.faults_duplicated);
+                put_uvarint(out, s.faults_delayed);
+                put_uvarint(out, s.transit_cut_through);
+                put_uvarint(out, s.flush_calls);
+                put_uvarint(out, s.flush_frames);
+                put_uvarint(out, s.pool_reused);
+                put_uvarint(out, s.pool_alloc);
             }
             CtrlReply::Table { records, frozen } => {
                 out.push(6);
-                put_uvarint(&mut out, records.len() as u64);
+                put_uvarint(out, records.len() as u64);
                 for (start, chain) in records {
-                    put_key(&mut out, *start);
-                    put_uvarint(&mut out, chain.len() as u64);
+                    put_key(out, *start);
+                    put_uvarint(out, chain.len() as u64);
                     for &reg in chain {
-                        put_uvarint(&mut out, reg as u64);
+                        put_uvarint(out, reg as u64);
                     }
                 }
-                put_uvarint(&mut out, frozen.len() as u64);
+                put_uvarint(out, frozen.len() as u64);
                 for (s, e) in frozen {
-                    put_key(&mut out, *s);
-                    put_key(&mut out, *e);
+                    put_key(out, *s);
+                    put_key(out, *e);
                 }
             }
         }
-        out
     }
 
     pub fn decode(data: &[u8]) -> Result<CtrlReply> {
@@ -355,6 +374,11 @@ impl CtrlReply {
                 faults_dropped: get_uvarint(data, &mut pos)?,
                 faults_duplicated: get_uvarint(data, &mut pos)?,
                 faults_delayed: get_uvarint(data, &mut pos)?,
+                transit_cut_through: get_uvarint(data, &mut pos)?,
+                flush_calls: get_uvarint(data, &mut pos)?,
+                flush_frames: get_uvarint(data, &mut pos)?,
+                pool_reused: get_uvarint(data, &mut pos)?,
+                pool_alloc: get_uvarint(data, &mut pos)?,
             }),
             6 => {
                 let n = get_uvarint(data, &mut pos)? as usize;
@@ -469,6 +493,11 @@ mod tests {
                 faults_dropped: 12,
                 faults_duplicated: 4,
                 faults_delayed: 9,
+                transit_cut_through: 1 << 40,
+                flush_calls: 77,
+                flush_frames: 890,
+                pool_reused: u64::MAX / 3,
+                pool_alloc: 64,
             }),
             CtrlReply::Table { records: vec![], frozen: vec![] },
             CtrlReply::Table {

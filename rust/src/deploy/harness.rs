@@ -187,7 +187,8 @@ impl LoopbackReport {
         let mut line = format!(
             "{} | controller: epochs={} repairs={} migrations={} splits={} killed={:?} \
              restarts={} observed_ops={} | servers: bad_frames={} dropped={} \
-             send_failures={} faults_injected={}",
+             send_failures={} faults_injected={} transit_cut_through={} flush_batch={:.1} \
+             pool_reused={} pool_alloc={}",
             self.drive.summary_line(),
             self.controller.epochs,
             self.controller.repairs,
@@ -199,7 +200,11 @@ impl LoopbackReport {
             self.servers.bad_frames,
             self.servers.dropped,
             self.servers.send_failures,
-            self.servers.faults_injected()
+            self.servers.faults_injected(),
+            self.servers.transit_cut_through,
+            self.servers.flush_batch().unwrap_or(0.0),
+            self.servers.pool_reused,
+            self.servers.pool_alloc
         );
         if let Some(rate) = self.servers.cache_hit_rate() {
             line.push_str(&format!(
@@ -1063,9 +1068,7 @@ pub fn run_threads(cfg: &Config) -> Result<LoopbackReport> {
     let drive = drive?;
     if !cfg.deploy.report_path.is_empty() {
         loadgen::write_report(&drive, cfg, &cfg.deploy.report_path)?;
-        if cfg.switch.cache_slots > 0 {
-            append_cache_report(&cfg.deploy.report_path, &servers)?;
-        }
+        append_server_report(&cfg.deploy.report_path, &servers, cfg.switch.cache_slots > 0)?;
     }
     Ok(LoopbackReport { drive, controller, servers })
 }
@@ -1165,13 +1168,14 @@ pub fn run_processes(cfg: &Config, passthrough: &[String]) -> Result<LoopbackRep
             reap(&mut c);
         }
     }
-    // The drive child wrote the JSON report before the cache counters
+    // The drive child wrote the JSON report before the server counters
     // were collectible; patch them in now. Best-effort: a patch failure
     // must not fail an otherwise-clean run (the gate reads the in-memory
     // snapshot, not the file).
-    if result.is_ok() && !cfg.deploy.report_path.is_empty() && cfg.switch.cache_slots > 0 {
-        if let Err(e) = append_cache_report(&cfg.deploy.report_path, &servers) {
-            eprintln!("[harness] could not append switch_cache to report: {e:#}");
+    if result.is_ok() && !cfg.deploy.report_path.is_empty() {
+        let with_cache = cfg.switch.cache_slots > 0;
+        if let Err(e) = append_server_report(&cfg.deploy.report_path, &servers, with_cache) {
+            eprintln!("[harness] could not append server counters to report: {e:#}");
         }
     }
     result.map(|mut report| {
@@ -1180,28 +1184,47 @@ pub fn run_processes(cfg: &Config, passthrough: &[String]) -> Result<LoopbackRep
     })
 }
 
-/// Graft the switch-cache counters onto an already-written loadgen JSON
+/// Graft the server-side counters onto an already-written loadgen JSON
 /// report. The drive side cannot write these itself — the counters live
-/// with the switch (in-process handle or child snapshot) and are only
-/// final after shutdown — so the harness appends a `switch_cache` object
-/// to the report's top level once they are collected.
-fn append_cache_report(path: &str, servers: &ServerStatsSnapshot) -> Result<()> {
+/// with the servers (in-process handles or child snapshots) and are only
+/// final after shutdown — so the harness appends a `data_plane` object
+/// (DESIGN.md §2h: cut-through, flush coalescing, buffer pooling) and,
+/// when the value cache is configured, a `switch_cache` object to the
+/// report's top level once they are collected.
+fn append_server_report(
+    path: &str,
+    servers: &ServerStatsSnapshot,
+    include_cache: bool,
+) -> Result<()> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("reading loadgen report {path}"))?;
     let body = text
         .trim_end()
         .strip_suffix('}')
         .with_context(|| format!("loadgen report {path} is not a JSON object"))?;
-    let patched = format!(
-        "{body},\"switch_cache\":{{\"hits\":{},\"misses\":{},\"hit_rate\":{:.6},\
-         \"admits\":{},\"evicts\":{},\"invalidations\":{}}}}}",
-        servers.cache_hits,
-        servers.cache_misses,
-        servers.cache_hit_rate().unwrap_or(0.0),
-        servers.cache_admits,
-        servers.cache_evicts,
-        servers.cache_invalidations
+    let mut patched = format!(
+        "{body},\"data_plane\":{{\"transit_cut_through\":{},\"flush_calls\":{},\
+         \"flush_frames\":{},\"flush_batch\":{:.1},\"pool_reused\":{},\"pool_alloc\":{}}}",
+        servers.transit_cut_through,
+        servers.flush_calls,
+        servers.flush_frames,
+        servers.flush_batch().unwrap_or(0.0),
+        servers.pool_reused,
+        servers.pool_alloc
     );
+    if include_cache {
+        patched.push_str(&format!(
+            ",\"switch_cache\":{{\"hits\":{},\"misses\":{},\"hit_rate\":{:.6},\
+             \"admits\":{},\"evicts\":{},\"invalidations\":{}}}",
+            servers.cache_hits,
+            servers.cache_misses,
+            servers.cache_hit_rate().unwrap_or(0.0),
+            servers.cache_admits,
+            servers.cache_evicts,
+            servers.cache_invalidations
+        ));
+    }
+    patched.push('}');
     std::fs::write(path, patched).with_context(|| format!("rewriting loadgen report {path}"))
 }
 
@@ -1374,22 +1397,41 @@ mod tests {
         report.gate(&cfg).unwrap();
         assert!(report.summary().contains("restarts=1"), "{}", report.summary());
         assert!(report.summary().contains("faults_injected=3"), "{}", report.summary());
+        report.servers.transit_cut_through = 7;
+        report.servers.flush_calls = 2;
+        report.servers.flush_frames = 9;
+        assert!(report.summary().contains("transit_cut_through=7"), "{}", report.summary());
+        assert!(report.summary().contains("flush_batch=4.5"), "{}", report.summary());
     }
 
     #[test]
-    fn cache_report_patch_grafts_a_top_level_object() {
-        let path = std::env::temp_dir().join("turbokv_cache_patch_test.json");
+    fn server_report_patch_grafts_top_level_objects() {
+        let path = std::env::temp_dir().join("turbokv_server_patch_test.json");
         let path = path.to_str().expect("utf8 temp path");
         std::fs::write(path, "{\"schema\":\"turbokv-loadgen-v1\",\"latency_us\":{}}").unwrap();
         let servers = ServerStatsSnapshot {
             cache_hits: 3,
             cache_misses: 1,
+            transit_cut_through: 42,
+            flush_calls: 4,
+            flush_frames: 10,
             ..Default::default()
         };
-        append_cache_report(path, &servers).unwrap();
+        append_server_report(path, &servers, true).unwrap();
         let text = std::fs::read_to_string(path).unwrap();
+        assert!(text.contains("\"data_plane\":{\"transit_cut_through\":42"), "{text}");
+        assert!(text.contains("\"flush_batch\":2.5"), "{text}");
         assert!(text.contains("\"switch_cache\":{\"hits\":3,\"misses\":1"), "{text}");
         assert!(text.ends_with("}}"), "{text}");
+        assert_eq!(text.matches('{').count(), text.matches('}').count());
+
+        // Without the cache configured, only the data_plane object grafts
+        // — every run reports its memory/syscall budget.
+        std::fs::write(path, "{\"schema\":\"turbokv-loadgen-v1\",\"latency_us\":{}}").unwrap();
+        append_server_report(path, &servers, false).unwrap();
+        let text = std::fs::read_to_string(path).unwrap();
+        assert!(text.contains("\"data_plane\":"), "{text}");
+        assert!(!text.contains("\"switch_cache\":"), "{text}");
         assert_eq!(text.matches('{').count(), text.matches('}').count());
         std::fs::remove_file(path).ok();
     }

@@ -306,8 +306,8 @@ struct ReplyFeed {
 }
 
 impl ShardHandler for ReplyFeed {
-    fn on_frame(&mut self, _io: &mut ShardIo, _conn: ConnId, frame: Vec<u8>) -> bool {
-        match Packet::decode(&frame) {
+    fn on_frame(&mut self, _io: &mut ShardIo, _conn: ConnId, frame: &[u8]) -> bool {
+        match Packet::decode(frame) {
             Ok(pkt) => self.tx.send(pkt).is_ok(),
             Err(_) => true, // undecodable reply: drop, keep serving
         }
@@ -360,6 +360,7 @@ fn client_worker(
             verify_failures: 0,
             measured_ns: 0,
         },
+        enc: Vec::new(),
     };
 
     // Load phase (the YCSB load, over the wire): client c loads every key
@@ -411,6 +412,9 @@ struct Engine<'a> {
     epoch: Instant,
     timeout: Duration,
     out: ClientOutcome,
+    /// Reusable encode buffer: every send reuses its capacity, so the
+    /// steady-state issue path allocates nothing (DESIGN.md §2h).
+    enc: Vec<u8>,
 }
 
 impl Engine<'_> {
@@ -651,7 +655,8 @@ impl Engine<'_> {
             end_key,
             req.value.clone(),
         );
-        self.pool.send(&pkt.encode())
+        pkt.encode_into(&mut self.enc);
+        self.pool.send(&self.enc)
     }
 }
 

@@ -208,6 +208,20 @@ pub struct ServerStats {
     pub faults_dropped: std::sync::atomic::AtomicU64,
     pub faults_duplicated: std::sync::atomic::AtomicU64,
     pub faults_delayed: std::sync::atomic::AtomicU64,
+    /// Frames a non-coordinating switch (agg/core/edge) forwarded raw by
+    /// peeking the dst IP at its fixed header offset, skipping
+    /// `Packet::decode` and re-encode entirely (DESIGN.md §2h).
+    pub transit_cut_through: std::sync::atomic::AtomicU64,
+    /// Data-plane memory & syscall budget (DESIGN.md §2h): coalesced
+    /// write-buffer flushes performed / frames those flushes carried
+    /// (their ratio is the mean flush batch), and frame buffers served
+    /// from the shard's recycle pool vs. freshly allocated. In steady
+    /// state `pool_alloc` stops growing — the zero-allocation gate the
+    /// loopback e2e asserts.
+    pub flush_calls: std::sync::atomic::AtomicU64,
+    pub flush_frames: std::sync::atomic::AtomicU64,
+    pub pool_reused: std::sync::atomic::AtomicU64,
+    pub pool_alloc: std::sync::atomic::AtomicU64,
 }
 
 /// A plain copy of [`ServerStats`] at one instant.
@@ -224,6 +238,11 @@ pub struct ServerStatsSnapshot {
     pub faults_dropped: u64,
     pub faults_duplicated: u64,
     pub faults_delayed: u64,
+    pub transit_cut_through: u64,
+    pub flush_calls: u64,
+    pub flush_frames: u64,
+    pub pool_reused: u64,
+    pub pool_alloc: u64,
 }
 
 impl ServerStats {
@@ -240,6 +259,11 @@ impl ServerStats {
             faults_dropped: self.faults_dropped.load(Ordering::Relaxed),
             faults_duplicated: self.faults_duplicated.load(Ordering::Relaxed),
             faults_delayed: self.faults_delayed.load(Ordering::Relaxed),
+            transit_cut_through: self.transit_cut_through.load(Ordering::Relaxed),
+            flush_calls: self.flush_calls.load(Ordering::Relaxed),
+            flush_frames: self.flush_frames.load(Ordering::Relaxed),
+            pool_reused: self.pool_reused.load(Ordering::Relaxed),
+            pool_alloc: self.pool_alloc.load(Ordering::Relaxed),
         }
     }
 }
@@ -258,6 +282,11 @@ impl ServerStatsSnapshot {
         self.faults_dropped += other.faults_dropped;
         self.faults_duplicated += other.faults_duplicated;
         self.faults_delayed += other.faults_delayed;
+        self.transit_cut_through += other.transit_cut_through;
+        self.flush_calls += other.flush_calls;
+        self.flush_frames += other.flush_frames;
+        self.pool_reused += other.pool_reused;
+        self.pool_alloc += other.pool_alloc;
     }
 
     /// Total frames the fault injector touched (dropped + duplicated +
@@ -271,6 +300,12 @@ impl ServerStatsSnapshot {
     pub fn cache_hit_rate(&self) -> Option<f64> {
         let total = self.cache_hits + self.cache_misses;
         (total > 0).then(|| self.cache_hits as f64 / total as f64)
+    }
+
+    /// Mean frames delivered per coalesced flush (`None` before the first
+    /// flush) — the syscall-amortization signal of DESIGN.md §2h.
+    pub fn flush_batch(&self) -> Option<f64> {
+        (self.flush_calls > 0).then(|| self.flush_frames as f64 / self.flush_calls as f64)
     }
 }
 

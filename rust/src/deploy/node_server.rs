@@ -113,8 +113,8 @@ struct NodeData {
 }
 
 impl ShardHandler for NodeData {
-    fn on_frame(&mut self, _io: &mut ShardIo, _conn: ConnId, frame: Vec<u8>) -> bool {
-        match Packet::decode(&frame) {
+    fn on_frame(&mut self, _io: &mut ShardIo, _conn: ConnId, frame: &[u8]) -> bool {
+        match Packet::decode(frame) {
             // Same admission rules as the simulator's in-switch node
             // strategy: a chain-headered packet runs the protocol step;
             // anything else is a stray and drops (a baseline-shaped
@@ -186,7 +186,11 @@ impl ShardHandler for NodeData {
                 shared.net.endpoint_addr(&shared.topo, out.ipv4.dst)
             };
             match addr {
-                Some(addr) => io.send_to(addr, out.encode()),
+                Some(addr) => {
+                    let mut frame = io.buf();
+                    out.encode_into(&mut frame);
+                    io.send_to(addr, frame);
+                }
                 None => {
                     shared.stats.dropped.fetch_add(1, Ordering::Relaxed);
                 }
@@ -201,9 +205,9 @@ struct NodeCtrl {
 }
 
 impl ShardHandler for NodeCtrl {
-    fn on_frame(&mut self, io: &mut ShardIo, conn: ConnId, frame: Vec<u8>) -> bool {
+    fn on_frame(&mut self, io: &mut ShardIo, conn: ConnId, frame: &[u8]) -> bool {
         let shared = &self.shared;
-        let (reply, keep_going) = match CtrlMsg::decode(&frame) {
+        let (reply, keep_going) = match CtrlMsg::decode(frame) {
             Ok(CtrlMsg::Ping) => (CtrlReply::Ok, true),
             Ok(CtrlMsg::Shutdown) => {
                 shared.stop.store(true, Ordering::SeqCst);
@@ -226,7 +230,9 @@ impl ShardHandler for NodeCtrl {
             Ok(other) => (CtrlReply::Err(format!("storage nodes do not serve {other:?}")), true),
             Err(e) => (CtrlReply::Err(format!("undecodable control message: {e:#}")), true),
         };
-        io.reply(conn, reply.encode());
+        let mut buf = io.buf();
+        reply.encode_into(&mut buf);
+        io.reply(conn, buf);
         keep_going
     }
 }

@@ -158,7 +158,7 @@ mod tests {
                 // Keep flushing the pool while draining (a frame may still
                 // be queued when the writer's socket buffer was full).
                 pool.flush();
-                match reader.poll(&mut src) {
+                match reader.poll_alloc(&mut src) {
                     Ok(FrameEvent::Frame(f)) => got.push(f),
                     Ok(FrameEvent::Pending) => break,
                     Ok(FrameEvent::Eof) | Err(_) => break,

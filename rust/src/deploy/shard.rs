@@ -34,7 +34,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
-use super::transport::{configure_stream, FrameEvent, FrameReader, FrameWriter};
+use super::transport::{configure_stream, BufPool, FrameEvent, FrameReader, FrameWriter};
 use super::{ServerStats, CONNECT_TIMEOUT};
 
 /// Sleep between passes that found no work (accept, read, and write all
@@ -63,7 +63,12 @@ pub type ConnId = usize;
 pub trait ShardHandler: Send {
     /// One complete inbound frame. Stage output through `io`; return
     /// `false` to close `conn` once its queued replies have flushed.
-    fn on_frame(&mut self, io: &mut ShardIo, conn: ConnId, frame: Vec<u8>) -> bool;
+    ///
+    /// The frame bytes are borrowed: the loop recycles the underlying
+    /// buffer into the shard's [`BufPool`] the moment this returns, so a
+    /// handler that must keep bytes past the call copies them into a
+    /// pooled buffer ([`ShardIo::buf_from`]) or decodes them.
+    fn on_frame(&mut self, io: &mut ShardIo, conn: ConnId, frame: &[u8]) -> bool;
 
     /// Called once per loop pass after every connection's frames were
     /// delivered — the batch point: a handler that accumulated frames in
@@ -71,17 +76,25 @@ pub trait ShardHandler: Send {
     fn on_pass_end(&mut self, _io: &mut ShardIo) {}
 }
 
-/// Staged output of one handler call chain. The shard loop applies it
-/// after the drain pass: replies enqueue on their connection's writer,
-/// sends go through the shard's outbound peer table.
+/// Staged output of one handler call chain, plus the shard's frame-buffer
+/// recycle pool. The loop applies staged output after the drain pass —
+/// replies enqueue on their connection's writer, sends go through the
+/// shard's outbound peer table — then returns every staged buffer to the
+/// pool, closing the zero-allocation loop of DESIGN.md §2h: read buffers
+/// come *from* the pool, handlers encode output *into* pooled buffers
+/// ([`ShardIo::buf`]), and everything goes back after its bytes are copied
+/// into a write buffer.
 #[derive(Default)]
 pub struct ShardIo {
     replies: Vec<(ConnId, Vec<u8>)>,
     sends: Vec<(SocketAddr, Vec<u8>)>,
+    pool: BufPool,
 }
 
 impl ShardIo {
-    /// Queue a reply frame down the connection a request arrived on.
+    /// Queue a reply frame down the connection a request arrived on. The
+    /// buffer should come from [`ShardIo::buf`]/[`ShardIo::buf_from`] so
+    /// the loop can recycle it after delivery.
     pub fn reply(&mut self, conn: ConnId, frame: Vec<u8>) {
         self.replies.push((conn, frame));
     }
@@ -89,6 +102,31 @@ impl ShardIo {
     /// Queue a frame to an arbitrary peer (connecting on first use).
     pub fn send_to(&mut self, addr: SocketAddr, frame: Vec<u8>) {
         self.sends.push((addr, frame));
+    }
+
+    /// An empty buffer to encode a frame into — recycled when the pool
+    /// has one, freshly allocated otherwise.
+    pub fn buf(&mut self) -> Vec<u8> {
+        self.pool.take()
+    }
+
+    /// A pooled buffer holding a copy of `bytes`.
+    pub fn buf_from(&mut self, bytes: &[u8]) -> Vec<u8> {
+        let mut buf = self.pool.take();
+        buf.extend_from_slice(bytes);
+        buf
+    }
+
+    /// Return a buffer whose bytes are no longer needed (e.g. a frame the
+    /// handler decided not to send) to the recycle pool.
+    pub fn recycle(&mut self, buf: Vec<u8>) {
+        self.pool.put(buf);
+    }
+
+    /// Sends staged this pass and not yet applied by the loop —
+    /// introspection for handler unit tests.
+    pub fn staged_sends(&self) -> &[(SocketAddr, Vec<u8>)] {
+        &self.sends
     }
 }
 
@@ -186,13 +224,16 @@ fn shard_loop(
             if let Some(conn) = slot {
                 let mut drained = 0;
                 while !conn.closing && drained < FRAME_BURST {
-                    match conn.reader.poll(&mut conn.stream) {
+                    match conn.reader.poll(&mut conn.stream, &mut io.pool) {
                         Ok(FrameEvent::Frame(frame)) => {
                             busy = true;
                             drained += 1;
-                            if !handler.on_frame(&mut io, id, frame) {
+                            if !handler.on_frame(&mut io, id, &frame) {
                                 conn.closing = true;
                             }
+                            // The handler is done with the bytes: the
+                            // buffer goes straight back to the pool.
+                            io.pool.put(frame);
                         }
                         Ok(FrameEvent::Pending) => break,
                         Ok(FrameEvent::Eof) | Err(_) => {
@@ -212,8 +253,11 @@ fn shard_loop(
         }
 
         // 3. The batch point, then apply everything the handler staged.
+        // Staged buffers are copied into write buffers and recycled; the
+        // Vecs are taken and restored so the pool stays borrowable.
         handler.on_pass_end(&mut io);
-        for (id, frame) in io.replies.drain(..) {
+        let mut replies = std::mem::take(&mut io.replies);
+        for (id, frame) in replies.drain(..) {
             match conns.get_mut(id).and_then(Option::as_mut) {
                 Some(conn) => {
                     if conn.writer.enqueue(&frame).is_err() {
@@ -225,18 +269,31 @@ fn shard_loop(
                     stats.send_failures.fetch_add(1, Ordering::Relaxed);
                 }
             }
+            io.pool.put(frame);
         }
-        for (addr, frame) in io.sends.drain(..) {
+        io.replies = replies;
+        let mut sends = std::mem::take(&mut io.sends);
+        for (addr, frame) in sends.drain(..) {
             let lost = peer_send(&mut peers, addr, &frame);
             if lost > 0 {
                 stats.send_failures.fetch_add(lost, Ordering::Relaxed);
             }
+            io.pool.put(frame);
         }
+        io.sends = sends;
 
-        // 4. Flush every write buffer; free closing conns once drained.
+        // 4. Flush every write buffer — one coalesced write per connection
+        // and per peer for the whole pass — and free closing conns once
+        // drained. Flush accounting feeds the `flush_batch` signal.
+        let mut flush_calls = 0u64;
+        let mut flush_frames = 0u64;
         for (id, slot) in conns.iter_mut().enumerate() {
             let mut drop_conn = false;
             if let Some(conn) = slot {
+                let before = conn.writer.pending_frames();
+                if before > 0 {
+                    flush_calls += 1;
+                }
                 match conn.writer.flush_into(&mut conn.stream) {
                     Ok(true) => drop_conn = conn.closing,
                     Ok(false) => {} // socket full; the 1 ms sleep is the poll
@@ -247,21 +304,44 @@ fn shard_loop(
                         drop_conn = true;
                     }
                 }
+                // Delivered = before − still-pending: covers the drained,
+                // partial, and errored (queue intact → zero) cases alike.
+                flush_frames += before - conn.writer.pending_frames();
             }
             if drop_conn {
                 *slot = None;
                 free.push(id);
             }
         }
-        peers.retain(|_, peer| match peer.writer.flush_into(&mut peer.stream) {
-            Ok(_) => true,
-            Err(_) => {
-                stats
-                    .send_failures
-                    .fetch_add(peer.writer.pending_frames(), Ordering::Relaxed);
-                false
+        peers.retain(|_, peer| {
+            let before = peer.writer.pending_frames();
+            if before > 0 {
+                flush_calls += 1;
+            }
+            match peer.writer.flush_into(&mut peer.stream) {
+                Ok(_) => {
+                    flush_frames += before - peer.writer.pending_frames();
+                    true
+                }
+                Err(_) => {
+                    stats
+                        .send_failures
+                        .fetch_add(peer.writer.pending_frames(), Ordering::Relaxed);
+                    false
+                }
             }
         });
+        if flush_calls > 0 {
+            stats.flush_calls.fetch_add(flush_calls, Ordering::Relaxed);
+            stats.flush_frames.fetch_add(flush_frames, Ordering::Relaxed);
+        }
+        let (reused, allocated) = io.pool.stats_delta();
+        if reused > 0 {
+            stats.pool_reused.fetch_add(reused, Ordering::Relaxed);
+        }
+        if allocated > 0 {
+            stats.pool_alloc.fetch_add(allocated, Ordering::Relaxed);
+        }
 
         if stopping {
             drain_before_exit(&mut conns, &mut peers);
@@ -273,11 +353,12 @@ fn shard_loop(
     }
 }
 
-/// Deliver one frame to `addr` through the shard's outbound peer table,
-/// connecting (blocking, bounded) on first use and flushing
-/// opportunistically. Returns the number of frames lost (0 on success):
-/// an evicted peer loses its whole queued backlog, and every loss is a
-/// send-failure the stats must see.
+/// Queue one frame to `addr` through the shard's outbound peer table,
+/// connecting (blocking, bounded) on first use. Delivery happens at the
+/// pass-end flush, so a burst of sends to one peer costs one coalesced
+/// `write` instead of one syscall each. Returns the number of frames lost
+/// (0 on success): an evicted peer loses its whole queued backlog, and
+/// every loss is a send-failure the stats must see.
 fn peer_send(peers: &mut HashMap<SocketAddr, Peer>, addr: SocketAddr, frame: &[u8]) -> u64 {
     let peer = match peers.entry(addr) {
         std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
@@ -301,14 +382,7 @@ fn peer_send(peers: &mut HashMap<SocketAddr, Peer>, addr: SocketAddr, frame: &[u
     if peer.writer.enqueue(frame).is_err() {
         return 1; // oversized frame; the peer connection is still fine
     }
-    match peer.writer.flush_into(&mut peer.stream) {
-        Ok(_) => 0,
-        Err(_) => {
-            let lost = peer.writer.pending_frames();
-            peers.remove(&addr);
-            lost
-        }
-    }
+    0
 }
 
 /// Bounded post-stop drain: keep flushing until every writer is empty or
@@ -347,14 +421,17 @@ mod tests {
     use crate::deploy::transport::{read_frame_deadline, write_frame};
     use std::io::Write;
 
-    fn start_echo(shards: usize) -> (SocketAddr, Arc<AtomicBool>, Vec<JoinHandle<()>>) {
+    fn start_echo(
+        shards: usize,
+    ) -> (SocketAddr, Arc<AtomicBool>, Arc<ServerStats>, Vec<JoinHandle<()>>) {
         /// Echoes every frame back; a frame of exactly `b"bye"` replies
         /// then closes the connection.
         struct Echo;
         impl ShardHandler for Echo {
-            fn on_frame(&mut self, io: &mut ShardIo, conn: ConnId, frame: Vec<u8>) -> bool {
-                let keep = frame != b"bye";
-                io.reply(conn, frame);
+            fn on_frame(&mut self, io: &mut ShardIo, conn: ConnId, frame: &[u8]) -> bool {
+                let keep = frame != b"bye".as_slice();
+                let copy = io.buf_from(frame);
+                io.reply(conn, copy);
                 keep
             }
         }
@@ -363,9 +440,11 @@ mod tests {
         let stop = Arc::new(AtomicBool::new(false));
         let stats = Arc::new(ServerStats::default());
         let threads =
-            spawn_shards("echo", listener, shards, stop.clone(), stats, |_| Box::new(Echo))
-                .unwrap();
-        (addr, stop, threads)
+            spawn_shards("echo", listener, shards, stop.clone(), stats.clone(), |_| {
+                Box::new(Echo)
+            })
+            .unwrap();
+        (addr, stop, stats, threads)
     }
 
     fn read_reply(stream: &mut TcpStream, reader: &mut FrameReader) -> Vec<u8> {
@@ -377,7 +456,7 @@ mod tests {
 
     #[test]
     fn sharded_echo_serves_pipelined_frames_across_connections() {
-        let (addr, stop, threads) = start_echo(2);
+        let (addr, stop, stats, threads) = start_echo(2);
         let mut streams: Vec<(TcpStream, FrameReader)> = (0..3)
             .map(|_| {
                 let s = TcpStream::connect(addr).unwrap();
@@ -404,11 +483,28 @@ mod tests {
         for t in threads {
             t.join().unwrap();
         }
+        // Data-plane budget accounting fired: coalesced flushes carried
+        // the 150 replies, and the recycle loop (read buffer → handler →
+        // pooled reply copy → write buffer → pool) reused buffers instead
+        // of allocating one per frame.
+        let snap = stats.snapshot();
+        assert!(snap.flush_calls > 0, "passes with pending frames must count a flush");
+        assert!(
+            snap.flush_frames >= 150,
+            "every reply flows through a counted flush: {}",
+            snap.flush_frames
+        );
+        assert!(snap.flush_batch().unwrap() >= 1.0);
+        assert!(
+            snap.pool_reused > 0,
+            "steady-state echo must reuse pooled buffers (allocated {})",
+            snap.pool_alloc
+        );
     }
 
     #[test]
     fn close_request_still_flushes_the_final_reply() {
-        let (addr, stop, threads) = start_echo(1);
+        let (addr, stop, _stats, threads) = start_echo(1);
         let mut stream = TcpStream::connect(addr).unwrap();
         configure_stream(&stream, true, Some(Duration::from_millis(20)));
         let mut reader = FrameReader::new();
@@ -430,8 +526,9 @@ mod tests {
             downstream: SocketAddr,
         }
         impl ShardHandler for Forward {
-            fn on_frame(&mut self, io: &mut ShardIo, _conn: ConnId, frame: Vec<u8>) -> bool {
-                io.send_to(self.downstream, frame);
+            fn on_frame(&mut self, io: &mut ShardIo, _conn: ConnId, frame: &[u8]) -> bool {
+                let copy = io.buf_from(frame);
+                io.send_to(self.downstream, copy);
                 true
             }
         }

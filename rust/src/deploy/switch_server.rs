@@ -33,8 +33,8 @@ use std::sync::{Arc, Mutex};
 use anyhow::Result;
 
 use crate::config::Config;
-use crate::net::packet::{Packet, Tos};
-use crate::net::topology::{Addr, Topology};
+use crate::net::packet::{Ip, Packet, Tos, ETH_LEN, IPV4_LEN};
+use crate::net::topology::{Addr, SwitchRole, Topology};
 use crate::partition::Directory;
 use crate::switch::{RustLookup, Switch};
 use crate::types::{Key, OpCode};
@@ -99,6 +99,7 @@ pub fn spawn(
 ) -> Result<ServerHandle> {
     let topo = Topology::build(&cfg.cluster);
     anyhow::ensure!(sw_id < topo.switches.len(), "no switch {sw_id} in this topology");
+    let is_tor = matches!(topo.switches[sw_id].role, SwitchRole::Tor { .. });
     let sw = build_switch(cfg, &topo, sw_id);
     let stop = Arc::new(AtomicBool::new(false));
     let stats = Arc::new(ServerStats::default());
@@ -121,7 +122,14 @@ pub fn spawn(
             cfg.deploy.shards,
             stop.clone(),
             stats.clone(),
-            move |_| Box::new(SwitchData { shared: shared.clone(), batch: Vec::new() }),
+            move |_| {
+                Box::new(SwitchData {
+                    shared: shared.clone(),
+                    batch: Vec::new(),
+                    sw_id,
+                    is_tor,
+                })
+            },
         )?
     };
     threads.extend(spawn_shards(
@@ -140,11 +148,32 @@ pub fn spawn(
 struct SwitchData {
     shared: Arc<SwitchShared>,
     batch: Vec<Packet>,
+    sw_id: usize,
+    /// Coordinating switch? Only the ToR attached to a packet's target
+    /// node runs the full pipeline (cache, counters, chain insertion);
+    /// everything else may cut transit frames through raw.
+    is_tor: bool,
 }
 
 impl ShardHandler for SwitchData {
-    fn on_frame(&mut self, _io: &mut ShardIo, _conn: ConnId, frame: Vec<u8>) -> bool {
-        let pkt = match Packet::decode(&frame) {
+    fn on_frame(&mut self, io: &mut ShardIo, _conn: ConnId, frame: &[u8]) -> bool {
+        let shared = &self.shared;
+        // Cut-through transit (DESIGN.md §2h): at a non-coordinating
+        // switch, a dst-routable frame forwards as raw bytes — no decode,
+        // no re-encode — through the same chaos choke point as pipeline
+        // emits. Any frame the peek cannot route falls through to the
+        // full pipeline below.
+        if !self.is_tor {
+            if let Some(hop) = transit_dest(&shared.topo, self.sw_id, frame) {
+                if let Some(addr) = emit_addr(&shared.net, hop) {
+                    shared.stats.transit_cut_through.fetch_add(1, Ordering::Relaxed);
+                    let copy = io.buf_from(frame);
+                    stage_frame(shared, io, addr, copy);
+                    return true;
+                }
+            }
+        }
+        let pkt = match Packet::decode(frame) {
             Ok(pkt) => pkt,
             Err(_) => {
                 self.shared.stats.bad_frames.fetch_add(1, Ordering::Relaxed);
@@ -187,36 +216,13 @@ impl ShardHandler for SwitchData {
         let mut core = shared.core.lock().expect("switch poisoned");
         let (sw, lookup) = &mut *core;
         let emits = sw.process_batch(&mut self.batch, &shared.topo, lookup, 0, 0);
-        let chaos = shared.faults_live.load(Ordering::Relaxed);
         for e in emits {
             match emit_addr(&shared.net, e.to) {
-                Some(addr) if chaos => {
-                    let st = Ordering::Relaxed;
-                    let mut faults = shared.faults.lock().expect("fault injector poisoned");
-                    if faults.is_blocked(&addr) {
-                        // Partitioned link: the frame goes nowhere, the
-                        // client's retransmission survives it.
-                        shared.stats.faults_dropped.fetch_add(1, st);
-                        continue;
-                    }
-                    match faults.decide() {
-                        FaultAction::Deliver => io.send_to(addr, e.pkt.encode()),
-                        FaultAction::Drop => {
-                            shared.stats.faults_dropped.fetch_add(1, st);
-                        }
-                        FaultAction::Duplicate => {
-                            let frame = e.pkt.encode();
-                            io.send_to(addr, frame.clone());
-                            io.send_to(addr, frame);
-                            shared.stats.faults_duplicated.fetch_add(1, st);
-                        }
-                        FaultAction::Delay => {
-                            faults.hold(addr, e.pkt.encode());
-                            shared.stats.faults_delayed.fetch_add(1, st);
-                        }
-                    }
+                Some(addr) => {
+                    let mut frame = io.buf();
+                    e.pkt.encode_into(&mut frame);
+                    stage_frame(shared, io, addr, frame);
                 }
-                Some(addr) => io.send_to(addr, e.pkt.encode()),
                 None => sw.stats.dropped += 1,
             }
         }
@@ -270,15 +276,84 @@ fn emit_addr(net: &Netmap, to: Addr) -> Option<std::net::SocketAddr> {
     }
 }
 
+/// Cut-through routing peek for a non-coordinating switch (DESIGN.md
+/// §2h): a frame whose ToS says it already carries a concrete destination
+/// (`Processed` — past its coordinator ToR — or `Normal` reply traffic)
+/// routes by the dst IP sitting at its fixed IPv4-header offset, so the
+/// switch can forward the raw bytes without `Packet::decode`. Returns the
+/// next hop toward that destination, or `None` when the frame needs the
+/// full pipeline: fresh requests (ToS `RangeData`/`HashData`) are
+/// key-routed — and subject to the migration freeze barrier — and an
+/// unknown dst IP or a frame too short to carry the headers is the
+/// decoder's problem. Public for the forwarding micro-benchmark.
+pub fn transit_dest(topo: &Topology, sw_id: usize, frame: &[u8]) -> Option<Addr> {
+    if frame.len() < ETH_LEN + IPV4_LEN {
+        return None;
+    }
+    let tos = frame[ETH_LEN + 1];
+    if tos != Tos::Processed as u8 && tos != Tos::Normal as u8 {
+        return None;
+    }
+    let dst = Ip(u32::from_be_bytes(frame[ETH_LEN + 16..ETH_LEN + 20].try_into().ok()?));
+    if dst == Ip(0) {
+        return None;
+    }
+    topo.next_hop(sw_id, topo.addr_of_ip(dst)?)
+}
+
+/// The single send choke point every outgoing data-plane frame crosses —
+/// pipeline emits and raw cut-through forwards alike — so the chaos
+/// matrix's semantics are identical for both: the armed [`FaultInjector`]
+/// provably wraps raw-forwarded frames too. Owns `frame` (a pooled
+/// buffer): staged on deliver, recycled on drop, held on delay, and a
+/// duplicate stages the one encode plus a single pooled copy.
+fn stage_frame(
+    shared: &SwitchShared,
+    io: &mut ShardIo,
+    addr: std::net::SocketAddr,
+    frame: Vec<u8>,
+) {
+    if !shared.faults_live.load(Ordering::Relaxed) {
+        io.send_to(addr, frame);
+        return;
+    }
+    let st = Ordering::Relaxed;
+    let mut faults = shared.faults.lock().expect("fault injector poisoned");
+    if faults.is_blocked(&addr) {
+        // Partitioned link: the frame goes nowhere, the client's
+        // retransmission survives it.
+        shared.stats.faults_dropped.fetch_add(1, st);
+        io.recycle(frame);
+        return;
+    }
+    match faults.decide() {
+        FaultAction::Deliver => io.send_to(addr, frame),
+        FaultAction::Drop => {
+            shared.stats.faults_dropped.fetch_add(1, st);
+            io.recycle(frame);
+        }
+        FaultAction::Duplicate => {
+            let dup = io.buf_from(&frame);
+            io.send_to(addr, frame);
+            io.send_to(addr, dup);
+            shared.stats.faults_duplicated.fetch_add(1, st);
+        }
+        FaultAction::Delay => {
+            faults.hold(addr, frame);
+            shared.stats.faults_delayed.fetch_add(1, st);
+        }
+    }
+}
+
 /// Control-plane shard state: strict request/reply per frame.
 struct SwitchCtrl {
     shared: Arc<SwitchShared>,
 }
 
 impl ShardHandler for SwitchCtrl {
-    fn on_frame(&mut self, io: &mut ShardIo, conn: ConnId, frame: Vec<u8>) -> bool {
+    fn on_frame(&mut self, io: &mut ShardIo, conn: ConnId, frame: &[u8]) -> bool {
         let shared = &self.shared;
-        let (reply, keep_going) = match CtrlMsg::decode(&frame) {
+        let (reply, keep_going) = match CtrlMsg::decode(frame) {
             Ok(CtrlMsg::Ping) => (CtrlReply::Ok, true),
             Ok(CtrlMsg::Shutdown) => {
                 shared.stop.store(true, Ordering::SeqCst);
@@ -344,7 +419,9 @@ impl ShardHandler for SwitchCtrl {
             Ok(other) => (CtrlReply::Err(format!("switches do not serve {other:?}")), true),
             Err(e) => (CtrlReply::Err(format!("undecodable control message: {e:#}")), true),
         };
-        io.reply(conn, reply.encode());
+        let mut buf = io.buf();
+        reply.encode_into(&mut buf);
+        io.reply(conn, buf);
         keep_going
     }
 }
@@ -406,12 +483,129 @@ fn split_record(sw: &mut Switch, idx: u32, at: Key, chain: Vec<u16>) -> CtrlRepl
 mod tests {
     use super::*;
     use crate::config::Config;
+    use crate::deploy::transport::FaultSpec;
     use crate::net::topology::SwitchRole;
 
     fn tor_switch() -> Switch {
         let cfg = Config::default();
         let topo = Topology::build(&cfg.cluster);
         build_switch(&cfg, &topo, topo.tor_of_rack(0))
+    }
+
+    /// A live `SwitchShared` for hierarchy switch `sw_id`, with nothing
+    /// bound: the netmap is pure address math, so handler logic runs
+    /// against staged (unsent) io.
+    fn shared_for(cfg: &Config, sw_id: usize) -> Arc<SwitchShared> {
+        let topo = Topology::build(&cfg.cluster);
+        Arc::new(SwitchShared {
+            core: Mutex::new((build_switch(cfg, &topo, sw_id), RustLookup)),
+            frozen: Mutex::new(Vec::new()),
+            faults: Mutex::new(FaultInjector::default()),
+            faults_live: AtomicBool::new(false),
+            topo,
+            net: Netmap::from_config(cfg).unwrap(),
+            stop: Arc::new(AtomicBool::new(false)),
+            stats: Arc::new(ServerStats::default()),
+        })
+    }
+
+    fn agg_id(topo: &Topology) -> usize {
+        topo.switches
+            .iter()
+            .find(|s| matches!(s.role, SwitchRole::Agg))
+            .expect("paper testbed has AGG switches")
+            .id
+    }
+
+    #[test]
+    fn agg_switch_cut_through_forwards_raw_and_tor_does_not() {
+        let cfg = Config::default();
+        let shared = shared_for(&cfg, 0);
+        let sw_id = agg_id(&shared.topo);
+        let agg = shared_for(&cfg, sw_id);
+        let reply =
+            Packet::reply(agg.topo.node_ip(0), agg.topo.client_ip(0), b"v".to_vec()).encode();
+
+        // A dst-routable reply transiting the AGG forwards as raw bytes:
+        // no decode, nothing batched for the pipeline, one staged send of
+        // the identical frame toward the next hop.
+        let mut data = SwitchData { shared: agg.clone(), batch: Vec::new(), sw_id, is_tor: false };
+        let mut io = ShardIo::default();
+        assert!(data.on_frame(&mut io, 0, &reply));
+        assert!(data.batch.is_empty(), "cut-through frame must not enter the pipeline");
+        let hop = transit_dest(&agg.topo, sw_id, &reply).expect("reply is dst-routable");
+        let want = emit_addr(&agg.net, hop).unwrap();
+        assert_eq!(io.staged_sends().len(), 1);
+        assert_eq!(io.staged_sends()[0], (want, reply.clone()), "raw bytes, unmodified");
+        assert_eq!(agg.stats.transit_cut_through.load(Ordering::Relaxed), 1);
+
+        // A fresh key-routed request never cuts through — it must reach
+        // the freeze barrier and the batched pipeline.
+        let req = Packet::request(
+            agg.topo.client_ip(0),
+            Ip(0),
+            Tos::RangeData,
+            OpCode::Get,
+            Key(7),
+            Key(7),
+            b"".to_vec(),
+        )
+        .encode();
+        let mut io = ShardIo::default();
+        assert!(data.on_frame(&mut io, 0, &req));
+        assert_eq!(data.batch.len(), 1, "fresh request must take the full pipeline");
+        assert!(io.staged_sends().is_empty());
+        assert_eq!(agg.stats.transit_cut_through.load(Ordering::Relaxed), 1, "unchanged");
+
+        // The coordinating ToR decodes the same reply into its batch:
+        // cache fills and counters stay exact where coordination happens.
+        let tor_id = shared.topo.tor_of_rack(0);
+        let mut tor = SwitchData {
+            shared: shared.clone(),
+            batch: Vec::new(),
+            sw_id: tor_id,
+            is_tor: true,
+        };
+        let mut io = ShardIo::default();
+        assert!(tor.on_frame(&mut io, 0, &reply));
+        assert_eq!(tor.batch.len(), 1, "ToR runs the full pipeline on every frame");
+        assert!(io.staged_sends().is_empty());
+        assert_eq!(shared.stats.transit_cut_through.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn cut_through_transit_is_wrapped_by_the_fault_injector() {
+        let cfg = Config::default();
+        let agg = shared_for(&cfg, 0);
+        let sw_id = agg_id(&agg.topo);
+        let frame =
+            Packet::reply(agg.topo.node_ip(0), agg.topo.client_ip(0), b"v".to_vec()).encode();
+        let hop = transit_dest(&agg.topo, sw_id, &frame).expect("reply is dst-routable");
+        let addr = emit_addr(&agg.net, hop).unwrap();
+
+        // Duplicate fault on the raw-forward path: exactly one encode and
+        // one pooled copy staged — never two re-encodes.
+        let dup = FaultSpec { dup_permille: 1000, ..FaultSpec::default() };
+        agg.faults.lock().unwrap().set_spec(dup);
+        agg.faults_live.store(true, Ordering::SeqCst);
+        let mut io = ShardIo::default();
+        let copy = io.buf_from(&frame);
+        stage_frame(&agg, &mut io, addr, copy);
+        let staged = io.staged_sends();
+        assert_eq!(staged.len(), 2, "duplicate fault must stage the frame twice");
+        assert_eq!(staged[0], (addr, frame.clone()));
+        assert_eq!(staged[1], (addr, frame.clone()));
+        assert_eq!(agg.stats.faults_duplicated.load(Ordering::Relaxed), 1);
+
+        // Drop fault: the raw forward goes nowhere and is counted as an
+        // injected fault — proof-of-injection covers cut-through frames.
+        let drop = FaultSpec { drop_permille: 1000, ..FaultSpec::default() };
+        agg.faults.lock().unwrap().set_spec(drop);
+        let mut io = ShardIo::default();
+        let copy = io.buf_from(&frame);
+        stage_frame(&agg, &mut io, addr, copy);
+        assert!(io.staged_sends().is_empty(), "dropped frame must not be staged");
+        assert_eq!(agg.stats.faults_dropped.load(Ordering::Relaxed), 1);
     }
 
     #[test]

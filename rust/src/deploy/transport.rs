@@ -60,22 +60,101 @@ pub fn configure_stream(stream: &TcpStream, nodelay: bool, read_timeout: Option<
     stream.set_read_timeout(read_timeout).ok();
 }
 
-/// Resumable frame writer: the symmetric counterpart of [`FrameReader`].
+/// Most free buffers a [`BufPool`] retains; beyond this, returned buffers
+/// are simply dropped. Sized to the deepest plausible per-pass frame fan:
+/// a shard drains ≤ 128 frames per connection per pass and recycles them
+/// the same pass, so 256 covers bursts with room to spare.
+pub const POOL_MAX_BUFS: usize = 256;
+
+/// Largest buffer capacity a [`BufPool`] retains. One pathological scan
+/// reply must not pin megabytes in the free list forever.
+pub const POOL_MAX_CAP: usize = 1 << 20;
+
+/// A free list of recycled frame buffers — the deployment's answer to the
+/// per-frame allocation churn of DESIGN.md §2h. Each shard owns one pool
+/// (no locks); [`FrameReader::poll`] draws read buffers from it, handlers
+/// encode replies into it, and the shard loop returns every buffer after
+/// its bytes are copied into a connection's write buffer. In steady state
+/// `take` always hits the free list and the data path allocates nothing.
+#[derive(Debug, Default)]
+pub struct BufPool {
+    free: Vec<Vec<u8>>,
+    reused: u64,
+    allocated: u64,
+}
+
+impl BufPool {
+    pub fn new() -> BufPool {
+        BufPool::default()
+    }
+
+    /// Hand out an empty buffer: recycled when the free list has one,
+    /// freshly allocated otherwise. Counted either way for the
+    /// `pool_reused` / `pool_alloc` stats.
+    pub fn take(&mut self) -> Vec<u8> {
+        match self.free.pop() {
+            Some(buf) => {
+                self.reused += 1;
+                debug_assert!(buf.is_empty());
+                buf
+            }
+            None => {
+                self.allocated += 1;
+                Vec::new()
+            }
+        }
+    }
+
+    /// Return a buffer to the free list. Cleared immediately so a pooled
+    /// buffer can never leak stale frame bytes; dropped instead of pooled
+    /// when the list is full, the buffer never allocated, or its capacity
+    /// is so large that retaining it would pin memory.
+    pub fn put(&mut self, mut buf: Vec<u8>) {
+        if self.free.len() >= POOL_MAX_BUFS || buf.capacity() == 0 || buf.capacity() > POOL_MAX_CAP
+        {
+            return;
+        }
+        buf.clear();
+        self.free.push(buf);
+    }
+
+    /// Drain the (reused, allocated) counters accumulated since the last
+    /// call — the shard loop publishes these into `ServerStats` once per
+    /// pass instead of touching atomics per frame.
+    pub fn stats_delta(&mut self) -> (u64, u64) {
+        (std::mem::take(&mut self.reused), std::mem::take(&mut self.allocated))
+    }
+
+    /// Buffers currently waiting in the free list.
+    pub fn free_buffers(&self) -> usize {
+        self.free.len()
+    }
+}
+
+/// Once the consumed prefix of the write buffer grows past this many
+/// bytes, `enqueue` compacts it (shifting the unsent tail to the front)
+/// so a connection that never fully drains cannot grow the buffer
+/// unboundedly. Compaction at a 64 KiB stride amortizes to O(1) per byte.
+const COMPACT_AT: usize = 1 << 16;
+
+/// Coalescing frame writer: the symmetric counterpart of [`FrameReader`].
 ///
-/// Frames enqueue as fused header+payload byte runs; [`FrameWriter::flush_into`]
-/// writes from the front of the queue until everything drained or the sink
-/// would block, keeping a byte cursor into the front frame so a partial
-/// write — even one that stops inside the 4-byte header — resumes exactly
-/// where it left off. The emitted byte stream is identical to repeated
-/// [`write_frame`] calls.
+/// Frames append to one contiguous buffer, each prefixed by its 4-byte BE
+/// length, so [`FrameWriter::flush_into`] pushes *every* pending frame in
+/// a single `write` call per attempt — the O(frames)→O(1) syscall
+/// collapse of DESIGN.md §2h. A byte cursor marks how much of the buffer
+/// the sink has accepted; a partial write — even one that stops inside a
+/// length header — resumes at the exact byte, never re-sent, never torn.
+/// The emitted byte stream is identical to repeated [`write_frame`] calls.
 #[derive(Debug, Default)]
 pub struct FrameWriter {
-    /// Pending frames, each already prefixed with its 4-byte BE length.
-    queue: std::collections::VecDeque<Vec<u8>>,
-    /// How much of the front frame has been written.
-    front_pos: usize,
-    /// Total queued bytes not yet written (backpressure accounting).
-    pending_bytes: usize,
+    /// Length-prefixed frames, back to back. `buf[front..]` is unsent.
+    buf: Vec<u8>,
+    /// How much of `buf` the sink has accepted.
+    front: usize,
+    /// End offset in `buf` of each not-yet-fully-written frame, in queue
+    /// order — keeps `pending_frames` exact for backlog accounting.
+    bounds: std::collections::VecDeque<usize>,
 }
 
 impl FrameWriter {
@@ -92,22 +171,35 @@ impl FrameWriter {
                 format!("frame of {} bytes exceeds MAX_FRAME ({MAX_FRAME})", payload.len()),
             ));
         }
-        let mut frame = Vec::with_capacity(4 + payload.len());
-        frame.extend_from_slice(&(payload.len() as u32).to_be_bytes());
-        frame.extend_from_slice(payload);
-        self.pending_bytes += frame.len();
-        self.queue.push_back(frame);
+        if self.front == self.buf.len() {
+            // Fully drained: restart at the buffer's front, keeping its
+            // capacity — the steady-state path allocates nothing.
+            self.buf.clear();
+            self.front = 0;
+        } else if self.front >= COMPACT_AT {
+            // Large consumed prefix on a lagging connection: shift the
+            // unsent tail down rather than growing forever.
+            self.buf.drain(..self.front);
+            for bound in &mut self.bounds {
+                *bound -= self.front;
+            }
+            self.front = 0;
+        }
+        self.buf.extend_from_slice(&(payload.len() as u32).to_be_bytes());
+        self.buf.extend_from_slice(payload);
+        self.bounds.push_back(self.buf.len());
         Ok(())
     }
 
     /// Push queued bytes into `w` until drained (`Ok(true)`) or the sink
-    /// would block (`Ok(false)` — call again when writable). A sink that
+    /// would block (`Ok(false)` — call again when writable). All pending
+    /// frames go out in one contiguous `write` per attempt. A sink that
     /// accepts zero bytes without blocking is a dead peer
     /// (`ErrorKind::WriteZero`); any hard error leaves the queue intact so
     /// the caller can count the frames it is about to drop.
     pub fn flush_into(&mut self, w: &mut impl Write) -> io::Result<bool> {
-        while let Some(front) = self.queue.front() {
-            match w.write(&front[self.front_pos..]) {
+        while self.front < self.buf.len() {
+            match w.write(&self.buf[self.front..]) {
                 Ok(0) => {
                     return Err(io::Error::new(
                         io::ErrorKind::WriteZero,
@@ -115,11 +207,9 @@ impl FrameWriter {
                     ));
                 }
                 Ok(n) => {
-                    self.front_pos += n;
-                    self.pending_bytes -= n;
-                    if self.front_pos == front.len() {
-                        self.queue.pop_front();
-                        self.front_pos = 0;
+                    self.front += n;
+                    while self.bounds.front().is_some_and(|&end| end <= self.front) {
+                        self.bounds.pop_front();
                     }
                 }
                 Err(e) if is_would_block(&e) => return Ok(false),
@@ -127,6 +217,8 @@ impl FrameWriter {
                 Err(e) => return Err(e),
             }
         }
+        self.buf.clear();
+        self.front = 0;
         match w.flush() {
             Ok(()) => Ok(true),
             Err(e) if is_would_block(&e) => Ok(false),
@@ -137,16 +229,16 @@ impl FrameWriter {
 
     /// Frames not yet fully written (the partially-written front counts).
     pub fn pending_frames(&self) -> u64 {
-        self.queue.len() as u64
+        self.bounds.len() as u64
     }
 
     /// Bytes not yet written.
     pub fn pending_bytes(&self) -> usize {
-        self.pending_bytes
+        self.buf.len() - self.front
     }
 
     pub fn is_empty(&self) -> bool {
-        self.queue.is_empty()
+        self.bounds.is_empty()
     }
 }
 
@@ -180,7 +272,12 @@ impl FrameReader {
     /// Pull bytes from `r` until a frame completes, the source blocks, or
     /// the stream ends. EOF inside a frame is an error (the peer died
     /// mid-write); EOF between frames is clean shutdown.
-    pub fn poll(&mut self, r: &mut impl Read) -> io::Result<FrameEvent> {
+    ///
+    /// The returned frame's buffer comes from `pool`; the caller recycles
+    /// it with [`BufPool::put`] once done, and in steady state no poll
+    /// allocates. Callers without a recycle loop use
+    /// [`FrameReader::poll_alloc`].
+    pub fn poll(&mut self, r: &mut impl Read, pool: &mut BufPool) -> io::Result<FrameEvent> {
         loop {
             if !self.in_body {
                 match r.read(&mut self.hdr[self.hdr_got..]) {
@@ -205,7 +302,8 @@ impl FrameReader {
                                 ));
                             }
                             self.in_body = true;
-                            self.body = vec![0u8; len];
+                            self.body = pool.take();
+                            self.body.resize(len, 0);
                             self.body_got = 0;
                         }
                     }
@@ -235,6 +333,13 @@ impl FrameReader {
             }
         }
     }
+
+    /// [`FrameReader::poll`] with a throwaway pool — every frame freshly
+    /// allocated. For control-plane exchanges and tests where the handful
+    /// of frames does not justify a recycle loop.
+    pub fn poll_alloc(&mut self, r: &mut impl Read) -> io::Result<FrameEvent> {
+        self.poll(r, &mut BufPool::new())
+    }
 }
 
 /// A read timeout on a blocking socket surfaces as `WouldBlock` (most
@@ -252,7 +357,7 @@ pub fn read_frame_deadline(
     deadline: std::time::Instant,
 ) -> io::Result<Option<Vec<u8>>> {
     loop {
-        match reader.poll(r)? {
+        match reader.poll_alloc(r)? {
             FrameEvent::Frame(f) => return Ok(Some(f)),
             FrameEvent::Eof => return Ok(None),
             FrameEvent::Pending => {
@@ -485,12 +590,12 @@ mod tests {
         let mut src = buf.as_slice();
         let mut reader = FrameReader::new();
         for p in &pkts {
-            let FrameEvent::Frame(f) = reader.poll(&mut src).unwrap() else {
+            let FrameEvent::Frame(f) = reader.poll_alloc(&mut src).unwrap() else {
                 panic!("expected a frame");
             };
             assert_eq!(Packet::decode(&f).unwrap(), *p);
         }
-        assert_eq!(reader.poll(&mut src).unwrap(), FrameEvent::Eof);
+        assert_eq!(reader.poll_alloc(&mut src).unwrap(), FrameEvent::Eof);
     }
 
     #[test]
@@ -507,7 +612,7 @@ mod tests {
             let mut reader = FrameReader::new();
             let mut frames = Vec::new();
             loop {
-                match reader.poll(&mut src).unwrap() {
+                match reader.poll_alloc(&mut src).unwrap() {
                     FrameEvent::Frame(f) => frames.push(f),
                     FrameEvent::Eof => break,
                     FrameEvent::Pending => unreachable!("Trickle never blocks"),
@@ -553,7 +658,7 @@ mod tests {
             let mut reader = FrameReader::new();
             let mut pendings = 0;
             let frame = loop {
-                match reader.poll(&mut src).unwrap() {
+                match reader.poll_alloc(&mut src).unwrap() {
                     FrameEvent::Frame(f) => break f,
                     FrameEvent::Pending => pendings += 1,
                     FrameEvent::Eof => panic!("premature EOF at block_at={block_at}"),
@@ -574,7 +679,7 @@ mod tests {
         let mut bytes = ((MAX_FRAME + 1) as u32).to_be_bytes().to_vec();
         bytes.extend_from_slice(&[0u8; 16]);
         let mut src = bytes.as_slice();
-        let err = FrameReader::new().poll(&mut src).unwrap_err();
+        let err = FrameReader::new().poll_alloc(&mut src).unwrap_err();
         assert_eq!(err.kind(), io::ErrorKind::InvalidData);
         assert!(err.to_string().contains("oversized"), "{err}");
     }
@@ -586,7 +691,7 @@ mod tests {
         // Mid-header and mid-body truncations both surface UnexpectedEof.
         for cut in [2usize, 7] {
             let mut src = &buf[..cut];
-            let err = FrameReader::new().poll(&mut src).unwrap_err();
+            let err = FrameReader::new().poll_alloc(&mut src).unwrap_err();
             assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof, "cut={cut}");
         }
     }
@@ -602,7 +707,7 @@ mod tests {
         let mut buf = Vec::new();
         write_frame(&mut buf, &wire).unwrap();
         let mut src = buf.as_slice();
-        let FrameEvent::Frame(f) = FrameReader::new().poll(&mut src).unwrap() else {
+        let FrameEvent::Frame(f) = FrameReader::new().poll_alloc(&mut src).unwrap() else {
             panic!("framing must deliver the payload");
         };
         let err = Packet::decode(&f).unwrap_err();
@@ -667,12 +772,12 @@ mod tests {
             let mut src = sink.written.as_slice();
             let mut reader = FrameReader::new();
             for p in &payloads {
-                let FrameEvent::Frame(f) = reader.poll(&mut src).unwrap() else {
+                let FrameEvent::Frame(f) = reader.poll_alloc(&mut src).unwrap() else {
                     panic!("expected a frame (chunk={chunk})");
                 };
                 assert_eq!(&f, p, "chunk={chunk}");
             }
-            assert_eq!(reader.poll(&mut src).unwrap(), FrameEvent::Eof);
+            assert_eq!(reader.poll_alloc(&mut src).unwrap(), FrameEvent::Eof);
         }
     }
 
@@ -722,6 +827,163 @@ mod tests {
         let deadline = std::time::Instant::now() + std::time::Duration::from_millis(20);
         let err = read_frame_deadline(&mut Silent, &mut FrameReader::new(), deadline).unwrap_err();
         assert_eq!(err.kind(), io::ErrorKind::TimedOut);
+    }
+
+    #[test]
+    fn buf_pool_reuses_capacity_and_counts() {
+        let mut pool = BufPool::new();
+        let mut a = pool.take();
+        a.extend_from_slice(b"some bytes");
+        let cap = a.capacity();
+        pool.put(a);
+        assert_eq!(pool.free_buffers(), 1);
+        let b = pool.take();
+        assert!(b.is_empty(), "pooled buffers come back cleared");
+        assert!(b.capacity() >= cap, "reuse must keep the allocation");
+        assert_eq!(pool.free_buffers(), 0);
+        let (reused, allocated) = pool.stats_delta();
+        assert_eq!((reused, allocated), (1, 1));
+        assert_eq!(pool.stats_delta(), (0, 0), "delta drains on read");
+        // Never-allocated and oversized buffers are dropped, not pooled.
+        pool.put(Vec::new());
+        pool.put(Vec::with_capacity(POOL_MAX_CAP + 1));
+        assert_eq!(pool.free_buffers(), 0);
+        // The free list is bounded.
+        for _ in 0..POOL_MAX_BUFS + 10 {
+            pool.put(Vec::with_capacity(8));
+        }
+        assert_eq!(pool.free_buffers(), POOL_MAX_BUFS);
+    }
+
+    /// Property: recycling frame buffers through the pool never lets a
+    /// buffer still held live be handed out again — whatever interleaving
+    /// of keep/recycle the shard loop produces, every live frame keeps its
+    /// own bytes to the end.
+    #[test]
+    fn prop_recycled_pool_buffers_never_alias_live_frames() {
+        use crate::testkit::{forall, FnStrategy};
+        use crate::util::rng::Rng;
+        // A schedule of (payload length, recycle-after-read?) per frame.
+        let strat = FnStrategy(|rng: &mut Rng| {
+            let n = 1 + rng.gen_range(24) as usize;
+            (0..n)
+                .map(|_| (rng.gen_range(300) as usize, rng.gen_range(2) == 0))
+                .collect::<Vec<(usize, bool)>>()
+        });
+        forall("pool-no-alias", 0xA11A5, 64, &strat, |schedule| {
+            let fill = |i: usize| (i % 251 + 1) as u8; // distinct per frame, never 0
+            let mut wire = Vec::new();
+            for (i, &(len, _)) in schedule.iter().enumerate() {
+                write_frame(&mut wire, &vec![fill(i); len]).unwrap();
+            }
+            let mut src = wire.as_slice();
+            let mut reader = FrameReader::new();
+            let mut pool = BufPool::new();
+            let mut live: Vec<(usize, Vec<u8>)> = Vec::new();
+            for (i, &(len, recycle)) in schedule.iter().enumerate() {
+                let frame = match reader.poll(&mut src, &mut pool) {
+                    Ok(FrameEvent::Frame(f)) => f,
+                    other => return Err(format!("frame {i}: unexpected {other:?}")),
+                };
+                if frame.len() != len {
+                    return Err(format!("frame {i}: {} bytes, want {len}", frame.len()));
+                }
+                if recycle {
+                    pool.put(frame);
+                } else {
+                    live.push((i, frame));
+                }
+            }
+            match reader.poll(&mut src, &mut pool) {
+                Ok(FrameEvent::Eof) => {}
+                other => return Err(format!("expected EOF, got {other:?}")),
+            }
+            for (i, frame) in &live {
+                if frame.iter().any(|&b| b != fill(*i)) {
+                    return Err(format!("live frame {i} was clobbered by a recycled buffer"));
+                }
+            }
+            let (reused, allocated) = pool.stats_delta();
+            if reused + allocated != schedule.len() as u64 {
+                return Err(format!(
+                    "pool accounting off: {reused} reused + {allocated} fresh != {} frames",
+                    schedule.len()
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn frame_writer_coalesces_all_pending_frames_into_one_write() {
+        struct CountingSink {
+            written: Vec<u8>,
+            calls: usize,
+        }
+        impl Write for CountingSink {
+            fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+                self.calls += 1;
+                self.written.extend_from_slice(buf);
+                Ok(buf.len())
+            }
+            fn flush(&mut self) -> io::Result<()> {
+                Ok(())
+            }
+        }
+        let mut writer = FrameWriter::new();
+        let payloads: Vec<Vec<u8>> = (0..64u8).map(|i| vec![i; 16 + i as usize]).collect();
+        let mut want = Vec::new();
+        for p in &payloads {
+            writer.enqueue(p).unwrap();
+            write_frame(&mut want, p).unwrap();
+        }
+        let mut sink = CountingSink { written: Vec::new(), calls: 0 };
+        assert!(writer.flush_into(&mut sink).unwrap());
+        assert_eq!(sink.calls, 1, "64 queued frames must cost exactly one write");
+        assert_eq!(sink.written, want);
+    }
+
+    #[test]
+    fn frame_writer_compacts_the_consumed_prefix_of_a_lagging_connection() {
+        /// Accepts up to `budget` bytes, then blocks — a lagging peer.
+        struct CapSink<'a> {
+            out: &'a mut Vec<u8>,
+            budget: usize,
+        }
+        impl Write for CapSink<'_> {
+            fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+                if self.budget == 0 {
+                    return Err(io::Error::new(io::ErrorKind::WouldBlock, "lagging"));
+                }
+                let n = self.budget.min(buf.len());
+                self.out.extend_from_slice(&buf[..n]);
+                self.budget -= n;
+                Ok(n)
+            }
+            fn flush(&mut self) -> io::Result<()> {
+                Ok(())
+            }
+        }
+        let first = vec![0xA5u8; 100_000];
+        let second = b"after-compaction".to_vec();
+        let mut want = Vec::new();
+        write_frame(&mut want, &first).unwrap();
+        write_frame(&mut want, &second).unwrap();
+        let mut writer = FrameWriter::new();
+        writer.enqueue(&first).unwrap();
+        let mut got = Vec::new();
+        assert!(!writer.flush_into(&mut CapSink { out: &mut got, budget: 70_000 }).unwrap());
+        assert_eq!(writer.pending_frames(), 1);
+        // Enqueueing with ≥ COMPACT_AT bytes already consumed shifts the
+        // unsent tail to the buffer's front; it must survive the move
+        // byte-for-byte and the second frame must land after it.
+        writer.enqueue(&second).unwrap();
+        assert_eq!(writer.pending_frames(), 2);
+        let mut rest = CapSink { out: &mut got, budget: usize::MAX };
+        assert!(writer.flush_into(&mut rest).unwrap());
+        assert_eq!(got, want);
+        assert!(writer.is_empty());
+        assert_eq!(writer.pending_bytes(), 0);
     }
 
     fn addr(port: u16) -> SocketAddr {

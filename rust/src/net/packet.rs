@@ -335,6 +335,18 @@ impl Packet {
     /// Serialize to wire bytes.
     pub fn encode(&self) -> Vec<u8> {
         let mut out = Vec::with_capacity(self.wire_len());
+        self.encode_into(&mut out);
+        out
+    }
+
+    /// Serialize to wire bytes into a caller-owned buffer, clearing it
+    /// first — the zero-allocation emit path. The buffer's contents after
+    /// the call are byte-identical to [`Packet::encode`]'s return value,
+    /// so a recycled pool buffer and a fresh allocation put the same
+    /// frames on the wire (property-tested below).
+    pub fn encode_into(&self, out: &mut Vec<u8>) {
+        out.clear();
+        out.reserve(self.wire_len());
         out.extend_from_slice(&self.eth.dst);
         out.extend_from_slice(&self.eth.src);
         out.extend_from_slice(&self.eth.ethertype.to_be_bytes());
@@ -359,7 +371,6 @@ impl Packet {
             }
         }
         out.extend_from_slice(&self.payload);
-        out
     }
 
     /// Parse wire bytes. The chain header is present iff the packet is a
@@ -697,6 +708,83 @@ mod tests {
             } else {
                 Err(format!("roundtrip mismatch: {decoded:?}"))
             }
+        });
+    }
+
+    /// Property: `encode_into` is byte-identical to `encode` for every
+    /// packet shape the data plane emits — fresh requests, processed
+    /// packets with chain headers of every length, scan-split halves,
+    /// turbo-echoed replies, plain IPv4 replies — and it fully overwrites
+    /// whatever garbage the recycled buffer held before the call.
+    #[test]
+    fn prop_encode_into_matches_encode_for_every_shape() {
+        let strat = FnStrategy(|rng: &mut Rng| {
+            let payload: Vec<u8> =
+                (0..rng.gen_range(300)).map(|_| rng.next_u32() as u8).collect();
+            match rng.gen_range(5) {
+                // A fresh request (range or hash partitioning).
+                0 => Packet::request(
+                    Ip(rng.next_u32()),
+                    Ip(0),
+                    if rng.gen_range(2) == 0 { Tos::RangeData } else { Tos::HashData },
+                    OpCode::from_u8(rng.gen_range(4) as u8).unwrap(),
+                    Key(rng.next_u128()),
+                    Key(rng.next_u128()),
+                    payload,
+                ),
+                // A processed packet with a chain header (0..=6 hops —
+                // the scan splitter emits clipped clones of this shape).
+                1 | 2 => {
+                    let mut pkt = Packet::request(
+                        Ip(rng.next_u32()),
+                        Ip(rng.next_u32()),
+                        Tos::Processed,
+                        OpCode::from_u8(rng.gen_range(4) as u8).unwrap(),
+                        Key(rng.next_u128()),
+                        Key(rng.next_u128()),
+                        payload,
+                    );
+                    let n = rng.gen_range(7) as usize;
+                    pkt.chain =
+                        Some(ChainHeader { ips: (0..n).map(|_| Ip(rng.next_u32())).collect() });
+                    pkt
+                }
+                // A tail reply with the request's turbo header echoed on
+                // (the deployment's reply-correlation shape).
+                3 => {
+                    let mut pkt =
+                        Packet::reply(Ip(rng.next_u32()), Ip(rng.next_u32()), payload);
+                    pkt.turbo = Some(TurboHeader {
+                        op: OpCode::from_u8(rng.gen_range(4) as u8).unwrap(),
+                        key: Key(rng.next_u128()),
+                        end_key: Key(rng.next_u128()),
+                    });
+                    pkt.eth.ethertype = ETHERTYPE_TURBOKV;
+                    pkt
+                }
+                // A plain IPv4 reply.
+                _ => Packet::reply(Ip(rng.next_u32()), Ip(rng.next_u32()), payload),
+            }
+        });
+        forall("packet-encode-into", 0xB0F5, 256, &strat, |pkt| {
+            let want = pkt.encode();
+            // A dirty recycled buffer: longer than the frame, nonzero.
+            let mut buf = vec![0xAAu8; want.len() + 37];
+            pkt.encode_into(&mut buf);
+            if buf != want {
+                return Err(format!(
+                    "encode_into diverged from encode ({} vs {} bytes)",
+                    buf.len(),
+                    want.len()
+                ));
+            }
+            // And an empty one: same bytes either way.
+            let mut fresh = Vec::new();
+            pkt.encode_into(&mut fresh);
+            if fresh != want {
+                return Err("encode_into into a fresh buffer diverged".into());
+            }
+            Ok(())
         });
     }
 }

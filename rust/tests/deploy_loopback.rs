@@ -73,6 +73,17 @@ fn loopback_cluster_serves_verified_gets_puts_and_scans() {
     assert_eq!(report.controller.repairs, 0, "nothing failed");
     // Every frame on every server decoded cleanly and found a route.
     assert_eq!(report.servers.bad_frames, 0, "{:?}", report.servers);
+    // DESIGN.md §2h: the pass-end flush coalesced multiple frames per
+    // syscall, and the frame-buffer pool reached its zero-allocation
+    // steady state — recycled buffers must dominate fresh allocations
+    // across the run (allocation happens only while the pool warms up).
+    assert!(report.servers.flush_calls > 0, "{}", report.summary());
+    assert!(report.servers.flush_batch().unwrap_or(0.0) >= 1.0, "{}", report.summary());
+    assert!(
+        report.servers.pool_reused > report.servers.pool_alloc,
+        "frame-buffer pool never reached steady state: {}",
+        report.summary()
+    );
     if report.drive.retries == 0 {
         // Without retransmissions, no duplicate reply can race the
         // driver's teardown — every send must have landed.
@@ -232,6 +243,14 @@ fn switch_value_cache_serves_hot_gets_over_real_sockets() {
         report.summary()
     );
     assert!(report.summary().contains("switch_cache:"), "{}", report.summary());
+    // With the cache on, tail replies detour via the rack ToR and then
+    // ride the hierarchy by destination IP — so the non-coordinating
+    // switches must have forwarded them raw (DESIGN.md §2h cut-through).
+    assert!(
+        report.servers.transit_cut_through > 0,
+        "no transit frame was cut through: {}",
+        report.summary()
+    );
     assert_eq!(report.servers.bad_frames, 0, "no wire corruption: {:?}", report.servers);
 }
 
@@ -244,6 +263,13 @@ fn chaos_drop_dup_delay_faults_are_survived_with_full_verification() {
     // op verified, and the gate's proof-of-injection check must see that
     // faults actually fired.
     let mut cfg = loopback_cfg(3, 2);
+    // Run the value cache too, so tail replies ride the switch hierarchy
+    // and the cut-through path is live *while* the injectors fire — the
+    // chaos choke point must wrap raw forwards exactly like pipeline
+    // emits.
+    cfg.switch.cache_slots = 64;
+    cfg.switch.cache_value_max = 256;
+    cfg.switch.cache_admit_threshold = 1;
     cfg.chaos.scenario = "drop-dup-delay".into();
     cfg.chaos.drop_permille = 15;
     cfg.chaos.dup_permille = 15;
@@ -262,6 +288,11 @@ fn chaos_drop_dup_delay_faults_are_survived_with_full_verification() {
     assert!(
         report.servers.faults_injected() > 0,
         "the injector never fired: {}",
+        report.summary()
+    );
+    assert!(
+        report.servers.transit_cut_through > 0,
+        "cut-through must be active under fire: {}",
         report.summary()
     );
     // Faults mangle delivery, never bytes: nothing decodes as garbage.

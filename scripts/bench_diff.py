@@ -11,16 +11,18 @@ Exit status:
 
 A bench "regresses" when its mean_ns grows by more than the threshold
 relative to the base recording. Only the watched hot paths gate:
-`switch/pipeline/*` and `sim/engine/100k-events*` — the paths the ROADMAP
-north-star ("as fast as the hardware allows") and ISSUE 3's acceptance
-criteria name. Everything else is reported informationally.
+`switch/pipeline/*`, `sim/engine/100k-events*`, and `dataplane/*` (the
+zero-copy data plane's writer-coalescing and cut-through forwarding
+paths) — the paths the ROADMAP north-star ("as fast as the hardware
+allows") and the acceptance criteria of ISSUEs 3 and 10 name. Everything
+else is reported informationally.
 """
 
 import argparse
 import json
 import sys
 
-WATCH_PREFIXES = ("switch/pipeline/", "sim/engine/100k-events")
+WATCH_PREFIXES = ("switch/pipeline/", "sim/engine/100k-events", "dataplane/")
 
 
 def load(path):
